@@ -1,0 +1,74 @@
+//! Cluster-scale simulation: one cell of the paper's Figure 8 grid with
+//! all five systems side by side at a chosen request rate, plus the
+//! per-system latency breakdown.
+//!
+//!     cargo run --release --example cluster_sim -- \
+//!         --model llama-30b --cluster l20 --dataset sharegpt --rate 6
+//!
+//! Use `--rate` to walk the load axis yourself: at low rates everyone
+//! meets SLOs; as the rate rises, the baselines drop out in the order the
+//! paper predicts (FuDG first on MHA models over Ethernet, then NoDG as
+//! interference bites, EcoServe last).
+
+use anyhow::Result;
+use ecoserve::config::{ClusterSpec, Deployment, ExperimentConfig, SystemKind};
+use ecoserve::harness::run_once;
+use ecoserve::perfmodel::ModelSpec;
+use ecoserve::util::cli::Args;
+use ecoserve::util::threads::parallel_map;
+use ecoserve::workload::Dataset;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let model = ModelSpec::by_name(&args.get_or("model", "llama-30b"))
+        .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
+    let cluster = ClusterSpec::by_name(&args.get_or("cluster", "l20"))
+        .ok_or_else(|| anyhow::anyhow!("unknown cluster"))?;
+    let dataset = Dataset::by_name(&args.get_or("dataset", "sharegpt"))
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset"))?;
+    let rate = args.get_f64("rate", 6.0);
+
+    let deployment = Deployment::paper_default(model, cluster);
+    let mut cfg = ExperimentConfig::new(deployment, dataset);
+    cfg.duration = args.get_f64("duration", 180.0);
+    cfg.warmup = 30.0;
+    cfg.seed = args.get_u64("seed", 42);
+
+    println!(
+        "{} x{} instances (TP={}) on {} | {} @ {:.1} req/s | SLO {:.0}s/{:.0}ms",
+        cfg.deployment.model.name,
+        cfg.deployment.num_instances(),
+        cfg.deployment.tp,
+        cfg.deployment.cluster.name,
+        cfg.dataset.name,
+        rate,
+        cfg.dataset.slo_ttft,
+        cfg.dataset.slo_tpot * 1e3,
+    );
+
+    let systems: Vec<SystemKind> = SystemKind::all().to_vec();
+    let rows = parallel_map(systems, 5, |kind| {
+        let r = run_once(kind, &cfg, rate, None);
+        (kind, r)
+    });
+
+    println!(
+        "\n{:<10} {:>10} {:>9} {:>12} {:>12} {:>12} {:>10}",
+        "system", "attain %", "done", "p90TTFT s", "p90TPOT ms", "tok/s", "events"
+    );
+    for (kind, r) in rows {
+        let s = &r.summary;
+        println!(
+            "{:<10} {:>10.1} {:>9} {:>12.2} {:>12.1} {:>12.0} {:>10}",
+            kind.label(),
+            r.attainment * 100.0,
+            s.count,
+            s.ttft_p90,
+            s.tpot_p90 * 1e3,
+            s.token_throughput,
+            r.events,
+        );
+    }
+    println!("\n(attain % = strict SLO attainment over requests arriving in the\n measurement window; incomplete requests count as violations)");
+    Ok(())
+}

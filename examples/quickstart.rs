@@ -1,0 +1,53 @@
+//! Quickstart: simulate EcoServe vs vLLM on one workload and print the
+//! goodput gap — the paper's headline comparison in miniature.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Runs in ~a minute (it performs two goodput searches on a 4-instance
+//! CodeLlama-34B / L20 / ShareGPT deployment).
+
+use ecoserve::config::{ClusterSpec, Deployment, ExperimentConfig, SystemKind};
+use ecoserve::harness::goodput_search;
+use ecoserve::metrics::Attainment;
+use ecoserve::perfmodel::ModelSpec;
+use ecoserve::workload::Dataset;
+
+fn main() {
+    // 4 instances of CodeLlama2-34B at TP=4 on the L20 cluster.
+    let mut deployment = Deployment::paper_default(
+        ModelSpec::codellama_34b(),
+        ClusterSpec::l20_cluster(),
+    );
+    deployment.gpus_used = 16;
+    let mut cfg = ExperimentConfig::new(deployment, Dataset::sharegpt());
+    cfg.duration = 120.0;
+    cfg.warmup = 20.0;
+
+    println!(
+        "deployment: {} instances of {} (TP={}) on {}, dataset {}",
+        cfg.deployment.num_instances(),
+        cfg.deployment.model.name,
+        cfg.deployment.tp,
+        cfg.deployment.cluster.name,
+        cfg.dataset.name
+    );
+    println!("searching P90 goodput (SLO: TTFT {:.0}s / TPOT {:.0}ms)...",
+             cfg.dataset.slo_ttft, cfg.dataset.slo_tpot * 1e3);
+
+    let eco = goodput_search(SystemKind::EcoServe, &cfg, Attainment::P90);
+    let vllm = goodput_search(SystemKind::Vllm, &cfg, Attainment::P90);
+
+    println!("\n{:<10} {:>14} {:>16} {:>14}", "system", "goodput req/s", "p90 TTFT (s)", "p90 TPOT (ms)");
+    for g in [&eco, &vllm] {
+        println!(
+            "{:<10} {:>14.2} {:>16.2} {:>14.1}",
+            g.system.label(),
+            g.rate,
+            g.summary.ttft_p90,
+            g.summary.tpot_p90 * 1e3
+        );
+    }
+    let gain = (eco.rate / vllm.rate.max(1e-9) - 1.0) * 100.0;
+    println!("\nEcoServe goodput improvement over vLLM: {gain:+.1}%");
+    println!("(paper Figure 8 reports an 83.76% average P90 improvement over vLLM\n across the full 3-model x 3-dataset x 2-cluster grid — run\n `cargo bench --bench fig8_end_to_end_goodput` for the grid)");
+}

@@ -1,0 +1,44 @@
+//! END-TO-END LIVE SERVING — the three-layer stack under real load.
+//!
+//! Loads the TinyLM HLO artifacts (L2 JAX graphs embedding the L1 Pallas
+//! flash-attention kernels, AOT-compiled by `make artifacts`), stands up N
+//! PJRT-CPU instance workers, and drives a Poisson request stream through
+//! the live PaDG coordinator — Algorithms 1+2 routing on measured prefill
+//! EMAs and saved-TPOT slack. Python is not involved at any point of this
+//! binary's execution.
+//!
+//!     make artifacts && cargo run --release --example serve_model -- \
+//!         --instances 2 --rate 3 --duration 20
+//!
+//! Reports TTFT/TPOT percentiles, throughput, and SLO attainment; the run
+//! is recorded in EXPERIMENTS.md §E2E.
+
+use anyhow::{bail, Result};
+use ecoserve::server::{serve_poisson, ServeConfig};
+use ecoserve::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let mut cfg = ServeConfig::default();
+    cfg.instances = args.get_usize("instances", 2);
+    cfg.rate = args.get_f64("rate", 3.0);
+    cfg.duration_secs = args.get_f64("duration", 20.0);
+    cfg.seed = args.get_u64("seed", 42);
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let dir = std::path::Path::new(&artifacts);
+    if !dir.join("manifest.json").exists() {
+        bail!("artifacts not found at {artifacts}; run `make artifacts` first");
+    }
+
+    println!(
+        "serving TinyLM on {} PJRT-CPU instance(s), Poisson {} req/s for {}s",
+        cfg.instances, cfg.rate, cfg.duration_secs
+    );
+    println!("(compiling {} executables per instance at startup...)", 10);
+    let report = serve_poisson(dir, &cfg)?;
+    print!("{}", report.render());
+    if !report.fatal_errors.is_empty() {
+        bail!("worker errors: {:?}", report.fatal_errors);
+    }
+    Ok(())
+}

@@ -1,0 +1,163 @@
+"""AOT pipeline: lower TinyLM prefill/decode graphs to HLO **text** artifacts.
+
+Python runs exactly once (``make artifacts``); the Rust coordinator loads the
+resulting ``artifacts/*.hlo.txt`` through the PJRT C API and never touches
+Python again.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the image's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (all under --outdir, default ../artifacts):
+  tiny_prefill_s{S}.hlo.txt   for S in PREFILL_BUCKETS
+  tiny_decode_b{B}.hlo.txt    for B in DECODE_BUCKETS
+  weights.bin                 f32 little-endian, param_spec order
+  manifest.json               config + buckets + weight index (shapes/offsets)
+  model.hlo.txt               stamp = copy of the largest prefill artifact
+                              (keeps the Makefile freshness check single-file)
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+PREFILL_BUCKETS = (16, 32, 64, 128)
+DECODE_BUCKETS = (1, 2, 4, 8, 16, 32)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for rust side)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_prefill(cfg: M.TinyLMConfig, s: int) -> str:
+    """Lower prefill for bucket length `s`. Signature (positional order the
+    Rust engine must follow): tokens i32[1,s], prompt_len i32[], weights..."""
+
+    def fn(tokens, prompt_len, *weights):
+        return M.prefill(cfg, tokens, prompt_len, list(weights))
+
+    args = [
+        jax.ShapeDtypeStruct((1, s), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    ] + [jax.ShapeDtypeStruct(shape, jnp.float32) for _, shape in M.param_spec(cfg)]
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def lower_decode(cfg: M.TinyLMConfig, b: int) -> str:
+    """Lower one decode step for batch bucket `b`. Signature: tokens i32[b],
+    positions i32[b], k_cache f32[L,b,Hkv,Smax,D], v_cache ditto, weights..."""
+
+    def fn(tokens, positions, k_cache, v_cache, *weights):
+        return M.decode(cfg, tokens, positions, k_cache, v_cache, list(weights))
+
+    kv_shape = (cfg.layers, b, cfg.kv_heads, cfg.max_seq, cfg.head_dim)
+    args = [
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+        jax.ShapeDtypeStruct(kv_shape, jnp.float32),
+        jax.ShapeDtypeStruct(kv_shape, jnp.float32),
+    ] + [jax.ShapeDtypeStruct(shape, jnp.float32) for _, shape in M.param_spec(cfg)]
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def write_weights(cfg: M.TinyLMConfig, outdir: str, seed: int) -> list:
+    """Write weights.bin (flat f32 LE) and return the manifest index."""
+    weights = M.init_weights(cfg, seed)
+    index = []
+    offset = 0
+    path = os.path.join(outdir, "weights.bin")
+    with open(path, "wb") as f:
+        for (name, shape), w in zip(M.param_spec(cfg), weights):
+            arr = np.asarray(w, dtype="<f4")
+            f.write(arr.tobytes())
+            index.append({
+                "name": name,
+                "shape": list(shape),
+                "offset": offset,
+                "numel": int(arr.size),
+            })
+            offset += int(arr.size)
+    return index
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--out", default=None,
+                    help="legacy single-file stamp path (Makefile compat)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--prefill-buckets", default=",".join(map(str, PREFILL_BUCKETS)))
+    ap.add_argument("--decode-buckets", default=",".join(map(str, DECODE_BUCKETS)))
+    args = ap.parse_args()
+
+    outdir = args.outdir
+    if args.out is not None:
+        outdir = os.path.dirname(args.out) or "."
+    os.makedirs(outdir, exist_ok=True)
+
+    cfg = M.TinyLMConfig()
+    prefill_buckets = [int(x) for x in args.prefill_buckets.split(",") if x]
+    decode_buckets = [int(x) for x in args.decode_buckets.split(",") if x]
+
+    for s in prefill_buckets:
+        assert s <= cfg.max_seq, f"bucket {s} exceeds max_seq {cfg.max_seq}"
+        text = lower_prefill(cfg, s)
+        path = os.path.join(outdir, f"tiny_prefill_s{s}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for b in decode_buckets:
+        text = lower_decode(cfg, b)
+        path = os.path.join(outdir, f"tiny_decode_b{b}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    index = write_weights(cfg, outdir, args.seed)
+    manifest = {
+        "model": "tinylm",
+        "seed": args.seed,
+        "config": {
+            "vocab": cfg.vocab,
+            "layers": cfg.layers,
+            "hidden": cfg.hidden,
+            "heads": cfg.heads,
+            "kv_heads": cfg.kv_heads,
+            "ffn": cfg.ffn,
+            "max_seq": cfg.max_seq,
+            "head_dim": cfg.head_dim,
+        },
+        "prefill_buckets": prefill_buckets,
+        "decode_buckets": decode_buckets,
+        "weights": index,
+    }
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+    # Makefile stamp: copy the largest prefill artifact to model.hlo.txt.
+    stamp_src = os.path.join(outdir, f"tiny_prefill_s{max(prefill_buckets)}.hlo.txt")
+    stamp_dst = os.path.join(outdir, "model.hlo.txt")
+    with open(stamp_src) as src, open(stamp_dst, "w") as dst:
+        dst.write(src.read())
+    print(f"wrote {stamp_dst} (stamp), manifest.json, weights.bin")
+
+
+if __name__ == "__main__":
+    main()

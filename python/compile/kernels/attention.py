@@ -1,0 +1,202 @@
+"""Pallas attention kernels — the L1 compute hot-spot of EcoServe's instances.
+
+Two kernels, matching the two phases the paper disaggregates in time:
+
+  * ``flash_attention_prefill`` — causal flash attention for the prefill
+    phase (compute-bound, AI ~ S per Table 2 of the paper).
+  * ``attention_decode`` — single-token decode attention over a padded KV
+    cache (memory-bound, AI ~ 1 per Table 2).
+
+Hardware adaptation (paper targets CUDA; we target TPU-style Pallas, see
+DESIGN.md §3): the CUDA threadblock/shared-memory schedule becomes a
+BlockSpec-expressed HBM→VMEM schedule. Q is tiled into ``(block_q, D)``
+VMEM-resident tiles via the grid; K/V stream through VMEM in ``(block_k, D)``
+tiles inside an online-softmax ``fori_loop``. On a real TPU the ``q @ k.T``
+tiles feed the MXU; here the kernels run with ``interpret=True`` (the CPU
+PJRT plugin cannot execute Mosaic custom-calls) and correctness is asserted
+against ``ref.py``.
+
+VMEM footprint per grid step (f32 bytes):
+    prefill: (block_q*D) * 2[acc] + 2*(block_k*D) + O(block_q*block_k)
+    decode:  D * 3 + 2*(block_k*D) + O(block_k)
+These numbers drive the §Perf block-size selection (see perfmodel notes in
+DESIGN.md §9 and EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _prefill_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, causal: bool):
+    """Online-softmax flash attention over one (block_q, D) query tile.
+
+    Grid is (B, H, S // block_q); the BlockSpec hands us the full K/V rows
+    for this (batch, head) and one query tile. K/V are walked in block_k
+    tiles with the numerically-stable streaming softmax recurrence
+    (m = running max, l = running denominator, acc = running numerator).
+    """
+    q = q_ref[0, 0]  # (block_q, d)
+    block_q, d = q.shape
+    s = k_ref.shape[2]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=q.dtype))
+    q_idx = pl.program_id(2) * block_q + jax.lax.iota(jnp.int32, block_q)
+
+    num_kb = s // block_k
+
+    def body(kb, carry):
+        m_prev, l_prev, acc_prev = carry
+        k_tile = k_ref[0, 0, pl.ds(kb * block_k, block_k), :]  # (block_k, d)
+        v_tile = v_ref[0, 0, pl.ds(kb * block_k, block_k), :]
+        scores = (q @ k_tile.T) * scale  # (block_q, block_k)
+        if causal:
+            k_idx = kb * block_k + jax.lax.iota(jnp.int32, block_k)
+            mask = k_idx[None, :] <= q_idx[:, None]
+            scores = jnp.where(mask, scores, NEG_INF)
+        m_cur = jnp.maximum(m_prev, scores.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(scores - m_cur[:, None])
+        l_cur = l_prev * alpha + p.sum(axis=-1)
+        acc_cur = acc_prev * alpha[:, None] + p @ v_tile
+        return m_cur, l_cur, acc_cur
+
+    m0 = jnp.full((block_q,), NEG_INF, dtype=q.dtype)
+    l0 = jnp.zeros((block_q,), dtype=q.dtype)
+    acc0 = jnp.zeros((block_q, d), dtype=q.dtype)
+    m, l, acc = jax.lax.fori_loop(0, num_kb, body, (m0, l0, acc0))
+    o_ref[0, 0] = acc / l[:, None]
+
+
+def flash_attention_prefill(q, k, v, *, block_q: int = 32, block_k: int = 32,
+                            causal: bool = True, interpret: bool = True):
+    """Causal flash attention for the prefill phase.
+
+    Args:
+      q, k, v: f32[B, H, S, D]; S must be divisible by block_q and block_k
+        (the serving engine pads prompts to shape buckets, see runtime/engine).
+      block_q, block_k: VMEM tile sizes (multiples of the MXU lane count on
+        real hardware; defaults suit the TinyLM live-path buckets).
+
+    Returns:
+      f32[B, H, S, D].
+    """
+    b, h, s, d = q.shape
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    if s % block_q or s % block_k:
+        raise ValueError(f"S={s} must divide block_q={block_q}, block_k={block_k}")
+    grid = (b, h, s // block_q)
+    kernel = functools.partial(_prefill_kernel, block_k=block_k, causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda bi, hi, qi: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda bi, hi, qi: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda bi, hi, qi: (bi, hi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), lambda bi, hi, qi: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *, block_k: int):
+    """Decode attention for one (batch, head): q is a single token's query.
+
+    Walks the padded KV cache in block_k tiles, masking positions beyond
+    this request's valid length (lengths vary per request inside a
+    continuous batch — the padding mask is what makes shape-bucketed AOT
+    executables correct).
+    """
+    q = q_ref[0, 0]  # (d,)
+    d = q.shape[0]
+    smax = k_ref.shape[2]
+    length = len_ref[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=q.dtype))
+
+    num_kb = smax // block_k
+
+    def body(kb, carry):
+        m_prev, l_prev, acc_prev = carry
+        k_tile = k_ref[0, 0, pl.ds(kb * block_k, block_k), :]  # (block_k, d)
+        v_tile = v_ref[0, 0, pl.ds(kb * block_k, block_k), :]
+        scores = (k_tile @ q) * scale  # (block_k,)
+        k_idx = kb * block_k + jax.lax.iota(jnp.int32, block_k)
+        scores = jnp.where(k_idx < length, scores, NEG_INF)
+        m_cur = jnp.maximum(m_prev, scores.max())
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(scores - m_cur)
+        l_cur = l_prev * alpha + p.sum()
+        acc_cur = acc_prev * alpha + p @ v_tile
+        return m_cur, l_cur, acc_cur
+
+    m0 = jnp.asarray(NEG_INF, dtype=q.dtype)
+    l0 = jnp.asarray(0.0, dtype=q.dtype)
+    acc0 = jnp.zeros((d,), dtype=q.dtype)
+    m, l, acc = jax.lax.fori_loop(0, num_kb, body, (m0, l0, acc0))
+    o_ref[0, 0] = acc / l
+
+
+def attention_decode(q, k, v, lengths, *, block_k: int = 32, interpret: bool = True):
+    """Single-token decode attention over a padded KV cache.
+
+    Args:
+      q: f32[B, H, D].
+      k, v: f32[B, H, Smax, D] padded KV cache; Smax divisible by block_k.
+      lengths: i32[B] valid positions per request (entries must be >= 1 —
+        the engine always writes the current token's KV before attending).
+
+    Returns:
+      f32[B, H, D].
+    """
+    b, h, smax, d = k.shape
+    block_k = min(block_k, smax)
+    if smax % block_k:
+        raise ValueError(f"Smax={smax} must divide block_k={block_k}")
+    grid = (b, h)
+    kernel = functools.partial(_decode_kernel, block_k=block_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, hi: (bi,)),
+            pl.BlockSpec((1, 1, d), lambda bi, hi: (bi, hi, 0)),
+            pl.BlockSpec((1, 1, smax, d), lambda bi, hi: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, smax, d), lambda bi, hi: (bi, hi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda bi, hi: (bi, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=interpret,
+    )(lengths, q, k, v)
+
+
+def vmem_bytes_prefill(block_q: int, block_k: int, d: int, s: int,
+                       bytes_per_el: int = 4) -> int:
+    """Estimated VMEM working set of one prefill grid step (see module doc)."""
+    q_tile = block_q * d
+    kv_tiles = 2 * block_k * d
+    scores = block_q * block_k
+    acc = block_q * d + 2 * block_q
+    out = block_q * d
+    return (q_tile + kv_tiles + scores + acc + out) * bytes_per_el
+
+
+def mxu_utilization_estimate(block_q: int, block_k: int, d: int,
+                             mxu: int = 128) -> float:
+    """Fraction of MXU lanes a (block_q x d) @ (d x block_k) tile keeps busy.
+
+    The systolic array processes min(dim, mxu)/mxu per axis; this is the
+    product over the three matmul dims — the §Perf structural metric used in
+    lieu of wallclock (interpret=True timings are CPU-numpy, not TPU).
+    """
+    eff = 1.0
+    for dim in (block_q, d, block_k):
+        eff *= min(dim, mxu) / mxu
+    return eff

@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here,
+written with nothing but `jax.numpy` so it is trivially auditable. The pytest
+suite (python/tests/) asserts allclose between kernel and oracle across a
+hypothesis-driven sweep of shapes and dtypes.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # large-but-finite mask value; avoids NaN from inf - inf
+
+
+def attention_prefill_ref(q, k, v, *, causal: bool = True):
+    """Reference multi-head attention for the prefill phase.
+
+    Args:
+      q, k, v: f32[B, H, S, D] (KV already expanded to H heads for GQA).
+      causal: apply a lower-triangular mask.
+
+    Returns:
+      f32[B, H, S, D] attention output.
+    """
+    b, h, s, d = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=q.dtype))
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    if causal:
+        qi = jnp.arange(s)[:, None]
+        ki = jnp.arange(s)[None, :]
+        scores = jnp.where(ki <= qi, scores, NEG_INF)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def attention_decode_ref(q, k, v, lengths):
+    """Reference single-token decode attention over a padded KV cache.
+
+    Args:
+      q: f32[B, H, D] — the new token's query.
+      k, v: f32[B, H, Smax, D] — padded KV cache (positions >= lengths[b] are
+        garbage and must not influence the output).
+      lengths: i32[B] — number of valid cache positions per request.
+
+    Returns:
+      f32[B, H, D].
+    """
+    b, h, smax, d = k.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=q.dtype))
+    scores = jnp.einsum("bhd,bhkd->bhk", q, k) * scale
+    mask = jnp.arange(smax)[None, None, :] < lengths[:, None, None]
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhk,bhkd->bhd", probs, v)
+
+
+def rmsnorm_ref(x, w, eps: float = 1e-6):
+    """Reference RMSNorm over the last axis."""
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * (1.0 / jnp.sqrt(var + eps)) * w
+
+
+def swiglu_ref(x, w_gate, w_up, w_down):
+    """Reference SwiGLU feed-forward block: silu(x@Wg) * (x@Wu) @ Wd."""
+    g = x @ w_gate
+    u = x @ w_up
+    return (g * jnp.reciprocal(1.0 + jnp.exp(-g)) * u) @ w_down

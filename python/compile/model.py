@@ -1,0 +1,261 @@
+"""L2: TinyLM — the JAX transformer the live serving path executes.
+
+A small GQA transformer (RoPE + RMSNorm + SwiGLU, Llama-family architecture
+scaled down per DESIGN.md §7) whose attention hot-spots are the Pallas
+kernels in ``kernels/attention.py``. Two graphs are exported:
+
+  * ``prefill(tokens, prompt_len, *weights)`` — full-prompt forward; returns
+    the last *valid* position's logits plus the per-layer KV cache.
+  * ``decode(tokens, positions, k_cache, v_cache, *weights)`` — one decode
+    step for a continuous batch; positions vary per request (shape-bucketed
+    batches mix requests at different depths). Returns logits and the new
+    K/V rows only (the Rust KV manager owns the cache; shipping just the
+    delta keeps the PJRT output copy at O(B·L·Hkv·D), not O(B·L·Hkv·Smax·D)).
+
+Weights travel as an explicit flat list (``param_spec`` fixes the order);
+``aot.py`` writes the same order into ``artifacts/weights.bin`` so the Rust
+runtime can feed the executables positionally. Python never runs at serving
+time — these functions exist only to be lowered to HLO text.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import attention_decode, flash_attention_prefill
+
+
+@dataclasses.dataclass(frozen=True)
+class TinyLMConfig:
+    """Architecture hyper-parameters (names follow the paper's Table 1)."""
+
+    vocab: int = 512          # byte-ish vocab; matches runtime/tokenizer.rs
+    layers: int = 4           # L
+    hidden: int = 256         # H
+    heads: int = 8            # M
+    kv_heads: int = 2         # GQA groups (CodeLlama/Qwen2-style)
+    ffn: int = 1024           # SwiGLU inner dim
+    max_seq: int = 128        # KV cache capacity per request
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+
+    @property
+    def head_dim(self) -> int:
+        return self.hidden // self.heads
+
+    @property
+    def qkv_out(self) -> int:
+        return self.hidden + 2 * self.kv_heads * self.head_dim
+
+    def kv_bytes_per_token(self, bytes_per_el: int = 4) -> int:
+        """KV-cache footprint of one token (the paper's 2*L*Hkv*D*bytes)."""
+        return 2 * self.layers * self.kv_heads * self.head_dim * bytes_per_el
+
+
+def param_spec(cfg: TinyLMConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """The canonical (name, shape) list — single source of truth for the
+    weight ordering shared by aot.py and the Rust runtime."""
+    spec: List[Tuple[str, Tuple[int, ...]]] = [("embed", (cfg.vocab, cfg.hidden))]
+    for i in range(cfg.layers):
+        spec += [
+            (f"l{i}.ln1", (cfg.hidden,)),
+            (f"l{i}.wqkv", (cfg.hidden, cfg.qkv_out)),
+            (f"l{i}.wo", (cfg.hidden, cfg.hidden)),
+            (f"l{i}.ln2", (cfg.hidden,)),
+            (f"l{i}.w_gate", (cfg.hidden, cfg.ffn)),
+            (f"l{i}.w_up", (cfg.hidden, cfg.ffn)),
+            (f"l{i}.w_down", (cfg.ffn, cfg.hidden)),
+        ]
+    spec += [("ln_f", (cfg.hidden,)), ("unembed", (cfg.hidden, cfg.vocab))]
+    return spec
+
+
+def init_weights(cfg: TinyLMConfig, seed: int = 0) -> List[jax.Array]:
+    """Deterministic scaled-normal init, in param_spec order."""
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if len(shape) == 1:
+            out.append(jnp.ones(shape, jnp.float32))
+        else:
+            scale = 1.0 / jnp.sqrt(jnp.asarray(shape[0], jnp.float32))
+            out.append(jax.random.normal(sub, shape, jnp.float32) * scale)
+    return out
+
+
+def _unflatten(cfg: TinyLMConfig, weights) -> dict:
+    names = [n for n, _ in param_spec(cfg)]
+    if len(weights) != len(names):
+        raise ValueError(f"expected {len(names)} weights, got {len(weights)}")
+    return dict(zip(names, weights))
+
+
+def _rmsnorm(x, w, eps):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def _rope(x, positions, theta):
+    """Rotary embedding. x: [..., T, n_heads, D]; positions: [..., T]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., T, half]
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _expand_kv(x, groups: int):
+    """GQA: repeat KV heads to match query heads. x: [B, Hkv, ..., D]."""
+    return jnp.repeat(x, groups, axis=1)
+
+
+def _qkv(cfg: TinyLMConfig, x, wqkv):
+    """Project and split into per-head q, k, v. x: [B, T, H]."""
+    b, t, _ = x.shape
+    qkv = x @ wqkv
+    q = qkv[..., : cfg.hidden]
+    k = qkv[..., cfg.hidden : cfg.hidden + cfg.kv_heads * cfg.head_dim]
+    v = qkv[..., cfg.hidden + cfg.kv_heads * cfg.head_dim :]
+    q = q.reshape(b, t, cfg.heads, cfg.head_dim)
+    k = k.reshape(b, t, cfg.kv_heads, cfg.head_dim)
+    v = v.reshape(b, t, cfg.kv_heads, cfg.head_dim)
+    return q, k, v
+
+
+def _swiglu(x, w_gate, w_up, w_down):
+    g = x @ w_gate
+    return (jax.nn.silu(g) * (x @ w_up)) @ w_down
+
+
+def prefill(cfg: TinyLMConfig, tokens, prompt_len, weights, *,
+            interpret: bool = True):
+    """Prefill forward pass for one request padded to a shape bucket.
+
+    Args:
+      tokens: i32[1, S] prompt padded with zeros to bucket length S.
+      prompt_len: i32[] true prompt length (1 <= prompt_len <= S).
+      weights: flat list in param_spec order.
+
+    Returns:
+      logits: f32[1, vocab] at position prompt_len - 1.
+      k_cache, v_cache: f32[L, 1, Hkv, S, D] (positions >= prompt_len are
+        junk; the decode path masks them via per-request lengths).
+    """
+    p = _unflatten(cfg, weights)
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = p["embed"][tokens]
+    k_layers, v_layers = [], []
+    for i in range(cfg.layers):
+        h = _rmsnorm(x, p[f"l{i}.ln1"], cfg.norm_eps)
+        q, k, v = _qkv(cfg, h, p[f"l{i}.wqkv"])
+        q = _rope(q, positions, cfg.rope_theta)
+        k = _rope(k, positions, cfg.rope_theta)
+        # [B, T, heads, D] -> [B, heads, T, D]
+        qh = q.transpose(0, 2, 1, 3)
+        kh = k.transpose(0, 2, 1, 3)
+        vh = v.transpose(0, 2, 1, 3)
+        k_layers.append(kh)
+        v_layers.append(vh)
+        kx = _expand_kv(kh, cfg.heads // cfg.kv_heads)
+        vx = _expand_kv(vh, cfg.heads // cfg.kv_heads)
+        attn = flash_attention_prefill(qh, kx, vx, causal=True,
+                                       interpret=interpret)
+        attn = attn.transpose(0, 2, 1, 3).reshape(b, s, cfg.hidden)
+        x = x + attn @ p[f"l{i}.wo"]
+        h2 = _rmsnorm(x, p[f"l{i}.ln2"], cfg.norm_eps)
+        x = x + _swiglu(h2, p[f"l{i}.w_gate"], p[f"l{i}.w_up"], p[f"l{i}.w_down"])
+    x = _rmsnorm(x, p["ln_f"], cfg.norm_eps)
+    last = jnp.take_along_axis(
+        x, (prompt_len - 1).reshape(1, 1, 1).astype(jnp.int32), axis=1
+    )[:, 0, :]
+    logits = last @ p["unembed"]
+    k_cache = jnp.stack(k_layers)  # [L, B, Hkv, S, D]
+    v_cache = jnp.stack(v_layers)
+    return logits, k_cache, v_cache
+
+
+def decode(cfg: TinyLMConfig, tokens, positions, k_cache, v_cache, weights, *,
+           interpret: bool = True):
+    """One decode step for a continuous batch of B requests.
+
+    Args:
+      tokens: i32[B] current token per request.
+      positions: i32[B] index the new token occupies (== tokens generated so
+        far + prompt length - ... i.e. the next free KV slot, 0-based).
+      k_cache, v_cache: f32[L, B, Hkv, Smax, D] padded caches.
+      weights: flat list in param_spec order.
+
+    Returns:
+      logits: f32[B, vocab]
+      new_k, new_v: f32[L, B, Hkv, D] — this step's KV rows, which the Rust
+        KV manager writes back at `positions` before the next step.
+    """
+    p = _unflatten(cfg, weights)
+    b = tokens.shape[0]
+    smax = k_cache.shape[3]
+    x = p["embed"][tokens]  # [B, H]
+    new_ks, new_vs = [], []
+    lengths = positions + 1  # after inserting the current token
+    for i in range(cfg.layers):
+        h = _rmsnorm(x, p[f"l{i}.ln1"], cfg.norm_eps)
+        q, k, v = _qkv(cfg, h[:, None, :], p[f"l{i}.wqkv"])  # T=1
+        q = _rope(q, positions[:, None], cfg.rope_theta)[:, 0]  # [B, heads, D]
+        k = _rope(k, positions[:, None], cfg.rope_theta)[:, 0]  # [B, Hkv, D]
+        v = v[:, 0]  # [B, Hkv, D]
+        new_ks.append(k)
+        new_vs.append(v)
+        # Insert the new token's KV at its position (per-request offsets).
+        upd = jax.vmap(
+            lambda c, kn, pos: jax.lax.dynamic_update_slice(
+                c, kn[:, None, :], (0, pos, 0)
+            )
+        )
+        kc = upd(k_cache[i], k, positions)  # [B, Hkv, Smax, D]
+        vc = upd(v_cache[i], v, positions)
+        kx = _expand_kv(kc, cfg.heads // cfg.kv_heads)
+        vx = _expand_kv(vc, cfg.heads // cfg.kv_heads)
+        attn = attention_decode(q, kx, vx, lengths, interpret=interpret)
+        attn = attn.reshape(b, cfg.hidden)
+        x = x + attn @ p[f"l{i}.wo"]
+        h2 = _rmsnorm(x, p[f"l{i}.ln2"], cfg.norm_eps)
+        x = x + _swiglu(h2, p[f"l{i}.w_gate"], p[f"l{i}.w_up"], p[f"l{i}.w_down"])
+    x = _rmsnorm(x, p["ln_f"], cfg.norm_eps)
+    logits = x @ p["unembed"]
+    return logits, jnp.stack(new_ks), jnp.stack(new_vs)
+
+
+def full_forward_ref(cfg: TinyLMConfig, tokens):
+    """Oracle: dense causal forward over an unpadded prompt, pure jnp
+    (no Pallas), returning logits at every position. Used by tests to check
+    prefill+decode agree with a straight-line forward pass."""
+    from .kernels import ref
+
+    weights = init_weights(cfg)
+    p = _unflatten(cfg, weights)
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = p["embed"][tokens]
+    for i in range(cfg.layers):
+        h = _rmsnorm(x, p[f"l{i}.ln1"], cfg.norm_eps)
+        q, k, v = _qkv(cfg, h, p[f"l{i}.wqkv"])
+        q = _rope(q, positions, cfg.rope_theta).transpose(0, 2, 1, 3)
+        k = _rope(k, positions, cfg.rope_theta).transpose(0, 2, 1, 3)
+        v = v.transpose(0, 2, 1, 3)
+        kx = _expand_kv(k, cfg.heads // cfg.kv_heads)
+        vx = _expand_kv(v, cfg.heads // cfg.kv_heads)
+        attn = ref.attention_prefill_ref(q, kx, vx, causal=True)
+        attn = attn.transpose(0, 2, 1, 3).reshape(b, s, cfg.hidden)
+        x = x + attn @ p[f"l{i}.wo"]
+        h2 = _rmsnorm(x, p[f"l{i}.ln2"], cfg.norm_eps)
+        x = x + _swiglu(h2, p[f"l{i}.w_gate"], p[f"l{i}.w_up"], p[f"l{i}.w_down"])
+    x = _rmsnorm(x, p["ln_f"], cfg.norm_eps)
+    return x @ p["unembed"]

@@ -1,0 +1,76 @@
+"""§Perf L1/L2 structural report.
+
+L1 (Pallas kernel): interpret=True wallclock is CPU-numpy, not a TPU proxy,
+so kernel optimization is *structural*: sweep block shapes and report the
+VMEM working set and MXU-utilization estimate per configuration; pick the
+block sizes that maximize MXU occupancy within the VMEM budget.
+
+L2 (JAX graph): inspect the lowered HLO for redundant work — parameter
+counts, fusion counts, and the number of dot/while ops per executable
+(layers x expected-dots means no recompute slipped in).
+
+Usage:  cd python && python -m compile.perf_report
+"""
+
+from __future__ import annotations
+
+import os
+
+from .kernels.attention import mxu_utilization_estimate, vmem_bytes_prefill
+from .model import TinyLMConfig
+
+
+def l1_block_sweep() -> None:
+    cfg = TinyLMConfig()
+    d = cfg.head_dim
+    s = cfg.max_seq
+    print("== L1: Pallas flash-attention block sweep (structural) ==")
+    print(f"model: head_dim={d}, max_seq={s}; VMEM budget 16 MiB/core")
+    print(f"{'block_q':>8} {'block_k':>8} {'VMEM KiB':>10} {'MXU util':>9} {'fits':>5}")
+    best = None
+    for bq in (16, 32, 64, 128):
+        for bk in (16, 32, 64, 128):
+            if s % bq or s % bk:
+                continue
+            vmem = vmem_bytes_prefill(bq, bk, d, s)
+            mxu = mxu_utilization_estimate(bq, bk, d)
+            fits = vmem < 16 * 2**20
+            print(f"{bq:>8} {bk:>8} {vmem / 1024:>10.1f} {mxu:>9.3f} {str(fits):>5}")
+            if fits and (best is None or mxu > best[2]):
+                best = (bq, bk, mxu)
+    print(f"-> chosen blocks: q={best[0]}, k={best[1]} (MXU estimate {best[2]:.3f};"
+          f" bounded by head_dim {d} < 128 lanes on TinyLM — a production-scale"
+          f" head_dim of 128 reaches 1.0)")
+
+
+def l2_hlo_audit(artifacts: str = "../artifacts") -> None:
+    print("\n== L2: lowered-HLO audit (no redundant recompute) ==")
+    cfg = TinyLMConfig()
+    for name, dots_expected in [
+        ("tiny_prefill_s64", None),
+        ("tiny_decode_b8", None),
+    ]:
+        path = os.path.join(artifacts, f"{name}.hlo.txt")
+        if not os.path.exists(path):
+            print(f"{name}: artifacts not built")
+            continue
+        text = open(path).read()
+        entry = text[text.find("ENTRY"):]
+        fusions = text.count(" fusion(")
+        dots = text.count(" dot(")
+        whiles = text.count(" while(")
+        customs = text.count("custom-call")
+        print(f"{name}: {len(text)} chars, {dots} dot, {fusions} fusion, "
+              f"{whiles} while, {customs} custom-call, "
+              f"{entry.count('parameter(')} entry params")
+        # Sanity: per layer we expect ~5 projection/FFN dots + attention
+        # matmuls inside the pallas while-loops; dot count must be O(layers),
+        # not O(layers^2) (which would indicate recompute).
+        assert dots < cfg.layers * 16, f"suspicious dot count {dots}"
+        assert customs == 0, "CPU path must not contain Mosaic custom-calls"
+    print("-> no Mosaic custom-calls (interpret path), dot count linear in layers")
+
+
+if __name__ == "__main__":
+    l1_block_sweep()
+    l2_hlo_audit()

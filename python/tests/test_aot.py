@@ -1,0 +1,77 @@
+"""AOT pipeline tests: lowering produces loadable HLO text and a consistent
+manifest/weights bundle. (The cross-language execute check lives on the Rust
+side in rust/tests/pjrt_roundtrip.rs.)"""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot
+from compile import model as M
+
+CFG = M.TinyLMConfig()
+
+
+def test_lower_prefill_text_structure():
+    text = aot.lower_prefill(CFG, 16)
+    assert text.startswith("HloModule"), text[:80]
+    assert "ENTRY" in text
+    # tokens + prompt_len + 31 weights = 33 ENTRY parameters (nested
+    # computations also declare parameters, so count inside ENTRY only).
+    nparams = len(M.param_spec(CFG)) + 2
+    assert text[text.find("ENTRY"):].count("parameter(") == nparams
+
+
+def test_lower_decode_text_structure():
+    text = aot.lower_decode(CFG, 2)
+    assert text.startswith("HloModule")
+    nparams = len(M.param_spec(CFG)) + 4
+    assert text[text.find("ENTRY"):].count("parameter(") == nparams
+
+
+def test_weights_bin_matches_manifest(tmp_path):
+    index = aot.write_weights(CFG, str(tmp_path), seed=0)
+    raw = np.fromfile(tmp_path / "weights.bin", dtype="<f4")
+    total = sum(e["numel"] for e in index)
+    assert raw.size == total
+    # offsets are contiguous and ordered per param_spec
+    off = 0
+    for e, (name, shape) in zip(index, M.param_spec(CFG)):
+        assert e["name"] == name
+        assert e["offset"] == off
+        assert e["numel"] == int(np.prod(shape)) if shape else 1
+        off += e["numel"]
+    # spot-check: first array is the embedding, equal to init_weights output
+    w = M.init_weights(CFG, 0)
+    emb = raw[: CFG.vocab * CFG.hidden].reshape(CFG.vocab, CFG.hidden)
+    np.testing.assert_array_equal(emb, np.asarray(w[0]))
+
+
+def test_weights_deterministic_across_seeds(tmp_path):
+    a = aot.write_weights(CFG, str(tmp_path), seed=0)
+    r1 = np.fromfile(tmp_path / "weights.bin", dtype="<f4").copy()
+    aot.write_weights(CFG, str(tmp_path), seed=0)
+    r2 = np.fromfile(tmp_path / "weights.bin", dtype="<f4")
+    np.testing.assert_array_equal(r1, r2)
+    aot.write_weights(CFG, str(tmp_path), seed=1)
+    r3 = np.fromfile(tmp_path / "weights.bin", dtype="<f4")
+    assert not np.array_equal(r1, r3)
+
+
+def test_repo_artifacts_manifest_consistent():
+    """If `make artifacts` has run, the checked manifest must match TinyLMConfig."""
+    path = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts",
+                        "manifest.json")
+    if not os.path.exists(path):
+        return  # artifacts not built yet; Makefile ordering covers this
+    with open(path) as f:
+        man = json.load(f)
+    c = man["config"]
+    assert c["vocab"] == CFG.vocab
+    assert c["layers"] == CFG.layers
+    assert c["hidden"] == CFG.hidden
+    assert c["kv_heads"] == CFG.kv_heads
+    assert c["max_seq"] == CFG.max_seq
+    assert [w["name"] for w in man["weights"]] == [n for n, _ in M.param_spec(CFG)]

@@ -1,0 +1,61 @@
+//! Ablation study over EcoServe's scheduling design choices (the DESIGN.md
+//! §8 knobs). Each row disables exactly one mechanism and measures strict
+//! P90 attainment at a fixed near-capacity operating point.
+//!
+//!     cargo bench --bench ablation_padg
+//!
+//! Expected: full EcoServe on top; mean-slack (the paper's literal
+//! Algorithm-2 line) loses TPOT attainment on short-output requests;
+//! removing the window cap starves the ring on long-prompt workloads;
+//! removing stickiness fragments windows; removing hysteresis multiplies
+//! phase switches.
+
+use ecoserve::config::{ClusterSpec, Deployment, ExperimentConfig, SystemKind, SystemParams};
+use ecoserve::harness::run_once;
+use ecoserve::perfmodel::ModelSpec;
+use ecoserve::util::threads::parallel_map;
+use ecoserve::workload::Dataset;
+
+fn main() {
+    let variants: Vec<(&str, fn(&mut SystemParams))> = vec![
+        ("full EcoServe", |_| {}),
+        ("mean slack (paper-literal)", |p| p.ablate_mean_slack = true),
+        ("no window cap", |p| p.ablate_no_window_cap = true),
+        ("no sticky routing", |p| p.ablate_no_sticky = true),
+        ("no hysteresis", |p| p.ablate_no_hysteresis = true),
+    ];
+    let workloads = [
+        (Dataset::sharegpt(), 14.0, 32),
+        (Dataset::longbench(), 2.8, 32),
+    ];
+
+    println!("== EcoServe scheduler ablations (strict attainment at fixed load) ==\n");
+    for (dataset, rate, gpus) in workloads {
+        println!("--- {} @ {:.1} req/s, Llama-30B, L20, {} GPUs ---", dataset.name, rate, gpus);
+        println!("{:<30} {:>10} {:>12} {:>12}", "variant", "attain %", "p90TTFT s", "p90TPOT ms");
+        let jobs: Vec<_> = variants.iter().map(|(n, f)| (*n, *f)).collect();
+        let rows = parallel_map(jobs, variants.len(), |(name, mutate)| {
+            let mut d = Deployment::paper_default(ModelSpec::llama_30b(),
+                                                  ClusterSpec::l20_cluster());
+            d.gpus_used = gpus;
+            let mut cfg = ExperimentConfig::new(d, dataset.clone());
+            cfg.duration = 180.0;
+            cfg.warmup = 30.0;
+            mutate(&mut cfg.params);
+            let r = run_once(SystemKind::EcoServe, &cfg, rate, None);
+            (name, r)
+        });
+        let full = rows[0].1.attainment;
+        for (name, r) in &rows {
+            println!(
+                "{:<30} {:>10.1} {:>12.2} {:>12.1}{}",
+                name,
+                r.attainment * 100.0,
+                r.summary.ttft_p90,
+                r.summary.tpot_p90 * 1e3,
+                if r.attainment + 1e-9 < full { "   (worse)" } else { "" }
+            );
+        }
+        println!();
+    }
+}

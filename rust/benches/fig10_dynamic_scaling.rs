@@ -1,0 +1,69 @@
+//! Regenerates **Figure 10** — dynamic fine-grained scaling: the request
+//! rate ramps up in steps while the mitosis controller adds instances;
+//! SLO attainment (sampled every 30 s) dips at each rate step and recovers
+//! after each scale-up. N_l = 4, N_u = 16 as in the paper.
+//!
+//!     cargo bench --bench fig10_dynamic_scaling
+//!
+//! Calibration note: the paper ramps 20 → 50 req/s against its testbed's
+//! per-instance capacity (~2.5 req/s); our analytical L20 instances
+//! sustain ~3.6 req/s on ShareGPT, so the ramp is scaled to 16 → 40 req/s —
+//! same relative overload trajectory, same expected figure shape.
+
+use ecoserve::config::{ClusterSpec, Deployment, SystemParams};
+use ecoserve::coordinator::padg::{AutoScalePolicy, EcoServeSystem};
+use ecoserve::metrics::{Collector, SloSpec};
+use ecoserve::perfmodel::ModelSpec;
+use ecoserve::sim::run;
+use ecoserve::workload::{Dataset, RampTrace, TraceGenerator};
+
+fn main() {
+    let mut deployment = Deployment::paper_default(
+        ModelSpec::codellama_34b(),
+        ClusterSpec::l20_cluster(),
+    );
+    deployment.gpus_used = 64; // allow growth to 16 instances (N_u)
+    let dataset = Dataset::sharegpt();
+    let slo = SloSpec::new(dataset.slo_ttft, dataset.slo_tpot);
+    let mut params = SystemParams::default();
+    params.n_lower = 4;
+    params.n_upper = 16;
+
+    let mut sys = EcoServeSystem::with_capacity(&deployment, slo, params, 8, 16);
+    sys.autoscale = Some(AutoScalePolicy::default());
+
+    let ramp = RampTrace { start_rate: 16.0, end_rate: 40.0, increments: 6, step_secs: 120.0 };
+    let trace = TraceGenerator::new(dataset, 42).ramp(&ramp.steps());
+    println!("== Figure 10: dynamic fine-grained scaling ==");
+    println!("ramp {} -> {} req/s in {} steps of {}s; start 8 instances, N_l=4 N_u=16\n",
+             ramp.start_rate, ramp.end_rate, ramp.increments, ramp.step_secs);
+
+    let mut metrics = Collector::new();
+    let t0 = std::time::Instant::now();
+    let stats = run(&mut sys, trace, ramp.total_duration() + 240.0, &mut metrics);
+
+    println!("{:>7} {:>10} {:>10}  attainment (every 30s)", "t (s)", "attain %", "instances");
+    let series = metrics.attainment_series(&slo, 30.0, ramp.total_duration());
+    for (t, frac) in &series {
+        let active = 8 + sys
+            .scale_log
+            .iter()
+            .filter(|e| e.time <= *t && e.kind == "up")
+            .count()
+            - sys.scale_log.iter().filter(|e| e.time <= *t && e.kind == "down").count();
+        let bar = "#".repeat((frac * 40.0) as usize);
+        println!("{:>7.0} {:>10.1} {:>10}  {bar}", t, frac * 100.0, active);
+    }
+
+    println!("\nscale events:");
+    for e in &sys.scale_log {
+        println!("  t={:>6.1}s scale-{} -> {} active", e.time, e.kind, e.active_instances);
+    }
+    println!("\nfinal macros: {:?}", sys.mitosis.macros);
+    sys.mitosis.check_invariants().expect("mitosis invariants hold");
+
+    let dips_recovered = series.windows(2).filter(|w| w[1].1 > w[0].1 + 0.05).count();
+    println!("\nshape check: {} recovery upticks after dips (paper: attainment dips at each", dips_recovered);
+    println!(" rate step and is restored by the newly added instance); {} sim events in {:?}",
+             stats.events, t0.elapsed());
+}

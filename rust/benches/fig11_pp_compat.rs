@@ -1,0 +1,94 @@
+//! Regenerates **Figure 11** — pipeline-parallelism compatibility:
+//! throughput as the TPOT SLO relaxes from 100 ms to 500 ms for
+//! EcoServe TP=4, EcoServe TP=2×PP=2, and vLLM (both layouts),
+//! CodeLlama-34B / ShareGPT / L20.
+//!
+//!     cargo bench --bench fig11_pp_compat
+//!
+//! Expected shape (paper): PP gives no single-batch latency speedup, so at
+//! tight TPOT SLOs the TP=4 layout wins; as the SLO relaxes past the
+//! crossover, EcoServe's PP layout overtakes (cheap p2p hand-offs instead
+//! of PCIe all-reduces) and plateaus above both vLLM variants — whose
+//! constant prefill/decode alternation pays the pipeline fill/drain bubble
+//! on every switch.
+
+use ecoserve::config::{ClusterSpec, Deployment, ExperimentConfig, SystemKind};
+use ecoserve::harness::goodput_search;
+use ecoserve::metrics::Attainment;
+use ecoserve::perfmodel::ModelSpec;
+use ecoserve::util::threads::parallel_map;
+use ecoserve::workload::Dataset;
+
+fn main() {
+    let slos_ms = [100.0, 200.0, 300.0, 400.0, 500.0];
+    let layouts: [(&str, SystemKind, usize, usize); 4] = [
+        ("EcoServe TP4", SystemKind::EcoServe, 4, 1),
+        ("EcoServe TP2xPP2", SystemKind::EcoServe, 2, 2),
+        ("vLLM TP4", SystemKind::Vllm, 4, 1),
+        ("vLLM TP2xPP2", SystemKind::Vllm, 2, 2),
+    ];
+
+    let mut jobs = Vec::new();
+    for &(label, system, tp, pp) in &layouts {
+        for &slo_ms in &slos_ms {
+            jobs.push((label, system, tp, pp, slo_ms));
+        }
+    }
+    let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(8);
+    let results = parallel_map(jobs, workers, |(label, system, tp, pp, slo_ms)| {
+        let mut deployment = Deployment::paper_default(
+            ModelSpec::codellama_34b(),
+            ClusterSpec::l20_cluster(),
+        );
+        deployment.tp = tp;
+        deployment.pp = pp;
+        deployment.gpus_used = 32;
+        let mut dataset = Dataset::sharegpt();
+        dataset.slo_tpot = slo_ms / 1e3;
+        let mut cfg = ExperimentConfig::new(deployment, dataset);
+        cfg.duration = 180.0;
+        cfg.warmup = 30.0;
+        let g = goodput_search(system, &cfg, Attainment::P90);
+        (label, slo_ms, g.rate)
+    });
+
+    println!("== Figure 11: P90 goodput (req/s) vs TPOT SLO — CodeLlama-34B, ShareGPT, L20 ==\n");
+    print!("{:<18}", "layout");
+    for slo in slos_ms {
+        print!(" {:>9}", format!("{slo:.0}ms"));
+    }
+    println!();
+    for &(label, _, _, _) in &layouts {
+        print!("{label:<18}");
+        for &slo in &slos_ms {
+            let rate = results
+                .iter()
+                .find(|r| r.0 == label && r.1 == slo)
+                .map(|r| r.2)
+                .unwrap_or(f64::NAN);
+            print!(" {:>9.2}", rate);
+        }
+        println!();
+    }
+
+    // Shape checks (see EXPERIMENTS.md F11 for the deviation discussion:
+    // in our roofline the PP/TP crossover point sits above the highest
+    // demand-driven batch size the workload reaches, so PP *converges
+    // toward* TP as the SLO relaxes rather than fully overtaking it).
+    let get = |label: &str, slo: f64| {
+        results.iter().find(|r| r.0 == label && r.1 == slo).map(|r| r.2).unwrap_or(0.0)
+    };
+    let tight = get("EcoServe TP4", 100.0) >= get("EcoServe TP2xPP2", 100.0);
+    let ratio_tight = get("EcoServe TP2xPP2", 100.0) / get("EcoServe TP4", 100.0).max(1e-9);
+    let ratio_relaxed = get("EcoServe TP2xPP2", 500.0) / get("EcoServe TP4", 500.0).max(1e-9);
+    let pp_gains = ratio_relaxed > ratio_tight + 0.15;
+    let beats_vllm_tight = get("EcoServe TP2xPP2", 100.0) > get("vLLM TP2xPP2", 100.0)
+        && get("EcoServe TP2xPP2", 200.0) > get("vLLM TP2xPP2", 200.0);
+    println!("\nshape checks:");
+    println!("  TP wins at tight TPOT SLO:                  {}",
+             if tight { "PASS" } else { "FAIL" });
+    println!("  PP/TP ratio grows as SLO relaxes ({:.2} -> {:.2}): {}",
+             ratio_tight, ratio_relaxed, if pp_gains { "PASS" } else { "FAIL" });
+    println!("  EcoServe-PP beats vLLM-PP at tight SLOs:    {}",
+             if beats_vllm_tight { "PASS" } else { "FAIL" });
+}

@@ -1,0 +1,132 @@
+//! Regenerates **Figure 8** — end-to-end goodput under P50/P90/P99 SLO
+//! attainment for all five systems across the full evaluation grid:
+//! 3 models × 3 datasets × 2 clusters.
+//!
+//!     cargo bench --bench fig8_end_to_end_goodput            # full grid
+//!     FIG8_QUICK=1 cargo bench --bench fig8_end_to_end_goodput  # 1 cell/cluster
+//!
+//! Absolute rates differ from the paper (our substrate is an analytical
+//! simulator, not their testbed); the *shape* to verify: EcoServe ≥ NoDG
+//! with the gap widening P50→P99 and smallest on Alpaca; FuDG collapsing
+//! for Llama-30B (MHA KV) on commodity links and degrading further on
+//! A800 (compute grows faster than bandwidth).
+
+use ecoserve::config::{ClusterSpec, Deployment, ExperimentConfig, SystemKind};
+use ecoserve::harness::goodput_search;
+use ecoserve::metrics::Attainment;
+use ecoserve::perfmodel::ModelSpec;
+use ecoserve::util::threads::parallel_map;
+use ecoserve::workload::Dataset;
+
+fn main() {
+    let quick = std::env::var("FIG8_QUICK").is_ok();
+    let clusters = [ClusterSpec::l20_cluster(), ClusterSpec::a800_cluster()];
+    let models = if quick {
+        vec![ModelSpec::llama_30b()]
+    } else {
+        vec![ModelSpec::llama_30b(), ModelSpec::codellama_34b(), ModelSpec::qwen2_72b()]
+    };
+    let datasets = if quick {
+        vec![Dataset::sharegpt()]
+    } else {
+        Dataset::all_paper()
+    };
+    let levels = Attainment::all();
+
+    // Build the experiment grid.
+    let mut cells = Vec::new();
+    for cluster in &clusters {
+        for model in &models {
+            for dataset in &datasets {
+                for level in levels {
+                    for system in SystemKind::all() {
+                        cells.push((cluster.clone(), model.clone(), dataset.clone(),
+                                    level, system));
+                    }
+                }
+            }
+        }
+    }
+    eprintln!("fig8: {} goodput searches (FIG8_QUICK=1 for a subset)...", cells.len());
+
+    let t0 = std::time::Instant::now();
+    let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(8);
+    let results = parallel_map(cells, workers, |(cluster, model, dataset, level, system)| {
+        let deployment = Deployment::paper_default(model.clone(), cluster.clone());
+        let mut cfg = ExperimentConfig::new(deployment, dataset.clone());
+        cfg.duration = 180.0;
+        cfg.warmup = 30.0;
+        let g = goodput_search(system, &cfg, level);
+        (cluster.name, model.name, dataset.name, level, system, g.rate)
+    });
+    eprintln!("fig8: grid done in {:?}", t0.elapsed());
+
+    // Print per-(cluster, model, dataset) blocks with all systems/levels.
+    println!("== Figure 8: goodput (req/s) at SLO attainment levels ==");
+    for cluster in &clusters {
+        for model in &models {
+            for dataset in &datasets {
+                let block: Vec<_> = results
+                    .iter()
+                    .filter(|r| r.0 == cluster.name && r.1 == model.name && r.2 == dataset.name)
+                    .collect();
+                if block.is_empty() {
+                    continue;
+                }
+                println!("\n--- {} | {} | {} ---", cluster.name, model.name, dataset.name);
+                println!("{:<10} {:>8} {:>8} {:>8}", "system", "P50", "P90", "P99");
+                for system in SystemKind::all() {
+                    let rate = |lvl: Attainment| {
+                        block
+                            .iter()
+                            .find(|r| r.4 == system && r.3 == lvl)
+                            .map(|r| r.5)
+                            .unwrap_or(f64::NAN)
+                    };
+                    println!(
+                        "{:<10} {:>8.2} {:>8.2} {:>8.2}",
+                        system.label(),
+                        rate(Attainment::P50),
+                        rate(Attainment::P90),
+                        rate(Attainment::P99)
+                    );
+                }
+            }
+        }
+    }
+
+    // Headline aggregate: EcoServe's mean P90 improvement over each baseline
+    // (the paper reports +83.76% vLLM, +71.97% Sarathi, +192.41% DistServe,
+    // +218.22% MoonCake).
+    println!("\n== EcoServe mean P90 goodput improvement over baselines ==");
+    for baseline in [SystemKind::Vllm, SystemKind::Sarathi, SystemKind::DistServe,
+                     SystemKind::MoonCake] {
+        let mut gains = Vec::new();
+        for cluster in &clusters {
+            for model in &models {
+                for dataset in &datasets {
+                    let find = |sys: SystemKind| {
+                        results
+                            .iter()
+                            .find(|r| {
+                                r.0 == cluster.name && r.1 == model.name
+                                    && r.2 == dataset.name && r.4 == sys
+                                    && r.3 == Attainment::P90
+                            })
+                            .map(|r| r.5)
+                    };
+                    if let (Some(eco), Some(base)) = (find(SystemKind::EcoServe), find(baseline)) {
+                        if base > 0.05 {
+                            gains.push((eco / base - 1.0) * 100.0);
+                        } else if eco > 0.05 {
+                            gains.push(300.0); // baseline failed outright; cap the ratio
+                        }
+                    }
+                }
+            }
+        }
+        let mean = gains.iter().sum::<f64>() / gains.len().max(1) as f64;
+        println!("  vs {:<10}: {:+.1}% (paper: vLLM +83.8, Sarathi +72.0, DistServe +192.4, MoonCake +218.2)",
+                 baseline.label(), mean);
+    }
+}

@@ -1,0 +1,55 @@
+//! Regenerates **Figure 9** — static coarse-grained scaling: P90 goodput
+//! as the instance count doubles 1 → 2 → 4 → 8. The paper reports
+//! *superlinear* scaling (5.6× at 4 instances for CodeLlama-34B): one
+//! instance degenerates PaDG to NoDG (no ring to roll), so adding
+//! instances buys interference room on top of raw capacity.
+//!
+//!     cargo bench --bench fig9_static_scaling
+//!
+//! Deviation note: the paper lists TP=2 for Qwen2-72B here, but a 72B
+//! bf16 model (~145 GB weights) cannot fit two 48 GB L20s; we use TP=8 as
+//! in its §4.2 end-to-end setup and scale 1 → 2 → 4 instances.
+
+use ecoserve::config::{ClusterSpec, Deployment, ExperimentConfig, SystemKind};
+use ecoserve::harness::goodput_search;
+use ecoserve::metrics::Attainment;
+use ecoserve::perfmodel::ModelSpec;
+use ecoserve::util::threads::parallel_map;
+use ecoserve::workload::Dataset;
+
+fn main() {
+    println!("== Figure 9: static coarse-grained scaling (P90 goodput, ShareGPT, L20) ==");
+    for (model, tp, counts) in [
+        (ModelSpec::codellama_34b(), 4usize, vec![1usize, 2, 4, 8]),
+        (ModelSpec::qwen2_72b(), 8, vec![1, 2, 4]),
+    ] {
+        let jobs: Vec<usize> = counts.clone();
+        let model_name = model.name;
+        let results = parallel_map(jobs, counts.len(), |n| {
+            let mut deployment =
+                Deployment::paper_default(model.clone(), ClusterSpec::l20_cluster());
+            deployment.tp = tp;
+            deployment.pp = 1;
+            deployment.gpus_used = n * tp;
+            let mut cfg = ExperimentConfig::new(deployment, Dataset::sharegpt());
+            cfg.duration = 180.0;
+            cfg.warmup = 30.0;
+            let g = goodput_search(SystemKind::EcoServe, &cfg, Attainment::P90);
+            (n, g.rate)
+        });
+        println!("\n{model_name} (TP={tp}):");
+        println!("{:>10} {:>8} {:>14} {:>12} {:>12}",
+                 "instances", "GPUs", "goodput req/s", "speedup", "vs linear");
+        let base = results[0].1.max(1e-9);
+        for (n, rate) in &results {
+            let speedup = rate / base;
+            let linear = *n as f64;
+            println!("{:>10} {:>8} {:>14.2} {:>11.2}x {:>11}",
+                     n, n * tp, rate, speedup,
+                     if speedup > linear * 1.02 { "SUPERLINEAR" }
+                     else if speedup > linear * 0.9 { "~linear" } else { "sublinear" });
+        }
+    }
+    println!("\n(paper: 5.6x at 4 instances for CodeLlama-34B — superlinear because a");
+    println!(" single instance cannot roll prefill windows across a ring)");
+}

@@ -1,0 +1,121 @@
+//! Coordinator hot-path microbenchmarks (§Perf L3 evidence, not a paper
+//! figure): per-decision routing latency, constraint-check cost, simulator
+//! event throughput, proxy migration latency, and paged-KV gather
+//! bandwidth. Targets (EXPERIMENTS.md §Perf): scheduling decision ≪ 1 ms;
+//! simulator ≥ 2 M events/s; proxy migration ≪ 100 ms.
+//!
+//!     cargo bench --bench microbench_coordinator
+
+use std::time::Instant;
+
+use ecoserve::config::{ClusterSpec, Deployment, ExperimentConfig, SystemKind};
+use ecoserve::coordinator::constraints::check_constraints;
+use ecoserve::coordinator::proxy::{HandlerTable, InstanceHandler};
+use ecoserve::coordinator::routing::{route, RoutingState};
+use ecoserve::harness::run_once;
+use ecoserve::metrics::SloSpec;
+use ecoserve::perfmodel::ModelSpec;
+use ecoserve::runtime::kv::{KvConfig, KvStore};
+use ecoserve::sim::SimInstance;
+use ecoserve::workload::{Dataset, Request};
+
+fn bench<F: FnMut()>(name: &str, iters: u64, mut f: F) -> f64 {
+    // warmup
+    for _ in 0..iters / 10 + 1 {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("{name:<44} {:>12.1} ns/op {:>14.0} ops/s", per * 1e9, 1.0 / per);
+    per
+}
+
+fn main() {
+    println!("== L3 coordinator microbenchmarks ==\n");
+    let deployment = Deployment::paper_default(
+        ModelSpec::codellama_34b(),
+        ClusterSpec::l20_cluster(),
+    );
+    let slo = SloSpec::new(5.0, 0.1);
+
+    // Populated instances for realistic constraint checks.
+    let mut instances: Vec<SimInstance> = (0..8)
+        .map(|i| SimInstance::new(i, deployment.timer(), 0.1))
+        .collect();
+    for (i, inst) in instances.iter_mut().enumerate() {
+        for k in 0..40 {
+            inst.admit(Request {
+                id: (i * 100 + k) as u64,
+                arrival: 0.0,
+                input_len: 300,
+                output_len: 200,
+            });
+        }
+        // move them to running via a prefill+decode cycle
+        let mut m = ecoserve::metrics::Collector::new();
+        for _ in 0..40 {
+            let d = inst.start_prefill(1, 0.0);
+            inst.complete_batch(d, &mut m);
+        }
+        let d = inst.start_decode(1.0);
+        inst.complete_batch(d, &mut m);
+    }
+    let req = Request { id: 9999, arrival: 10.0, input_len: 400, output_len: 150 };
+
+    bench("constraint check (Algorithm 2)", 200_000, || {
+        let v = check_constraints(&instances[3], &req, 10.0, &slo, 128, 0.7);
+        std::hint::black_box(v);
+    });
+
+    let members: Vec<usize> = (0..8).collect();
+    let mut rs = RoutingState::default();
+    bench("routing decision (Algorithm 1, 8-ring)", 100_000, || {
+        let out = route(&mut rs, &members, &instances, &req, 10.0, &slo, 128);
+        std::hint::black_box(out);
+    });
+
+    // Proxy migration (paper budget: < 100 ms; re-init alternative ~3 min).
+    let mut table_a = HandlerTable::default();
+    for id in 0..16u64 {
+        table_a.handlers.push(InstanceHandler::new(id, format!("n{}:50{}", id / 8, id), 4, 1, 150_000));
+    }
+    let per = bench("proxy migration (serialize+deserialize)", 100_000, || {
+        let wire = table_a.export(7).unwrap();
+        let mut b = HandlerTable::default();
+        b.import(&wire).unwrap();
+        let back = b.export(7).unwrap();
+        table_a.import(&back).unwrap();
+    });
+    println!("  -> {:.3} us per migration vs paper's <100 ms budget", per * 1e6 / 2.0);
+
+    // Paged-KV gather bandwidth (live-path hot loop).
+    let kv_cfg = KvConfig { layers: 4, kv_heads: 2, head_dim: 32, max_seq: 128, block_tokens: 16 };
+    let mut store = KvStore::new(kv_cfg.clone(), 64 * 128);
+    let bucket = 16;
+    let fake = vec![0.5f32; kv_cfg.layers * kv_cfg.kv_heads * 128 * kv_cfg.head_dim];
+    for id in 0..16u64 {
+        store.insert_prefill(id, &fake, &fake, 128, 100).unwrap();
+    }
+    let ids: Vec<u64> = (0..16).collect();
+    let bytes_per_gather = (2 * kv_cfg.layers * bucket * kv_cfg.kv_heads
+        * kv_cfg.max_seq * kv_cfg.head_dim * 4) as f64;
+    let per = bench("KV gather (16 reqs -> [L,16,Hkv,128,D])", 2_000, || {
+        let out = store.gather_batch(&ids, bucket).unwrap();
+        std::hint::black_box(out);
+    });
+    println!("  -> {:.2} GB/s gather bandwidth", bytes_per_gather / per / 1e9);
+
+    // End-to-end simulator throughput (the Fig-8 grid driver).
+    let mut cfg = ExperimentConfig::new(deployment, Dataset::sharegpt());
+    cfg.duration = 120.0;
+    cfg.warmup = 20.0;
+    let t0 = Instant::now();
+    let r = run_once(SystemKind::EcoServe, &cfg, 10.0, None);
+    let wall = t0.elapsed().as_secs_f64();
+    println!("\nsimulator end-to-end: {} events in {:.3}s = {:.2}M events/s (target >= 2M)",
+             r.events, wall, r.events as f64 / wall / 1e6);
+    println!("sim-seconds per wall-second: {:.0}", (cfg.duration + 240.0) / wall);
+}

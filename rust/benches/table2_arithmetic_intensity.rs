@@ -1,0 +1,55 @@
+//! Regenerates **Table 2** — approximate arithmetic intensity of the six
+//! primary LLM operations, prefill vs decode — and checks the paper's
+//! qualitative claims (prefill AI >> decode AI; prefill ~Θ(BS)/Θ(S),
+//! decode ~Θ(B)/Θ(1)).
+//!
+//!     cargo bench --bench table2_arithmetic_intensity
+
+use ecoserve::perfmodel::{table2_ops, Phase};
+
+fn main() {
+    // The paper leaves (B, S, H, M) symbolic; print a representative grid
+    // so the asymptotic columns are visible numerically.
+    println!("== Table 2: approximate arithmetic intensity (elements, bf16) ==\n");
+    for (b, s) in [(1.0, 128.0), (8.0, 512.0), (64.0, 2048.0)] {
+        let (h, m) = (8192.0, 64.0);
+        println!("B={b}, S={s}, H={h}, M={m}");
+        println!("{:<20} {:>8} {:>12} {:>14} {:>10} {:>12}",
+                 "Operation", "Phase", "GFLOPs", "MBytes", "AI", "paper-approx");
+        for op in table2_ops(b, s, h, m, 2.0) {
+            let approx = match (op.name, op.phase) {
+                ("Attention QK^T" | "Attention (QK^T)V", Phase::Prefill) => format!("S={s}"),
+                ("Attention QK^T" | "Attention (QK^T)V", Phase::Decode) => "1".to_string(),
+                (_, Phase::Prefill) => format!("BS={}", b * s),
+                (_, Phase::Decode) => format!("B={b}"),
+            };
+            println!(
+                "{:<20} {:>8} {:>12.2} {:>14.2} {:>10.1} {:>12}",
+                op.name,
+                format!("{:?}", op.phase),
+                op.flops / 1e9,
+                op.bytes / 1e6,
+                op.arithmetic_intensity(),
+                approx
+            );
+        }
+        println!();
+    }
+
+    // Paper claims, checked numerically over the grid:
+    let mut ok = true;
+    for (b, s) in [(1.0, 128.0), (8.0, 512.0), (64.0, 2048.0)] {
+        let ops = table2_ops(b, s, 8192.0, 64.0, 2.0);
+        for name in ["QKV Projection", "Attention QK^T", "Attention (QK^T)V",
+                     "Output Projection", "Dim Expansion", "Dim Reduction"] {
+            let p = ops.iter().find(|o| o.name == name && o.phase == Phase::Prefill).unwrap();
+            let d = ops.iter().find(|o| o.name == name && o.phase == Phase::Decode).unwrap();
+            if p.arithmetic_intensity() <= d.arithmetic_intensity() {
+                ok = false;
+                println!("VIOLATION: {name} prefill AI <= decode AI at B={b},S={s}");
+            }
+        }
+    }
+    println!("paper claim check (prefill AI > decode AI for all six ops): {}",
+             if ok { "PASS" } else { "FAIL" });
+}

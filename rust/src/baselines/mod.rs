@@ -1,0 +1,83 @@
+//! The four comparison systems of the paper's evaluation (§4.1):
+//!
+//! * [`vllm`] — NoDG, separate batching, prefill-priority continuous
+//!   batching (vLLM's default scheduler).
+//! * [`sarathi`] — NoDG, hybrid batching with chunked prefill,
+//!   decode-priority (Sarathi-Serve).
+//! * [`fudg`] — the two fully-disaggregated systems: DistServe (intra-node
+//!   KV hops) and MoonCake (inter-node hops through a central KV pool).
+//!
+//! All share the same [`crate::sim::SimInstance`] hardware model as
+//! EcoServe — only the scheduling policy differs, which is exactly the
+//! comparison the paper makes.
+
+pub mod fudg;
+pub mod sarathi;
+pub mod vllm;
+
+pub use fudg::{FudgMode, FudgSystem};
+pub use sarathi::SarathiSystem;
+pub use vllm::VllmSystem;
+
+use crate::sim::SimInstance;
+use crate::workload::Request;
+
+/// Least-outstanding-load routing used by both NoDG baselines: pick the
+/// instance with the smallest (KV in use + queued prompt tokens) that has
+/// KV room; `None` when every instance is at capacity.
+pub fn least_loaded_with_room(
+    instances: &[SimInstance],
+    req: &Request,
+    margin: usize,
+) -> Option<usize> {
+    instances
+        .iter()
+        .filter(|i| i.kv_room_for(req.input_len, margin))
+        .min_by_key(|i| {
+            i.kv_used + i.prefill_queue.iter().map(|r| r.req.input_len).sum::<usize>()
+        })
+        .map(|i| i.id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::interconnect::LinkSpec;
+    use crate::perfmodel::parallelism::ParallelCfg;
+    use crate::perfmodel::{BatchTimer, GpuSpec, ModelSpec};
+
+    fn instances(n: usize) -> Vec<SimInstance> {
+        (0..n)
+            .map(|i| {
+                let timer = BatchTimer::new(
+                    ModelSpec::codellama_34b(),
+                    GpuSpec::l20(),
+                    ParallelCfg::tp_only(4, LinkSpec::pcie4()),
+                );
+                SimInstance::new(i, timer, 0.1)
+            })
+            .collect()
+    }
+
+    fn req(input: usize) -> Request {
+        Request { id: 1, arrival: 0.0, input_len: input, output_len: 10 }
+    }
+
+    #[test]
+    fn picks_least_loaded() {
+        let mut insts = instances(3);
+        insts[0].kv_used = 5000;
+        insts[1].kv_used = 3000;
+        insts[2].kv_used = 100;
+        assert_eq!(least_loaded_with_room(&insts, &req(64), 0), Some(2));
+    }
+
+    #[test]
+    fn skips_full_instances() {
+        let mut insts = instances(2);
+        insts[0].kv_used = insts[0].kv_capacity;
+        assert_eq!(least_loaded_with_room(&insts, &req(64), 0), Some(1));
+        insts[1].kv_used = insts[1].kv_capacity;
+        assert_eq!(least_loaded_with_room(&insts, &req(64), 0), None);
+    }
+}

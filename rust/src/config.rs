@@ -1,0 +1,316 @@
+//! Configuration: cluster topologies, deployments, and experiment specs.
+//!
+//! Cluster presets mirror the paper's two testbeds (§4.1):
+//! * `l20_cluster()` — 8 nodes × 8 NVIDIA L20-48GB, PCIe-only intra-node,
+//!   10 Gbps Ethernet inter-node (the "production-level" commodity cluster;
+//!   the end-to-end grid uses 32 of the 64 GPUs, as §4.2 does).
+//! * `a800_cluster()` — 2 nodes × 8 NVIDIA A800-80GB, PCIe intra-node,
+//!   25 Gbps RoCE inter-node.
+
+use crate::perfmodel::interconnect::LinkSpec;
+use crate::perfmodel::parallelism::ParallelCfg;
+use crate::perfmodel::{BatchTimer, GpuSpec, ModelSpec};
+use crate::workload::Dataset;
+
+/// Physical cluster description.
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub name: &'static str,
+    pub gpu: GpuSpec,
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    /// Intra-node fabric (TP all-reduces, DistServe KV hops).
+    pub intra_link: LinkSpec,
+    /// Inter-node network (MoonCake KV pool traffic).
+    pub inter_link: LinkSpec,
+}
+
+impl ClusterSpec {
+    pub fn l20_cluster() -> Self {
+        ClusterSpec {
+            name: "L20-cluster",
+            gpu: GpuSpec::l20(),
+            nodes: 8,
+            gpus_per_node: 8,
+            intra_link: LinkSpec::pcie4(),
+            inter_link: LinkSpec::eth_10g(),
+        }
+    }
+
+    pub fn a800_cluster() -> Self {
+        ClusterSpec {
+            name: "A800-cluster",
+            gpu: GpuSpec::a800(),
+            nodes: 2,
+            gpus_per_node: 8,
+            intra_link: LinkSpec::pcie4(),
+            inter_link: LinkSpec::roce_25g(),
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<ClusterSpec> {
+        match name.to_ascii_lowercase().as_str() {
+            "l20" | "l20-cluster" => Some(Self::l20_cluster()),
+            "a800" | "a800-cluster" => Some(Self::a800_cluster()),
+            _ => None,
+        }
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.nodes * self.gpus_per_node
+    }
+}
+
+/// A model deployed on a cluster with a parallelism layout.
+#[derive(Debug, Clone)]
+pub struct Deployment {
+    pub model: ModelSpec,
+    pub cluster: ClusterSpec,
+    pub tp: usize,
+    pub pp: usize,
+    /// Total GPUs used (defines the instance count).
+    pub gpus_used: usize,
+    /// Fraction of GPU memory held back from KV (activations etc.).
+    pub kv_reserve_frac: f64,
+}
+
+impl Deployment {
+    /// The paper's §4.2 layouts: on L20, 32 GPUs with TP=4 (30B/34B) or
+    /// TP=8 (72B); on A800, 16 GPUs with TP=2 / TP=4.
+    pub fn paper_default(model: ModelSpec, cluster: ClusterSpec) -> Self {
+        let (tp, gpus_used) = match (cluster.name, model.name) {
+            ("L20-cluster", "Qwen2-72B") => (8, 32),
+            ("L20-cluster", _) => (4, 32),
+            ("A800-cluster", "Qwen2-72B") => (4, 16),
+            _ => (2, 16),
+        };
+        Deployment {
+            model,
+            cluster,
+            tp,
+            pp: 1,
+            gpus_used,
+            kv_reserve_frac: 0.10,
+        }
+    }
+
+    pub fn gpus_per_instance(&self) -> usize {
+        self.tp * self.pp
+    }
+
+    pub fn num_instances(&self) -> usize {
+        self.gpus_used / self.gpus_per_instance()
+    }
+
+    /// Node hosting instance `i` (instances fill nodes in order).
+    pub fn node_of_instance(&self, i: usize) -> usize {
+        i * self.gpus_per_instance() / self.cluster.gpus_per_node
+    }
+
+    /// Parallelism config for one instance: TP over the intra-node link,
+    /// PP hand-offs intra-node too (instances never span nodes in the
+    /// paper's setups).
+    pub fn parallel_cfg(&self) -> ParallelCfg {
+        ParallelCfg {
+            tp: self.tp,
+            pp: self.pp,
+            tp_link: self.cluster.intra_link.clone(),
+            pp_link: self.cluster.intra_link.clone(),
+        }
+    }
+
+    /// Batch timer for one instance.
+    pub fn timer(&self) -> BatchTimer {
+        BatchTimer::new(self.model.clone(), self.cluster.gpu.clone(), self.parallel_cfg())
+    }
+}
+
+/// Which serving system to run (paper §4.1 baselines + EcoServe).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SystemKind {
+    /// PaDG (this paper).
+    EcoServe,
+    /// NoDG, separate batching, prefill-priority (vLLM).
+    Vllm,
+    /// NoDG, hybrid batching + chunked prefill (Sarathi-Serve).
+    Sarathi,
+    /// Intra-node FuDG (DistServe).
+    DistServe,
+    /// Inter-node FuDG with a central KV pool (MoonCake).
+    MoonCake,
+}
+
+impl SystemKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            SystemKind::EcoServe => "EcoServe",
+            SystemKind::Vllm => "vLLM",
+            SystemKind::Sarathi => "Sarathi",
+            SystemKind::DistServe => "DistServe",
+            SystemKind::MoonCake => "MoonCake",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<SystemKind> {
+        match name.to_ascii_lowercase().as_str() {
+            "ecoserve" | "padg" => Some(SystemKind::EcoServe),
+            "vllm" => Some(SystemKind::Vllm),
+            "sarathi" => Some(SystemKind::Sarathi),
+            "distserve" => Some(SystemKind::DistServe),
+            "mooncake" => Some(SystemKind::MoonCake),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [SystemKind; 5] {
+        [
+            SystemKind::EcoServe,
+            SystemKind::Vllm,
+            SystemKind::Sarathi,
+            SystemKind::DistServe,
+            SystemKind::MoonCake,
+        ]
+    }
+}
+
+/// Knobs for the individual systems (paper-faithful defaults).
+#[derive(Debug, Clone)]
+pub struct SystemParams {
+    /// Sarathi chunk budget (tokens per hybrid iteration).
+    pub sarathi_chunk: usize,
+    /// FuDG prefill:decode instance split — prefill count out of
+    /// `num_instances`; `None` = auto-sweep (the paper picks the best
+    /// ratio for MoonCake).
+    pub fudg_prefill_instances: Option<usize>,
+    /// EcoServe mitosis bounds (paper §3.5 / Figure 10: N_l=4, N_u=16).
+    pub n_lower: usize,
+    pub n_upper: usize,
+    /// KV margin (expected output tokens) reserved at admission.
+    pub admission_margin: usize,
+    /// EcoServe: cap on prefill tokens admitted into one instance's
+    /// pending window per routing decision.
+    pub max_window_prefill_tokens: usize,
+    /// Ablations (benches/ablation_padg.rs; defaults = full EcoServe):
+    /// gate constraint 2 on the paper's *mean* saved TPOT instead of the
+    /// minimum (DESIGN.md §8 deviation).
+    pub ablate_mean_slack: bool,
+    /// Disable the rolling-activation window cap (SLO_TTFT / members).
+    pub ablate_no_window_cap: bool,
+    /// Disable sticky routing: restart every Algorithm-1 scan at member 0.
+    pub ablate_no_sticky: bool,
+    /// Disable intra-instance window hysteresis (flip to prefill for any
+    /// lone arrival).
+    pub ablate_no_hysteresis: bool,
+}
+
+impl Default for SystemParams {
+    fn default() -> Self {
+        SystemParams {
+            sarathi_chunk: 512,
+            fudg_prefill_instances: None,
+            n_lower: 4,
+            n_upper: 16,
+            admission_margin: 128,
+            max_window_prefill_tokens: 16384,
+            ablate_mean_slack: false,
+            ablate_no_window_cap: false,
+            ablate_no_sticky: false,
+            ablate_no_hysteresis: false,
+        }
+    }
+}
+
+/// A full experiment: deployment × dataset × workload × system knobs.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub deployment: Deployment,
+    pub dataset: Dataset,
+    pub params: SystemParams,
+    pub seed: u64,
+    /// Trace duration, seconds.
+    pub duration: f64,
+    /// Warm-up prefix excluded from metrics, seconds.
+    pub warmup: f64,
+}
+
+impl ExperimentConfig {
+    pub fn new(deployment: Deployment, dataset: Dataset) -> Self {
+        ExperimentConfig {
+            deployment,
+            dataset,
+            params: SystemParams::default(),
+            seed: 42,
+            duration: 240.0,
+            warmup: 30.0,
+        }
+    }
+
+    /// Default L20 / CodeLlama / ShareGPT experiment (used by docs + smoke).
+    pub fn default_l20() -> Self {
+        Self::new(
+            Deployment::paper_default(ModelSpec::codellama_34b(), ClusterSpec::l20_cluster()),
+            Dataset::sharegpt(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_layouts() {
+        let l20 = ClusterSpec::l20_cluster();
+        let d = Deployment::paper_default(ModelSpec::llama_30b(), l20.clone());
+        assert_eq!(d.tp, 4);
+        assert_eq!(d.num_instances(), 8);
+        assert_eq!(d.node_of_instance(0), 0);
+        assert_eq!(d.node_of_instance(1), 0);
+        assert_eq!(d.node_of_instance(2), 1);
+
+        let dq = Deployment::paper_default(ModelSpec::qwen2_72b(), l20);
+        assert_eq!(dq.tp, 8);
+        assert_eq!(dq.num_instances(), 4);
+        assert_eq!(dq.node_of_instance(3), 3);
+
+        let a800 = ClusterSpec::a800_cluster();
+        let da = Deployment::paper_default(ModelSpec::codellama_34b(), a800);
+        assert_eq!(da.tp, 2);
+        assert_eq!(da.num_instances(), 8);
+    }
+
+    #[test]
+    fn kv_capacity_positive_for_all_paper_deployments() {
+        for cluster in [ClusterSpec::l20_cluster(), ClusterSpec::a800_cluster()] {
+            for model in [
+                ModelSpec::llama_30b(),
+                ModelSpec::codellama_34b(),
+                ModelSpec::qwen2_72b(),
+            ] {
+                let d = Deployment::paper_default(model.clone(), cluster.clone());
+                let cap = d.timer().kv_capacity_tokens(d.kv_reserve_frac);
+                assert!(
+                    cap > 10_000,
+                    "{} on {}: kv capacity {cap}",
+                    model.name,
+                    cluster.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn system_kind_lookup() {
+        assert_eq!(SystemKind::by_name("vllm"), Some(SystemKind::Vllm));
+        assert_eq!(SystemKind::by_name("PaDG"), Some(SystemKind::EcoServe));
+        assert!(SystemKind::by_name("triton").is_none());
+        assert_eq!(SystemKind::all().len(), 5);
+    }
+
+    #[test]
+    fn cluster_lookup() {
+        assert!(ClusterSpec::by_name("l20").is_some());
+        assert!(ClusterSpec::by_name("tpu").is_none());
+        assert_eq!(ClusterSpec::l20_cluster().total_gpus(), 64);
+    }
+}

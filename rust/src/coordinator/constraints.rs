@@ -1,0 +1,234 @@
+//! Algorithm 2 — Constraint Checking.
+//!
+//! Before the macro-instance scheduler routes a request to an instance it
+//! verifies three conditions (paper §3.4):
+//!
+//! 1. **TTFT**: the summed predicted prefill durations of the instance's
+//!    pending prefills, plus the candidate, plus the time the candidate has
+//!    already waited, must fit inside `SLO_TTFT` (the §3.3 strict TTFT that
+//!    folds in phase-switching wait).
+//! 2. **TPOT**: the instance's in-flight decodes have accumulated
+//!    *saved TPOT* — `L·SLO_TPOT − (now − first_token_time)` per request —
+//!    and the mean slack must cover the prefill window `t_total` that would
+//!    interrupt them.
+//! 3. **KV capacity**: the prompt (plus an expected-output margin) must fit
+//!    in the instance's remaining KV budget.
+
+use crate::metrics::SloSpec;
+use crate::sim::SimInstance;
+use crate::workload::Request;
+
+/// Why an instance was (or wasn't) admissible.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConstraintVerdict {
+    Satisfied,
+    TtftViolated,
+    TpotViolated,
+    KvExhausted,
+}
+
+impl ConstraintVerdict {
+    pub fn ok(&self) -> bool {
+        *self == ConstraintVerdict::Satisfied
+    }
+}
+
+/// Algorithm 2, line-for-line against the paper (see module docs).
+///
+/// `admission_margin` is the expected-output KV reserve per request;
+/// `now` is the scheduling instant; `window_budget` caps one instance's
+/// pending prefill-window duration (the macro scheduler passes
+/// `SLO_TTFT / members` so the ring's staggered windows jointly cover the
+/// TTFT budget — an unbounded sticky window would hoard the whole macro's
+/// arrivals on one instance while the rest idle).
+pub fn check_constraints(
+    instance: &SimInstance,
+    req: &Request,
+    now: f64,
+    slo: &SloSpec,
+    admission_margin: usize,
+    window_budget: f64,
+) -> ConstraintVerdict {
+    check_constraints_opt(instance, req, now, slo, admission_margin, window_budget, false)
+}
+
+/// [`check_constraints`] with the mean-slack ablation switch exposed
+/// (`use_mean_slack = true` reproduces the paper's literal Algorithm 2
+/// line 16; see benches/ablation_padg.rs for why the default tightens it).
+pub fn check_constraints_opt(
+    instance: &SimInstance,
+    req: &Request,
+    now: f64,
+    slo: &SloSpec,
+    admission_margin: usize,
+    window_budget: f64,
+    use_mean_slack: bool,
+) -> ConstraintVerdict {
+    // ---- Constraint 1: TTFT --------------------------------------------
+    // pending prefills of this window + the candidate request.
+    let candidate_prefill = instance.prefill_cost(req.input_len);
+    let already_waited = (now - req.arrival).max(0.0);
+    // If a batch is mid-flight the switch happens at its boundary; include
+    // the residual as part of the wait.
+    let residual = instance
+        .in_flight
+        .as_ref()
+        .map(|(_, done)| (done - now).max(0.0))
+        .unwrap_or(0.0);
+    let t_total = instance.pending_prefill_time() + candidate_prefill;
+    if already_waited + residual + t_total > slo.ttft {
+        return ConstraintVerdict::TtftViolated;
+    }
+    // Rolling-activation window cap (always letting at least one prompt in).
+    if t_total > window_budget.max(candidate_prefill * 1.5) {
+        return ConstraintVerdict::TtftViolated;
+    }
+    // The window must also fit inside the TTFT budget of the requests
+    // already waiting in it (§3.3: their reported TTFT runs until their
+    // decode phase starts, so admitting one more prompt extends every
+    // waiter's TTFT by the candidate's prefill time).
+    if let Some(oldest) = instance.oldest_unserved_arrival() {
+        if (now - oldest).max(0.0) + residual + t_total > slo.ttft {
+            return ConstraintVerdict::TtftViolated;
+        }
+    }
+
+    // ---- Constraint 2: TPOT --------------------------------------------
+    // Existing decodes must hold enough saved-TPOT slack to absorb the
+    // whole prefill window without violating their own SLO. The paper
+    // gates on the *mean* slack; we gate on the *minimum* so that no
+    // below-mean request is driven negative by the window (DESIGN.md §8) —
+    // the mean check admits windows that individually violate short
+    // requests.
+    let saved = if use_mean_slack {
+        instance.mean_saved_tpot(now, slo.tpot)
+    } else {
+        instance.min_saved_tpot(now, slo.tpot)
+    };
+    if saved < t_total {
+        return ConstraintVerdict::TpotViolated;
+    }
+    // Capacity guard: admitting this request must leave the steady-state
+    // decode iteration itself under the TPOT SLO (a batch whose single
+    // iteration exceeds SLO_TPOT can never meet the SLO regardless of
+    // scheduling).
+    let predicted_iter = instance.predicted_decode_iter(1, req.input_len + 64);
+    if predicted_iter > slo.tpot {
+        return ConstraintVerdict::TpotViolated;
+    }
+
+    // ---- Constraint 3: KV capacity -------------------------------------
+    if !instance.kv_room_for(req.input_len, admission_margin) {
+        return ConstraintVerdict::KvExhausted;
+    }
+
+    ConstraintVerdict::Satisfied
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Collector;
+    use crate::perfmodel::interconnect::LinkSpec;
+    use crate::perfmodel::parallelism::ParallelCfg;
+    use crate::perfmodel::{BatchTimer, GpuSpec, ModelSpec};
+
+    fn inst() -> SimInstance {
+        let timer = BatchTimer::new(
+            ModelSpec::llama_30b(),
+            GpuSpec::l20(),
+            ParallelCfg::tp_only(4, LinkSpec::pcie4()),
+        );
+        SimInstance::new(0, timer, 0.1)
+    }
+
+    fn req(id: u64, arrival: f64, input: usize) -> Request {
+        Request { id, arrival, input_len: input, output_len: 100 }
+    }
+
+    fn slo() -> SloSpec {
+        SloSpec::new(5.0, 0.1)
+    }
+
+    #[test]
+    fn empty_instance_admits() {
+        let ins = inst();
+        let v = check_constraints(&ins, &req(1, 0.0, 500), 0.0, &slo(), 128, slo().ttft);
+        assert!(v.ok());
+    }
+
+    #[test]
+    fn ttft_violated_when_queue_deep() {
+        let mut ins = inst();
+        // Queue enough 4k prefills that the window exceeds 5 s.
+        for i in 0..40 {
+            ins.admit(req(i, 0.0, 4096));
+        }
+        let v = check_constraints(&ins, &req(99, 0.0, 4096), 0.0, &slo(), 128, slo().ttft);
+        assert_eq!(v, ConstraintVerdict::TtftViolated);
+    }
+
+    #[test]
+    fn ttft_accounts_for_time_already_waited() {
+        let ins = inst();
+        let old = req(1, 0.0, 500);
+        // Request has been waiting 4.9s of its 5s budget.
+        let v = check_constraints(&ins, &old, 4.9, &slo(), 128, slo().ttft);
+        assert_eq!(v, ConstraintVerdict::TtftViolated);
+    }
+
+    #[test]
+    fn tpot_violated_when_no_slack() {
+        let mut ins = inst();
+        let mut m = Collector::new();
+        // A decode whose slack is nearly exhausted: first token long ago.
+        let r = req(1, 0.0, 100);
+        m.on_arrival(&r);
+        ins.admit(r);
+        let d = ins.start_prefill(1, 0.0);
+        ins.complete_batch(d, &mut m);
+        // One decode iteration starts the TPOT clock (§3.3 semantics).
+        let d2 = ins.start_decode(d);
+        ins.complete_batch(d2, &mut m);
+        // now = first_token + generated*slo + epsilon => slack < 0
+        let now = d + 2.0 * 0.1 + 0.05;
+        let v = check_constraints(&ins, &req(2, now, 2000), now, &slo(), 128, slo().ttft);
+        assert_eq!(v, ConstraintVerdict::TpotViolated);
+    }
+
+    #[test]
+    fn tpot_ok_when_slack_accumulated() {
+        let mut ins = inst();
+        let mut m = Collector::new();
+        let r = req(1, 0.0, 100);
+        m.on_arrival(&r);
+        ins.admit(r);
+        let mut now = ins.start_prefill(1, 0.0);
+        ins.complete_batch(now, &mut m);
+        // Fast decodes (iter << slo) accumulate slack.
+        for _ in 0..30 {
+            let d = ins.start_decode(now);
+            ins.complete_batch(d, &mut m);
+            now = d;
+        }
+        let v = check_constraints(&ins, &req(2, now, 500), now, &slo(), 128, slo().ttft);
+        assert!(v.ok(), "{v:?}");
+    }
+
+    #[test]
+    fn kv_exhaustion_detected() {
+        let mut ins = inst();
+        ins.kv_used = ins.kv_capacity - 100;
+        let v = check_constraints(&ins, &req(1, 0.0, 500), 0.0, &slo(), 128, slo().ttft);
+        assert_eq!(v, ConstraintVerdict::KvExhausted);
+    }
+
+    #[test]
+    fn residual_batch_time_counts_toward_ttft() {
+        let mut ins = inst();
+        // Fake an in-flight batch ending 4.9s from now.
+        ins.in_flight = Some((crate::sim::BatchKind::Decode, 4.9));
+        let v = check_constraints(&ins, &req(1, 0.0, 2000), 0.0, &slo(), 128, slo().ttft);
+        assert_eq!(v, ConstraintVerdict::TtftViolated);
+    }
+}

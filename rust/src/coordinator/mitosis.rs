@@ -1,0 +1,257 @@
+//! §3.5 — Mitosis scaling: instance-granular expansion/contraction of
+//! macro instances with split/merge at the `N_u`/`N_l` thresholds.
+//!
+//! Expansion (paper Figure 7, steps 1-4): new instances are added to the
+//! *growing* macro until its size would exceed `N_u`, at which point a new
+//! macro of `N_l` instances splits off; further instances fill the original
+//! back to `N_u`, then start filling the new macro.
+//!
+//! Contraction (steps 5-8): instances are removed from the *smallest*
+//! macro until it reaches `N_l`, then from a full macro; when the two
+//! smallest macros together hold fewer than `N_u` instances they merge
+//! (after one more removal at exactly `N_u`, per the paper).
+//!
+//! The state machine is pure (no scheduling side effects) so its invariants
+//! are property-tested in isolation; `EcoServeSystem` applies the returned
+//! [`ScaleOp`]s to live scheduling state, and instance moves between macros
+//! travel as serialized [`super::proxy::InstanceHandler`]s.
+
+/// Membership state: which instances belong to which macro instance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MitosisState {
+    /// macro -> member instance ids. Invariant: non-empty macros only
+    /// (except transiently inside operations), no duplicate ids.
+    pub macros: Vec<Vec<usize>>,
+    pub n_lower: usize,
+    pub n_upper: usize,
+}
+
+/// A structural change the controller performed (for logs/tests; the
+/// scheduler re-reads `macros` afterwards).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ScaleOp {
+    /// Instance added to macro `m`.
+    Added { instance: usize, to_macro: usize },
+    /// Macro `from` split; the listed instances migrated to new macro `to`.
+    Split { from: usize, to: usize, moved: Vec<usize> },
+    /// Instance removed from macro `m`.
+    Removed { instance: usize, from_macro: usize },
+    /// Macro `from` merged into macro `into`.
+    Merged { from: usize, into: usize, moved: Vec<usize> },
+}
+
+impl MitosisState {
+    pub fn new(n_lower: usize, n_upper: usize) -> Self {
+        assert!(n_lower >= 1 && n_upper >= n_lower);
+        MitosisState { macros: vec![], n_lower, n_upper }
+    }
+
+    /// Start with one macro holding `instances`.
+    pub fn with_initial(instances: Vec<usize>, n_lower: usize, n_upper: usize) -> Self {
+        let mut s = Self::new(n_lower, n_upper);
+        if !instances.is_empty() {
+            s.macros.push(instances);
+        }
+        s
+    }
+
+    pub fn total_instances(&self) -> usize {
+        self.macros.iter().map(|m| m.len()).sum()
+    }
+
+    pub fn macro_of(&self, instance: usize) -> Option<usize> {
+        self.macros.iter().position(|m| m.contains(&instance))
+    }
+
+    /// Expansion: add `instance`, splitting if the growing macro would
+    /// exceed `N_u`. Returns the ops performed.
+    pub fn add_instance(&mut self, instance: usize) -> Vec<ScaleOp> {
+        debug_assert!(self.macro_of(instance).is_none(), "instance already placed");
+        let mut ops = Vec::new();
+        if self.macros.is_empty() {
+            self.macros.push(vec![instance]);
+            ops.push(ScaleOp::Added { instance, to_macro: 0 });
+            return ops;
+        }
+        // Growing macro: the fullest macro that is not yet at N_u; if all
+        // are full, the smallest (a fresh split target).
+        let grow = self
+            .macros
+            .iter()
+            .enumerate()
+            .filter(|(_, m)| m.len() < self.n_upper)
+            .max_by_key(|(_, m)| m.len())
+            .map(|(i, _)| i);
+        match grow {
+            Some(g) => {
+                self.macros[g].push(instance);
+                ops.push(ScaleOp::Added { instance, to_macro: g });
+            }
+            None => {
+                // Every macro is at N_u: adding one more exceeds the bound,
+                // so split N_l instances off the first full macro into a new
+                // macro, then place the newcomer in the donor.
+                let donor = 0;
+                let moved: Vec<usize> = {
+                    let m = &mut self.macros[donor];
+                    let keep = m.len() - self.n_lower;
+                    m.split_off(keep)
+                };
+                self.macros.push(moved.clone());
+                let new_idx = self.macros.len() - 1;
+                ops.push(ScaleOp::Split { from: donor, to: new_idx, moved });
+                self.macros[donor].push(instance);
+                ops.push(ScaleOp::Added { instance, to_macro: donor });
+            }
+        }
+        ops
+    }
+
+    /// Contraction: remove one instance (the controller's choice of which
+    /// physical instance to release), merging macros when the two smallest
+    /// jointly fall under `N_u`. Returns (released instance id, ops).
+    pub fn remove_instance(&mut self) -> Option<(usize, Vec<ScaleOp>)> {
+        if self.macros.is_empty() {
+            return None;
+        }
+        let mut ops = Vec::new();
+        // Remove from the smallest macro, unless it is already at N_l and
+        // another macro can spare one (paper steps 5-6).
+        let smallest = (0..self.macros.len())
+            .min_by_key(|&i| self.macros[i].len())
+            .unwrap();
+        let victim_macro = if self.macros[smallest].len() > self.n_lower
+            || self.macros.len() == 1
+        {
+            smallest
+        } else {
+            // Take from a full (or fullest) macro instead.
+            (0..self.macros.len())
+                .max_by_key(|&i| self.macros[i].len())
+                .unwrap()
+        };
+        let instance = self.macros[victim_macro].pop()?;
+        ops.push(ScaleOp::Removed { instance, from_macro: victim_macro });
+        if self.macros[victim_macro].is_empty() {
+            self.macros.remove(victim_macro);
+        }
+        // Merge check (paper steps 7-8): if the two smallest macros sum to
+        // fewer than N_u instances, merge them.
+        if self.macros.len() >= 2 {
+            let mut idx: Vec<usize> = (0..self.macros.len()).collect();
+            idx.sort_by_key(|&i| self.macros[i].len());
+            let (a, b) = (idx[0], idx[1]);
+            if self.macros[a].len() + self.macros[b].len() < self.n_upper {
+                let (from, into) = if a > b { (a, b) } else { (b, a) };
+                let moved = self.macros[from].clone();
+                let moved_clone = moved.clone();
+                self.macros[into].extend(moved);
+                self.macros.remove(from);
+                ops.push(ScaleOp::Merged { from, into, moved: moved_clone });
+            }
+        }
+        Some((instance, ops))
+    }
+
+    /// Structural invariants (asserted by property tests):
+    /// no duplicates, no empty macros, every macro within [1, N_u].
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut seen = std::collections::HashSet::new();
+        for (i, m) in self.macros.iter().enumerate() {
+            if m.is_empty() {
+                return Err(format!("macro {i} is empty"));
+            }
+            if m.len() > self.n_upper {
+                return Err(format!("macro {i} has {} > N_u={}", m.len(), self.n_upper));
+            }
+            for &id in m {
+                if !seen.insert(id) {
+                    return Err(format!("instance {id} in two macros"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Walk the paper's Figure 7 (N_l=3, N_u=6) expansion narrative.
+    #[test]
+    fn figure7_expansion() {
+        let mut s = MitosisState::with_initial((0..6).collect(), 3, 6);
+        // Step 2: adding a 7th instance exceeds N_u=6 -> split off N_l=3.
+        let ops = s.add_instance(6);
+        assert!(matches!(ops[0], ScaleOp::Split { .. }), "{ops:?}");
+        assert_eq!(s.macros.len(), 2);
+        assert_eq!(s.macros[0].len(), 4); // 3 kept + newcomer
+        assert_eq!(s.macros[1].len(), 3); // split-off N_l
+        s.check_invariants().unwrap();
+        // Step 3: next instances refill the original toward N_u.
+        for id in 7..9 {
+            s.add_instance(id);
+        }
+        assert_eq!(s.macros[0].len(), 6);
+        // Step 4: subsequent additions land in the new macro.
+        let ops = s.add_instance(9);
+        assert_eq!(ops, vec![ScaleOp::Added { instance: 9, to_macro: 1 }]);
+        assert_eq!(s.macros[1].len(), 4);
+        s.check_invariants().unwrap();
+    }
+
+    /// Walk the contraction narrative (steps 5-8).
+    #[test]
+    fn figure7_contraction() {
+        let mut s = MitosisState { macros: vec![(0..6).collect(), (6..10).collect()], n_lower: 3, n_upper: 6 };
+        // Step 5: remove from the smallest macro until N_l.
+        let (_, _) = s.remove_instance().unwrap();
+        assert_eq!(s.macros[1].len(), 3);
+        s.check_invariants().unwrap();
+        // Step 6-8: next removal takes from the full macro; 6+3-1 = 8 >= 6
+        // no merge yet. Keep removing until total hits N_u - 1 => merge.
+        let mut merged = false;
+        while let Some((_, ops)) = s.remove_instance() {
+            s.check_invariants().unwrap();
+            if ops.iter().any(|o| matches!(o, ScaleOp::Merged { .. })) {
+                merged = true;
+                break;
+            }
+        }
+        assert!(merged, "macros should merge when jointly under N_u");
+        assert_eq!(s.macros.len(), 1);
+        assert!(s.total_instances() < 6);
+    }
+
+    #[test]
+    fn add_from_empty() {
+        let mut s = MitosisState::new(2, 4);
+        let ops = s.add_instance(0);
+        assert_eq!(ops, vec![ScaleOp::Added { instance: 0, to_macro: 0 }]);
+        assert_eq!(s.total_instances(), 1);
+    }
+
+    #[test]
+    fn grow_shrink_roundtrip_preserves_invariants() {
+        let mut s = MitosisState::new(4, 16);
+        for id in 0..40 {
+            s.add_instance(id);
+            s.check_invariants().unwrap();
+        }
+        assert_eq!(s.total_instances(), 40);
+        for _ in 0..40 {
+            s.remove_instance();
+            s.check_invariants().unwrap();
+        }
+        assert_eq!(s.total_instances(), 0);
+        assert!(s.remove_instance().is_none());
+    }
+
+    #[test]
+    fn macro_of_lookup() {
+        let s = MitosisState::with_initial(vec![3, 5, 9], 2, 6);
+        assert_eq!(s.macro_of(5), Some(0));
+        assert_eq!(s.macro_of(7), None);
+    }
+}

@@ -1,0 +1,25 @@
+//! The EcoServe coordinator — the paper's system contribution.
+//!
+//! * [`constraints`] — Algorithm 2: can instance X admit request R without
+//!   violating TTFT, saved-TPOT slack, or KV capacity?
+//! * [`routing`] — Algorithm 1: sticky-cyclic inter-instance routing inside
+//!   a macro instance (the mechanism behind rolling activation).
+//! * [`padg`] — the PaDG serving system wired into the simulator: temporal
+//!   disaggregation inside each instance + rolling activation across them.
+//! * [`mitosis`] — §3.5 expansion/contraction with split at `N_u` and merge
+//!   at `N_l`.
+//! * [`proxy`] — the serializable `InstanceHandler` enabling logical
+//!   instance migration between macro-instance schedulers without
+//!   re-initialization (§3.5.2).
+//! * [`live`] — the same coordinator logic driving *real* PJRT-backed
+//!   instances on the live path (examples/serve_model.rs).
+
+pub mod constraints;
+pub mod live;
+pub mod mitosis;
+pub mod padg;
+pub mod proxy;
+pub mod routing;
+
+pub use constraints::{check_constraints, ConstraintVerdict};
+pub use padg::EcoServeSystem;

@@ -1,0 +1,591 @@
+//! The PaDG serving system: EcoServe's hierarchical coordinator wired into
+//! the discrete-event simulator (the identical decision logic drives the
+//! live PJRT path in [`super::live`]).
+//!
+//! Three scheduler levels (paper Figure 5):
+//! * **overall scheduler** — dispatches arrivals across macro instances
+//!   (cyclic, capability-checked) and runs the mitosis controller;
+//! * **macro-instance scheduler** — Algorithm 1 sticky-cyclic routing over
+//!   its members, gated by Algorithm 2's constraint check;
+//! * **instance scheduler** — temporal disaggregation: drains its admitted
+//!   prefill queue as one contiguous window (prefill priority), otherwise
+//!   decodes; each batch completion is an `InstanceWake` event.
+//!
+//! Rolling activation is emergent: stickiness concentrates arrivals into
+//! one member's prefill window until its saved-TPOT slack or TTFT budget is
+//! spent, then the cursor advances — staggering prefill windows around the
+//! ring so new requests almost always find an instance able to prefill.
+
+use std::collections::VecDeque;
+
+use super::mitosis::MitosisState;
+use super::routing::{RouteOutcome, RoutingState};
+use crate::config::{Deployment, SystemParams};
+use crate::metrics::{attainment_fraction, Collector, SloSpec};
+use crate::sim::{Event, EventScheduler, SimInstance, System};
+use crate::workload::Request;
+
+const EPS: f64 = 1e-9;
+
+/// Autoscaling policy for the mitosis controller (Figure 10).
+#[derive(Debug, Clone)]
+pub struct AutoScalePolicy {
+    /// Attainment target; scale up when the trailing window drops below it.
+    pub target_attainment: f64,
+    /// Trailing window length, seconds.
+    pub window: f64,
+    /// Controller tick period, seconds.
+    pub interval: f64,
+    /// Minimum spacing between scale operations, seconds.
+    pub cooldown: f64,
+    /// Scale down when mean instance busy-fraction falls below this.
+    pub idle_threshold: f64,
+}
+
+impl Default for AutoScalePolicy {
+    fn default() -> Self {
+        AutoScalePolicy {
+            target_attainment: 0.90,
+            window: 30.0,
+            interval: 10.0,
+            cooldown: 20.0,
+            idle_threshold: 0.35,
+        }
+    }
+}
+
+/// A scale event for the Figure 10 report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScaleEvent {
+    pub time: f64,
+    pub active_instances: usize,
+    pub kind: &'static str, // "up" | "down"
+}
+
+/// EcoServe under simulation.
+pub struct EcoServeSystem {
+    /// All provisioned instances; `active` gates which ones serve.
+    pub instances: Vec<SimInstance>,
+    active: Vec<bool>,
+    draining: Vec<bool>,
+    /// Macro-instance membership (mitosis state machine).
+    pub mitosis: MitosisState,
+    /// Sticky routing cursor per macro (rebuilt on structural changes).
+    routing: Vec<RoutingState>,
+    /// Overall-scheduler cursor over macros.
+    overall_cursor: usize,
+    pub slo: SloSpec,
+    pub params: SystemParams,
+    /// Requests no member could admit yet (retried at every wake).
+    pub backlog: VecDeque<Request>,
+    /// Autoscaler (None = fixed capacity, the Figure 8 setting).
+    pub autoscale: Option<AutoScalePolicy>,
+    last_scale_at: f64,
+    prev_busy: Vec<f64>,
+    pub scale_log: Vec<ScaleEvent>,
+    /// Force-admissions of TTFT-hopeless backlog (observability).
+    pub forced_admissions: u64,
+}
+
+impl EcoServeSystem {
+    /// Build from a deployment with `initial` active instances out of
+    /// `max_instances` provisioned (equal when autoscaling is off).
+    pub fn with_capacity(
+        deployment: &Deployment,
+        slo: SloSpec,
+        params: SystemParams,
+        initial: usize,
+        max_instances: usize,
+    ) -> Self {
+        assert!(initial >= 1 && initial <= max_instances);
+        let instances: Vec<SimInstance> = (0..max_instances)
+            .map(|i| SimInstance::new(i, deployment.timer(), deployment.kv_reserve_frac))
+            .collect();
+        let mut mitosis = MitosisState::new(params.n_lower, params.n_upper);
+        for i in 0..initial {
+            mitosis.add_instance(i);
+        }
+        let routing = (0..mitosis.macros.len()).map(|_| RoutingState::default()).collect();
+        let prev_busy = vec![0.0; max_instances];
+        let mut active = vec![false; max_instances];
+        for a in active.iter_mut().take(initial) {
+            *a = true;
+        }
+        EcoServeSystem {
+            instances,
+            active,
+            draining: vec![false; max_instances],
+            mitosis,
+            routing,
+            overall_cursor: 0,
+            slo,
+            params,
+            backlog: VecDeque::new(),
+            autoscale: None,
+            last_scale_at: f64::NEG_INFINITY,
+            prev_busy,
+            scale_log: Vec::new(),
+            forced_admissions: 0,
+        }
+    }
+
+    /// Fixed-capacity constructor (Figure 8).
+    pub fn new(deployment: &Deployment, slo: SloSpec, params: SystemParams) -> Self {
+        let n = deployment.num_instances();
+        Self::with_capacity(deployment, slo, params, n, n)
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.active.iter().filter(|a| **a).count()
+    }
+
+    pub fn total_switches(&self) -> u64 {
+        self.instances.iter().map(|i| i.switches).sum()
+    }
+
+    fn sync_routing(&mut self) {
+        self.routing
+            .resize_with(self.mitosis.macros.len(), RoutingState::default);
+        self.routing.truncate(self.mitosis.macros.len());
+    }
+
+    /// Overall scheduler: offer the request to macros cyclically; each
+    /// macro runs Algorithm 1 internally.
+    fn try_route(&mut self, req: &Request, now: f64, sched: &mut EventScheduler) -> bool {
+        let opts = super::routing::RouteOpts {
+            sticky: !self.params.ablate_no_sticky,
+            window_cap: !self.params.ablate_no_window_cap,
+            mean_slack: self.params.ablate_mean_slack,
+        };
+        let n_macros = self.mitosis.macros.len();
+        for k in 0..n_macros {
+            let mi = (self.overall_cursor + k) % n_macros;
+            let members = &self.mitosis.macros[mi];
+            match super::routing::route_with(
+                &mut self.routing[mi],
+                members,
+                &self.instances,
+                req,
+                now,
+                &self.slo,
+                self.params.admission_margin,
+                opts,
+            ) {
+                RouteOutcome::Admitted(pos) => {
+                    let idx = self.mitosis.macros[mi][pos];
+                    self.instances[idx].admit(req.clone());
+                    self.overall_cursor = mi;
+                    if self.instances[idx].idle() {
+                        sched.at(now, Event::InstanceWake { instance: idx });
+                    }
+                    return true;
+                }
+                RouteOutcome::Deferred => continue,
+            }
+        }
+        false
+    }
+
+    /// Deadline-pressure admission: when strict Algorithm-2 routing keeps
+    /// deferring a request but its TTFT budget is running out, place it on
+    /// the member that (a) can still make its TTFT and (b) has the most
+    /// saved-TPOT slack — trading the least TPOT damage for TTFT rescue.
+    /// This is the "rescue" half of rolling activation under pressure.
+    fn relaxed_admit(&mut self, req: &Request, now: f64,
+                     sched: &mut EventScheduler) -> bool {
+        let margin = self.params.admission_margin;
+        let waited = (now - req.arrival).max(0.0);
+        let mut best: Option<(f64, usize)> = None;
+        for m in &self.mitosis.macros {
+            for &idx in m {
+                let inst = &self.instances[idx];
+                if !inst.kv_room_for(req.input_len, margin) {
+                    continue;
+                }
+                let residual = inst
+                    .in_flight
+                    .as_ref()
+                    .map(|(_, done)| (done - now).max(0.0))
+                    .unwrap_or(0.0);
+                let t_total = inst.pending_prefill_time()
+                    + inst.prefill_cost(req.input_len);
+                if waited + residual + t_total > self.slo.ttft {
+                    continue; // would still miss TTFT — no point
+                }
+                if let Some(oldest) = inst.oldest_unserved_arrival() {
+                    if (now - oldest).max(0.0) + residual + t_total > self.slo.ttft {
+                        continue; // would doom an already-waiting member
+                    }
+                }
+                let slack = inst.min_saved_tpot(now, self.slo.tpot);
+                if best.map(|(s, _)| slack > s).unwrap_or(true) {
+                    best = Some((slack, idx));
+                }
+            }
+        }
+        if let Some((_, idx)) = best {
+            self.instances[idx].admit(req.clone());
+            if self.instances[idx].idle() {
+                sched.at(now, Event::InstanceWake { instance: idx });
+            }
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Hopeless-TTFT fallback: a backlogged request whose wait already
+    /// exceeds the TTFT SLO can never pass constraint 1; serve it anyway on
+    /// the least-loaded member with KV room (it records as a violation —
+    /// shedding it silently would fake better attainment).
+    fn force_admit(&mut self, req: &Request, now: f64, sched: &mut EventScheduler) -> bool {
+        let margin = self.params.admission_margin;
+        let mut best: Option<(usize, usize)> = None; // (kv_used, idx)
+        for m in &self.mitosis.macros {
+            for &idx in m {
+                let inst = &self.instances[idx];
+                if inst.kv_room_for(req.input_len, margin) {
+                    let key = inst.kv_used + inst.prefill_queue.len() * 1000;
+                    if best.map(|(b, _)| key < b).unwrap_or(true) {
+                        best = Some((key, idx));
+                    }
+                }
+            }
+        }
+        if let Some((_, idx)) = best {
+            self.instances[idx].admit(req.clone());
+            self.forced_admissions += 1;
+            if self.instances[idx].idle() {
+                sched.at(now, Event::InstanceWake { instance: idx });
+            }
+            true
+        } else {
+            false
+        }
+    }
+
+    fn drain_backlog(&mut self, now: f64, sched: &mut EventScheduler) {
+        while let Some(req) = self.backlog.front().cloned() {
+            let waited = now - req.arrival;
+            let admitted = if waited > self.slo.ttft {
+                // Already doomed: serve late rather than shed.
+                self.force_admit(&req, now, sched)
+            } else if waited > 0.35 * self.slo.ttft {
+                // Budget draining: strict first, then deadline-pressure.
+                self.try_route(&req, now, sched)
+                    || self.relaxed_admit(&req, now, sched)
+            } else {
+                self.try_route(&req, now, sched)
+            };
+            if admitted {
+                self.backlog.pop_front();
+            } else {
+                break; // FIFO: don't starve the head
+            }
+        }
+    }
+
+    /// Intra-instance scheduling (temporal disaggregation, paper §3.4):
+    /// the instance "executes decodes while accumulating sufficient slack
+    /// to safely admit new requests" — a queued prefill runs as soon as the
+    /// running decodes' saved-TPOT slack covers it (or nothing is
+    /// decoding); otherwise one more decode iteration accrues slack first.
+    /// One prompt per prefill batch — prefill saturates the GPU at batch 1
+    /// (paper §2.2) and per-prompt completion gives each request its true
+    /// TTFT.
+    fn dispatch(&mut self, idx: usize, now: f64, sched: &mut EventScheduler) {
+        let slo_tpot = self.slo.tpot;
+        let slo_ttft = self.slo.ttft;
+        // Window hysteresis ("each phase lasting longer to reduce switching
+        // overhead", §1): don't flip to prefill for every lone arrival —
+        // switch when the queued window is worth the transition, when the
+        // oldest queued request's TTFT budget demands it, or when nothing
+        // is decoding anyway.
+        let macro_size = self
+            .mitosis
+            .macro_of(idx)
+            .map(|m| self.mitosis.macros[m].len())
+            .unwrap_or(1)
+            .max(1);
+        let window_budget = slo_ttft / macro_size as f64;
+        let inst = &mut self.instances[idx];
+        if !inst.idle() {
+            return;
+        }
+        let next_prefill = inst
+            .prefill_queue
+            .front()
+            .map(|r| inst.prefill_cost(r.req.input_len - r.prefilled));
+        let window_ready = {
+            let oldest_wait = inst
+                .prefill_queue
+                .front()
+                .map(|r| now - r.req.arrival)
+                .unwrap_or(0.0);
+            // Mid-window (already prefilling): keep going — switching away
+            // and back would pay the PP fill/drain twice.
+            self.params.ablate_no_hysteresis
+                || inst.last_phase == Some(crate::perfmodel::Phase::Prefill)
+                || oldest_wait > 0.25 * slo_ttft
+                || inst.pending_prefill_time() >= 0.5 * window_budget
+        };
+        match next_prefill {
+            Some(cost)
+                if inst.running.is_empty()
+                    || (window_ready
+                        && inst.min_saved_tpot(now, slo_tpot) >= cost) =>
+            {
+                // Batch short prompts into one prefill: prefill saturates
+                // the GPU around ~512 tokens (paper §2.2 — "batch size of
+                // just one" refers to *long* prompts); below that, weight
+                // streaming dominates and per-prompt batches waste it.
+                let mut count = 1;
+                let mut tokens = inst.prefill_queue[0].req.input_len
+                    - inst.prefill_queue[0].prefilled;
+                while count < inst.prefill_queue.len() && count < 16 {
+                    let next = inst.prefill_queue[count].req.input_len
+                        - inst.prefill_queue[count].prefilled;
+                    if tokens + next > 512 {
+                        break;
+                    }
+                    tokens += next;
+                    count += 1;
+                }
+                let done = inst.start_prefill(count, now);
+                sched.at(done, Event::InstanceWake { instance: idx });
+            }
+            _ if !inst.running.is_empty() => {
+                let done = inst.start_decode(now);
+                sched.at(done, Event::InstanceWake { instance: idx });
+            }
+            Some(_) => {
+                // Slack shortfall with nothing to decode cannot happen
+                // (running is empty => first arm matched); defensive kick.
+                let done = inst.start_prefill(1, now);
+                sched.at(done, Event::InstanceWake { instance: idx });
+            }
+            None => {
+                if self.draining[idx] {
+                    // Drained: release the instance.
+                    self.active[idx] = false;
+                    self.draining[idx] = false;
+                }
+            }
+        }
+    }
+
+    fn scale_up(&mut self, now: f64) -> bool {
+        // First free provisioned-but-inactive instance.
+        let Some(idx) = (0..self.instances.len())
+            .find(|&i| !self.active[i] && !self.draining[i])
+        else {
+            return false;
+        };
+        self.active[idx] = true;
+        self.instances[idx].kv_used = 0;
+        let ops = self.mitosis.add_instance(idx);
+        debug_assert!(self.mitosis.check_invariants().is_ok(), "{ops:?}");
+        self.sync_routing();
+        self.scale_log.push(ScaleEvent {
+            time: now,
+            active_instances: self.active_count(),
+            kind: "up",
+        });
+        true
+    }
+
+    fn scale_down(&mut self, now: f64) -> bool {
+        if self.mitosis.total_instances() <= self.params.n_lower {
+            return false;
+        }
+        let Some((idx, ops)) = self.mitosis.remove_instance() else {
+            return false;
+        };
+        debug_assert!(self.mitosis.check_invariants().is_ok(), "{ops:?}");
+        self.sync_routing();
+        // Instance drains: finishes admitted work, admits nothing new.
+        self.draining[idx] = true;
+        self.scale_log.push(ScaleEvent {
+            time: now,
+            active_instances: self.active_count().saturating_sub(1),
+            kind: "down",
+        });
+        true
+    }
+}
+
+impl System for EcoServeSystem {
+    fn on_arrival(&mut self, req: Request, now: f64, sched: &mut EventScheduler,
+                  _metrics: &mut Collector) {
+        // Seed the controller tick lazily on the first arrival.
+        if self.autoscale.is_some() && self.last_scale_at == f64::NEG_INFINITY {
+            self.last_scale_at = now;
+            let interval = self.autoscale.as_ref().unwrap().interval;
+            sched.at(now + interval, Event::ControlTick);
+        }
+        if !self.backlog.is_empty() || !self.try_route(&req, now, sched) {
+            self.backlog.push_back(req);
+        }
+    }
+
+    fn on_instance_wake(&mut self, idx: usize, now: f64, sched: &mut EventScheduler,
+                        metrics: &mut Collector) {
+        if let Some((_, done)) = self.instances[idx].in_flight {
+            if now + EPS < done {
+                return; // spurious kick; the completion wake is scheduled
+            }
+            self.instances[idx].complete_batch(now, metrics);
+        }
+        self.drain_backlog(now, sched);
+        self.dispatch(idx, now, sched);
+        // Backlog drain may have fed other idle instances; their kick wakes
+        // were scheduled by try_route/force_admit.
+    }
+
+    fn on_control_tick(&mut self, now: f64, sched: &mut EventScheduler,
+                       metrics: &mut Collector) {
+        let Some(policy) = self.autoscale.clone() else { return };
+        let recs = metrics.records_in_window((now - policy.window).max(0.0), now);
+        let attainment = attainment_fraction(&recs, &self.slo);
+        let can_scale = now - self.last_scale_at >= policy.cooldown;
+        if can_scale && !recs.is_empty() && attainment < policy.target_attainment {
+            if self.scale_up(now) {
+                self.last_scale_at = now;
+            }
+        } else if can_scale && !recs.is_empty() {
+            // Mean busy fraction since the previous tick.
+            let mut busy = 0.0;
+            let mut n = 0.0;
+            for (i, inst) in self.instances.iter().enumerate() {
+                if self.active[i] {
+                    busy += (inst.busy_time - self.prev_busy[i]) / policy.interval;
+                    n += 1.0;
+                }
+            }
+            if n > 0.0 && busy / n < policy.idle_threshold
+                && attainment >= policy.target_attainment
+                && self.scale_down(now)
+            {
+                self.last_scale_at = now;
+            }
+        }
+        for (i, inst) in self.instances.iter().enumerate() {
+            self.prev_busy[i] = inst.busy_time;
+        }
+        sched.at(now + policy.interval, Event::ControlTick);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterSpec, Deployment};
+    use crate::perfmodel::ModelSpec;
+    use crate::sim::run;
+    use crate::workload::{Dataset, TraceGenerator};
+
+    fn small_deployment() -> Deployment {
+        let mut d = Deployment::paper_default(
+            ModelSpec::codellama_34b(),
+            ClusterSpec::l20_cluster(),
+        );
+        d.gpus_used = 16; // 4 instances at TP=4
+        d
+    }
+
+    fn system(d: &Deployment) -> EcoServeSystem {
+        EcoServeSystem::new(d, SloSpec::new(5.0, 0.1), SystemParams::default())
+    }
+
+    #[test]
+    fn serves_light_load_within_slo() {
+        let d = small_deployment();
+        let mut sys = system(&d);
+        let trace = TraceGenerator::new(Dataset::sharegpt(), 1).poisson(2.0, 60.0);
+        let n = trace.len();
+        let mut metrics = Collector::new();
+        run(&mut sys, trace, 10_000.0, &mut metrics);
+        assert_eq!(metrics.completed().len(), n, "all requests complete");
+        let frac = attainment_fraction(metrics.completed(), &sys.slo);
+        assert!(frac > 0.95, "light load attainment {frac}");
+    }
+
+    #[test]
+    fn rolling_activation_spreads_prefills() {
+        let d = small_deployment();
+        let mut sys = system(&d);
+        let trace = TraceGenerator::new(Dataset::sharegpt(), 2).poisson(6.0, 60.0);
+        let mut metrics = Collector::new();
+        run(&mut sys, trace, 10_000.0, &mut metrics);
+        // Every instance must have served prefills (the ring rotates).
+        for inst in &sys.instances[..4] {
+            assert!(inst.busy_time > 0.0, "instance {} never used", inst.id);
+        }
+    }
+
+    #[test]
+    fn temporal_disaggregation_limits_switches() {
+        // Phase switches should be far fewer than completed requests —
+        // each prefill window covers a burst of requests.
+        let d = small_deployment();
+        let mut sys = system(&d);
+        let trace = TraceGenerator::new(Dataset::sharegpt(), 3).poisson(6.0, 120.0);
+        let n = trace.len() as u64;
+        let mut metrics = Collector::new();
+        run(&mut sys, trace, 10_000.0, &mut metrics);
+        let switches = sys.total_switches();
+        assert!(
+            switches < n,
+            "switches {switches} should be below request count {n}"
+        );
+    }
+
+    #[test]
+    fn overload_degrades_gracefully() {
+        let d = small_deployment();
+        let mut sys = system(&d);
+        // Far beyond capacity: attainment collapses but nothing panics and
+        // throughput stays positive.
+        let trace = TraceGenerator::new(Dataset::sharegpt(), 4).poisson(60.0, 30.0);
+        let mut metrics = Collector::new();
+        run(&mut sys, trace, 600.0, &mut metrics);
+        assert!(!metrics.completed().is_empty());
+        let frac = attainment_fraction(metrics.completed(), &sys.slo);
+        assert!(frac < 0.9, "overload should break SLOs, got {frac}");
+    }
+
+    #[test]
+    fn autoscaler_adds_instances_under_ramp() {
+        let d = small_deployment();
+        let mut sys =
+            EcoServeSystem::with_capacity(&d, SloSpec::new(5.0, 0.1),
+                                          SystemParams::default(), 2, 8);
+        sys.autoscale = Some(AutoScalePolicy::default());
+        let gen = TraceGenerator::new(Dataset::sharegpt(), 5);
+        let trace = gen.ramp(&[(2.0, 60.0), (8.0, 60.0), (14.0, 120.0)]);
+        let mut metrics = Collector::new();
+        run(&mut sys, trace, 10_000.0, &mut metrics);
+        assert!(
+            sys.active_count() > 2,
+            "scaler should have grown: log {:?}",
+            sys.scale_log
+        );
+        assert!(sys.scale_log.iter().any(|e| e.kind == "up"));
+        sys.mitosis.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn kv_accounting_balances_at_quiescence() {
+        let d = small_deployment();
+        let mut sys = system(&d);
+        let trace = TraceGenerator::new(Dataset::alpaca(), 6).poisson(4.0, 30.0);
+        let mut metrics = Collector::new();
+        run(&mut sys, trace, 10_000.0, &mut metrics);
+        assert_eq!(metrics.in_flight(), 0);
+        for inst in &sys.instances {
+            assert_eq!(inst.kv_used, 0, "instance {} leaked KV", inst.id);
+            assert!(inst.prefill_queue.is_empty());
+            assert!(inst.running.is_empty());
+        }
+    }
+}

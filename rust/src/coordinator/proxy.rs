@@ -1,0 +1,188 @@
+//! §3.5.2 — the serializable `InstanceHandler` proxy.
+//!
+//! To split or merge macro instances without re-initializing workers, the
+//! paper serializes a proxy object (actor id, worker address, callable
+//! surface) and ships it to the target macro-instance scheduler, which
+//! reconstructs a fully functional handle — the worker never stops
+//! decoding. The paper uses pickle over Ray; we serialize to JSON (the
+//! in-tree [`crate::util::json`]) with identical semantics: migration is
+//! *logical* (a metadata move), costing well under the paper's 100 ms
+//! budget (measured in benches/microbench_coordinator.rs).
+
+use crate::util::json::{Json, JsonError};
+
+/// Metadata that fully describes a live instance worker, sufficient to
+/// rebuild a calling proxy in another scheduler process.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InstanceHandler {
+    /// Stable actor id of the worker.
+    pub actor_id: u64,
+    /// Worker mailbox address ("host:port" in a distributed deployment;
+    /// thread-actor name on the live path).
+    pub address: String,
+    /// Parallelism layout, for placement decisions after migration.
+    pub tp: usize,
+    pub pp: usize,
+    /// Remote-callable surface (the RPC-like system dispatches by name).
+    pub methods: Vec<String>,
+    /// Scheduler bookkeeping carried across the move.
+    pub kv_capacity_tokens: usize,
+}
+
+impl InstanceHandler {
+    /// The callable surface every instance worker exposes.
+    pub fn standard_methods() -> Vec<String> {
+        ["prefill", "decode_step", "status", "pause", "resume"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect()
+    }
+
+    pub fn new(actor_id: u64, address: impl Into<String>, tp: usize, pp: usize,
+               kv_capacity_tokens: usize) -> Self {
+        InstanceHandler {
+            actor_id,
+            address: address.into(),
+            tp,
+            pp,
+            methods: Self::standard_methods(),
+            kv_capacity_tokens,
+        }
+    }
+
+    /// Serialize for migration (the pickle analogue). `actor_id` travels
+    /// as a string: JSON numbers are f64 and would corrupt ids above 2^53
+    /// (caught by prop_proxy_roundtrip_any_handler).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("actor_id", Json::str(self.actor_id.to_string())),
+            ("address", Json::str(self.address.clone())),
+            ("tp", Json::num(self.tp as f64)),
+            ("pp", Json::num(self.pp as f64)),
+            ("methods", Json::arr(self.methods.iter().map(|m| Json::str(m.clone())))),
+            ("kv_capacity_tokens", Json::num(self.kv_capacity_tokens as f64)),
+        ])
+    }
+
+    pub fn serialize(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Reconstruct a proxy on the receiving scheduler.
+    pub fn deserialize(wire: &str) -> Result<Self, JsonError> {
+        let j = Json::parse(wire)?;
+        let field = |k: &str| -> Result<&Json, JsonError> {
+            j.get(k).ok_or(JsonError { msg: format!("missing field {k}"), offset: 0 })
+        };
+        Ok(InstanceHandler {
+            actor_id: field("actor_id")?
+                .as_str()
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(0),
+            address: field("address")?.as_str().unwrap_or("").to_string(),
+            tp: field("tp")?.as_usize().unwrap_or(1),
+            pp: field("pp")?.as_usize().unwrap_or(1),
+            methods: field("methods")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|m| m.as_str().map(|s| s.to_string()))
+                .collect(),
+            kv_capacity_tokens: field("kv_capacity_tokens")?.as_usize().unwrap_or(0),
+        })
+    }
+
+    /// Can the proxy issue this call?
+    pub fn supports(&self, method: &str) -> bool {
+        self.methods.iter().any(|m| m == method)
+    }
+}
+
+/// A macro-instance scheduler's handler table; migration moves handlers
+/// between tables without touching the workers themselves.
+#[derive(Debug, Default)]
+pub struct HandlerTable {
+    pub handlers: Vec<InstanceHandler>,
+}
+
+impl HandlerTable {
+    /// Remove the handler for `actor_id`, serializing it for transport.
+    /// Returns the wire string (None if unknown).
+    pub fn export(&mut self, actor_id: u64) -> Option<String> {
+        let pos = self.handlers.iter().position(|h| h.actor_id == actor_id)?;
+        let h = self.handlers.remove(pos);
+        Some(h.serialize())
+    }
+
+    /// Install a handler received from another scheduler.
+    pub fn import(&mut self, wire: &str) -> Result<&InstanceHandler, JsonError> {
+        let h = InstanceHandler::deserialize(wire)?;
+        self.handlers.push(h);
+        Ok(self.handlers.last().unwrap())
+    }
+
+    pub fn len(&self) -> usize {
+        self.handlers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.handlers.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn handler(id: u64) -> InstanceHandler {
+        InstanceHandler::new(id, format!("10.0.0.{id}:5005"), 4, 1, 120_000)
+    }
+
+    #[test]
+    fn serialize_roundtrip_exact() {
+        let h = handler(7);
+        let wire = h.serialize();
+        let back = InstanceHandler::deserialize(&wire).unwrap();
+        assert_eq!(h, back);
+    }
+
+    #[test]
+    fn migration_moves_handler_between_tables() {
+        let mut a = HandlerTable::default();
+        let mut b = HandlerTable::default();
+        a.handlers.push(handler(1));
+        a.handlers.push(handler(2));
+        let wire = a.export(1).expect("exists");
+        let imported = b.import(&wire).unwrap();
+        assert_eq!(imported.actor_id, 1);
+        assert_eq!(a.len(), 1);
+        assert_eq!(b.len(), 1);
+        // Unknown id exports nothing.
+        assert!(a.export(99).is_none());
+    }
+
+    #[test]
+    fn supports_standard_surface() {
+        let h = handler(3);
+        assert!(h.supports("prefill"));
+        assert!(h.supports("decode_step"));
+        assert!(!h.supports("train_step"));
+    }
+
+    #[test]
+    fn deserialize_rejects_garbage() {
+        assert!(InstanceHandler::deserialize("not json").is_err());
+        assert!(InstanceHandler::deserialize("{}").is_err());
+    }
+
+    #[test]
+    fn migration_preserves_capacity_bookkeeping() {
+        let mut a = HandlerTable::default();
+        a.handlers.push(handler(9));
+        let wire = a.export(9).unwrap();
+        let mut b = HandlerTable::default();
+        let h = b.import(&wire).unwrap();
+        assert_eq!(h.kv_capacity_tokens, 120_000);
+        assert_eq!(h.tp, 4);
+    }
+}

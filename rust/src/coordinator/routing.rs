@@ -1,0 +1,198 @@
+//! Algorithm 1 — Inter-Instance Scheduling (sticky-cyclic routing).
+//!
+//! For an incoming request the macro-instance scheduler first tries the
+//! instance that received the *previous* request (stickiness keeps one
+//! instance's prefill window filling while the others run long decode
+//! phases), then walks the remaining instances cyclically. The first
+//! instance whose Algorithm-2 check passes wins. If none qualifies the
+//! request stays in the macro-level backlog and is retried at the next
+//! scheduling point — rolling activation *emerges* from this loop plus the
+//! saved-TPOT constraint: as one instance's slack is consumed, the cursor
+//! advances to the next, staggering prefill windows around the ring.
+
+use super::constraints::ConstraintVerdict;
+use crate::metrics::SloSpec;
+use crate::sim::SimInstance;
+use crate::workload::Request;
+
+/// Routing cursor for one macro instance.
+#[derive(Debug, Clone, Default)]
+pub struct RoutingState {
+    /// Position (index into the macro's member list) of the instance that
+    /// admitted the previous request.
+    pub last: usize,
+    /// Verdict counters for observability / tests.
+    pub admitted: u64,
+    pub deferred: u64,
+}
+
+/// Outcome of one routing attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouteOutcome {
+    /// Admitted by the member at this position (index into `members`).
+    Admitted(usize),
+    /// No member satisfied Algorithm 2; caller should backlog the request.
+    Deferred,
+}
+
+/// Route `req` over the macro's `members` (indices into `instances`),
+/// starting at the sticky cursor. Does not mutate the instances; the caller
+/// performs the actual admission on `Admitted`.
+pub fn route(
+    state: &mut RoutingState,
+    members: &[usize],
+    instances: &[SimInstance],
+    req: &Request,
+    now: f64,
+    slo: &SloSpec,
+    admission_margin: usize,
+) -> RouteOutcome {
+    route_with(state, members, instances, req, now, slo, admission_margin,
+               RouteOpts::default())
+}
+
+/// Ablation switches for [`route_with`] (benches/ablation_padg.rs).
+#[derive(Debug, Clone, Copy)]
+pub struct RouteOpts {
+    /// false: restart every scan at member 0 (no stickiness).
+    pub sticky: bool,
+    /// false: window budget = whole TTFT (no rolling-activation cap).
+    pub window_cap: bool,
+    /// true: gate on mean saved-TPOT (paper-literal Algorithm 2).
+    pub mean_slack: bool,
+}
+
+impl Default for RouteOpts {
+    fn default() -> Self {
+        RouteOpts { sticky: true, window_cap: true, mean_slack: false }
+    }
+}
+
+/// [`route`] with ablation switches.
+#[allow(clippy::too_many_arguments)]
+pub fn route_with(
+    state: &mut RoutingState,
+    members: &[usize],
+    instances: &[SimInstance],
+    req: &Request,
+    now: f64,
+    slo: &SloSpec,
+    admission_margin: usize,
+    opts: RouteOpts,
+) -> RouteOutcome {
+    if members.is_empty() {
+        state.deferred += 1;
+        return RouteOutcome::Deferred;
+    }
+    let n = members.len();
+    // Stagger the ring's prefill windows so together they cover the TTFT
+    // budget (see constraints::check_constraints on window_budget).
+    let window_budget = if opts.window_cap {
+        slo.ttft / n as f64
+    } else {
+        slo.ttft
+    };
+    let start = if opts.sticky { state.last.min(n - 1) } else { 0 };
+    for step in 0..n {
+        let pos = (start + step) % n;
+        let inst = &instances[members[pos]];
+        if super::constraints::check_constraints_opt(
+            inst, req, now, slo, admission_margin, window_budget, opts.mean_slack,
+        ) == ConstraintVerdict::Satisfied
+        {
+            state.last = pos;
+            state.admitted += 1;
+            return RouteOutcome::Admitted(pos);
+        }
+    }
+    state.deferred += 1;
+    RouteOutcome::Deferred
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::interconnect::LinkSpec;
+    use crate::perfmodel::parallelism::ParallelCfg;
+    use crate::perfmodel::{BatchTimer, GpuSpec, ModelSpec};
+
+    fn instances(n: usize) -> Vec<SimInstance> {
+        (0..n)
+            .map(|i| {
+                let timer = BatchTimer::new(
+                    ModelSpec::llama_30b(),
+                    GpuSpec::l20(),
+                    ParallelCfg::tp_only(4, LinkSpec::pcie4()),
+                );
+                SimInstance::new(i, timer, 0.1)
+            })
+            .collect()
+    }
+
+    fn req(id: u64, input: usize) -> Request {
+        Request { id, arrival: 0.0, input_len: input, output_len: 50 }
+    }
+
+    fn slo() -> SloSpec {
+        SloSpec::new(5.0, 0.1)
+    }
+
+    #[test]
+    fn sticky_prefers_last_instance() {
+        let insts = instances(4);
+        let mut st = RoutingState { last: 2, ..Default::default() };
+        let out = route(&mut st, &[0, 1, 2, 3], &insts, &req(1, 100), 0.0, &slo(), 64);
+        assert_eq!(out, RouteOutcome::Admitted(2));
+        assert_eq!(st.last, 2);
+    }
+
+    #[test]
+    fn advances_cyclically_on_violation() {
+        let mut insts = instances(3);
+        // Fill instance 1 (the sticky target) past its KV capacity.
+        insts[1].kv_used = insts[1].kv_capacity;
+        let mut st = RoutingState { last: 1, ..Default::default() };
+        let out = route(&mut st, &[0, 1, 2], &insts, &req(1, 100), 0.0, &slo(), 64);
+        assert_eq!(out, RouteOutcome::Admitted(2)); // 1 -> 2 (next in cycle)
+        assert_eq!(st.last, 2);
+    }
+
+    #[test]
+    fn wraps_around_ring() {
+        let mut insts = instances(3);
+        insts[2].kv_used = insts[2].kv_capacity;
+        let mut st = RoutingState { last: 2, ..Default::default() };
+        let out = route(&mut st, &[0, 1, 2], &insts, &req(1, 100), 0.0, &slo(), 64);
+        assert_eq!(out, RouteOutcome::Admitted(0));
+    }
+
+    #[test]
+    fn defers_when_all_full() {
+        let mut insts = instances(2);
+        for i in &mut insts {
+            i.kv_used = i.kv_capacity;
+        }
+        let mut st = RoutingState::default();
+        let out = route(&mut st, &[0, 1], &insts, &req(1, 100), 0.0, &slo(), 64);
+        assert_eq!(out, RouteOutcome::Deferred);
+        assert_eq!(st.deferred, 1);
+    }
+
+    #[test]
+    fn empty_macro_defers() {
+        let insts = instances(1);
+        let mut st = RoutingState::default();
+        let out = route(&mut st, &[], &insts, &req(1, 100), 0.0, &slo(), 64);
+        assert_eq!(out, RouteOutcome::Deferred);
+    }
+
+    #[test]
+    fn members_subset_respected() {
+        // Macro owns only instances {1}; instance 0 must never be chosen.
+        let mut insts = instances(2);
+        insts[1].kv_used = insts[1].kv_capacity;
+        let mut st = RoutingState::default();
+        let out = route(&mut st, &[1], &insts, &req(1, 100), 0.0, &slo(), 64);
+        assert_eq!(out, RouteOutcome::Deferred);
+    }
+}

@@ -1,0 +1,36 @@
+//! # EcoServe
+//!
+//! A from-scratch reproduction of *EcoServe: Enabling Cost-effective LLM
+//! Serving with Proactive Intra- and Inter-Instance Orchestration* (cs.DC
+//! 2025) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The paper's contribution — the **PaDG (partially disaggregated)
+//! strategy** — lives in [`coordinator`]: prefill and decode phases are
+//! disaggregated *in time* within each instance (temporal disaggregation),
+//! and instances inside a *macro instance* stagger their prefill windows
+//! (rolling activation) so some instance is always accepting new requests.
+//!
+//! Layer map (see `DESIGN.md`):
+//! * **L3 (this crate)** — coordinator, schedulers, KV management, metrics,
+//!   the discrete-event cluster simulator, and the analytical GPU
+//!   performance model used to reproduce the paper's evaluation.
+//! * **L2 (`python/compile/model.py`)** — TinyLM JAX graphs, AOT-lowered to
+//!   HLO text once at build time (`make artifacts`).
+//! * **L1 (`python/compile/kernels/`)** — Pallas flash-attention kernels.
+//!
+//! Python never runs on the request path: [`runtime`] loads the HLO
+//! artifacts through the PJRT C API (`xla` crate) and executes them from
+//! the Rust hot loop.
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod harness;
+pub mod metrics;
+pub mod perfmodel;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod testing;
+pub mod util;
+pub mod workload;

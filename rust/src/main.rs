@@ -1,0 +1,184 @@
+//! EcoServe launcher.
+//!
+//! Subcommands:
+//!   serve     — live serving on PJRT-CPU instances (TinyLM artifacts)
+//!   simulate  — one simulated run of a system at a fixed request rate
+//!   goodput   — goodput search (paper §4.1) for one system
+//!   table2    — print the arithmetic-intensity table
+//!   table3    — print the KV-bandwidth table
+//!
+//! Examples:
+//!   ecoserve serve --instances 2 --rate 3 --duration 20
+//!   ecoserve simulate --system ecoserve --model codellama-34b \
+//!       --cluster l20 --dataset sharegpt --rate 8
+//!   ecoserve goodput --system vllm --dataset longbench --level p90
+
+use anyhow::{bail, Result};
+
+use ecoserve::config::{ClusterSpec, Deployment, ExperimentConfig, SystemKind};
+use ecoserve::harness;
+use ecoserve::metrics::Attainment;
+use ecoserve::perfmodel::{self, ModelSpec};
+use ecoserve::server::{serve_poisson, ServeConfig};
+use ecoserve::util::cli::Args;
+use ecoserve::workload::Dataset;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.command() {
+        Some("serve") => cmd_serve(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("goodput") => cmd_goodput(&args),
+        Some("table2") => cmd_table2(&args),
+        Some("table3") => cmd_table3(),
+        _ => {
+            eprintln!("usage: ecoserve <serve|simulate|goodput|table2|table3> [--flags]");
+            eprintln!("see rust/src/main.rs docs for examples");
+            Ok(())
+        }
+    }
+}
+
+fn experiment_from_args(args: &Args) -> Result<ExperimentConfig> {
+    let model = ModelSpec::by_name(&args.get_or("model", "codellama-34b"))
+        .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
+    let cluster = ClusterSpec::by_name(&args.get_or("cluster", "l20"))
+        .ok_or_else(|| anyhow::anyhow!("unknown cluster"))?;
+    let dataset = Dataset::by_name(&args.get_or("dataset", "sharegpt"))
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset"))?;
+    let mut deployment = Deployment::paper_default(model, cluster);
+    if let Some(tp) = args.get("tp") {
+        deployment.tp = tp.parse()?;
+    }
+    if let Some(pp) = args.get("pp") {
+        deployment.pp = pp.parse()?;
+    }
+    if let Some(g) = args.get("gpus") {
+        deployment.gpus_used = g.parse()?;
+    }
+    let mut cfg = ExperimentConfig::new(deployment, dataset);
+    cfg.seed = args.get_u64("seed", 42);
+    cfg.duration = args.get_f64("duration", 240.0);
+    cfg.warmup = args.get_f64("warmup", 30.0);
+    Ok(cfg)
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let mut cfg = ServeConfig::default();
+    cfg.instances = args.get_usize("instances", 2);
+    cfg.rate = args.get_f64("rate", 3.0);
+    cfg.duration_secs = args.get_f64("duration", 20.0);
+    cfg.seed = args.get_u64("seed", 42);
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let report = serve_poisson(std::path::Path::new(&artifacts), &cfg)?;
+    print!("{}", report.render());
+    if !report.fatal_errors.is_empty() {
+        bail!("worker errors: {:?}", report.fatal_errors);
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let cfg = experiment_from_args(args)?;
+    let kind = SystemKind::by_name(&args.get_or("system", "ecoserve"))
+        .ok_or_else(|| anyhow::anyhow!("unknown system"))?;
+    let rate = args.get_f64("rate", 4.0);
+    let r = harness::run_once(kind, &cfg, rate, None);
+    let s = &r.summary;
+    println!(
+        "{} on {} / {} / {} @ {:.2} req/s",
+        kind.label(),
+        cfg.deployment.model.name,
+        cfg.deployment.cluster.name,
+        cfg.dataset.name,
+        rate
+    );
+    println!(
+        "  arrived {} completed {} attainment {:.1}%  ({} sim events in {:?})",
+        r.arrived,
+        s.count,
+        r.attainment * 100.0,
+        r.events,
+        r.wall
+    );
+    println!(
+        "  TTFT p50/p90/p99: {:.2}/{:.2}/{:.2} s   TPOT p50/p90/p99: {:.0}/{:.0}/{:.0} ms",
+        s.ttft_p50, s.ttft_p90, s.ttft_p99,
+        s.tpot_p50 * 1e3, s.tpot_p90 * 1e3, s.tpot_p99 * 1e3
+    );
+    println!("  token throughput: {:.0} tok/s", s.token_throughput);
+    Ok(())
+}
+
+fn cmd_goodput(args: &Args) -> Result<()> {
+    let cfg = experiment_from_args(args)?;
+    let kind = SystemKind::by_name(&args.get_or("system", "ecoserve"))
+        .ok_or_else(|| anyhow::anyhow!("unknown system"))?;
+    let level = match args.get_or("level", "p90").to_ascii_lowercase().as_str() {
+        "p50" => Attainment::P50,
+        "p99" => Attainment::P99,
+        _ => Attainment::P90,
+    };
+    let g = harness::goodput_search(kind, &cfg, level);
+    println!(
+        "{} {} goodput: {:.2} req/s ({:.0} tok/s) on {}/{}/{}",
+        g.system.label(),
+        g.level.label(),
+        g.rate,
+        g.summary.token_throughput,
+        cfg.deployment.model.name,
+        cfg.deployment.cluster.name,
+        cfg.dataset.name,
+    );
+    if let Some(p) = g.fudg_prefill {
+        println!("  (FuDG split: {p} prefill / {} decode)",
+                 cfg.deployment.num_instances() - p);
+    }
+    Ok(())
+}
+
+fn cmd_table2(args: &Args) -> Result<()> {
+    let b = args.get_f64("batch", 8.0);
+    let s = args.get_f64("seq", 512.0);
+    let h = args.get_f64("hidden", 8192.0);
+    let m = args.get_f64("heads", 64.0);
+    println!("Table 2 — arithmetic intensity (B={b}, S={s}, H={h}, M={m}, bf16)");
+    println!("{:<22} {:>8} {:>14} {:>16} {:>10}", "Operation", "Phase", "GFLOPs", "MBytes", "AI");
+    for op in perfmodel::table2_ops(b, s, h, m, 2.0) {
+        println!(
+            "{:<22} {:>8} {:>14.2} {:>16.2} {:>10.1}",
+            op.name,
+            format!("{:?}", op.phase),
+            op.flops / 1e9,
+            op.bytes / 1e6,
+            op.arithmetic_intensity()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_table3() -> Result<()> {
+    use ecoserve::perfmodel::interconnect::required_kv_bandwidth;
+    use ecoserve::perfmodel::parallelism::ParallelCfg;
+    use ecoserve::perfmodel::{BatchTimer, GpuSpec};
+    println!("Table 3 — KV generation rate and required transfer bandwidth");
+    println!("{:<16} {:>6} {:>12} {:>22}", "Model", "GPU", "Tokens/s", "Required bandwidth");
+    for (model, gpu, tp) in [
+        (ModelSpec::llama_30b(), GpuSpec::l20(), 4),
+        (ModelSpec::llama_30b(), GpuSpec::a800(), 2),
+        (ModelSpec::codellama_34b(), GpuSpec::l20(), 4),
+        (ModelSpec::codellama_34b(), GpuSpec::a800(), 2),
+    ] {
+        let link = ecoserve::perfmodel::interconnect::LinkSpec::pcie4();
+        let timer = BatchTimer::new(model.clone(), gpu.clone(),
+                                    ParallelCfg::tp_only(tp, link));
+        let instances_per_node = 8 / tp;
+        let toks = timer.prefill_tokens_per_sec(1024) * instances_per_node as f64;
+        let bw = required_kv_bandwidth(toks, model.kv_bytes_per_token());
+        println!(
+            "{:<16} {:>6} {:>12.1} {:>18.2} GB/s",
+            model.name, gpu.name, toks, bw / 1e9
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,181 @@
+//! Streaming metrics collector: accumulates per-request token timestamps
+//! during a run (simulated or live) and finalizes [`RequestRecord`]s.
+//!
+//! Also maintains windowed attainment series for the Figure 10 experiment
+//! (SLO attainment sampled every 30 s while the request rate ramps).
+
+use std::collections::HashMap;
+
+use super::{RequestRecord, SloSpec};
+use crate::workload::Request;
+
+/// In-flight bookkeeping for one request.
+#[derive(Debug, Clone)]
+struct Open {
+    arrival: f64,
+    input_len: usize,
+    first_token: Option<f64>,
+    last_token: f64,
+    tokens: usize,
+}
+
+/// Collects token events and produces completed [`RequestRecord`]s.
+#[derive(Debug, Default)]
+pub struct Collector {
+    open: HashMap<u64, Open>,
+    done: Vec<RequestRecord>,
+    /// Count of requests rejected at admission (capacity overflow).
+    pub rejected: usize,
+}
+
+impl Collector {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register arrival (idempotent per id).
+    pub fn on_arrival(&mut self, req: &Request) {
+        self.open.entry(req.id).or_insert(Open {
+            arrival: req.arrival,
+            input_len: req.input_len,
+            first_token: None,
+            last_token: req.arrival,
+            tokens: 0,
+        });
+    }
+
+    /// Record the first output token (end of prefill).
+    pub fn on_first_token(&mut self, id: u64, now: f64) {
+        if let Some(o) = self.open.get_mut(&id) {
+            debug_assert!(o.first_token.is_none(), "duplicate first token for {id}");
+            o.first_token = Some(now);
+            o.last_token = now;
+            o.tokens = 1;
+        }
+    }
+
+    /// Record a subsequent decode token.
+    pub fn on_token(&mut self, id: u64, now: f64) {
+        if let Some(o) = self.open.get_mut(&id) {
+            o.last_token = now;
+            o.tokens += 1;
+        }
+    }
+
+    /// Finish a request; moves it to the completed set.
+    pub fn on_complete(&mut self, id: u64, now: f64) {
+        if let Some(o) = self.open.remove(&id) {
+            let first = o.first_token.unwrap_or(now);
+            self.done.push(RequestRecord {
+                id,
+                arrival: o.arrival,
+                first_token: first,
+                completion: now.max(first),
+                input_len: o.input_len,
+                output_len: o.tokens.max(1),
+            });
+        }
+    }
+
+    /// Request rejected at admission — tracked separately so overloaded
+    /// systems can't improve their attainment by shedding load invisibly.
+    pub fn on_reject(&mut self, id: u64) {
+        self.open.remove(&id);
+        self.rejected += 1;
+    }
+
+    pub fn completed(&self) -> &[RequestRecord] {
+        &self.done
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.open.len()
+    }
+
+    pub fn into_records(self) -> Vec<RequestRecord> {
+        self.done
+    }
+
+    /// Completed records whose arrival fell in [t0, t1) — used both to trim
+    /// warm-up/cool-down and for Figure 10's 30-second attainment windows.
+    pub fn records_in_window(&self, t0: f64, t1: f64) -> Vec<RequestRecord> {
+        self.done
+            .iter()
+            .filter(|r| r.arrival >= t0 && r.arrival < t1)
+            .cloned()
+            .collect()
+    }
+
+    /// Windowed attainment series over [0, horizon): one point per
+    /// `window` seconds (Figure 10's y-axis).
+    pub fn attainment_series(&self, slo: &SloSpec, window: f64, horizon: f64) -> Vec<(f64, f64)> {
+        let mut out = Vec::new();
+        let mut t = 0.0;
+        while t < horizon {
+            let recs = self.records_in_window(t, t + window);
+            let frac = super::attainment_fraction(&recs, slo);
+            out.push((t + window, if recs.is_empty() { 1.0 } else { frac }));
+            t += window;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, arrival: f64) -> Request {
+        Request { id, arrival, input_len: 10, output_len: 5 }
+    }
+
+    #[test]
+    fn lifecycle_produces_record() {
+        let mut c = Collector::new();
+        c.on_arrival(&req(1, 0.0));
+        c.on_first_token(1, 0.4);
+        for i in 1..5 {
+            c.on_token(1, 0.4 + i as f64 * 0.05);
+        }
+        c.on_complete(1, 0.6);
+        assert_eq!(c.in_flight(), 0);
+        let r = &c.completed()[0];
+        assert_eq!(r.output_len, 5);
+        assert!((r.ttft() - 0.4).abs() < 1e-12);
+        assert!((r.tpot() - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reject_is_counted_not_recorded() {
+        let mut c = Collector::new();
+        c.on_arrival(&req(1, 0.0));
+        c.on_reject(1);
+        assert_eq!(c.rejected, 1);
+        assert!(c.completed().is_empty());
+        assert_eq!(c.in_flight(), 0);
+    }
+
+    #[test]
+    fn windowing() {
+        let mut c = Collector::new();
+        for (id, t) in [(1u64, 1.0), (2, 31.0), (3, 61.0)] {
+            c.on_arrival(&req(id, t));
+            c.on_first_token(id, t + 0.1);
+            c.on_complete(id, t + 0.5);
+        }
+        assert_eq!(c.records_in_window(0.0, 30.0).len(), 1);
+        assert_eq!(c.records_in_window(30.0, 60.0).len(), 1);
+        let series = c.attainment_series(&SloSpec::new(1.0, 1.0), 30.0, 90.0);
+        assert_eq!(series.len(), 3);
+        assert!(series.iter().all(|(_, f)| *f == 1.0));
+    }
+
+    #[test]
+    fn unknown_ids_ignored() {
+        let mut c = Collector::new();
+        c.on_first_token(99, 1.0);
+        c.on_token(99, 1.1);
+        c.on_complete(99, 1.2);
+        assert!(c.completed().is_empty());
+    }
+}

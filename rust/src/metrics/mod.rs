@@ -1,0 +1,218 @@
+//! Request-level latency records, SLO attainment, and goodput accounting —
+//! the measurement side of the paper's evaluation (§3.3, §4.1).
+//!
+//! Metric definitions follow the paper's *stricter* convention (§3.3): the
+//! reported TTFT includes queueing and the phase-switching wait, i.e.
+//! `first_token_time - arrival`; TPOT is measured after the first token,
+//! per request, as the mean inter-token time.
+
+pub mod collector;
+
+pub use collector::Collector;
+
+use crate::util::percentile;
+
+/// Completed-request latency record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestRecord {
+    pub id: u64,
+    pub arrival: f64,
+    /// Time the first output token was produced (end of prefill, after any
+    /// queueing/phase-switch wait — the §3.3 strict TTFT reference point).
+    pub first_token: f64,
+    /// Time the last output token was produced.
+    pub completion: f64,
+    pub input_len: usize,
+    pub output_len: usize,
+}
+
+impl RequestRecord {
+    /// Strict TTFT: queueing + phase-switch wait + prefill execution.
+    pub fn ttft(&self) -> f64 {
+        self.first_token - self.arrival
+    }
+
+    /// Mean time per output token after the first.
+    pub fn tpot(&self) -> f64 {
+        if self.output_len <= 1 {
+            return 0.0;
+        }
+        (self.completion - self.first_token) / (self.output_len - 1) as f64
+    }
+
+    /// End-to-end latency.
+    pub fn e2e(&self) -> f64 {
+        self.completion - self.arrival
+    }
+
+    /// Does this request meet both SLOs?
+    pub fn meets(&self, slo: &SloSpec) -> bool {
+        self.ttft() <= slo.ttft && self.tpot() <= slo.tpot
+    }
+}
+
+/// An SLO pair (paper Table 4).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloSpec {
+    pub ttft: f64,
+    pub tpot: f64,
+}
+
+impl SloSpec {
+    pub fn new(ttft: f64, tpot: f64) -> Self {
+        SloSpec { ttft, tpot }
+    }
+}
+
+/// Attainment level: the paper evaluates P50 / P90 / P99 (fraction of
+/// requests that must meet the SLO pair).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Attainment {
+    P50,
+    P90,
+    P99,
+}
+
+impl Attainment {
+    pub fn fraction(&self) -> f64 {
+        match self {
+            Attainment::P50 => 0.50,
+            Attainment::P90 => 0.90,
+            Attainment::P99 => 0.99,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Attainment::P50 => "P50",
+            Attainment::P90 => "P90",
+            Attainment::P99 => "P99",
+        }
+    }
+
+    pub fn all() -> [Attainment; 3] {
+        [Attainment::P50, Attainment::P90, Attainment::P99]
+    }
+}
+
+/// Summary statistics over a set of completed requests.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub count: usize,
+    pub ttft_p50: f64,
+    pub ttft_p90: f64,
+    pub ttft_p99: f64,
+    pub tpot_p50: f64,
+    pub tpot_p90: f64,
+    pub tpot_p99: f64,
+    pub attained_frac: f64,
+    pub throughput_rps: f64,
+    pub token_throughput: f64,
+}
+
+/// Fraction of records meeting the SLO pair.
+pub fn attainment_fraction(records: &[RequestRecord], slo: &SloSpec) -> f64 {
+    if records.is_empty() {
+        return 0.0;
+    }
+    records.iter().filter(|r| r.meets(slo)).count() as f64 / records.len() as f64
+}
+
+/// Whether the records meet `level` attainment of the SLOs.
+pub fn meets_attainment(records: &[RequestRecord], slo: &SloSpec, level: Attainment) -> bool {
+    attainment_fraction(records, slo) >= level.fraction()
+}
+
+/// Build a [`Summary`] over `records` for the window `[0, duration]`.
+pub fn summarize(records: &[RequestRecord], slo: &SloSpec, duration: f64) -> Summary {
+    let ttfts: Vec<f64> = records.iter().map(|r| r.ttft()).collect();
+    let tpots: Vec<f64> = records.iter().map(|r| r.tpot()).collect();
+    let tokens: usize = records.iter().map(|r| r.output_len).sum();
+    Summary {
+        count: records.len(),
+        ttft_p50: percentile(&ttfts, 50.0),
+        ttft_p90: percentile(&ttfts, 90.0),
+        ttft_p99: percentile(&ttfts, 99.0),
+        tpot_p50: percentile(&tpots, 50.0),
+        tpot_p90: percentile(&tpots, 90.0),
+        tpot_p99: percentile(&tpots, 99.0),
+        attained_frac: attainment_fraction(records, slo),
+        throughput_rps: records.len() as f64 / duration.max(1e-9),
+        token_throughput: tokens as f64 / duration.max(1e-9),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(arrival: f64, first: f64, done: f64, out: usize) -> RequestRecord {
+        RequestRecord {
+            id: 0,
+            arrival,
+            first_token: first,
+            completion: done,
+            input_len: 100,
+            output_len: out,
+        }
+    }
+
+    #[test]
+    fn ttft_tpot_arithmetic() {
+        let r = rec(10.0, 10.5, 12.5, 21);
+        assert!((r.ttft() - 0.5).abs() < 1e-12);
+        assert!((r.tpot() - 0.1).abs() < 1e-12);
+        assert!((r.e2e() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_token_request_has_zero_tpot() {
+        let r = rec(0.0, 1.0, 1.0, 1);
+        assert_eq!(r.tpot(), 0.0);
+        assert!(r.meets(&SloSpec::new(2.0, 0.01)));
+    }
+
+    #[test]
+    fn attainment_levels() {
+        let slo = SloSpec::new(1.0, 0.1);
+        let mut records = Vec::new();
+        for i in 0..100 {
+            // 95 meet the SLO, 5 miss on TTFT.
+            let ttft = if i < 95 { 0.5 } else { 3.0 };
+            records.push(rec(0.0, ttft, ttft + 1.0, 11));
+        }
+        assert!((attainment_fraction(&records, &slo) - 0.95).abs() < 1e-9);
+        assert!(meets_attainment(&records, &slo, Attainment::P50));
+        assert!(meets_attainment(&records, &slo, Attainment::P90));
+        assert!(!meets_attainment(&records, &slo, Attainment::P99));
+    }
+
+    #[test]
+    fn tpot_violation_detected() {
+        let slo = SloSpec::new(10.0, 0.1);
+        let slow = rec(0.0, 1.0, 1.0 + 20.0 * 0.3, 21); // tpot = 0.3
+        assert!(!slow.meets(&slo));
+    }
+
+    #[test]
+    fn summary_sane() {
+        let slo = SloSpec::new(1.0, 0.1);
+        let records: Vec<_> = (0..10)
+            .map(|i| rec(i as f64, i as f64 + 0.2, i as f64 + 1.0, 11))
+            .collect();
+        let s = summarize(&records, &slo, 10.0);
+        assert_eq!(s.count, 10);
+        assert!((s.throughput_rps - 1.0).abs() < 1e-9);
+        assert!((s.attained_frac - 1.0).abs() < 1e-9);
+        assert!((s.ttft_p50 - 0.2).abs() < 1e-6);
+        assert!((s.token_throughput - 11.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_records() {
+        let slo = SloSpec::new(1.0, 0.1);
+        assert_eq!(attainment_fraction(&[], &slo), 0.0);
+        let s = summarize(&[], &slo, 1.0);
+        assert_eq!(s.count, 0);
+    }
+}

@@ -1,0 +1,89 @@
+//! GPU device catalog: the two SKUs of the paper's clusters plus a CPU
+//! pseudo-device for the live path.
+//!
+//! `flops_eff` / `bw_eff` are the achievable fractions of peak that
+//! calibrate the roofline to the paper's measured Table 3 throughputs
+//! (validated in rust/tests/perfmodel_validation.rs). They absorb kernel
+//! inefficiency, scheduling gaps, and framework overhead — a standard
+//! simulator technique when the physical testbed is unavailable.
+
+/// A GPU (or pseudo-GPU) device model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    /// Peak dense bf16 throughput, FLOP/s.
+    pub peak_flops: f64,
+    /// Peak HBM bandwidth, bytes/s.
+    pub hbm_bw: f64,
+    /// Device memory, bytes.
+    pub mem_bytes: f64,
+    /// Achievable fraction of peak FLOPs in compute-bound phases.
+    pub flops_eff: f64,
+    /// Achievable fraction of peak HBM bandwidth in memory-bound phases.
+    pub bw_eff: f64,
+}
+
+impl GpuSpec {
+    /// NVIDIA L20-48GB: 119.5 TFLOP/s bf16, 864 GB/s GDDR6, PCIe only.
+    pub fn l20() -> Self {
+        GpuSpec {
+            name: "L20",
+            peak_flops: 119.5e12,
+            hbm_bw: 864.0e9,
+            mem_bytes: 48.0 * 1e9,
+            flops_eff: 0.55,
+            bw_eff: 0.80,
+        }
+    }
+
+    /// NVIDIA A800-80GB: 312 TFLOP/s bf16, 2039 GB/s HBM2e.
+    pub fn a800() -> Self {
+        GpuSpec {
+            name: "A800",
+            peak_flops: 312.0e12,
+            hbm_bw: 2039.0e9,
+            mem_bytes: 80.0 * 1e9,
+            flops_eff: 0.72,
+            bw_eff: 0.85,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<GpuSpec> {
+        match name {
+            "l20" | "L20" => Some(Self::l20()),
+            "a800" | "A800" => Some(Self::a800()),
+            _ => None,
+        }
+    }
+
+    /// Effective compute throughput (FLOP/s).
+    pub fn eff_flops(&self) -> f64 {
+        self.peak_flops * self.flops_eff
+    }
+
+    /// Effective memory bandwidth (bytes/s).
+    pub fn eff_bw(&self) -> f64 {
+        self.hbm_bw * self.bw_eff
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_sane() {
+        let l20 = GpuSpec::l20();
+        let a800 = GpuSpec::a800();
+        assert!(a800.peak_flops > 2.0 * l20.peak_flops);
+        assert!(a800.hbm_bw > 2.0 * l20.hbm_bw);
+        assert!(a800.mem_bytes > l20.mem_bytes);
+        assert!(l20.flops_eff > 0.0 && l20.flops_eff <= 1.0);
+    }
+
+    #[test]
+    fn lookup() {
+        assert_eq!(GpuSpec::by_name("L20").unwrap().name, "L20");
+        assert!(GpuSpec::by_name("h100").is_none());
+    }
+}

@@ -1,0 +1,147 @@
+//! Interconnect catalog + collective-time arithmetic.
+//!
+//! The paper's cost-effectiveness argument hinges on interconnects: FuDG
+//! needs NVLink/InfiniBand-class links to move KV cache, while PaDG runs on
+//! "commodity" PCIe + 10 Gbps Ethernet. These link models feed both the
+//! TP/PP communication costs (perfmodel::parallelism) and the simulator's
+//! KV-transfer events (sim::network).
+
+/// A point-to-point (or bus) link model: bandwidth + fixed per-message
+/// latency + a collective-efficiency derate.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkSpec {
+    pub name: &'static str,
+    /// Usable point-to-point bandwidth, bytes/s (derated from line rate).
+    pub bandwidth: f64,
+    /// Per-message latency, seconds.
+    pub latency: f64,
+    /// Fraction of `bandwidth` achievable inside ring collectives. PCIe
+    /// without P2P/GPU-direct routes all-reduce traffic through host
+    /// memory, cutting effective collective bandwidth to ~a third — this is
+    /// what makes TP "account for nearly half of the total execution time"
+    /// on the paper's L20 nodes (§2.3), validated in
+    /// rust/tests/perfmodel_validation.rs.
+    pub collective_eff: f64,
+}
+
+impl LinkSpec {
+    /// PCIe 4.0 x16: ~32 GB/s line, ~25 GB/s usable p2p; host-routed
+    /// collectives reach ~8-9 GB/s with ~20 us sync latency.
+    pub fn pcie4() -> Self {
+        LinkSpec { name: "PCIe4x16", bandwidth: 25.0e9, latency: 20e-6, collective_eff: 0.35 }
+    }
+
+    /// NVLink (A100/A800-class NVSwitch): ~400 GB/s per GPU usable ~300.
+    pub fn nvlink() -> Self {
+        LinkSpec { name: "NVLink", bandwidth: 300.0e9, latency: 2e-6, collective_eff: 0.85 }
+    }
+
+    /// 10 Gbps datacenter Ethernet: ~1.1 GB/s usable after TCP overheads.
+    pub fn eth_10g() -> Self {
+        LinkSpec { name: "10GbE", bandwidth: 1.1e9, latency: 50e-6, collective_eff: 0.7 }
+    }
+
+    /// 25 Gbps RoCE: ~2.9 GB/s usable.
+    pub fn roce_25g() -> Self {
+        LinkSpec { name: "25G-RoCE", bandwidth: 2.9e9, latency: 10e-6, collective_eff: 0.8 }
+    }
+
+    /// 400 Gbps InfiniBand (the class of link FuDG hyper-clusters assume).
+    pub fn ib_400g() -> Self {
+        LinkSpec { name: "400G-IB", bandwidth: 45.0e9, latency: 3e-6, collective_eff: 0.85 }
+    }
+
+    pub fn by_name(name: &str) -> Option<LinkSpec> {
+        match name {
+            "pcie4" => Some(Self::pcie4()),
+            "nvlink" => Some(Self::nvlink()),
+            "eth10g" | "10gbe" => Some(Self::eth_10g()),
+            "roce25g" => Some(Self::roce_25g()),
+            "ib400g" => Some(Self::ib_400g()),
+            _ => None,
+        }
+    }
+
+    /// Time to move `bytes` point-to-point.
+    pub fn p2p_time(&self, bytes: f64) -> f64 {
+        self.latency + bytes / self.bandwidth
+    }
+
+    /// Ring all-reduce across `n` workers of a `bytes`-sized buffer:
+    /// 2·(n-1)/n · bytes over the slowest link + 2(n-1) latency hops.
+    pub fn allreduce_time(&self, bytes: f64, n: usize) -> f64 {
+        let (bw, lat) = self.allreduce_parts(bytes, n);
+        bw + lat
+    }
+
+    /// The all-reduce split into (bandwidth term, latency term). Compute
+    /// overlap can hide the bandwidth term under GEMMs, but the hop
+    /// latency serializes with kernel boundaries — the roofline model
+    /// discounts only the part a given phase can actually hide.
+    pub fn allreduce_parts(&self, bytes: f64, n: usize) -> (f64, f64) {
+        if n <= 1 {
+            return (0.0, 0.0);
+        }
+        let nf = n as f64;
+        (
+            2.0 * (nf - 1.0) / nf * bytes / (self.bandwidth * self.collective_eff),
+            2.0 * (nf - 1.0) * self.latency,
+        )
+    }
+
+    /// All-gather of `bytes` total across `n` workers.
+    pub fn allgather_time(&self, bytes: f64, n: usize) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        let nf = n as f64;
+        (nf - 1.0) / nf * bytes / (self.bandwidth * self.collective_eff)
+            + (nf - 1.0) * self.latency
+    }
+}
+
+/// Required KV egress bandwidth for an all-prefill node producing
+/// `tokens_per_sec`, for a model with `kv_bytes_per_token` — the paper's
+/// Table 3 arithmetic.
+pub fn required_kv_bandwidth(tokens_per_sec: f64, kv_bytes_per_token: f64) -> f64 {
+    tokens_per_sec * kv_bytes_per_token
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn p2p_dominated_by_bandwidth_for_big_transfers() {
+        let l = LinkSpec::eth_10g();
+        let t = l.p2p_time(1.1e9);
+        assert!((t - 1.0).abs() < 0.01, "{t}");
+    }
+
+    #[test]
+    fn allreduce_scales_with_workers() {
+        let l = LinkSpec::pcie4();
+        let t2 = l.allreduce_time(1e9, 2);
+        let t4 = l.allreduce_time(1e9, 4);
+        let t8 = l.allreduce_time(1e9, 8);
+        assert!(t2 < t4 && t4 < t8);
+        assert_eq!(l.allreduce_time(1e9, 1), 0.0);
+        // asymptote: 2*bytes/(bw*collective_eff)
+        assert!(t8 < 2.0 * 1e9 / (l.bandwidth * l.collective_eff) * 1.01);
+    }
+
+    #[test]
+    fn table3_bandwidth_arithmetic() {
+        // Paper Table 3 row 1: Llama-30B on L20, 6584.6 tok/s -> 9.796 GB/s.
+        let kv = crate::perfmodel::llm::ModelSpec::llama_30b().kv_bytes_per_token();
+        let bw = required_kv_bandwidth(6584.6, kv);
+        assert!((bw / 1e9 - 9.796).abs() < 0.75, "got {} GB/s", bw / 1e9);
+    }
+
+    #[test]
+    fn link_ordering_matches_cost_tiers() {
+        assert!(LinkSpec::nvlink().bandwidth > LinkSpec::pcie4().bandwidth);
+        assert!(LinkSpec::pcie4().bandwidth > LinkSpec::roce_25g().bandwidth);
+        assert!(LinkSpec::roce_25g().bandwidth > LinkSpec::eth_10g().bandwidth);
+    }
+}

@@ -1,0 +1,132 @@
+//! Analytical GPU performance model (substrate for the paper's testbed,
+//! which we do not have — see DESIGN.md §2).
+//!
+//! Everything the schedulers observe about hardware — prefill/decode batch
+//! durations, KV-cache sizes, transfer times, TP/PP communication costs —
+//! is produced here from first principles: the arithmetic-intensity
+//! formulas of the paper's **Table 2**, a roofline over device specs
+//! (**§2.1**), and the interconnect arithmetic of **Table 3**.
+//!
+//! Calibration: two scalar efficiency factors per GPU (achievable fraction
+//! of peak FLOPs for compute-bound phases, achievable fraction of peak HBM
+//! bandwidth for memory-bound phases) are set so the model reproduces the
+//! paper's Table 3 throughput numbers within a few percent (validated in
+//! `rust/tests/perfmodel_validation.rs`).
+
+pub mod gpu;
+pub mod interconnect;
+pub mod llm;
+pub mod parallelism;
+pub mod roofline;
+
+pub use gpu::GpuSpec;
+pub use interconnect::LinkSpec;
+pub use llm::ModelSpec;
+pub use roofline::{BatchTimer, Phase};
+
+/// One row of the paper's Table 2: FLOPs, memory traffic and arithmetic
+/// intensity of a primary LLM operation, per phase.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OpCost {
+    pub name: &'static str,
+    pub phase: Phase,
+    pub flops: f64,
+    pub bytes: f64,
+}
+
+impl OpCost {
+    pub fn arithmetic_intensity(&self) -> f64 {
+        self.flops / self.bytes
+    }
+}
+
+/// Reproduce the paper's Table 2 for hyper-parameters (B, S, H, M, D) —
+/// element counts; `bytes` assumes `elem_bytes` per element (2 for bf16).
+///
+/// The six ops are QKV projection, attention QK^T, attention (QK^T)V,
+/// output projection, FFN dim expansion, FFN dim reduction; each appears
+/// in a prefill and a decode variant. Negligible terms (softmax, layernorm,
+/// 1/H factors) are omitted exactly as the paper does.
+pub fn table2_ops(b: f64, s: f64, h: f64, m: f64, elem_bytes: f64) -> Vec<OpCost> {
+    let e = elem_bytes;
+    vec![
+        OpCost { name: "QKV Projection", phase: Phase::Prefill,
+                 flops: 6.0 * b * s * h * h, bytes: (6.0 * b * s * h + 3.0 * h * h) * e },
+        OpCost { name: "QKV Projection", phase: Phase::Decode,
+                 flops: 6.0 * b * h * h, bytes: (6.0 * b * h + 3.0 * h * h) * e },
+        OpCost { name: "Attention QK^T", phase: Phase::Prefill,
+                 flops: 2.0 * b * s * s * h, bytes: (2.0 * b * s * h + b * s * s * m) * e },
+        OpCost { name: "Attention QK^T", phase: Phase::Decode,
+                 flops: 2.0 * b * s * h, bytes: (2.0 * b * s * m + b * h * (s + 1.0)) * e },
+        OpCost { name: "Attention (QK^T)V", phase: Phase::Prefill,
+                 flops: 2.0 * b * s * s * h, bytes: (2.0 * b * s * h + b * s * s * m) * e },
+        OpCost { name: "Attention (QK^T)V", phase: Phase::Decode,
+                 flops: 2.0 * b * s * h, bytes: (2.0 * b * s * m + b * h * (s + 1.0)) * e },
+        OpCost { name: "Output Projection", phase: Phase::Prefill,
+                 flops: 2.0 * b * s * h * h, bytes: (2.0 * b * s * h + h * h) * e },
+        OpCost { name: "Output Projection", phase: Phase::Decode,
+                 flops: 2.0 * b * h * h, bytes: (2.0 * b * h + h * h) * e },
+        OpCost { name: "Dim Expansion", phase: Phase::Prefill,
+                 flops: 8.0 * b * s * h * h, bytes: (2.0 * b * s * h + 4.0 * h * h) * e },
+        OpCost { name: "Dim Expansion", phase: Phase::Decode,
+                 flops: 8.0 * b * h * h, bytes: (2.0 * b * h + 4.0 * h * h) * e },
+        OpCost { name: "Dim Reduction", phase: Phase::Prefill,
+                 flops: 8.0 * b * s * h * h, bytes: (2.0 * b * s * h + 4.0 * h * h) * e },
+        OpCost { name: "Dim Reduction", phase: Phase::Decode,
+                 flops: 8.0 * b * h * h, bytes: (2.0 * b * h + 4.0 * h * h) * e },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's approximate-AI column: prefill projections ~ Θ(BS),
+    /// decode projections ~ Θ(B), prefill attention ~ Θ(S), decode
+    /// attention ~ Θ(1). (The exact limit of the Table 2 formulas is 2·BS
+    /// etc. as H → ∞; the paper's column is order-of notation.)
+    #[test]
+    fn table2_approximate_ai_matches_paper() {
+        let (b, s, h, m) = (2.0, 64.0, 8192.0, 64.0);
+        let ops = table2_ops(b, s, h, m, 1.0); // elem_bytes=1: AI in elements
+        let find = |name: &str, phase: Phase| {
+            ops.iter()
+                .find(|o| o.name == name && o.phase == phase)
+                .unwrap()
+                .arithmetic_intensity()
+        };
+        // Projections: Θ(BS) prefill, Θ(B) decode (asymptote 2·BS / 2·B).
+        let ai = find("QKV Projection", Phase::Prefill);
+        assert!(ai > 0.5 * b * s && ai <= 2.5 * b * s, "{ai}");
+        let ai = find("QKV Projection", Phase::Decode);
+        assert!(ai > 0.5 * b && ai <= 2.5 * b, "{ai}");
+        // Attention: Θ(S) prefill, Θ(1) decode.
+        let ai = find("Attention QK^T", Phase::Prefill);
+        assert!(ai <= s && ai > s / 20.0, "{ai}");
+        let ai = find("Attention QK^T", Phase::Decode);
+        assert!(ai < 2.5, "{ai}");
+        // Scaling check: doubling B doubles projection AI in this regime.
+        let ops2 = table2_ops(2.0 * b, s, h, m, 1.0);
+        let ai1 = find("QKV Projection", Phase::Prefill);
+        let ai2 = ops2
+            .iter()
+            .find(|o| o.name == "QKV Projection" && o.phase == Phase::Prefill)
+            .unwrap()
+            .arithmetic_intensity();
+        assert!((ai2 / ai1 - 2.0).abs() < 0.2, "{ai2} / {ai1}");
+    }
+
+    #[test]
+    fn prefill_ai_dominates_decode() {
+        let ops = table2_ops(16.0, 256.0, 4096.0, 32.0, 2.0);
+        for name in ["QKV Projection", "Attention QK^T", "Output Projection",
+                     "Dim Expansion", "Dim Reduction"] {
+            let p = ops.iter().find(|o| o.name == name && o.phase == Phase::Prefill).unwrap();
+            let d = ops.iter().find(|o| o.name == name && o.phase == Phase::Decode).unwrap();
+            assert!(
+                p.arithmetic_intensity() > d.arithmetic_intensity(),
+                "{name}: prefill AI should exceed decode AI"
+            );
+        }
+    }
+}

@@ -1,0 +1,106 @@
+//! Parallelism timing: tensor-parallel communication and pipeline-parallel
+//! staging (paper §2.3, Figures 3–4, and the Figure 11 experiment).
+//!
+//! TP partitions every layer across `tp` GPUs — two ring all-reduces per
+//! layer over the intra-node link (PCIe on the paper's L20/A800 nodes; the
+//! paper measures "communication overhead accounts for nearly half of the
+//! total execution time" for Llama-30B TP=4 over PCIe — validated in
+//! rust/tests/perfmodel_validation.rs).
+//!
+//! PP partitions layer-wise into `pp` stages with one point-to-point
+//! activation hand-off between consecutive stages. Its efficiency depends
+//! on workload balance: the paper's Figure 4 bubbles come from inter-batch
+//! imbalance and prefill/decode imbalance, which the simulator reproduces
+//! by running stages sequentially per batch and interleaving up to `pp`
+//! batches.
+
+use super::interconnect::LinkSpec;
+use super::llm::ModelSpec;
+
+/// Parallel execution configuration of one inference instance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParallelCfg {
+    /// Tensor-parallel degree (GPUs per stage).
+    pub tp: usize,
+    /// Pipeline-parallel degree (stages).
+    pub pp: usize,
+    /// Link carrying TP all-reduces (intra-node: PCIe or NVLink).
+    pub tp_link: LinkSpec,
+    /// Link carrying PP activations (PCIe intra-node, NIC across nodes).
+    pub pp_link: LinkSpec,
+}
+
+impl ParallelCfg {
+    pub fn tp_only(tp: usize, link: LinkSpec) -> Self {
+        ParallelCfg { tp, pp: 1, tp_link: link.clone(), pp_link: link }
+    }
+
+    pub fn gpus(&self) -> usize {
+        self.tp * self.pp
+    }
+
+    /// TP all-reduce time for processing `tokens` tokens through the whole
+    /// model: 2 all-reduces per layer of (tokens · H) activations.
+    pub fn tp_comm_time(&self, model: &ModelSpec, tokens: usize) -> f64 {
+        let (bw, lat) = self.tp_comm_parts(model, tokens);
+        bw + lat
+    }
+
+    /// TP all-reduce cost split into (bandwidth, latency) totals across all
+    /// layers — phases with compute to spare can hide the bandwidth part.
+    pub fn tp_comm_parts(&self, model: &ModelSpec, tokens: usize) -> (f64, f64) {
+        if self.tp <= 1 {
+            return (0.0, 0.0);
+        }
+        let bytes = (tokens * model.hidden * model.elem_bytes) as f64;
+        let (bw, lat) = self.tp_link.allreduce_parts(bytes, self.tp);
+        let layers = model.layers as f64;
+        (2.0 * bw * layers, 2.0 * lat * layers)
+    }
+
+    /// PP hand-off time for `tokens` tokens crossing all stage boundaries.
+    pub fn pp_comm_time(&self, model: &ModelSpec, tokens: usize) -> f64 {
+        if self.pp <= 1 {
+            return 0.0;
+        }
+        let bytes = (tokens * model.hidden * model.elem_bytes) as f64;
+        (self.pp - 1) as f64 * self.pp_link.p2p_time(bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(tp: usize, pp: usize) -> ParallelCfg {
+        ParallelCfg {
+            tp,
+            pp,
+            tp_link: LinkSpec::pcie4(),
+            pp_link: LinkSpec::pcie4(),
+        }
+    }
+
+    #[test]
+    fn tp1_has_no_comm() {
+        let m = ModelSpec::llama_30b();
+        assert_eq!(cfg(1, 1).tp_comm_time(&m, 512), 0.0);
+    }
+
+    #[test]
+    fn tp_comm_grows_with_degree_and_tokens() {
+        let m = ModelSpec::llama_30b();
+        assert!(cfg(4, 1).tp_comm_time(&m, 512) > cfg(2, 1).tp_comm_time(&m, 512));
+        assert!(cfg(4, 1).tp_comm_time(&m, 1024) > cfg(4, 1).tp_comm_time(&m, 512));
+    }
+
+    #[test]
+    fn pp_comm_much_cheaper_than_tp() {
+        // Paper §2.3: PP needs one small p2p every few layers vs TP's two
+        // all-reduces per layer.
+        let m = ModelSpec::llama_30b();
+        let tp = cfg(4, 1).tp_comm_time(&m, 512);
+        let pp = cfg(1, 4).pp_comm_time(&m, 512);
+        assert!(pp < tp / 10.0, "pp={pp} tp={tp}");
+    }
+}

@@ -1,0 +1,284 @@
+//! Shape-bucketed execution engine: the live-path equivalent of one
+//! EcoServe *instance*.
+//!
+//! At startup the engine compiles every prefill/decode artifact bucket and
+//! uploads the weights to device buffers **once**; each request-path call
+//! uploads only its small dynamic inputs (tokens, positions, gathered KV)
+//! and picks the smallest bucket that fits — the standard shape-bucketed
+//! AOT serving pattern.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::kv::{KvConfig, KvStore};
+use super::pjrt::{execute_tuple, PjrtRuntime};
+use super::weights::{load_weights, TinyConfig};
+
+/// Outcome of one prefill: last-position logits.
+pub struct PrefillOut {
+    pub logits: Vec<f32>,
+}
+
+/// One live inference engine (model replica).
+pub struct Engine {
+    rt: PjrtRuntime,
+    pub config: TinyConfig,
+    prefill_exes: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    decode_exes: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    weight_bufs: Vec<xla::PjRtBuffer>,
+    pub kv: KvStore,
+    /// Wall-clock spent inside PJRT execute calls (perf accounting).
+    pub exec_seconds: f64,
+    pub prefill_calls: u64,
+    pub decode_calls: u64,
+}
+
+impl Engine {
+    /// Load artifacts from `dir` and stand the engine up.
+    /// `kv_capacity_tokens` bounds the paged KV pool (defaults to
+    /// 64 concurrent max-length requests when None).
+    pub fn load(dir: &Path, kv_capacity_tokens: Option<usize>) -> Result<Engine> {
+        let rt = PjrtRuntime::cpu()?;
+        let bundle = load_weights(dir)?;
+        let config = bundle.config.clone();
+
+        let mut prefill_exes = BTreeMap::new();
+        for &s in &bundle.prefill_buckets {
+            let path = dir.join(format!("tiny_prefill_s{s}.hlo.txt"));
+            prefill_exes.insert(s, rt.load_hlo_text(&path)?);
+        }
+        let mut decode_exes = BTreeMap::new();
+        for &b in &bundle.decode_buckets {
+            let path = dir.join(format!("tiny_decode_b{b}.hlo.txt"));
+            decode_exes.insert(b, rt.load_hlo_text(&path)?);
+        }
+        if prefill_exes.is_empty() || decode_exes.is_empty() {
+            bail!("no executables found in {}", dir.display());
+        }
+
+        // Weights go to the device once; the request path never re-uploads.
+        let mut weight_bufs = Vec::with_capacity(bundle.arrays.len());
+        for w in &bundle.arrays {
+            weight_bufs.push(rt.upload_f32(&w.data, &w.shape)?);
+        }
+
+        let kv_cfg = KvConfig {
+            layers: config.layers,
+            kv_heads: config.kv_heads,
+            head_dim: config.head_dim,
+            max_seq: config.max_seq,
+            block_tokens: 16,
+        };
+        let capacity = kv_capacity_tokens.unwrap_or(64 * config.max_seq);
+        let kv = KvStore::new(kv_cfg, capacity);
+        Ok(Engine {
+            rt,
+            config,
+            prefill_exes,
+            decode_exes,
+            weight_bufs,
+            kv,
+            exec_seconds: 0.0,
+            prefill_calls: 0,
+            decode_calls: 0,
+        })
+    }
+
+    /// Smallest prefill bucket that fits `len` tokens.
+    pub fn prefill_bucket(&self, len: usize) -> Result<usize> {
+        self.prefill_exes
+            .keys()
+            .copied()
+            .find(|&b| b >= len)
+            .with_context(|| format!("prompt of {len} tokens exceeds largest bucket"))
+    }
+
+    /// Smallest decode bucket that fits `batch` rows.
+    pub fn decode_bucket(&self, batch: usize) -> Result<usize> {
+        self.decode_exes
+            .keys()
+            .copied()
+            .find(|&b| b >= batch)
+            .with_context(|| format!("decode batch {batch} exceeds largest bucket"))
+    }
+
+    /// Max decode batch the engine supports.
+    pub fn max_decode_batch(&self) -> usize {
+        *self.decode_exes.keys().last().unwrap()
+    }
+
+    /// Run prefill for request `id`; installs its KV and returns logits.
+    pub fn prefill(&mut self, id: u64, tokens: &[u32]) -> Result<PrefillOut> {
+        let len = tokens.len();
+        if len == 0 {
+            bail!("empty prompt");
+        }
+        if !self.kv.has_room(len) {
+            bail!("KV pool full (prompt {len} tokens)");
+        }
+        let bucket = self.prefill_bucket(len)?;
+        let exe = &self.prefill_exes[&bucket];
+        let mut padded = vec![0i32; bucket];
+        for (i, &t) in tokens.iter().enumerate() {
+            padded[i] = t as i32;
+        }
+        let tok_buf = self.rt.upload_i32(&padded, &[1, bucket])?;
+        let len_buf = self.rt.upload_i32(&[len as i32], &[])?;
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&tok_buf, &len_buf];
+        args.extend(self.weight_bufs.iter());
+        let t0 = std::time::Instant::now();
+        let out = execute_tuple(exe, &args)?;
+        self.exec_seconds += t0.elapsed().as_secs_f64();
+        self.prefill_calls += 1;
+        let logits = out[0].to_vec::<f32>()?;
+        let k = out[1].to_vec::<f32>()?;
+        let v = out[2].to_vec::<f32>()?;
+        self.kv.insert_prefill(id, &k, &v, bucket, len)?;
+        Ok(PrefillOut { logits })
+    }
+
+    /// One decode step for `ids` (each paired with its current token).
+    /// Returns one logits row per request and appends the new KV.
+    pub fn decode(&mut self, ids: &[u64], tokens: &[u32]) -> Result<Vec<Vec<f32>>> {
+        if ids.is_empty() || ids.len() != tokens.len() {
+            bail!("decode batch shape mismatch");
+        }
+        let batch = ids.len();
+        let bucket = self.decode_bucket(batch)?;
+        let exe = &self.decode_exes[&bucket];
+        let (k_host, v_host, positions) = self.kv.gather_batch(ids, bucket)?;
+        let mut toks = vec![0i32; bucket];
+        for (i, &t) in tokens.iter().enumerate() {
+            toks[i] = t as i32;
+        }
+        let c = &self.config;
+        let kv_dims = [c.layers, bucket, c.kv_heads, c.max_seq, c.head_dim];
+        let tok_buf = self.rt.upload_i32(&toks, &[bucket])?;
+        let pos_buf = self.rt.upload_i32(&positions, &[bucket])?;
+        let k_buf = self.rt.upload_f32(&k_host, &kv_dims)?;
+        let v_buf = self.rt.upload_f32(&v_host, &kv_dims)?;
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&tok_buf, &pos_buf, &k_buf, &v_buf];
+        args.extend(self.weight_bufs.iter());
+        let t0 = std::time::Instant::now();
+        let out = execute_tuple(exe, &args)?;
+        self.exec_seconds += t0.elapsed().as_secs_f64();
+        self.decode_calls += 1;
+        let logits = out[0].to_vec::<f32>()?;
+        let new_k = out[1].to_vec::<f32>()?;
+        let new_v = out[2].to_vec::<f32>()?;
+        let vocab = self.config.vocab;
+        let mut rows = Vec::with_capacity(batch);
+        for (row, &id) in ids.iter().enumerate() {
+            self.kv.append_token(id, &new_k, &new_v, row, bucket)?;
+            rows.push(logits[row * vocab..(row + 1) * vocab].to_vec());
+        }
+        Ok(rows)
+    }
+
+    /// Release a finished request's KV.
+    pub fn release(&mut self, id: u64) {
+        self.kv.release(id);
+    }
+}
+
+/// Greedy sampler.
+pub fn argmax(logits: &[f32]) -> u32 {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &x) in logits.iter().enumerate() {
+        if x > best_v {
+            best_v = x;
+            best = i;
+        }
+    }
+    best as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn engine() -> Option<Engine> {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("artifacts not built; skipping");
+            return None;
+        }
+        Some(Engine::load(&dir, Some(4096)).unwrap())
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let Some(e) = engine() else { return };
+        assert_eq!(e.prefill_bucket(10).unwrap(), 16);
+        assert_eq!(e.prefill_bucket(16).unwrap(), 16);
+        assert_eq!(e.prefill_bucket(17).unwrap(), 32);
+        assert!(e.prefill_bucket(4096).is_err());
+        assert_eq!(e.decode_bucket(3).unwrap(), 4);
+        assert_eq!(e.max_decode_batch(), 32);
+    }
+
+    #[test]
+    fn prefill_decode_generates_deterministically() {
+        let Some(mut e) = engine() else { return };
+        let prompt: Vec<u32> = vec![1, 5, 9, 13, 21];
+        let p = e.prefill(7, &prompt).unwrap();
+        assert_eq!(p.logits.len(), e.config.vocab);
+        let t1 = argmax(&p.logits);
+        let rows = e.decode(&[7], &[t1]).unwrap();
+        assert_eq!(rows.len(), 1);
+        let t2 = argmax(&rows[0]);
+        e.release(7);
+
+        // Re-run: identical tokens (deterministic AOT graphs).
+        let p2 = e.prefill(8, &prompt).unwrap();
+        assert_eq!(argmax(&p2.logits), t1);
+        let rows2 = e.decode(&[8], &[t1]).unwrap();
+        assert_eq!(argmax(&rows2[0]), t2);
+        e.release(8);
+    }
+
+    #[test]
+    fn batched_decode_matches_solo() {
+        let Some(mut e) = engine() else { return };
+        let pa: Vec<u32> = vec![3, 1, 4, 1, 5];
+        let pb: Vec<u32> = vec![2, 7, 1, 8, 2, 8, 1, 8];
+        let la = e.prefill(1, &pa).unwrap();
+        let lb = e.prefill(2, &pb).unwrap();
+        let (ta, tb) = (argmax(&la.logits), argmax(&lb.logits));
+        // batched
+        let rows = e.decode(&[1, 2], &[ta, tb]).unwrap();
+        let batched: Vec<u32> = rows.iter().map(|r| argmax(r)).collect();
+        e.release(1);
+        e.release(2);
+        // solo
+        let la2 = e.prefill(11, &pa).unwrap();
+        let r1 = e.decode(&[11], &[argmax(&la2.logits)]).unwrap();
+        let lb2 = e.prefill(12, &pb).unwrap();
+        let r2 = e.decode(&[12], &[argmax(&lb2.logits)]).unwrap();
+        assert_eq!(batched, vec![argmax(&r1[0]), argmax(&r2[0])]);
+        e.release(11);
+        e.release(12);
+    }
+
+    #[test]
+    fn kv_room_enforced() {
+        let Some(mut e) = engine() else { return };
+        // capacity 4096 tokens, block 16 -> 256 blocks.
+        let prompt: Vec<u32> = (0..100).map(|i| (i % 500) as u32).collect();
+        let mut admitted = 0;
+        for id in 0..100 {
+            match e.prefill(id, &prompt) {
+                Ok(_) => admitted += 1,
+                Err(_) => break,
+            }
+        }
+        assert!(admitted >= 30 && admitted < 50, "admitted {admitted}");
+    }
+}

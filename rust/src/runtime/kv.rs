@@ -1,0 +1,355 @@
+//! Paged KV-cache store (the PagedAttention-style substrate, S12 in
+//! DESIGN.md).
+//!
+//! GPU-resident KV in real deployments is block-allocated to avoid
+//! fragmentation (vLLM); here the store is host-resident f32 (the CPU PJRT
+//! path) but keeps the same structure: fixed-size token blocks in a slab,
+//! per-request block tables, gather into contiguous `[L, B, Hkv, Smax, D]`
+//! batch buffers for the decode executable, scatter of the per-step KV
+//! delta back into the right block.
+//!
+//! Layout within a block: `[layers][2 (k/v)][kv_heads][block_tokens][head_dim]`.
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// Store geometry (matches the TinyLM manifest on the live path).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KvConfig {
+    pub layers: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    pub max_seq: usize,
+    /// Tokens per block (vLLM default is 16).
+    pub block_tokens: usize,
+}
+
+impl KvConfig {
+    /// f32 elements one token occupies (K+V, all layers).
+    pub fn elems_per_token(&self) -> usize {
+        2 * self.layers * self.kv_heads * self.head_dim
+    }
+
+    pub fn elems_per_block(&self) -> usize {
+        self.elems_per_token() * self.block_tokens
+    }
+
+    pub fn blocks_per_request(&self) -> usize {
+        self.max_seq.div_ceil(self.block_tokens)
+    }
+}
+
+#[derive(Debug)]
+struct Entry {
+    blocks: Vec<usize>,
+    len: usize,
+}
+
+/// Block-allocated KV store for a set of in-flight requests.
+#[derive(Debug)]
+pub struct KvStore {
+    pub cfg: KvConfig,
+    pool: Vec<f32>,
+    free: Vec<usize>,
+    entries: HashMap<u64, Entry>,
+    pub capacity_blocks: usize,
+    /// Reusable gather buffers (§Perf L3: zeroing 2x4 MB per decode step
+    /// dominated the gather; the decode kernel masks positions >= length,
+    /// so stale bytes in the padding are never read into results).
+    scratch_k: Vec<f32>,
+    scratch_v: Vec<f32>,
+}
+
+impl KvStore {
+    pub fn new(cfg: KvConfig, capacity_tokens: usize) -> Self {
+        let capacity_blocks = capacity_tokens.div_ceil(cfg.block_tokens);
+        let pool = vec![0.0; capacity_blocks * cfg.elems_per_block()];
+        let free = (0..capacity_blocks).rev().collect();
+        KvStore {
+            cfg,
+            pool,
+            free,
+            entries: HashMap::new(),
+            capacity_blocks,
+            scratch_k: Vec::new(),
+            scratch_v: Vec::new(),
+        }
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_tokens(&self) -> usize {
+        self.entries.values().map(|e| e.len).sum()
+    }
+
+    pub fn len_of(&self, id: u64) -> Option<usize> {
+        self.entries.get(&id).map(|e| e.len)
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.entries.contains_key(&id)
+    }
+
+    /// Can a new request of `tokens` prompt tokens be allocated right now?
+    pub fn has_room(&self, tokens: usize) -> bool {
+        self.free.len() >= tokens.div_ceil(self.cfg.block_tokens)
+    }
+
+    fn ensure_blocks(&mut self, id: u64, len: usize) -> Result<()> {
+        let need = len.div_ceil(self.cfg.block_tokens);
+        let entry = self.entries.get_mut(&id).expect("entry exists");
+        while entry.blocks.len() < need {
+            match self.free.pop() {
+                Some(b) => entry.blocks.push(b),
+                None => bail!("KV pool exhausted (request {id}, len {len})"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Element offset of (layer, k_or_v, head, token) inside the pool for
+    /// request `id`'s token index `t`.
+    fn offset(&self, blocks: &[usize], l: usize, kv: usize, h: usize, t: usize) -> usize {
+        let c = &self.cfg;
+        let block = blocks[t / c.block_tokens];
+        let t_in = t % c.block_tokens;
+        (((block * c.layers + l) * 2 + kv) * c.kv_heads + h) * c.block_tokens * c.head_dim
+            + t_in * c.head_dim
+    }
+
+    /// Install a freshly prefilled request. `k`/`v` are the prefill
+    /// executable's outputs laid out `[L, 1, Hkv, S_bucket, D]`; only the
+    /// first `len` positions are valid.
+    pub fn insert_prefill(&mut self, id: u64, k: &[f32], v: &[f32], bucket: usize,
+                          len: usize) -> Result<()> {
+        let c = self.cfg.clone();
+        if self.entries.contains_key(&id) {
+            bail!("request {id} already in KV store");
+        }
+        self.entries.insert(id, Entry { blocks: vec![], len: 0 });
+        self.ensure_blocks(id, len)?;
+        let blocks = self.entries[&id].blocks.clone();
+        for l in 0..c.layers {
+            for h in 0..c.kv_heads {
+                for t in 0..len {
+                    let src = ((l * c.kv_heads + h) * bucket + t) * c.head_dim;
+                    let dk = self.offset(&blocks, l, 0, h, t);
+                    let dv = self.offset(&blocks, l, 1, h, t);
+                    self.pool[dk..dk + c.head_dim]
+                        .copy_from_slice(&k[src..src + c.head_dim]);
+                    self.pool[dv..dv + c.head_dim]
+                        .copy_from_slice(&v[src..src + c.head_dim]);
+                }
+            }
+        }
+        self.entries.get_mut(&id).unwrap().len = len;
+        Ok(())
+    }
+
+    /// Append one decode step's KV rows. `new_k`/`new_v` are the decode
+    /// executable's outputs `[L, B, Hkv, D]`; `row` selects this request's
+    /// batch row; the token lands at the current length.
+    pub fn append_token(&mut self, id: u64, new_k: &[f32], new_v: &[f32],
+                        row: usize, batch: usize) -> Result<()> {
+        let c = self.cfg.clone();
+        let len = match self.entries.get(&id) {
+            Some(e) => e.len,
+            None => bail!("append to unknown request {id}"),
+        };
+        if len >= c.max_seq {
+            bail!("request {id} exceeded max_seq {}", c.max_seq);
+        }
+        self.ensure_blocks(id, len + 1)?;
+        let blocks = self.entries[&id].blocks.clone();
+        for l in 0..c.layers {
+            for h in 0..c.kv_heads {
+                let src = ((l * batch + row) * c.kv_heads + h) * c.head_dim;
+                let dk = self.offset(&blocks, l, 0, h, len);
+                let dv = self.offset(&blocks, l, 1, h, len);
+                self.pool[dk..dk + c.head_dim]
+                    .copy_from_slice(&new_k[src..src + c.head_dim]);
+                self.pool[dv..dv + c.head_dim]
+                    .copy_from_slice(&new_v[src..src + c.head_dim]);
+            }
+        }
+        self.entries.get_mut(&id).unwrap().len = len + 1;
+        Ok(())
+    }
+
+    /// Gather a decode batch's caches into contiguous buffers shaped
+    /// `[L, bucket, Hkv, max_seq, D]`, plus the per-row positions (current
+    /// lengths). Padding (rows beyond `ids.len()` and positions beyond a
+    /// request's length) carries stale bytes: the decode kernel masks by
+    /// `lengths`, so they are never observable (asserted by the python
+    /// test `test_decode_padding_is_ignored`).
+    pub fn gather_batch(&mut self, ids: &[u64], bucket: usize)
+                        -> Result<(&[f32], &[f32], Vec<i32>)> {
+        let c = self.cfg.clone();
+        assert!(ids.len() <= bucket);
+        let row_elems = c.kv_heads * c.max_seq * c.head_dim;
+        let total = c.layers * bucket * row_elems;
+        if self.scratch_k.len() < total {
+            self.scratch_k.resize(total, 0.0);
+            self.scratch_v.resize(total, 0.0);
+        }
+        let mut positions = vec![0i32; bucket];
+        for (row, &id) in ids.iter().enumerate() {
+            let entry = match self.entries.get(&id) {
+                Some(e) => e,
+                None => bail!("gather of unknown request {id}"),
+            };
+            positions[row] = entry.len as i32;
+            // Hot path (§Perf L3): tokens are contiguous within a block
+            // for fixed (layer, k/v, head), so copy whole block-token runs
+            // instead of per-token head_dim slivers (~block_tokens x fewer
+            // memcpy calls; see EXPERIMENTS.md §Perf for before/after).
+            for l in 0..c.layers {
+                for h in 0..c.kv_heads {
+                    let dst_base = ((l * bucket + row) * c.kv_heads + h)
+                        * c.max_seq
+                        * c.head_dim;
+                    let mut t = 0;
+                    while t < entry.len {
+                        let run = (c.block_tokens - t % c.block_tokens)
+                            .min(entry.len - t);
+                        let n = run * c.head_dim;
+                        let sk = self.offset(&entry.blocks, l, 0, h, t);
+                        let sv = self.offset(&entry.blocks, l, 1, h, t);
+                        let dst = dst_base + t * c.head_dim;
+                        self.scratch_k[dst..dst + n]
+                            .copy_from_slice(&self.pool[sk..sk + n]);
+                        self.scratch_v[dst..dst + n]
+                            .copy_from_slice(&self.pool[sv..sv + n]);
+                        t += run;
+                    }
+                }
+            }
+        }
+        Ok((&self.scratch_k[..total], &self.scratch_v[..total], positions))
+    }
+
+    /// Release a request's blocks.
+    pub fn release(&mut self, id: u64) {
+        if let Some(e) = self.entries.remove(&id) {
+            self.free.extend(e.blocks);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> KvConfig {
+        KvConfig { layers: 2, kv_heads: 2, head_dim: 4, max_seq: 32, block_tokens: 8 }
+    }
+
+    fn fill_pattern(l: usize, h: usize, t: usize, d: usize, tag: f32) -> f32 {
+        tag + (l * 1000 + h * 100 + t * 10 + d) as f32
+    }
+
+    /// Build fake prefill output [L,1,Hkv,bucket,D].
+    fn prefill_kv(c: &KvConfig, bucket: usize, len: usize, tag: f32) -> Vec<f32> {
+        let mut out = vec![0.0; c.layers * c.kv_heads * bucket * c.head_dim];
+        for l in 0..c.layers {
+            for h in 0..c.kv_heads {
+                for t in 0..len {
+                    for d in 0..c.head_dim {
+                        out[((l * c.kv_heads + h) * bucket + t) * c.head_dim + d] =
+                            fill_pattern(l, h, t, d, tag);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn prefill_then_gather_roundtrip() {
+        let c = cfg();
+        let mut store = KvStore::new(c.clone(), 256);
+        let k = prefill_kv(&c, 16, 10, 1.0);
+        let v = prefill_kv(&c, 16, 10, 2.0);
+        store.insert_prefill(7, &k, &v, 16, 10).unwrap();
+        let (gk, gv, pos) = store.gather_batch(&[7], 2).unwrap();
+        assert_eq!(pos, vec![10, 0]);
+        // spot check: layer 1, head 0, token 9, dim 3
+        let (l, h, t, d) = (1, 0, 9, 3);
+        let bucket = 2;
+        let idx = ((l * bucket + 0) * c.kv_heads + h) * c.max_seq * c.head_dim
+            + t * c.head_dim + d;
+        assert_eq!(gk[idx], fill_pattern(l, h, t, d, 1.0));
+        assert_eq!(gv[idx], fill_pattern(l, h, t, d, 2.0));
+        // padded row stays zero
+        let pad = ((0 * bucket + 1) * c.kv_heads) * c.max_seq * c.head_dim;
+        assert_eq!(gk[pad], 0.0);
+    }
+
+    #[test]
+    fn append_token_lands_at_length() {
+        let c = cfg();
+        let mut store = KvStore::new(c.clone(), 256);
+        let k = prefill_kv(&c, 16, 5, 1.0);
+        store.insert_prefill(1, &k, &k, 16, 5).unwrap();
+        // decode delta [L,B,Hkv,D], batch 1, row 0
+        let mut nk = vec![0.0; c.layers * c.kv_heads * c.head_dim];
+        for (i, x) in nk.iter_mut().enumerate() {
+            *x = 500.0 + i as f32;
+        }
+        store.append_token(1, &nk, &nk, 0, 1).unwrap();
+        assert_eq!(store.len_of(1), Some(6));
+        let (gk, _, pos) = store.gather_batch(&[1], 1).unwrap();
+        assert_eq!(pos, vec![6]);
+        // token 5, layer 0, head 1, dim 2 => source index (0*1+0)*2+1)*4+2
+        let src = ((0 * c.kv_heads) + 1) * c.head_dim + 2;
+        let dst = ((0 + 0) * c.kv_heads + 1) * c.max_seq * c.head_dim + 5 * c.head_dim + 2;
+        assert_eq!(gk[dst], nk[src]);
+    }
+
+    #[test]
+    fn blocks_allocated_lazily_and_released() {
+        let c = cfg(); // 8 tokens per block
+        let mut store = KvStore::new(c.clone(), 64); // 8 blocks
+        assert_eq!(store.free_blocks(), 8);
+        let k = prefill_kv(&c, 16, 9, 0.0);
+        store.insert_prefill(1, &k, &k, 16, 9).unwrap(); // 9 tokens -> 2 blocks
+        assert_eq!(store.free_blocks(), 6);
+        store.release(1);
+        assert_eq!(store.free_blocks(), 8);
+        assert!(!store.contains(1));
+    }
+
+    #[test]
+    fn exhaustion_errors() {
+        let c = cfg();
+        let mut store = KvStore::new(c.clone(), 16); // 2 blocks
+        assert!(store.has_room(16));
+        assert!(!store.has_room(17));
+        let k = prefill_kv(&c, 16, 16, 0.0);
+        store.insert_prefill(1, &k, &k, 16, 16).unwrap();
+        let k2 = prefill_kv(&c, 16, 1, 0.0);
+        assert!(store.insert_prefill(2, &k2, &k2, 16, 1).is_err());
+        store.release(2); // cleanup of failed entry is safe
+    }
+
+    #[test]
+    fn max_seq_guard() {
+        let c = cfg();
+        let mut store = KvStore::new(c.clone(), 1024);
+        let k = prefill_kv(&c, 32, 32, 0.0);
+        store.insert_prefill(1, &k, &k, 32, 32).unwrap();
+        let nk = vec![0.0; c.layers * c.kv_heads * c.head_dim];
+        assert!(store.append_token(1, &nk, &nk, 0, 1).is_err());
+    }
+
+    #[test]
+    fn duplicate_insert_rejected() {
+        let c = cfg();
+        let mut store = KvStore::new(c.clone(), 256);
+        let k = prefill_kv(&c, 16, 4, 0.0);
+        store.insert_prefill(1, &k, &k, 16, 4).unwrap();
+        assert!(store.insert_prefill(1, &k, &k, 16, 4).is_err());
+    }
+}

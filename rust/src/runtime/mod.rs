@@ -1,0 +1,23 @@
+//! The PJRT execution runtime — the live serving path.
+//!
+//! Loads the HLO-text artifacts produced by `make artifacts`
+//! (python/compile/aot.py), compiles them on the PJRT CPU client through
+//! the `xla` crate, and executes prefill/decode steps from the Rust hot
+//! loop. Python never runs here.
+//!
+//! * [`pjrt`] — client + executable wrappers (HLO text → compiled exe).
+//! * [`weights`] — `weights.bin`/`manifest.json` loading.
+//! * [`kv`] — the paged KV-cache store (PagedAttention-style block
+//!   allocator; gathers per-request blocks into batch buffers).
+//! * [`engine`] — shape-bucketed prefill/decode execution over the store.
+//! * [`tokenizer`] — byte-level tokenizer matching TinyLM's vocab.
+
+pub mod engine;
+pub mod kv;
+pub mod pjrt;
+pub mod tokenizer;
+pub mod weights;
+
+pub use engine::Engine;
+pub use kv::KvStore;
+pub use tokenizer::Tokenizer;

@@ -1,0 +1,108 @@
+//! PJRT client/executable wrappers.
+//!
+//! Interchange is HLO **text**: `HloModuleProto::from_text_file` reparses
+//! and reassigns instruction ids, sidestepping the 64-bit-id protos that
+//! jax >= 0.5 emits and xla_extension 0.5.1 rejects (see aot.py and
+//! /opt/xla-example/README.md).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A PJRT device runtime (CPU in this image; the same wrapper would take
+/// `PjRtClient::gpu`/`tpu` on real hardware).
+pub struct PjrtRuntime {
+    pub client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(PjrtRuntime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it for this client.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", path.display()))
+    }
+
+    /// Upload an f32 tensor as a device-resident buffer (weights are
+    /// uploaded once at engine startup — never on the request path).
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .context("upload f32 buffer")
+    }
+
+    /// Upload an i32 tensor.
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .context("upload i32 buffer")
+    }
+}
+
+/// Execute with device buffers and decompose the 1-tuple output into its
+/// elements, copied back to host literals.
+pub fn execute_tuple(
+    exe: &xla::PjRtLoadedExecutable,
+    args: &[&xla::PjRtBuffer],
+) -> Result<Vec<xla::Literal>> {
+    let out = exe.execute_b(args).context("execute")?;
+    let mut lit = out[0][0].to_literal_sync().context("fetch output")?;
+    // aot.py lowers with return_tuple=True: outputs arrive as one tuple.
+    lit.decompose_tuple().context("decompose output tuple")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let rt = PjrtRuntime::cpu().unwrap();
+        assert!(rt.platform().to_lowercase().contains("cpu"));
+    }
+
+    #[test]
+    fn loads_and_runs_prefill_artifact() {
+        let dir = artifacts_dir();
+        let path = dir.join("tiny_prefill_s16.hlo.txt");
+        if !path.exists() {
+            eprintln!("artifacts not built; skipping");
+            return;
+        }
+        let rt = PjrtRuntime::cpu().unwrap();
+        let exe = rt.load_hlo_text(&path).unwrap();
+        // Inputs: tokens [1,16] i32, prompt_len i32, then 31 weights.
+        let weights = crate::runtime::weights::load_weights(&dir).unwrap();
+        let mut bufs: Vec<xla::PjRtBuffer> = Vec::new();
+        let tokens: Vec<i32> = (0..16).map(|i| (i % 7) as i32 + 1).collect();
+        bufs.push(rt.upload_i32(&tokens, &[1, 16]).unwrap());
+        bufs.push(rt.upload_i32(&[10], &[]).unwrap());
+        for w in &weights.arrays {
+            bufs.push(rt.upload_f32(&w.data, &w.shape).unwrap());
+        }
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        let out = execute_tuple(&exe, &refs).unwrap();
+        assert_eq!(out.len(), 3); // logits, k_cache, v_cache
+        let logits = out[0].to_vec::<f32>().unwrap();
+        assert_eq!(logits.len(), weights.config.vocab);
+        assert!(logits.iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,0 +1,144 @@
+//! Byte-level tokenizer for the TinyLM live path.
+//!
+//! Vocabulary (512 ids, matching TinyLMConfig.vocab):
+//!   0        PAD
+//!   1        BOS
+//!   2        EOS
+//!   3..=258  raw bytes 0..=255 (byte value + BYTE_BASE)
+//!   259..511 merged digraphs of common ASCII pairs (greedy longest-match),
+//!            trained statically over English text — enough compression to
+//!            exercise multi-token prompts without a learned BPE.
+
+use std::collections::HashMap;
+
+pub const PAD: u32 = 0;
+pub const BOS: u32 = 1;
+pub const EOS: u32 = 2;
+const BYTE_BASE: u32 = 3;
+const PAIR_BASE: u32 = 259;
+
+/// Static digraph table (common English bigrams; order = token id offset).
+const PAIRS: &[&str] = &[
+    "th", "he", "in", "er", "an", "re", "on", "at", "en", "nd", "ti", "es",
+    "or", "te", "of", "ed", "is", "it", "al", "ar", "st", "to", "nt", "ng",
+    "se", "ha", "as", "ou", "io", "le", "ve", "co", "me", "de", "hi", "ri",
+    "ro", "ic", "ne", "ea", "ra", "ce", "li", "ch", "ll", "be", "ma", "si",
+    "om", "ur", "e ", " t", " a", "s ", "d ", "t ", " s", " w", "w ", "o ",
+];
+
+/// Byte-level tokenizer with a static digraph merge table.
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    pair_ids: HashMap<[u8; 2], u32>,
+    pairs_by_id: Vec<[u8; 2]>,
+}
+
+impl Default for Tokenizer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tokenizer {
+    pub fn new() -> Self {
+        let mut pair_ids = HashMap::new();
+        let mut pairs_by_id = Vec::new();
+        for (i, p) in PAIRS.iter().enumerate() {
+            let b = p.as_bytes();
+            let key = [b[0], b[1]];
+            pair_ids.insert(key, PAIR_BASE + i as u32);
+            pairs_by_id.push(key);
+        }
+        Tokenizer { pair_ids, pairs_by_id }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        512
+    }
+
+    /// Encode text: BOS + greedy digraph/byte tokens. No EOS — generation
+    /// appends it.
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let bytes = text.as_bytes();
+        let mut out = vec![BOS];
+        let mut i = 0;
+        while i < bytes.len() {
+            if i + 1 < bytes.len() {
+                if let Some(&id) = self.pair_ids.get(&[bytes[i], bytes[i + 1]]) {
+                    out.push(id);
+                    i += 2;
+                    continue;
+                }
+            }
+            out.push(BYTE_BASE + bytes[i] as u32);
+            i += 1;
+        }
+        out
+    }
+
+    /// Decode ids back to text (PAD/BOS/EOS skipped; invalid ids become
+    /// U+FFFD via lossy UTF-8).
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let mut bytes = Vec::with_capacity(ids.len() * 2);
+        for &id in ids {
+            match id {
+                PAD | BOS | EOS => {}
+                id if id >= PAIR_BASE => {
+                    let idx = (id - PAIR_BASE) as usize;
+                    if idx < self.pairs_by_id.len() {
+                        bytes.extend_from_slice(&self.pairs_by_id[idx]);
+                    }
+                }
+                id if id >= BYTE_BASE => bytes.push((id - BYTE_BASE) as u8),
+                _ => {}
+            }
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = Tokenizer::new();
+        for s in ["the rain in spain", "hello, world!", "EcoServe PaDG 123"] {
+            let ids = t.encode(s);
+            assert_eq!(t.decode(&ids), s);
+            assert_eq!(ids[0], BOS);
+        }
+    }
+
+    #[test]
+    fn roundtrip_unicode() {
+        let t = Tokenizer::new();
+        let s = "naïve — 東京";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn digraphs_compress() {
+        let t = Tokenizer::new();
+        let s = "the theatre there";
+        let ids = t.encode(s);
+        assert!(ids.len() - 1 < s.len(), "{} !< {}", ids.len() - 1, s.len());
+    }
+
+    #[test]
+    fn all_ids_in_vocab() {
+        let t = Tokenizer::new();
+        let ids = t.encode("every token id must be < 512 \u{00e9}\u{4e2d}");
+        assert!(ids.iter().all(|&i| (i as usize) < t.vocab_size()));
+    }
+
+    #[test]
+    fn specials_skipped_in_decode() {
+        let t = Tokenizer::new();
+        let mut ids = t.encode("ok");
+        ids.push(EOS);
+        ids.insert(0, PAD);
+        assert_eq!(t.decode(&ids), "ok");
+    }
+}

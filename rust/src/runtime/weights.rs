@@ -1,0 +1,156 @@
+//! `artifacts/weights.bin` + `manifest.json` loading.
+//!
+//! The manifest's `weights` index is the same `param_spec` order the AOT
+//! executables expect positionally; the Rust engine must feed buffers in
+//! exactly this order after (tokens, prompt_len) / (tokens, positions,
+//! k_cache, v_cache).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// TinyLM architecture constants, read from the manifest (must match
+/// python/compile/model.py's TinyLMConfig).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TinyConfig {
+    pub vocab: usize,
+    pub layers: usize,
+    pub hidden: usize,
+    pub heads: usize,
+    pub kv_heads: usize,
+    pub ffn: usize,
+    pub max_seq: usize,
+    pub head_dim: usize,
+}
+
+/// One weight array, host-resident.
+#[derive(Debug, Clone)]
+pub struct WeightArray {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+/// The full weight bundle plus bucket lists.
+#[derive(Debug)]
+pub struct WeightBundle {
+    pub config: TinyConfig,
+    pub arrays: Vec<WeightArray>,
+    pub prefill_buckets: Vec<usize>,
+    pub decode_buckets: Vec<usize>,
+}
+
+fn usize_field(j: &Json, keys: &[&str]) -> Result<usize> {
+    j.path(keys)
+        .and_then(|v| v.as_usize())
+        .with_context(|| format!("manifest missing {keys:?}"))
+}
+
+/// Load manifest.json + weights.bin from `dir`.
+pub fn load_weights(dir: &Path) -> Result<WeightBundle> {
+    let manifest_text = std::fs::read_to_string(dir.join("manifest.json"))
+        .context("read manifest.json — run `make artifacts` first")?;
+    let manifest = Json::parse(&manifest_text).context("parse manifest.json")?;
+    let config = TinyConfig {
+        vocab: usize_field(&manifest, &["config", "vocab"])?,
+        layers: usize_field(&manifest, &["config", "layers"])?,
+        hidden: usize_field(&manifest, &["config", "hidden"])?,
+        heads: usize_field(&manifest, &["config", "heads"])?,
+        kv_heads: usize_field(&manifest, &["config", "kv_heads"])?,
+        ffn: usize_field(&manifest, &["config", "ffn"])?,
+        max_seq: usize_field(&manifest, &["config", "max_seq"])?,
+        head_dim: usize_field(&manifest, &["config", "head_dim"])?,
+    };
+    let buckets = |key: &str| -> Result<Vec<usize>> {
+        Ok(manifest
+            .get(key)
+            .and_then(|v| v.as_arr())
+            .with_context(|| format!("manifest missing {key}"))?
+            .iter()
+            .filter_map(|x| x.as_usize())
+            .collect())
+    };
+    let prefill_buckets = buckets("prefill_buckets")?;
+    let decode_buckets = buckets("decode_buckets")?;
+
+    let raw = std::fs::read(dir.join("weights.bin")).context("read weights.bin")?;
+    if raw.len() % 4 != 0 {
+        bail!("weights.bin length {} not a multiple of 4", raw.len());
+    }
+    let floats: Vec<f32> = raw
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+
+    let index = manifest
+        .get("weights")
+        .and_then(|v| v.as_arr())
+        .context("manifest missing weights index")?;
+    let mut arrays = Vec::with_capacity(index.len());
+    for entry in index {
+        let name = entry
+            .get("name")
+            .and_then(|v| v.as_str())
+            .context("weight entry missing name")?
+            .to_string();
+        let shape: Vec<usize> = entry
+            .get("shape")
+            .and_then(|v| v.as_arr())
+            .context("weight entry missing shape")?
+            .iter()
+            .filter_map(|x| x.as_usize())
+            .collect();
+        let offset = entry
+            .get("offset")
+            .and_then(|v| v.as_usize())
+            .context("weight entry missing offset")?;
+        let numel: usize = shape.iter().product();
+        if offset + numel > floats.len() {
+            bail!("weight {name} spans past weights.bin ({offset}+{numel})");
+        }
+        arrays.push(WeightArray {
+            name,
+            shape,
+            data: floats[offset..offset + numel].to_vec(),
+        });
+    }
+    Ok(WeightBundle { config, arrays, prefill_buckets, decode_buckets })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_bundle() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("artifacts not built; skipping");
+            return;
+        }
+        let b = load_weights(&dir).unwrap();
+        assert_eq!(b.config.vocab, 512);
+        assert_eq!(b.config.layers, 4);
+        assert_eq!(b.arrays.len(), 1 + 7 * b.config.layers + 2);
+        assert_eq!(b.arrays[0].name, "embed");
+        assert_eq!(b.arrays[0].shape, vec![512, 256]);
+        assert!(!b.prefill_buckets.is_empty());
+        assert!(!b.decode_buckets.is_empty());
+        // Every array's data length matches its shape.
+        for a in &b.arrays {
+            assert_eq!(a.data.len(), a.shape.iter().product::<usize>(), "{}", a.name);
+        }
+    }
+
+    #[test]
+    fn missing_dir_errors_helpfully() {
+        let err = load_weights(Path::new("/nonexistent")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,156 @@
+//! Front-end request loop for the live path: generates a Poisson workload
+//! of text prompts, feeds the [`crate::coordinator::live::LiveCoordinator`],
+//! renders outputs typewriter-style (§3.3's frontend timing model), and
+//! reports TTFT/TPOT/throughput.
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::live::LiveCoordinator;
+use crate::metrics::{summarize, SloSpec, Summary};
+use crate::runtime::tokenizer::Tokenizer;
+use crate::util::rng::Pcg64;
+use crate::workload::Dataset;
+
+/// Live-serving benchmark parameters.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub instances: usize,
+    pub rate: f64,
+    pub duration_secs: f64,
+    pub seed: u64,
+    pub slo: SloSpec,
+    pub kv_capacity_tokens: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        let d = Dataset::tiny();
+        ServeConfig {
+            instances: 2,
+            rate: 3.0,
+            duration_secs: 20.0,
+            seed: 42,
+            slo: SloSpec::new(d.slo_ttft, d.slo_tpot),
+            kv_capacity_tokens: 8192,
+        }
+    }
+}
+
+/// Sample prompt texts the generator cycles through (lengths then trimmed
+/// to the dataset's sampled input length).
+const PROMPT_POOL: &[&str] = &[
+    "the partially disaggregated strategy separates prefill and decode in time",
+    "rolling activation staggers prefill windows so requests always find capacity",
+    "commodity ethernet cannot carry multi-head attention key value traffic",
+    "goodput is throughput that actually meets the latency objectives",
+    "macro instances grow by mitosis and split at the upper bound",
+    "temporal disaggregation preserves locality and avoids cache migration",
+];
+
+/// Outcome of a live serving run.
+pub struct ServeReport {
+    pub summary: Summary,
+    pub wall_secs: f64,
+    pub completed: usize,
+    pub generated_tokens: usize,
+    pub fatal_errors: Vec<String>,
+    /// A few decoded outputs for eyeballing.
+    pub samples: Vec<String>,
+}
+
+impl ServeReport {
+    pub fn render(&self) -> String {
+        let s = &self.summary;
+        let mut out = String::new();
+        out.push_str(&format!(
+            "live serve: {} requests in {:.1}s ({:.2} req/s, {:.1} tok/s)\n",
+            self.completed,
+            self.wall_secs,
+            s.throughput_rps,
+            self.generated_tokens as f64 / self.wall_secs,
+        ));
+        out.push_str(&format!(
+            "  TTFT p50/p90/p99: {:.0}/{:.0}/{:.0} ms\n",
+            s.ttft_p50 * 1e3, s.ttft_p90 * 1e3, s.ttft_p99 * 1e3
+        ));
+        out.push_str(&format!(
+            "  TPOT p50/p90/p99: {:.1}/{:.1}/{:.1} ms\n",
+            s.tpot_p50 * 1e3, s.tpot_p90 * 1e3, s.tpot_p99 * 1e3
+        ));
+        out.push_str(&format!("  SLO attainment: {:.1}%\n", s.attained_frac * 100.0));
+        for sample in &self.samples {
+            out.push_str(&format!("  sample output: {sample:?}\n"));
+        }
+        out
+    }
+}
+
+/// Run the live serving loop: Poisson arrivals of tokenized prompts from
+/// the `tiny` dataset against `n` PJRT-backed instances.
+pub fn serve_poisson(artifacts: &Path, cfg: &ServeConfig) -> Result<ServeReport> {
+    let dataset = Dataset::tiny();
+    let tokenizer = Tokenizer::new();
+    let mut rng = Pcg64::seeded(cfg.seed);
+    let mut coord = LiveCoordinator::start(
+        cfg.instances,
+        artifacts,
+        cfg.slo,
+        cfg.kv_capacity_tokens,
+    )?;
+
+    let start = Instant::now();
+    let mut next_arrival = rng.exponential(cfg.rate);
+    let mut submitted = 0usize;
+    while start.elapsed().as_secs_f64() < cfg.duration_secs {
+        let now = start.elapsed().as_secs_f64();
+        if now >= next_arrival {
+            let text = PROMPT_POOL[(submitted) % PROMPT_POOL.len()];
+            let want = dataset.input.sample(&mut rng).min(48);
+            let mut prompt = tokenizer.encode(text);
+            prompt.truncate(want.max(2));
+            let out_len = dataset.output.sample(&mut rng).min(64).max(2);
+            coord.submit(prompt, out_len);
+            submitted += 1;
+            next_arrival += rng.exponential(cfg.rate);
+        }
+        coord.pump();
+        std::thread::sleep(Duration::from_micros(500));
+    }
+    let drained = coord.drain(Duration::from_secs(300));
+    let wall = start.elapsed().as_secs_f64();
+    coord.shutdown();
+    if !drained {
+        eprintln!("warning: drain timed out with {} in flight", coord.in_flight());
+    }
+
+    let records = coord.collector.completed().to_vec();
+    let generated: usize = records.iter().map(|r| r.output_len).sum();
+    let summary = summarize(&records, &cfg.slo, wall);
+    Ok(ServeReport {
+        summary,
+        wall_secs: wall,
+        completed: records.len(),
+        generated_tokens: generated,
+        fatal_errors: coord.fatal_errors.clone(),
+        samples: vec![],
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_config_defaults_sane() {
+        let c = ServeConfig::default();
+        assert!(c.instances >= 1);
+        assert!(c.rate > 0.0);
+        assert_eq!(c.slo.tpot, 0.5);
+    }
+
+    // The end-to-end live test lives in rust/tests/live_serving.rs (it
+    // needs artifacts and real threads).
+}

@@ -1,0 +1,239 @@
+//! Event queue + simulation loop.
+//!
+//! Events are totally ordered by (time, sequence number) so simultaneous
+//! events fire in insertion order and runs are deterministic bit-for-bit.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::metrics::Collector;
+use crate::workload::Request;
+
+/// Events a serving system reacts to.
+#[derive(Debug, Clone)]
+pub enum Event {
+    /// A request reaches the overall scheduler.
+    Arrival(Request),
+    /// An instance's in-flight batch completes (or a deferred kick).
+    InstanceWake { instance: usize },
+    /// A network transfer completes (FuDG KV migration).
+    TransferDone { transfer: u64 },
+    /// Periodic controller tick (mitosis scaling, Figure 10).
+    ControlTick,
+}
+
+/// Total order wrapper: min-heap on (time, seq).
+#[derive(Debug)]
+struct Entry {
+    time: f64,
+    seq: u64,
+    event: Event,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.time
+            .partial_cmp(&other.time)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// The future-event queue handed to systems so they can schedule work.
+#[derive(Debug, Default)]
+pub struct EventScheduler {
+    heap: BinaryHeap<Reverse<Entry>>,
+    seq: u64,
+    /// Events processed so far (simulator §Perf metric).
+    pub processed: u64,
+}
+
+impl EventScheduler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Schedule `event` at absolute time `time`.
+    pub fn at(&mut self, time: f64, event: Event) {
+        debug_assert!(time.is_finite(), "non-finite event time");
+        self.seq += 1;
+        self.heap.push(Reverse(Entry { time, seq: self.seq, event }));
+    }
+
+    fn pop(&mut self) -> Option<(f64, Event)> {
+        self.heap.pop().map(|Reverse(e)| {
+            self.processed += 1;
+            (e.time, e.event)
+        })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+/// A serving system under simulation: the five schedulers implement this.
+pub trait System {
+    fn on_arrival(&mut self, req: Request, now: f64, sched: &mut EventScheduler,
+                  metrics: &mut Collector);
+    fn on_instance_wake(&mut self, instance: usize, now: f64,
+                        sched: &mut EventScheduler, metrics: &mut Collector);
+    fn on_transfer_done(&mut self, _transfer: u64, _now: f64,
+                        _sched: &mut EventScheduler, _metrics: &mut Collector) {
+    }
+    fn on_control_tick(&mut self, _now: f64, _sched: &mut EventScheduler,
+                       _metrics: &mut Collector) {
+    }
+}
+
+/// Outcome of a simulation run.
+#[derive(Debug)]
+pub struct RunStats {
+    pub sim_time: f64,
+    pub events: u64,
+    pub wall_time: std::time::Duration,
+}
+
+/// Drive `system` over `trace` until all events drain or `horizon` is hit.
+/// Returns run statistics; completed requests land in `metrics`.
+pub fn run(
+    system: &mut dyn System,
+    trace: Vec<Request>,
+    horizon: f64,
+    metrics: &mut Collector,
+) -> RunStats {
+    let wall_start = std::time::Instant::now();
+    let mut sched = EventScheduler::new();
+    for req in trace {
+        sched.at(req.arrival, Event::Arrival(req));
+    }
+    let mut now = 0.0;
+    while let Some((t, event)) = sched.pop() {
+        if t > horizon {
+            break;
+        }
+        debug_assert!(t >= now - 1e-9, "time went backwards: {t} < {now}");
+        now = t;
+        match event {
+            Event::Arrival(req) => {
+                metrics.on_arrival(&req);
+                system.on_arrival(req, now, &mut sched, metrics);
+            }
+            Event::InstanceWake { instance } => {
+                system.on_instance_wake(instance, now, &mut sched, metrics);
+            }
+            Event::TransferDone { transfer } => {
+                system.on_transfer_done(transfer, now, &mut sched, metrics);
+            }
+            Event::ControlTick => {
+                system.on_control_tick(now, &mut sched, metrics);
+            }
+        }
+    }
+    RunStats {
+        sim_time: now,
+        events: sched.processed,
+        wall_time: wall_start.elapsed(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Echo system: completes each request after a fixed service time.
+    struct Echo {
+        service: f64,
+        pending: Vec<(u64, f64)>, // (id, done_at)
+    }
+
+    impl System for Echo {
+        fn on_arrival(&mut self, req: Request, now: f64, sched: &mut EventScheduler,
+                      metrics: &mut Collector) {
+            metrics.on_first_token(req.id, now + self.service);
+            self.pending.push((req.id, now + self.service));
+            sched.at(now + self.service, Event::InstanceWake { instance: 0 });
+        }
+
+        fn on_instance_wake(&mut self, _i: usize, now: f64, _s: &mut EventScheduler,
+                            metrics: &mut Collector) {
+            let done: Vec<u64> = self
+                .pending
+                .iter()
+                .filter(|(_, t)| *t <= now + 1e-12)
+                .map(|(id, _)| *id)
+                .collect();
+            self.pending.retain(|(_, t)| *t > now + 1e-12);
+            for id in done {
+                metrics.on_complete(id, now);
+            }
+        }
+    }
+
+    fn req(id: u64, arrival: f64) -> Request {
+        Request { id, arrival, input_len: 8, output_len: 1 }
+    }
+
+    #[test]
+    fn events_fire_in_time_order() {
+        let mut sched = EventScheduler::new();
+        sched.at(3.0, Event::ControlTick);
+        sched.at(1.0, Event::InstanceWake { instance: 7 });
+        sched.at(2.0, Event::ControlTick);
+        let t1 = sched.pop().unwrap().0;
+        let t2 = sched.pop().unwrap().0;
+        let t3 = sched.pop().unwrap().0;
+        assert_eq!((t1, t2, t3), (1.0, 2.0, 3.0));
+    }
+
+    #[test]
+    fn ties_fire_in_insertion_order() {
+        let mut sched = EventScheduler::new();
+        sched.at(1.0, Event::InstanceWake { instance: 1 });
+        sched.at(1.0, Event::InstanceWake { instance: 2 });
+        match (sched.pop().unwrap().1, sched.pop().unwrap().1) {
+            (Event::InstanceWake { instance: a }, Event::InstanceWake { instance: b }) => {
+                assert_eq!((a, b), (1, 2));
+            }
+            _ => panic!("wrong events"),
+        }
+    }
+
+    #[test]
+    fn run_completes_all_requests() {
+        let mut system = Echo { service: 0.25, pending: vec![] };
+        let trace: Vec<Request> = (0..10).map(|i| req(i, i as f64 * 0.1)).collect();
+        let mut metrics = Collector::new();
+        let stats = run(&mut system, trace, 100.0, &mut metrics);
+        assert_eq!(metrics.completed().len(), 10);
+        assert!(stats.events >= 20);
+        for r in metrics.completed() {
+            assert!((r.ttft() - 0.25).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn horizon_cuts_off() {
+        let mut system = Echo { service: 10.0, pending: vec![] };
+        let trace = vec![req(0, 0.0), req(1, 50.0)];
+        let mut metrics = Collector::new();
+        run(&mut system, trace, 5.0, &mut metrics);
+        assert!(metrics.completed().is_empty());
+        assert_eq!(metrics.in_flight(), 1); // only the first arrived
+    }
+}

@@ -1,0 +1,617 @@
+//! The simulated GPU inference instance: a state machine every scheduler
+//! (EcoServe and the four baselines) drives.
+//!
+//! An instance owns a [`BatchTimer`] (its hardware/parallelism profile), a
+//! KV-token budget, a prefill queue, and a running decode set. Schedulers
+//! decide *what* to run next (`BatchKind`); the instance computes how long
+//! it takes and applies the effects at completion. Phase switches are
+//! counted — temporal disaggregation's whole point is minimizing them.
+
+use std::collections::VecDeque;
+
+use crate::metrics::Collector;
+use crate::perfmodel::{BatchTimer, Phase};
+use crate::workload::Request;
+
+/// Scheduler-visible per-request state.
+#[derive(Debug, Clone)]
+pub struct SimReq {
+    pub req: Request,
+    /// Prompt tokens prefilled so far (== input_len once prefill is done;
+    /// intermediate values only under Sarathi's chunked prefill).
+    pub prefilled: usize,
+    /// Output tokens generated so far.
+    pub generated: usize,
+    /// When the first token was emitted.
+    pub first_token_at: Option<f64>,
+}
+
+impl SimReq {
+    pub fn new(req: Request) -> Self {
+        SimReq { req, prefilled: 0, generated: 0, first_token_at: None }
+    }
+
+    pub fn prefill_done(&self) -> bool {
+        self.prefilled >= self.req.input_len
+    }
+
+    pub fn decode_done(&self) -> bool {
+        self.generated >= self.req.output_len
+    }
+
+    /// Current KV-cache footprint in tokens.
+    pub fn kv_tokens(&self) -> usize {
+        self.prefilled + self.generated
+    }
+
+    /// Context length seen by the next decode step.
+    pub fn context(&self) -> usize {
+        self.req.input_len + self.generated
+    }
+}
+
+/// What the instance is executing right now.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BatchKind {
+    /// Whole-prompt prefills for the given queue positions (separate
+    /// batching). Each request's KV was reserved at enqueue time.
+    Prefill { count: usize },
+    /// One decode iteration over the whole running set.
+    Decode,
+    /// Sarathi hybrid iteration: all running decodes + `chunk` prompt
+    /// tokens of the head-of-queue prefill.
+    Hybrid { chunk: usize },
+}
+
+/// A simulated instance (one model replica over tp×pp GPUs).
+#[derive(Debug)]
+pub struct SimInstance {
+    pub id: usize,
+    pub timer: BatchTimer,
+    /// KV capacity in tokens (from GPU memory minus weights).
+    pub kv_capacity: usize,
+    /// KV tokens currently reserved (admitted prompts + generated tokens).
+    pub kv_used: usize,
+    /// Admitted requests waiting for (or mid-way through) prefill.
+    pub prefill_queue: VecDeque<SimReq>,
+    /// Requests in the decode phase.
+    pub running: Vec<SimReq>,
+    /// In-flight batch: kind + completion time (None = idle).
+    pub in_flight: Option<(BatchKind, f64)>,
+    /// Start time of the in-flight batch (first-decode-token timestamps
+    /// use the iteration *start*, per the paper's §3.3 convention that
+    /// TPOT measurement begins after the phase-switching delay).
+    batch_started: f64,
+    /// Current phase for switch accounting.
+    pub last_phase: Option<Phase>,
+    /// Number of prefill<->decode transitions (paper: PaDG minimizes these).
+    pub switches: u64,
+    /// Total busy seconds (utilization accounting).
+    pub busy_time: f64,
+    /// Max decode batch size (vLLM-style cap).
+    pub max_decode_batch: usize,
+    /// Single-prompt latency of the most recent prefill (PP drain cost
+    /// when the pipeline switches prefill -> decode).
+    last_prefill_single: f64,
+}
+
+impl SimInstance {
+    pub fn new(id: usize, timer: BatchTimer, kv_reserve_frac: f64) -> Self {
+        let kv_capacity = timer.kv_capacity_tokens(kv_reserve_frac);
+        SimInstance {
+            id,
+            timer,
+            kv_capacity,
+            kv_used: 0,
+            prefill_queue: VecDeque::new(),
+            running: Vec::new(),
+            in_flight: None,
+            batch_started: 0.0,
+            last_phase: None,
+            switches: 0,
+            busy_time: 0.0,
+            max_decode_batch: 256,
+            last_prefill_single: 0.0,
+        }
+    }
+
+    pub fn idle(&self) -> bool {
+        self.in_flight.is_none()
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.prefill_queue.is_empty() || !self.running.is_empty()
+    }
+
+    /// KV tokens a request needs end-to-end is unknown (output length is
+    /// stochastic); admission reserves the prompt plus a safety margin of
+    /// expected output tokens.
+    pub fn kv_room_for(&self, input_len: usize, margin: usize) -> bool {
+        self.kv_used + input_len + margin <= self.kv_capacity
+    }
+
+    /// Admit a request into the prefill queue, reserving prompt KV.
+    pub fn admit(&mut self, req: Request) {
+        self.kv_used += req.input_len;
+        self.prefill_queue.push_back(SimReq::new(req));
+    }
+
+    /// Incremental cost of prefilling `len` tokens inside a window:
+    /// under PP, consecutive window prompts pipeline at one per stage-time.
+    pub fn prefill_cost(&self, len: usize) -> f64 {
+        self.timer.prefill_time(&[len]) / self.timer.par.pp as f64
+    }
+
+    /// Sum of predicted prefill durations for queued (unprefilled) work —
+    /// Algorithm 2's `t_total` input.
+    pub fn pending_prefill_time(&self) -> f64 {
+        self.prefill_queue
+            .iter()
+            .map(|r| self.prefill_cost(r.req.input_len - r.prefilled))
+            .sum()
+    }
+
+    /// Cost of one prefill<->decode transition even without PP: kernel-set
+    /// swap, CUDA-graph switch, batch re-formation, allocator churn. Small
+    /// per event but the term the paper's temporal disaggregation
+    /// amortizes ("each phase lasting longer to reduce switching
+    /// overhead", §1) — NoDG systems pay it every alternation.
+    pub const PHASE_SWITCH_OVERHEAD_S: f64 = 3e-3;
+
+    /// Note the phase of the starting batch; returns the switch overhead
+    /// to add to its duration (0 when the phase is unchanged).
+    fn note_phase(&mut self, phase: Phase) -> f64 {
+        if self.last_phase.is_some() && self.last_phase != Some(phase) {
+            self.switches += 1;
+            self.last_phase = Some(phase);
+            Self::PHASE_SWITCH_OVERHEAD_S
+        } else {
+            self.last_phase = Some(phase);
+            0.0
+        }
+    }
+
+    /// Pipeline fill/drain bubble incurred when a PP instance changes
+    /// phase: the pipeline drains the old phase's sub-batches and refills
+    /// with the new phase's — ~(pp−1)/pp of one iteration (paper Figure 4).
+    /// PaDG pays this rarely (long same-phase windows); NoDG constantly.
+    fn pp_switch_bubble(&self, phase: Phase, dur: f64) -> f64 {
+        let pp = self.timer.par.pp;
+        if pp > 1 && self.last_phase.is_some() && self.last_phase != Some(phase) {
+            dur * (pp - 1) as f64 / pp as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Start a prefill batch over the first `count` queued requests.
+    /// Returns the completion time to schedule a wake at.
+    pub fn start_prefill(&mut self, count: usize, now: f64) -> f64 {
+        debug_assert!(self.idle());
+        let count = count.min(self.prefill_queue.len());
+        debug_assert!(count > 0);
+        let lens: Vec<usize> = self
+            .prefill_queue
+            .iter()
+            .take(count)
+            .map(|r| r.req.input_len - r.prefilled)
+            .collect();
+        let dur = {
+            let base = self.timer.prefill_time(&lens);
+            let pp = self.timer.par.pp;
+            if pp > 1 {
+                // Consecutive same-phase prefills stream through the
+                // pipeline at one prompt per stage-time (the uniform
+                // microbatches of a PaDG prefill window — paper Figure 4's
+                // bubble-free case); a phase switch pays the pipeline fill.
+                if self.last_phase == Some(Phase::Prefill) {
+                    base / pp as f64
+                } else {
+                    let fill = self.timer.prefill_time(&lens[..1])
+                        * (pp - 1) as f64 / pp as f64;
+                    base / pp as f64 + fill
+                }
+            } else {
+                base
+            }
+        };
+        self.last_prefill_single = self.timer.prefill_time(&lens[..1])
+            / self.timer.par.pp as f64;
+        let dur = dur + self.note_phase(Phase::Prefill);
+        self.busy_time += dur;
+        let done = now + dur;
+        self.batch_started = now;
+        self.in_flight = Some((BatchKind::Prefill { count }, done));
+        done
+    }
+
+    /// Start one decode iteration over the running set (capped).
+    pub fn start_decode(&mut self, now: f64) -> f64 {
+        debug_assert!(self.idle());
+        debug_assert!(!self.running.is_empty());
+        let batch = self.running.len().min(self.max_decode_batch);
+        let ctx: usize = self.running.iter().take(batch).map(|r| r.context()).sum();
+        // Under PP the running set is split into pp interleaved sub-batches
+        // that keep every stage busy; each request sees one token per
+        // sub-batch full-model latency (see perfmodel::roofline on why a
+        // single batch gets no PP latency speedup).
+        let pp = self.timer.par.pp;
+        let dur = {
+            let (b, c) = if pp > 1 { (batch.div_ceil(pp), ctx.div_ceil(pp)) } else { (batch, ctx) };
+            let base = self.timer.decode_iter_time(b, c);
+            // Switching prefill -> decode drains the prefill microbatches
+            // still in the pipe (one per stage) before decode can refill:
+            // a prefill-scale bubble, not a decode-scale one (Figure 4).
+            let drain = if pp > 1 && self.last_phase == Some(Phase::Prefill) {
+                self.last_prefill_single * (pp - 1) as f64
+            } else {
+                0.0
+            };
+            base + self.pp_switch_bubble(Phase::Decode, base) + drain
+        };
+        let dur = dur + self.note_phase(Phase::Decode);
+        self.busy_time += dur;
+        let done = now + dur;
+        self.batch_started = now;
+        self.in_flight = Some((BatchKind::Decode, done));
+        done
+    }
+
+    /// Start a Sarathi hybrid iteration: decodes + up to `budget` prompt
+    /// tokens from the head of the prefill queue.
+    pub fn start_hybrid(&mut self, budget: usize, now: f64) -> f64 {
+        debug_assert!(self.idle());
+        let decode_batch = self.running.len().min(self.max_decode_batch);
+        let decode_ctx: usize =
+            self.running.iter().take(decode_batch).map(|r| r.context()).sum();
+        let (chunk, chunk_ctx) = match self.prefill_queue.front() {
+            Some(head) => {
+                let remaining = head.req.input_len - head.prefilled;
+                let chunk = remaining.min(budget);
+                // Attention context for this chunk spans already-prefilled
+                // tokens (re-read from KV — the chunked-prefill overhead).
+                (chunk, head.prefilled + chunk)
+            }
+            None => (0, 0),
+        };
+        debug_assert!(decode_batch > 0 || chunk > 0);
+        let dur = self
+            .timer
+            .hybrid_iter_time(decode_batch, decode_ctx, chunk, chunk_ctx);
+        // Hybrid batching blurs phases; count a switch only from pure
+        // states. Treat hybrid as decode-phase for switch accounting.
+        let dur = dur + self.note_phase(Phase::Decode);
+        self.busy_time += dur;
+        let done = now + dur;
+        self.batch_started = now;
+        self.in_flight = Some((BatchKind::Hybrid { chunk }, done));
+        done
+    }
+
+    /// Apply the in-flight batch's effects at its completion time.
+    /// Returns requests that finished decoding (already removed, KV freed).
+    pub fn complete_batch(&mut self, now: f64, metrics: &mut Collector) -> Vec<SimReq> {
+        let (kind, done_at) = self.in_flight.take().expect("no batch in flight");
+        debug_assert!((done_at - now).abs() < 1e-6, "wake at wrong time");
+        let mut finished = Vec::new();
+        match kind {
+            BatchKind::Prefill { count } => {
+                for _ in 0..count {
+                    let r = self.prefill_queue.pop_front().expect("queued prefill");
+                    self.finish_prefill(r, now, metrics, &mut finished);
+                }
+            }
+            BatchKind::Decode => {
+                self.apply_decode_step(now, metrics, &mut finished);
+            }
+            BatchKind::Hybrid { chunk } => {
+                self.apply_decode_step(now, metrics, &mut finished);
+                if chunk > 0 {
+                    let head_done = {
+                        let head = self.prefill_queue.front_mut().expect("chunked head");
+                        head.prefilled += chunk;
+                        head.prefill_done()
+                    };
+                    if head_done {
+                        let r = self.prefill_queue.pop_front().unwrap();
+                        self.finish_prefill(r, now, metrics, &mut finished);
+                    }
+                }
+            }
+        }
+        finished
+    }
+
+    /// A request's prompt finished prefilling. Its first token exists now,
+    /// but per §3.3 the *reported* first-token timestamp is deferred to the
+    /// start of its first decode iteration — the gap is the phase-switching
+    /// wait, charged to TTFT, with TPOT measured after it. (Requests whose
+    /// entire output is the prefill token complete immediately.)
+    fn finish_prefill(&mut self, mut r: SimReq, now: f64, metrics: &mut Collector,
+                      finished: &mut Vec<SimReq>) {
+        r.prefilled = r.req.input_len;
+        r.generated = 1; // the prefill's token; rendered at decode start
+        self.kv_used += 1;
+        if r.decode_done() {
+            r.first_token_at = Some(now);
+            metrics.on_first_token(r.req.id, now);
+            metrics.on_complete(r.req.id, now);
+            self.kv_used -= r.kv_tokens();
+            finished.push(r);
+        } else {
+            self.running.push(r); // first_token_at stays None until decode
+        }
+    }
+
+    fn apply_decode_step(&mut self, now: f64, metrics: &mut Collector,
+                         finished: &mut Vec<SimReq>) {
+        let started = self.batch_started;
+        let batch = self.running.len().min(self.max_decode_batch);
+        let mut i = 0;
+        let mut seen = 0;
+        while i < self.running.len() && seen < batch {
+            seen += 1;
+            let r = &mut self.running[i];
+            if r.first_token_at.is_none() {
+                // §3.3: TTFT_reported ends (and the TPOT clock starts) when
+                // the request's decode phase begins.
+                r.first_token_at = Some(started);
+                metrics.on_first_token(r.req.id, started);
+            }
+            r.generated += 1;
+            self.kv_used += 1;
+            metrics.on_token(r.req.id, now);
+            if r.decode_done() {
+                metrics.on_complete(r.req.id, now);
+                let r = self.running.swap_remove(i);
+                self.kv_used -= r.kv_tokens();
+                finished.push(r);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Saved-TPOT slack of the running decodes (Algorithm 2, constraint 2):
+    /// per request `L·SLO_tpot − (now − first_token_time)`; returns the
+    /// mean, or +inf when nothing is decoding.
+    /// (Requests still waiting for their decode phase to begin have no
+    /// TPOT clock yet — §3.3 — and do not constrain the slack.)
+    pub fn mean_saved_tpot(&self, now: f64, slo_tpot: f64) -> f64 {
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        for r in &self.running {
+            if let Some(first) = r.first_token_at {
+                sum += r.generated as f64 * slo_tpot - (now - first);
+                n += 1;
+            }
+        }
+        if n == 0 {
+            f64::INFINITY
+        } else {
+            sum / n as f64
+        }
+    }
+
+    /// Minimum saved-TPOT slack across running decodes. Gating prefill
+    /// windows on the *minimum* (rather than the paper's mean) guarantees
+    /// no individual request is driven past its TPOT SLO by an absorbed
+    /// window — see DESIGN.md §8 for why we tighten this.
+    pub fn min_saved_tpot(&self, now: f64, slo_tpot: f64) -> f64 {
+        self.running
+            .iter()
+            .filter_map(|r| {
+                r.first_token_at
+                    .map(|first| r.generated as f64 * slo_tpot - (now - first))
+            })
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Earliest arrival among requests that have not yet reached their
+    /// decode phase (queued prefills + prefilled-but-waiting). Constraint
+    /// 1 uses this to bound the prefill window by its members' TTFT
+    /// budgets.
+    pub fn oldest_unserved_arrival(&self) -> Option<f64> {
+        let q = self.prefill_queue.iter().map(|r| r.req.arrival);
+        let w = self
+            .running
+            .iter()
+            .filter(|r| r.first_token_at.is_none())
+            .map(|r| r.req.arrival);
+        q.chain(w).fold(None, |acc, a| match acc {
+            None => Some(a),
+            Some(b) => Some(b.min(a)),
+        })
+    }
+
+    /// Predicted duration of the next decode iteration if `extra` requests
+    /// with `extra_ctx` total context joined the running set — Algorithm
+    /// 2's capacity guard against over-batching past the TPOT SLO.
+    pub fn predicted_decode_iter(&self, extra: usize, extra_ctx: usize) -> f64 {
+        let batch = (self.running.len() + self.prefill_queue.len() + extra)
+            .min(self.max_decode_batch);
+        let ctx: usize = self.running.iter().map(|r| r.context()).sum::<usize>()
+            + self.prefill_queue.iter().map(|r| r.req.input_len).sum::<usize>()
+            + extra_ctx;
+        let pp = self.timer.par.pp;
+        if pp > 1 {
+            self.timer
+                .decode_iter_time(batch.div_ceil(pp), ctx.div_ceil(pp))
+        } else {
+            self.timer.decode_iter_time(batch, ctx)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::interconnect::LinkSpec;
+    use crate::perfmodel::parallelism::ParallelCfg;
+    use crate::perfmodel::{GpuSpec, ModelSpec};
+
+    fn inst() -> SimInstance {
+        let timer = BatchTimer::new(
+            ModelSpec::llama_30b(),
+            GpuSpec::l20(),
+            ParallelCfg::tp_only(4, LinkSpec::pcie4()),
+        );
+        SimInstance::new(0, timer, 0.1)
+    }
+
+    fn req(id: u64, input: usize, output: usize) -> Request {
+        Request { id, arrival: 0.0, input_len: input, output_len: output }
+    }
+
+    #[test]
+    fn prefill_emits_first_token_and_moves_to_running() {
+        let mut ins = inst();
+        let mut m = Collector::new();
+        let r = req(1, 100, 10);
+        m.on_arrival(&r);
+        ins.admit(r);
+        assert_eq!(ins.kv_used, 100);
+        let done = ins.start_prefill(1, 0.0);
+        assert!(done > 0.0);
+        let finished = ins.complete_batch(done, &mut m);
+        assert!(finished.is_empty());
+        assert_eq!(ins.running.len(), 1);
+        assert_eq!(ins.kv_used, 101);
+        assert_eq!(m.in_flight(), 1);
+    }
+
+    #[test]
+    fn decode_iterations_finish_request_and_free_kv() {
+        let mut ins = inst();
+        let mut m = Collector::new();
+        let r = req(1, 50, 3);
+        m.on_arrival(&r);
+        ins.admit(r);
+        let t = ins.complete_and_wake(&mut m, 0.0);
+        // run decode until done
+        let mut now = t;
+        while !ins.running.is_empty() {
+            let done = ins.start_decode(now);
+            ins.complete_batch(done, &mut m);
+            now = done;
+        }
+        assert_eq!(ins.kv_used, 0);
+        let rec = &m.completed()[0];
+        assert_eq!(rec.output_len, 3);
+        assert!(rec.tpot() > 0.0);
+    }
+
+    impl SimInstance {
+        /// test helper: run the admitted prefill to completion
+        fn complete_and_wake(&mut self, m: &mut Collector, now: f64) -> f64 {
+            let done = self.start_prefill(1, now);
+            self.complete_batch(done, m);
+            done
+        }
+    }
+
+    #[test]
+    fn single_output_request_completes_at_prefill() {
+        let mut ins = inst();
+        let mut m = Collector::new();
+        let r = req(9, 40, 1);
+        m.on_arrival(&r);
+        ins.admit(r);
+        let done = ins.start_prefill(1, 0.0);
+        let fin = ins.complete_batch(done, &mut m);
+        assert_eq!(fin.len(), 1);
+        assert_eq!(ins.kv_used, 0);
+        assert!(ins.running.is_empty());
+    }
+
+    #[test]
+    fn hybrid_chunks_prefill_progressively() {
+        let mut ins = inst();
+        let mut m = Collector::new();
+        let r = req(2, 1000, 5);
+        m.on_arrival(&r);
+        ins.admit(r);
+        // 512-token chunks: two iterations to finish prefill
+        let d1 = ins.start_hybrid(512, 0.0);
+        ins.complete_batch(d1, &mut m);
+        assert_eq!(ins.prefill_queue.front().unwrap().prefilled, 512);
+        assert!(ins.running.is_empty());
+        let d2 = ins.start_hybrid(512, d1);
+        ins.complete_batch(d2, &mut m);
+        assert!(ins.prefill_queue.is_empty());
+        assert_eq!(ins.running.len(), 1);
+        assert_eq!(m.in_flight(), 1);
+    }
+
+    #[test]
+    fn phase_switches_counted() {
+        let mut ins = inst();
+        let mut m = Collector::new();
+        for i in 0..2 {
+            let r = req(i, 100, 4);
+            m.on_arrival(&r);
+            ins.admit(r);
+        }
+        let d = ins.start_prefill(2, 0.0);
+        ins.complete_batch(d, &mut m);
+        assert_eq!(ins.switches, 0);
+        let d2 = ins.start_decode(d);
+        ins.complete_batch(d2, &mut m);
+        assert_eq!(ins.switches, 1); // prefill -> decode
+        // admit another and go back to prefill
+        let r = req(7, 60, 2);
+        m.on_arrival(&r);
+        ins.admit(r);
+        let d3 = ins.start_prefill(1, d2);
+        ins.complete_batch(d3, &mut m);
+        assert_eq!(ins.switches, 2);
+    }
+
+    #[test]
+    fn saved_tpot_slack_accumulates() {
+        let mut ins = inst();
+        let mut m = Collector::new();
+        let r = req(3, 100, 50);
+        m.on_arrival(&r);
+        ins.admit(r);
+        let d = ins.start_prefill(1, 0.0);
+        ins.complete_batch(d, &mut m);
+        // §3.3: the TPOT clock has not started yet — slack is unbounded
+        // until the first decode iteration begins.
+        assert!(ins.mean_saved_tpot(d, 0.1).is_infinite());
+        // Decode a few fast iterations: slack grows if iter < slo. Context
+        // grows by one token per iteration (101, 102, ... at start). The
+        // clock starts at the *start* of the first decode iteration (= d).
+        let mut now = d;
+        let mut iter_sum = 0.0;
+        for i in 0..5 {
+            iter_sum += ins.timer.decode_iter_time(1, 101 + i);
+            let done = ins.start_decode(now);
+            ins.complete_batch(done, &mut m);
+            now = done;
+        }
+        // The first decode iteration also pays the phase-switch overhead.
+        let expected = 6.0 * 0.1 - iter_sum - SimInstance::PHASE_SWITCH_OVERHEAD_S;
+        assert!(
+            (ins.mean_saved_tpot(now, 0.1) - expected).abs() < 1e-6,
+            "{} vs {expected}",
+            ins.mean_saved_tpot(now, 0.1)
+        );
+    }
+
+    #[test]
+    fn empty_instance_has_infinite_slack() {
+        let ins = inst();
+        assert!(ins.mean_saved_tpot(0.0, 0.1).is_infinite());
+    }
+
+    #[test]
+    fn kv_room_respects_capacity() {
+        let mut ins = inst();
+        assert!(ins.kv_room_for(1000, 0));
+        ins.kv_used = ins.kv_capacity - 500;
+        assert!(ins.kv_room_for(400, 0));
+        assert!(!ins.kv_room_for(400, 200));
+        assert!(!ins.kv_room_for(600, 0));
+    }
+}

@@ -1,0 +1,22 @@
+//! Discrete-event cluster simulator.
+//!
+//! The paper evaluates on 32 L20 / 16 A800 GPUs we do not have; every
+//! Figure-8/9/10/11 experiment instead runs here, driven by the analytical
+//! [`crate::perfmodel`] (DESIGN.md §2 explains why this substitution
+//! preserves the comparison's shape: all five systems share one cost
+//! model, and scheduling policy — the paper's contribution — is what
+//! differs between them).
+//!
+//! Architecture: a binary-heap event [`engine`], a GPU-instance state
+//! machine ([`instance::SimInstance`]) shared by every scheduler, and a
+//! FIFO-contention [`network`] used by the FuDG baselines for KV-cache
+//! migration. Schedulers implement [`System`] and plug into
+//! [`engine::run`].
+
+pub mod engine;
+pub mod instance;
+pub mod network;
+
+pub use engine::{run, Event, EventScheduler, System};
+pub use instance::{BatchKind, SimInstance, SimReq};
+pub use network::{Network, TransferId};

@@ -1,0 +1,157 @@
+//! Link-contention network model for FuDG KV-cache migration.
+//!
+//! Each named link (a node NIC, a PCIe fabric, an NVLink domain) serializes
+//! transfers FIFO: a transfer starts at `max(now, link.busy_until)` and
+//! occupies the link for `latency + bytes/bandwidth`. This is the
+//! first-order contention model behind the paper's Table 3 argument — when
+//! offered KV traffic exceeds link bandwidth, transfer queues grow without
+//! bound and decode admission stalls.
+
+use std::collections::HashMap;
+
+use crate::perfmodel::interconnect::LinkSpec;
+
+pub type TransferId = u64;
+
+/// One queued/in-flight transfer.
+#[derive(Debug, Clone)]
+pub struct Transfer {
+    pub id: TransferId,
+    pub bytes: f64,
+    /// Scheduler-defined payload (request id, destination instance, ...).
+    pub tag: u64,
+    pub start: f64,
+    pub done: f64,
+}
+
+/// A set of FIFO links indexed by id.
+#[derive(Debug, Default)]
+pub struct Network {
+    links: Vec<Link>,
+    next_id: TransferId,
+    in_flight: HashMap<TransferId, Transfer>,
+    /// Total bytes ever enqueued, per link (Table-3 style accounting).
+    pub bytes_enqueued: Vec<f64>,
+}
+
+#[derive(Debug)]
+struct Link {
+    spec: LinkSpec,
+    busy_until: f64,
+}
+
+impl Network {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a link; returns its id.
+    pub fn add_link(&mut self, spec: LinkSpec) -> usize {
+        self.links.push(Link { spec, busy_until: 0.0 });
+        self.bytes_enqueued.push(0.0);
+        self.links.len() - 1
+    }
+
+    pub fn link_count(&self) -> usize {
+        self.links.len()
+    }
+
+    /// Enqueue a transfer of `bytes` on `link` at time `now`; the returned
+    /// transfer carries its completion time — schedule a TransferDone there.
+    pub fn enqueue(&mut self, link: usize, bytes: f64, tag: u64, now: f64) -> Transfer {
+        let l = &mut self.links[link];
+        let start = now.max(l.busy_until);
+        let done = start + l.spec.latency + bytes / l.spec.bandwidth;
+        l.busy_until = done;
+        self.bytes_enqueued[link] += bytes;
+        self.next_id += 1;
+        let t = Transfer { id: self.next_id, bytes, tag, start, done };
+        self.in_flight.insert(t.id, t.clone());
+        t
+    }
+
+    /// Enqueue a two-hop transfer (MoonCake: prefill node -> pool -> decode
+    /// node). The second hop starts when the first completes.
+    pub fn enqueue_two_hop(&mut self, first: usize, second: usize, bytes: f64,
+                           tag: u64, now: f64) -> Transfer {
+        let hop1 = self.enqueue(first, bytes, tag, now);
+        // remove hop1 from in_flight; only the final hop is awaited
+        self.in_flight.remove(&hop1.id);
+        let l = &mut self.links[second];
+        let start = hop1.done.max(l.busy_until);
+        let done = start + l.spec.latency + bytes / l.spec.bandwidth;
+        l.busy_until = done;
+        self.bytes_enqueued[second] += bytes;
+        self.next_id += 1;
+        let t = Transfer { id: self.next_id, bytes, tag, start, done };
+        self.in_flight.insert(t.id, t.clone());
+        t
+    }
+
+    /// Complete (and remove) a transfer by id.
+    pub fn complete(&mut self, id: TransferId) -> Option<Transfer> {
+        self.in_flight.remove(&id)
+    }
+
+    /// Current queueing delay on a link: how far its FIFO extends past now.
+    pub fn backlog(&self, link: usize, now: f64) -> f64 {
+        (self.links[link].busy_until - now).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_serializes_transfers() {
+        let mut net = Network::new();
+        let l = net.add_link(LinkSpec::eth_10g()); // 1.1 GB/s
+        let t1 = net.enqueue(l, 1.1e9, 0, 0.0);
+        let t2 = net.enqueue(l, 1.1e9, 1, 0.0);
+        assert!((t1.done - 1.0).abs() < 0.01);
+        assert!((t2.start - t1.done).abs() < 1e-9, "t2 waits for t1");
+        assert!((t2.done - 2.0).abs() < 0.02);
+    }
+
+    #[test]
+    fn idle_link_starts_immediately() {
+        let mut net = Network::new();
+        let l = net.add_link(LinkSpec::roce_25g());
+        let t = net.enqueue(l, 2.9e9, 0, 5.0);
+        assert!((t.start - 5.0).abs() < 1e-9);
+        assert!((t.done - 6.0).abs() < 0.01);
+        assert!(net.backlog(l, 5.5) > 0.4);
+        assert_eq!(net.backlog(l, 10.0), 0.0);
+    }
+
+    #[test]
+    fn two_hop_chains() {
+        let mut net = Network::new();
+        let a = net.add_link(LinkSpec::eth_10g());
+        let b = net.add_link(LinkSpec::eth_10g());
+        let t = net.enqueue_two_hop(a, b, 1.1e9, 7, 0.0);
+        // hop1 ~1s, hop2 ~1s
+        assert!((t.done - 2.0).abs() < 0.02, "done={}", t.done);
+        assert_eq!(t.tag, 7);
+    }
+
+    #[test]
+    fn independent_links_do_not_contend() {
+        let mut net = Network::new();
+        let a = net.add_link(LinkSpec::eth_10g());
+        let b = net.add_link(LinkSpec::eth_10g());
+        let t1 = net.enqueue(a, 1.1e9, 0, 0.0);
+        let t2 = net.enqueue(b, 1.1e9, 1, 0.0);
+        assert!((t1.done - t2.done).abs() < 1e-9);
+    }
+
+    #[test]
+    fn complete_removes() {
+        let mut net = Network::new();
+        let l = net.add_link(LinkSpec::pcie4());
+        let t = net.enqueue(l, 1e6, 3, 0.0);
+        assert!(net.complete(t.id).is_some());
+        assert!(net.complete(t.id).is_none());
+    }
+}

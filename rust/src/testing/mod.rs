@@ -1,0 +1,5 @@
+//! Test-support code compiled into the crate (so unit tests, integration
+//! tests, and benches can share it). The property-test harness substitutes
+//! for `proptest`, which is unavailable in the offline image.
+
+pub mod prop;

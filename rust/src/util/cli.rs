@@ -1,0 +1,116 @@
+//! Tiny CLI argument parser (substrate for `clap`, unavailable offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and trailing
+//! positional arguments. The launcher (`rust/src/main.rs`) and the examples
+//! use it for subcommand-style interfaces.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: positionals + `--key value` options.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment (skips argv[0]).
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// First positional (the subcommand), if any.
+    pub fn command(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn positionals_and_options() {
+        let a = parse("simulate trailing --system ecoserve --rate 3.5 --verbose");
+        assert_eq!(a.command(), Some("simulate"));
+        assert_eq!(a.get("system"), Some("ecoserve"));
+        assert_eq!(a.get_f64("rate", 0.0), 3.5);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["simulate", "trailing"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("--n=4 --name=macro-1");
+        assert_eq!(a.get_usize("n", 0), 4);
+        assert_eq!(a.get("name"), Some("macro-1"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("run --dry-run");
+        assert!(a.has_flag("dry-run"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("");
+        assert_eq!(a.get_or("x", "d"), "d");
+        assert_eq!(a.get_u64("seed", 42), 42);
+        assert!(a.command().is_none());
+    }
+}

@@ -1,0 +1,177 @@
+//! Thread/actor helpers (substrate for `tokio`/Ray, unavailable offline).
+//!
+//! The live serving path runs each inference instance as an OS-thread actor
+//! with an mpsc mailbox — the same master/slave control structure the paper
+//! builds with Ray RPC + ZeroMQ. The macro-instance scheduler owns handles
+//! to its instances' mailboxes and receives status updates on a shared
+//! channel; the overall scheduler moves those handles between macro
+//! schedulers during mitosis migration.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+/// A spawned actor: a worker thread plus its command mailbox.
+pub struct Actor<Cmd> {
+    pub name: String,
+    tx: Sender<Cmd>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl<Cmd: Send + 'static> Actor<Cmd> {
+    /// Spawn an actor. `body` receives the mailbox receiver and runs until
+    /// it returns (usually on a Shutdown command or channel disconnect).
+    pub fn spawn<F>(name: impl Into<String>, body: F) -> Self
+    where
+        F: FnOnce(Receiver<Cmd>) + Send + 'static,
+    {
+        let name = name.into();
+        let (tx, rx) = channel();
+        let handle = std::thread::Builder::new()
+            .name(name.clone())
+            .spawn(move || body(rx))
+            .expect("spawn actor thread");
+        Actor {
+            name,
+            tx,
+            handle: Some(handle),
+        }
+    }
+
+    /// Send a command; returns false if the actor is gone.
+    pub fn send(&self, cmd: Cmd) -> bool {
+        self.tx.send(cmd).is_ok()
+    }
+
+    /// A clonable sender for this actor's mailbox.
+    pub fn sender(&self) -> Sender<Cmd> {
+        self.tx.clone()
+    }
+
+    /// Wait for the actor thread to finish (consumes the join handle).
+    pub fn join(&mut self) {
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Fan-in helper: one receiver, many senders — instance status updates flow
+/// into the macro-instance scheduler through one of these.
+pub struct Inbox<T> {
+    pub tx: Sender<T>,
+    pub rx: Receiver<T>,
+}
+
+impl<T> Inbox<T> {
+    pub fn new() -> Self {
+        let (tx, rx) = channel();
+        Inbox { tx, rx }
+    }
+
+    /// Drain everything currently queued without blocking.
+    pub fn drain(&self) -> Vec<T> {
+        let mut out = Vec::new();
+        while let Ok(item) = self.rx.try_recv() {
+            out.push(item);
+        }
+        out
+    }
+}
+
+impl<T> Default for Inbox<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Run `f` over `items` on up to `workers` scoped threads, preserving input
+/// order in the output. Used by the benchmark harness to sweep request
+/// rates / systems in parallel.
+pub fn parallel_map<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n);
+    let mut results: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let jobs: Vec<(usize, T)> = items.into_iter().enumerate().collect();
+    let queue = std::sync::Mutex::new(jobs);
+    let results_mx = std::sync::Mutex::new(&mut results);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let job = queue.lock().unwrap().pop();
+                match job {
+                    Some((i, item)) => {
+                        let r = f(item);
+                        results_mx.lock().unwrap()[i] = Some(r);
+                    }
+                    None => break,
+                }
+            });
+        }
+    });
+    results.into_iter().map(|r| r.expect("worker completed")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    enum Cmd {
+        Add(usize),
+        Stop,
+    }
+
+    #[test]
+    fn actor_processes_commands() {
+        let total = Arc::new(AtomicUsize::new(0));
+        let t2 = total.clone();
+        let mut actor = Actor::spawn("adder", move |rx| {
+            for cmd in rx {
+                match cmd {
+                    Cmd::Add(x) => {
+                        t2.fetch_add(x, Ordering::SeqCst);
+                    }
+                    Cmd::Stop => break,
+                }
+            }
+        });
+        for i in 1..=10 {
+            assert!(actor.send(Cmd::Add(i)));
+        }
+        actor.send(Cmd::Stop);
+        actor.join();
+        assert_eq!(total.load(Ordering::SeqCst), 55);
+    }
+
+    #[test]
+    fn inbox_drains() {
+        let inbox = Inbox::new();
+        for i in 0..5 {
+            inbox.tx.send(i).unwrap();
+        }
+        assert_eq!(inbox.drain(), vec![0, 1, 2, 3, 4]);
+        assert!(inbox.drain().is_empty());
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let xs: Vec<usize> = (0..100).collect();
+        let ys = parallel_map(xs, 8, |x| x * x);
+        assert_eq!(ys, (0..100).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_empty() {
+        let ys: Vec<usize> = parallel_map(Vec::<usize>::new(), 4, |x| x);
+        assert!(ys.is_empty());
+    }
+}

@@ -1,0 +1,210 @@
+//! Synthetic length-distribution models fitted to the paper's Table 4.
+//!
+//! | Dataset     | In avg | In med | Out avg | Out med | TTFT SLO | TPOT SLO |
+//! |-------------|--------|--------|---------|---------|----------|----------|
+//! | Alpaca-gpt4 | 20.63  | 17.00  | 163.80  | 119.00  | 1 s      | 100 ms   |
+//! | ShareGPT    | 343.76 | 148.00 | 237.20  | 152.00  | 5 s      | 100 ms   |
+//! | LongBench   | 2686.89| 2736.50| 101.78  | 19.00   | 15 s     | 100 ms   |
+//!
+//! Right-skewed columns (mean > median) are log-normal with mu = ln(median)
+//! and sigma = sqrt(2·ln(mean/median)) — the moment-matching fit. LongBench
+//! inputs have mean < median (left-skewed by the paper's truncation at 4096)
+//! and use a clamped normal instead. All draws are truncated to the paper's
+//! [1, 4096] input / [1, 2048] output ranges.
+
+use crate::util::rng::Pcg64;
+
+/// A fitted marginal distribution over token lengths.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LengthModel {
+    /// Log-normal with underlying (mu, sigma), clamped to [min, max].
+    LogNormal { mu: f64, sigma: f64, min: usize, max: usize },
+    /// Normal(mean, std) clamped to [min, max] (for left-skewed columns).
+    Normal { mean: f64, std: f64, min: usize, max: usize },
+    /// Every request identical — unit tests and microbenches.
+    Fixed(usize),
+}
+
+impl LengthModel {
+    /// Moment-matched log-normal from a (mean, median) pair.
+    pub fn lognormal_from_moments(mean: f64, median: f64, min: usize, max: usize) -> Self {
+        assert!(mean >= median, "lognormal fit needs mean >= median");
+        let mu = median.ln();
+        let sigma = (2.0 * (mean / median).ln()).sqrt();
+        LengthModel::LogNormal { mu, sigma, min, max }
+    }
+
+    pub fn sample(&self, rng: &mut Pcg64) -> usize {
+        match *self {
+            LengthModel::LogNormal { mu, sigma, min, max } => {
+                let x = rng.lognormal(mu, sigma);
+                (x.round() as usize).clamp(min, max)
+            }
+            LengthModel::Normal { mean, std, min, max } => {
+                let x = rng.normal_with(mean, std);
+                (x.round().max(1.0) as usize).clamp(min, max)
+            }
+            LengthModel::Fixed(n) => n,
+        }
+    }
+
+    /// Analytic mean of the *untruncated* model (truncation shifts it
+    /// slightly; tests allow the tolerance).
+    pub fn untruncated_mean(&self) -> f64 {
+        match *self {
+            LengthModel::LogNormal { mu, sigma, .. } => (mu + sigma * sigma / 2.0).exp(),
+            LengthModel::Normal { mean, .. } => mean,
+            LengthModel::Fixed(n) => n as f64,
+        }
+    }
+}
+
+/// A dataset = input/output length models + the paper's SLO pair.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Dataset {
+    pub name: &'static str,
+    pub input: LengthModel,
+    pub output: LengthModel,
+    /// TTFT SLO, seconds (paper Table 4; includes phase-switching wait,
+    /// §3.3's stricter definition).
+    pub slo_ttft: f64,
+    /// TPOT SLO, seconds.
+    pub slo_tpot: f64,
+}
+
+impl Dataset {
+    /// Human-instruction workload: short prompts, long outputs.
+    pub fn alpaca() -> Self {
+        Dataset {
+            name: "Alpaca-gpt4",
+            input: LengthModel::lognormal_from_moments(20.63, 17.0, 1, 4096),
+            output: LengthModel::lognormal_from_moments(163.8, 119.0, 1, 2048),
+            slo_ttft: 1.0,
+            slo_tpot: 0.1,
+        }
+    }
+
+    /// Chatbot workload: balanced prompt/output lengths.
+    pub fn sharegpt() -> Self {
+        Dataset {
+            name: "ShareGPT",
+            input: LengthModel::lognormal_from_moments(343.76, 148.0, 1, 4096),
+            output: LengthModel::lognormal_from_moments(237.2, 152.0, 1, 2048),
+            slo_ttft: 5.0,
+            slo_tpot: 0.1,
+        }
+    }
+
+    /// Summarization workload: long prompts, short outputs. Inputs are
+    /// left-skewed (paper truncates at 4096), hence the clamped normal.
+    pub fn longbench() -> Self {
+        Dataset {
+            name: "LongBench",
+            input: LengthModel::Normal { mean: 2736.5, std: 900.0, min: 64, max: 4096 },
+            output: LengthModel::lognormal_from_moments(101.78, 19.0, 1, 2048),
+            slo_ttft: 15.0,
+            slo_tpot: 0.1,
+        }
+    }
+
+    /// Tiny-range dataset for the live path (TinyLM max_seq is 128).
+    pub fn tiny() -> Self {
+        Dataset {
+            name: "Tiny",
+            input: LengthModel::LogNormal { mu: 2.7, sigma: 0.6, min: 2, max: 48 },
+            output: LengthModel::LogNormal { mu: 2.3, sigma: 0.7, min: 2, max: 64 },
+            slo_ttft: 2.0,
+            slo_tpot: 0.5,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Dataset> {
+        match name.to_ascii_lowercase().as_str() {
+            "alpaca" | "alpaca-gpt4" => Some(Self::alpaca()),
+            "sharegpt" => Some(Self::sharegpt()),
+            "longbench" => Some(Self::longbench()),
+            "tiny" => Some(Self::tiny()),
+            _ => None,
+        }
+    }
+
+    pub fn all_paper() -> Vec<Dataset> {
+        vec![Self::alpaca(), Self::sharegpt(), Self::longbench()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn sample_stats(m: &LengthModel, n: usize) -> (f64, f64) {
+        let mut rng = Pcg64::seeded(1234);
+        let mut xs: Vec<f64> = (0..n).map(|_| m.sample(&mut rng) as f64).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        (mean, xs[n / 2])
+    }
+
+    #[test]
+    fn alpaca_moments_match_table4() {
+        let d = Dataset::alpaca();
+        let (mean_in, med_in) = sample_stats(&d.input, 200_000);
+        assert!((mean_in - 20.63).abs() < 1.5, "mean_in={mean_in}");
+        assert!((med_in - 17.0).abs() < 2.0, "med_in={med_in}");
+        let (mean_out, med_out) = sample_stats(&d.output, 200_000);
+        assert!((mean_out - 163.8).abs() / 163.8 < 0.08, "mean_out={mean_out}");
+        assert!((med_out - 119.0).abs() / 119.0 < 0.08, "med_out={med_out}");
+    }
+
+    #[test]
+    fn sharegpt_moments_match_table4() {
+        let d = Dataset::sharegpt();
+        let (mean_in, med_in) = sample_stats(&d.input, 200_000);
+        // Truncation at 4096 clips the fat right tail a little.
+        assert!((mean_in - 343.76).abs() / 343.76 < 0.15, "mean_in={mean_in}");
+        assert!((med_in - 148.0).abs() / 148.0 < 0.08, "med_in={med_in}");
+    }
+
+    #[test]
+    fn longbench_moments_match_table4() {
+        let d = Dataset::longbench();
+        let (mean_in, med_in) = sample_stats(&d.input, 100_000);
+        assert!((mean_in - 2686.9).abs() / 2686.9 < 0.1, "mean_in={mean_in}");
+        assert!((med_in - 2736.5).abs() / 2736.5 < 0.1, "med_in={med_in}");
+        let (mean_out, med_out) = sample_stats(&d.output, 100_000);
+        assert!((med_out - 19.0).abs() < 4.0, "med_out={med_out}");
+        assert!((mean_out - 101.78).abs() / 101.78 < 0.25, "mean_out={mean_out}");
+    }
+
+    #[test]
+    fn all_samples_within_bounds() {
+        let mut rng = Pcg64::seeded(7);
+        for d in Dataset::all_paper() {
+            for _ in 0..10_000 {
+                let i = d.input.sample(&mut rng);
+                let o = d.output.sample(&mut rng);
+                assert!((1..=4096).contains(&i), "{} input {i}", d.name);
+                assert!((1..=2048).contains(&o), "{} output {o}", d.name);
+            }
+        }
+    }
+
+    #[test]
+    fn slos_match_table4() {
+        assert_eq!(Dataset::alpaca().slo_ttft, 1.0);
+        assert_eq!(Dataset::sharegpt().slo_ttft, 5.0);
+        assert_eq!(Dataset::longbench().slo_ttft, 15.0);
+        for d in Dataset::all_paper() {
+            assert_eq!(d.slo_tpot, 0.1);
+        }
+    }
+
+    #[test]
+    fn lookup_and_fixed() {
+        assert!(Dataset::by_name("ShareGPT").is_some());
+        assert!(Dataset::by_name("imagenet").is_none());
+        let mut rng = Pcg64::seeded(1);
+        assert_eq!(LengthModel::Fixed(42).sample(&mut rng), 42);
+    }
+}

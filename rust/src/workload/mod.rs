@@ -1,0 +1,33 @@
+//! Workload generation: synthetic equivalents of the paper's three
+//! evaluation datasets plus Poisson / ramp arrival processes.
+//!
+//! The paper's schedulers observe only (arrival time, input length, output
+//! length); Table 4's per-dataset moments pin the length distributions, so
+//! a fitted generator preserves scheduling behaviour (DESIGN.md §2).
+
+pub mod datasets;
+pub mod trace;
+
+pub use datasets::{Dataset, LengthModel};
+pub use trace::{RampTrace, TraceGenerator};
+
+/// One inference request as the cluster sees it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    /// Arrival time at the overall scheduler, seconds.
+    pub arrival: f64,
+    /// Prompt length, tokens.
+    pub input_len: usize,
+    /// Generation length, tokens. The *oracle* value: schedulers must not
+    /// read it for admission decisions (output length is unknown until EoS,
+    /// paper §2.1); the simulator uses it to know when decoding finishes.
+    pub output_len: usize,
+}
+
+impl Request {
+    /// Total KV-cache tokens this request will occupy at completion.
+    pub fn total_tokens(&self) -> usize {
+        self.input_len + self.output_len
+    }
+}

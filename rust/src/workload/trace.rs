@@ -1,0 +1,155 @@
+//! Arrival processes: Poisson traces at a fixed rate (the paper's
+//! end-to-end evaluation setting — "a Poisson distribution is applied to a
+//! fixed request rate") and piecewise ramps (Figure 10's dynamic-scaling
+//! experiment, 20 → 50 req/s in 2-minute steps).
+
+use super::datasets::Dataset;
+use super::Request;
+use crate::util::rng::Pcg64;
+
+/// Generates request traces from a dataset's length models.
+#[derive(Debug, Clone)]
+pub struct TraceGenerator {
+    pub dataset: Dataset,
+    pub seed: u64,
+}
+
+impl TraceGenerator {
+    pub fn new(dataset: Dataset, seed: u64) -> Self {
+        TraceGenerator { dataset, seed }
+    }
+
+    /// Poisson arrivals at `rate` req/s over `duration` seconds.
+    pub fn poisson(&self, rate: f64, duration: f64) -> Vec<Request> {
+        assert!(rate > 0.0 && duration > 0.0);
+        let mut rng = Pcg64::new(self.seed, 0xA11);
+        let mut out = Vec::with_capacity((rate * duration * 1.2) as usize + 8);
+        let mut t = 0.0;
+        let mut id = 0;
+        loop {
+            t += rng.exponential(rate);
+            if t >= duration {
+                break;
+            }
+            out.push(Request {
+                id,
+                arrival: t,
+                input_len: self.dataset.input.sample(&mut rng),
+                output_len: self.dataset.output.sample(&mut rng),
+            });
+            id += 1;
+        }
+        out
+    }
+
+    /// Piecewise-constant-rate Poisson trace: `steps` of (rate, duration).
+    pub fn ramp(&self, steps: &[(f64, f64)]) -> Vec<Request> {
+        let mut rng = Pcg64::new(self.seed, 0xA12);
+        let mut out = Vec::new();
+        let mut base = 0.0;
+        let mut id = 0;
+        for &(rate, dur) in steps {
+            let mut t = 0.0;
+            loop {
+                t += rng.exponential(rate);
+                if t >= dur {
+                    break;
+                }
+                out.push(Request {
+                    id,
+                    arrival: base + t,
+                    input_len: self.dataset.input.sample(&mut rng),
+                    output_len: self.dataset.output.sample(&mut rng),
+                });
+                id += 1;
+            }
+            base += dur;
+        }
+        out
+    }
+}
+
+/// The Figure 10 ramp: request rate increases every `step_secs` from
+/// `start_rate` to `end_rate` in `increments` equal steps.
+#[derive(Debug, Clone)]
+pub struct RampTrace {
+    pub start_rate: f64,
+    pub end_rate: f64,
+    pub increments: usize,
+    pub step_secs: f64,
+}
+
+impl RampTrace {
+    /// The paper's Figure 10 setting: 20 → 50 req/s, steps every 2 minutes.
+    pub fn fig10() -> Self {
+        RampTrace { start_rate: 20.0, end_rate: 50.0, increments: 6, step_secs: 120.0 }
+    }
+
+    pub fn steps(&self) -> Vec<(f64, f64)> {
+        let n = self.increments.max(1);
+        (0..n)
+            .map(|i| {
+                let frac = if n == 1 { 0.0 } else { i as f64 / (n - 1) as f64 };
+                (
+                    self.start_rate + (self.end_rate - self.start_rate) * frac,
+                    self.step_secs,
+                )
+            })
+            .collect()
+    }
+
+    pub fn total_duration(&self) -> f64 {
+        self.increments as f64 * self.step_secs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_is_respected() {
+        let g = TraceGenerator::new(Dataset::sharegpt(), 42);
+        let reqs = g.poisson(10.0, 500.0);
+        let rate = reqs.len() as f64 / 500.0;
+        assert!((rate - 10.0).abs() < 0.5, "rate={rate}");
+        // sorted arrivals, unique ids
+        for w in reqs.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+            assert!(w[0].id < w[1].id);
+        }
+    }
+
+    #[test]
+    fn poisson_deterministic_per_seed() {
+        let g = TraceGenerator::new(Dataset::alpaca(), 7);
+        let a = g.poisson(5.0, 100.0);
+        let b = g.poisson(5.0, 100.0);
+        assert_eq!(a, b);
+        let g2 = TraceGenerator::new(Dataset::alpaca(), 8);
+        assert_ne!(a, g2.poisson(5.0, 100.0));
+    }
+
+    #[test]
+    fn ramp_steps_cover_range() {
+        let r = RampTrace::fig10();
+        let steps = r.steps();
+        assert_eq!(steps.len(), 6);
+        assert_eq!(steps[0].0, 20.0);
+        assert_eq!(steps[5].0, 50.0);
+        assert_eq!(r.total_duration(), 720.0);
+    }
+
+    #[test]
+    fn ramp_trace_rates_increase() {
+        let g = TraceGenerator::new(Dataset::sharegpt(), 3);
+        let r = RampTrace { start_rate: 2.0, end_rate: 20.0, increments: 3, step_secs: 100.0 };
+        let reqs = g.ramp(&r.steps());
+        let early = reqs.iter().filter(|q| q.arrival < 100.0).count();
+        let late = reqs.iter().filter(|q| q.arrival >= 200.0).count();
+        assert!(late > 5 * early, "early={early} late={late}");
+        for w in reqs.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! Perfmodel calibration tests: the analytical substrate must reproduce
+//! the paper's *measured* anchor points before any scheduling comparison
+//! means anything (DESIGN.md §2).
+
+use ecoserve::perfmodel::interconnect::{required_kv_bandwidth, LinkSpec};
+use ecoserve::perfmodel::parallelism::ParallelCfg;
+use ecoserve::perfmodel::{BatchTimer, GpuSpec, ModelSpec};
+
+fn node_prefill_rate(model: ModelSpec, gpu: GpuSpec, tp: usize) -> f64 {
+    let timer = BatchTimer::new(model, gpu, ParallelCfg::tp_only(tp, LinkSpec::pcie4()));
+    timer.prefill_tokens_per_sec(1024) * (8 / tp) as f64
+}
+
+/// Paper Table 3 anchor points, within 20% (absolute testbed numbers
+/// against an analytical model).
+#[test]
+fn table3_prefill_rates_within_20pct() {
+    let cases = [
+        (ModelSpec::llama_30b(), GpuSpec::l20(), 4, 6584.6),
+        (ModelSpec::llama_30b(), GpuSpec::a800(), 2, 26189.2),
+        (ModelSpec::codellama_34b(), GpuSpec::l20(), 4, 6838.92),
+        (ModelSpec::codellama_34b(), GpuSpec::a800(), 2, 25978.88),
+    ];
+    for (model, gpu, tp, paper) in cases {
+        let name = model.name;
+        let got = node_prefill_rate(model, gpu.clone(), tp);
+        let ratio = got / paper;
+        assert!(
+            (0.8..=1.25).contains(&ratio),
+            "{name} on {}: {got:.0} tok/s vs paper {paper} (ratio {ratio:.2})",
+            gpu.name
+        );
+    }
+}
+
+/// Paper Table 3 bandwidth column follows from rate × KV-per-token.
+#[test]
+fn table3_required_bandwidth_tracks_paper() {
+    let cases = [
+        (ModelSpec::llama_30b(), GpuSpec::l20(), 4, 9.796e9),
+        (ModelSpec::codellama_34b(), GpuSpec::l20(), 4, 1.25e9),
+    ];
+    for (model, gpu, tp, paper_bw) in cases {
+        let rate = node_prefill_rate(model.clone(), gpu, tp);
+        let bw = required_kv_bandwidth(rate, model.kv_bytes_per_token());
+        let ratio = bw / paper_bw;
+        assert!((0.75..=1.3).contains(&ratio), "{}: {bw:.2e} vs {paper_bw:.2e}", model.name);
+    }
+}
+
+/// §2.3 case study: "communication overhead accounts for nearly half of
+/// the total execution time" for Llama-30B TP=4 on PCIe-only L20 decode.
+#[test]
+fn tp4_decode_comm_is_roughly_half_on_pcie() {
+    let timer = BatchTimer::new(
+        ModelSpec::llama_30b(),
+        GpuSpec::l20(),
+        ParallelCfg::tp_only(4, LinkSpec::pcie4()),
+    );
+    let batch = 48;
+    let comm = timer.par.tp_comm_time(&timer.model, batch);
+    let total = timer.decode_iter_time(batch, batch * 400);
+    let frac = comm / total;
+    assert!(
+        (0.3..0.7).contains(&frac),
+        "decode comm fraction {frac:.2} should be 'nearly half'"
+    );
+}
+
+/// §2.1: prefill lands on the compute roof, decode on the memory roof.
+#[test]
+fn phase_regimes_match_table2() {
+    for model in [ModelSpec::llama_30b(), ModelSpec::codellama_34b(), ModelSpec::qwen2_72b()] {
+        for gpu in [GpuSpec::l20(), GpuSpec::a800()] {
+            let balance = gpu.eff_flops() / gpu.eff_bw();
+            let prefill_ai = model.prefill_flops(1024) / model.prefill_bytes(1024);
+            let decode_ai = (32.0 * 2.0 * model.param_count())
+                / model.decode_iter_bytes(32, 32 * 400);
+            assert!(prefill_ai > balance, "{} prefill not compute-bound on {}",
+                    model.name, gpu.name);
+            assert!(decode_ai < balance, "{} decode not memory-bound on {}",
+                    model.name, gpu.name);
+        }
+    }
+}
+
+/// Table 3's conclusion: MHA KV egress outruns 10GbE by ~an order of
+/// magnitude; GQA fits in a 25G-RoCE-class link.
+#[test]
+fn fudg_feasibility_thresholds() {
+    let mha_rate = node_prefill_rate(ModelSpec::llama_30b(), GpuSpec::l20(), 4);
+    let mha_bw = required_kv_bandwidth(mha_rate, ModelSpec::llama_30b().kv_bytes_per_token());
+    assert!(mha_bw > 5.0 * LinkSpec::eth_10g().bandwidth);
+
+    let gqa_rate = node_prefill_rate(ModelSpec::codellama_34b(), GpuSpec::l20(), 4);
+    let gqa_bw = required_kv_bandwidth(gqa_rate, ModelSpec::codellama_34b().kv_bytes_per_token());
+    assert!(gqa_bw < 2.0 * LinkSpec::eth_10g().bandwidth);
+    assert!(gqa_bw < LinkSpec::roce_25g().bandwidth);
+}
+
+/// A800 vs L20: compute scales faster (~3.3x) than the cluster's network
+/// upgrade (2.5x), so FuDG gets *worse* on the better GPUs (§4.2,
+/// "Comparison Across Clusters").
+#[test]
+fn a800_widen_the_fudg_gap() {
+    let l20 = node_prefill_rate(ModelSpec::llama_30b(), GpuSpec::l20(), 4);
+    let a800 = node_prefill_rate(ModelSpec::llama_30b(), GpuSpec::a800(), 2);
+    let compute_scale = a800 / l20;
+    let bw_scale = LinkSpec::roce_25g().bandwidth / LinkSpec::eth_10g().bandwidth;
+    assert!(
+        compute_scale > bw_scale,
+        "compute scale {compute_scale:.2} must exceed network scale {bw_scale:.2}"
+    );
+}
+
+/// PP hand-offs are orders cheaper than TP all-reduces over PCIe (§2.3).
+#[test]
+fn pp_comm_cheaper_than_tp() {
+    let model = ModelSpec::codellama_34b();
+    let tp = ParallelCfg::tp_only(4, LinkSpec::pcie4());
+    let pp = ParallelCfg {
+        tp: 1,
+        pp: 4,
+        tp_link: LinkSpec::pcie4(),
+        pp_link: LinkSpec::pcie4(),
+    };
+    assert!(pp.pp_comm_time(&model, 64) < tp.tp_comm_time(&model, 64) / 10.0);
+}

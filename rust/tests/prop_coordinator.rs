@@ -1,0 +1,191 @@
+//! Property-based tests over coordinator invariants (routing, batching,
+//! mitosis, serialization) using the in-tree harness (`testing::prop`).
+
+use ecoserve::config::{ClusterSpec, Deployment, SystemParams};
+use ecoserve::coordinator::constraints::{check_constraints, ConstraintVerdict};
+use ecoserve::coordinator::mitosis::MitosisState;
+use ecoserve::coordinator::proxy::InstanceHandler;
+use ecoserve::coordinator::routing::{route, RouteOutcome, RoutingState};
+use ecoserve::coordinator::EcoServeSystem;
+use ecoserve::metrics::{Collector, SloSpec};
+use ecoserve::perfmodel::ModelSpec;
+use ecoserve::prop_assert;
+use ecoserve::sim::{run, SimInstance};
+use ecoserve::testing::prop::{check, Gen};
+use ecoserve::workload::{Dataset, Request, TraceGenerator};
+
+fn deployment() -> Deployment {
+    let mut d = Deployment::paper_default(ModelSpec::codellama_34b(),
+                                          ClusterSpec::l20_cluster());
+    d.gpus_used = 16;
+    d
+}
+
+#[test]
+fn prop_mitosis_invariants_under_random_ops() {
+    check("mitosis-random-ops", 200, |g: &mut Gen| {
+        let n_l = g.usize(1, 6);
+        let n_u = g.usize(n_l, n_l + 12);
+        let mut s = MitosisState::new(n_l, n_u);
+        let mut next_id = 0usize;
+        let mut live = 0usize;
+        for _ in 0..g.usize(1, 60) {
+            if live == 0 || g.bool() {
+                s.add_instance(next_id);
+                next_id += 1;
+                live += 1;
+            } else {
+                let (_, _) = s.remove_instance().expect("non-empty");
+                live -= 1;
+            }
+            s.check_invariants().map_err(|e| e)?;
+            prop_assert!(s.total_instances() == live,
+                         "count {} != live {live}", s.total_instances());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mitosis_split_only_at_upper_bound() {
+    check("mitosis-split-bound", 100, |g: &mut Gen| {
+        let n_l = g.usize(2, 4);
+        let n_u = g.usize(n_l + 1, n_l + 8);
+        let mut s = MitosisState::new(n_l, n_u);
+        for id in 0..g.usize(1, 40) {
+            let before_macros = s.macros.len();
+            let ops = s.add_instance(id);
+            let split = ops.iter().any(|o| {
+                matches!(o, ecoserve::coordinator::mitosis::ScaleOp::Split { .. })
+            });
+            if split {
+                prop_assert!(
+                    s.macros.len() == before_macros + 1,
+                    "split must create exactly one macro"
+                );
+                // A split-off macro holds exactly N_l members.
+                prop_assert!(s.macros.last().unwrap().len() == n_l
+                    || s.macros.iter().any(|m| m.len() == n_l));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_routing_admits_only_satisfying_instances() {
+    let d = deployment();
+    check("routing-admission-sound", 60, |g: &mut Gen| {
+        let n = g.usize(1, 6);
+        let mut instances: Vec<SimInstance> = (0..n)
+            .map(|i| SimInstance::new(i, d.timer(), 0.1))
+            .collect();
+        // Random pre-load.
+        for inst in &mut instances {
+            inst.kv_used = g.usize(0, inst.kv_capacity);
+        }
+        let slo = SloSpec::new(g.f64(0.5, 10.0), 0.1);
+        let req = Request {
+            id: 1,
+            arrival: 0.0,
+            input_len: g.usize(1, 4096),
+            output_len: g.usize(1, 512),
+        };
+        let members: Vec<usize> = (0..n).collect();
+        let mut st = RoutingState { last: g.usize(0, n - 1), ..Default::default() };
+        let budget = slo.ttft / n as f64;
+        match route(&mut st, &members, &instances, &req, 0.0, &slo, 64) {
+            RouteOutcome::Admitted(pos) => {
+                let v = check_constraints(&instances[members[pos]], &req, 0.0,
+                                          &slo, 64, budget);
+                prop_assert!(v.ok(), "admitted instance fails Algorithm 2: {v:?}");
+            }
+            RouteOutcome::Deferred => {
+                for &m in &members {
+                    let v = check_constraints(&instances[m], &req, 0.0, &slo, 64, budget);
+                    prop_assert!(
+                        v != ConstraintVerdict::Satisfied,
+                        "deferred although instance {m} satisfies constraints"
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_simulation_conserves_kv_and_requests() {
+    let d = deployment();
+    check("padg-conservation", 15, |g: &mut Gen| {
+        let rate = g.f64(0.5, 6.0);
+        let seed = g.int(0, 1 << 30) as u64;
+        let dataset = *g.pick(&[0usize, 1, 2]);
+        let dataset = match dataset {
+            0 => Dataset::alpaca(),
+            1 => Dataset::sharegpt(),
+            _ => Dataset::longbench(),
+        };
+        let slo = SloSpec::new(dataset.slo_ttft, dataset.slo_tpot);
+        let mut sys = EcoServeSystem::new(&d, slo, SystemParams::default());
+        let trace = TraceGenerator::new(dataset, seed).poisson(rate, 40.0);
+        let n = trace.len();
+        let mut m = Collector::new();
+        run(&mut sys, trace, 5_000.0, &mut m);
+        prop_assert!(m.completed().len() == n,
+                     "completed {} of {n}", m.completed().len());
+        prop_assert!(m.in_flight() == 0, "{} stuck in flight", m.in_flight());
+        for inst in &sys.instances {
+            prop_assert!(inst.kv_used == 0, "instance {} leaked {} KV tokens",
+                         inst.id, inst.kv_used);
+        }
+        // Sanity on every record: first <= completion, ttft >= 0.
+        for r in m.completed() {
+            prop_assert!(r.first_token >= r.arrival, "token before arrival");
+            prop_assert!(r.completion >= r.first_token, "completion before first");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_proxy_roundtrip_any_handler() {
+    check("proxy-roundtrip", 200, |g: &mut Gen| {
+        let h = InstanceHandler::new(
+            g.int(0, i64::MAX - 1) as u64,
+            format!("host-{}:{}", g.usize(0, 255), g.usize(1024, 65535)),
+            g.usize(1, 8),
+            g.usize(1, 4),
+            g.usize(0, 10_000_000),
+        );
+        let wire = h.serialize();
+        let back = InstanceHandler::deserialize(&wire)
+            .map_err(|e| format!("deserialize failed: {e}"))?;
+        prop_assert!(back == h, "roundtrip mismatch");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_deterministic_simulation() {
+    let d = deployment();
+    check("sim-determinism", 8, |g: &mut Gen| {
+        let seed = g.int(0, 1 << 30) as u64;
+        let rate = g.f64(1.0, 8.0);
+        let run_one = || {
+            let dataset = Dataset::sharegpt();
+            let slo = SloSpec::new(dataset.slo_ttft, dataset.slo_tpot);
+            let mut sys = EcoServeSystem::new(&d, slo, SystemParams::default());
+            let trace = TraceGenerator::new(dataset, seed).poisson(rate, 30.0);
+            let mut m = Collector::new();
+            run(&mut sys, trace, 2_000.0, &mut m);
+            let mut recs = m.into_records();
+            recs.sort_by_key(|r| r.id);
+            recs
+        };
+        let a = run_one();
+        let b = run_one();
+        prop_assert!(a == b, "same seed produced different histories");
+        Ok(())
+    });
+}
