@@ -1,0 +1,66 @@
+"""Pytest wiring for accelerator-less / offline runners.
+
+The L1/L2 test modules import jax (and the kernel/model suites also
+hypothesis) at module scope, so on a bare CI runner they must be skipped
+at *collection* time — a marker alone cannot rescue a failing import.
+This conftest:
+
+* puts ``python/`` on ``sys.path`` so ``from compile import ...`` works
+  regardless of pytest's invocation directory;
+* ignores test modules whose hard dependencies are missing (printed once
+  so CI logs show what was skipped and why);
+* tags every collected test with ``requires_jax`` / ``requires_pallas`` /
+  ``requires_hypothesis`` markers so ``-m`` selections work on full
+  installs.
+
+The Pallas kernels default to ``interpret=True`` (see
+compile/kernels/attention.py), so no accelerator is needed when jax and
+hypothesis are present — the markers describe *library* needs, not
+hardware.
+"""
+
+import importlib.util
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+HAVE_JAX = importlib.util.find_spec("jax") is not None
+HAVE_HYPOTHESIS = importlib.util.find_spec("hypothesis") is not None
+
+# Module -> hard import dependencies that cannot be marker-skipped.
+_NEEDS = {
+    "tests/test_aot.py": ["jax"],
+    "tests/test_model.py": ["jax", "hypothesis"],
+    "tests/test_kernel.py": ["jax", "hypothesis"],
+}
+
+_available = {"jax": HAVE_JAX, "hypothesis": HAVE_HYPOTHESIS}
+
+collect_ignore = []
+_skip_notes = []
+for module, needs in _NEEDS.items():
+    missing = [n for n in needs if not _available[n]]
+    if missing:
+        collect_ignore.append(module)
+        note = f"conftest: skipping {module} (missing: {', '.join(missing)})"
+        _skip_notes.append(note)
+        # sys.stderr is captured by pytest during collection; write to the
+        # real stream so CI logs always show what was skipped and why.
+        print(note, file=sys.__stderr__)
+
+
+def pytest_report_header(config):
+    return _skip_notes
+
+
+def pytest_collection_modifyitems(config, items):
+    import pytest
+
+    for item in items:
+        path = str(item.fspath)
+        if "test_kernel" in path:
+            item.add_marker(pytest.mark.requires_pallas)
+        if "test_kernel" in path or "test_model" in path:
+            item.add_marker(pytest.mark.requires_hypothesis)
+        item.add_marker(pytest.mark.requires_jax)

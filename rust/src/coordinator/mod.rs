@@ -15,6 +15,7 @@
 //!   instances on the live path (examples/serve_model.rs).
 
 pub mod constraints;
+#[cfg(feature = "pjrt")]
 pub mod live;
 pub mod mitosis;
 pub mod padg;

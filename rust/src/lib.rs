@@ -21,6 +21,18 @@
 //! Python never runs on the request path: [`runtime`] loads the HLO
 //! artifacts through the PJRT C API (`xla` crate) and executes them from
 //! the Rust hot loop.
+//!
+//! The live-serving layers (`runtime::{engine,pjrt}`, `coordinator::live`,
+//! `server`) sit behind the `pjrt` cargo feature (default **off**) so the
+//! simulator, harness, and scenario suite build and test on machines with
+//! no XLA shared library.
+
+// The tree is hand-formatted (~80 cols, aligned tables) and predates
+// rustfmt/clippy adoption; style/complexity/perf lint groups are advisory
+// here while the correctness and suspicious groups — plus all rustc
+// warnings — stay enforced for the library and CLI by CI's
+// `clippy -- -D warnings` (both feature edges; see .github/workflows).
+#![allow(clippy::style, clippy::complexity, clippy::perf)]
 
 pub mod baselines;
 pub mod config;
@@ -29,6 +41,8 @@ pub mod harness;
 pub mod metrics;
 pub mod perfmodel;
 pub mod runtime;
+pub mod scenarios;
+#[cfg(feature = "pjrt")]
 pub mod server;
 pub mod sim;
 pub mod testing;

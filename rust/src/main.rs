@@ -1,17 +1,24 @@
 //! EcoServe launcher.
 //!
 //! Subcommands:
-//!   serve     — live serving on PJRT-CPU instances (TinyLM artifacts)
-//!   simulate  — one simulated run of a system at a fixed request rate
-//!   goodput   — goodput search (paper §4.1) for one system
-//!   table2    — print the arithmetic-intensity table
-//!   table3    — print the KV-bandwidth table
+//!   serve      — live serving on PJRT-CPU instances (TinyLM artifacts;
+//!                needs the `pjrt` cargo feature)
+//!   simulate   — one simulated run of a system at a fixed request rate
+//!   goodput    — goodput search (paper §4.1) for one system
+//!   scenarios  — the multi-scenario evaluation suite (--list to browse)
+//!   table2     — print the arithmetic-intensity table
+//!   table3     — print the KV-bandwidth table
 //!
 //! Examples:
 //!   ecoserve serve --instances 2 --rate 3 --duration 20
 //!   ecoserve simulate --system ecoserve --model codellama-34b \
 //!       --cluster l20 --dataset sharegpt --rate 8
 //!   ecoserve goodput --system vllm --dataset longbench --level p90
+//!   ecoserve scenarios --list
+//!   ecoserve scenarios --scenario bursty --out report.json
+
+// Same advisory lint posture as lib.rs (see its comment).
+#![allow(clippy::style, clippy::complexity, clippy::perf)]
 
 use anyhow::{bail, Result};
 
@@ -19,7 +26,7 @@ use ecoserve::config::{ClusterSpec, Deployment, ExperimentConfig, SystemKind};
 use ecoserve::harness;
 use ecoserve::metrics::Attainment;
 use ecoserve::perfmodel::{self, ModelSpec};
-use ecoserve::server::{serve_poisson, ServeConfig};
+use ecoserve::scenarios;
 use ecoserve::util::cli::Args;
 use ecoserve::workload::Dataset;
 
@@ -29,23 +36,26 @@ fn main() -> Result<()> {
         Some("serve") => cmd_serve(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("goodput") => cmd_goodput(&args),
+        Some("scenarios") => cmd_scenarios(&args),
         Some("table2") => cmd_table2(&args),
         Some("table3") => cmd_table3(),
         _ => {
-            eprintln!("usage: ecoserve <serve|simulate|goodput|table2|table3> [--flags]");
+            eprintln!(
+                "usage: ecoserve <serve|simulate|goodput|scenarios|table2|table3> [--flags]"
+            );
             eprintln!("see rust/src/main.rs docs for examples");
             Ok(())
         }
     }
 }
 
-fn experiment_from_args(args: &Args) -> Result<ExperimentConfig> {
+/// Shared `--model/--cluster/--tp/--pp/--gpus` parsing (simulate,
+/// goodput, and scenarios all describe deployments the same way).
+fn deployment_from_args(args: &Args) -> Result<Deployment> {
     let model = ModelSpec::by_name(&args.get_or("model", "codellama-34b"))
         .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
     let cluster = ClusterSpec::by_name(&args.get_or("cluster", "l20"))
         .ok_or_else(|| anyhow::anyhow!("unknown cluster"))?;
-    let dataset = Dataset::by_name(&args.get_or("dataset", "sharegpt"))
-        .ok_or_else(|| anyhow::anyhow!("unknown dataset"))?;
     let mut deployment = Deployment::paper_default(model, cluster);
     if let Some(tp) = args.get("tp") {
         deployment.tp = tp.parse()?;
@@ -56,6 +66,25 @@ fn experiment_from_args(args: &Args) -> Result<ExperimentConfig> {
     if let Some(g) = args.get("gpus") {
         deployment.gpus_used = g.parse()?;
     }
+    Ok(deployment)
+}
+
+/// An optional numeric flag that errors loudly on a typo instead of
+/// silently falling back to a default.
+fn parse_f64_flag(args: &Args, key: &str) -> Result<Option<f64>> {
+    match args.get(key) {
+        Some(v) => v
+            .parse()
+            .map(Some)
+            .map_err(|_| anyhow::anyhow!("--{key} expects a number, got '{v}'")),
+        None => Ok(None),
+    }
+}
+
+fn experiment_from_args(args: &Args) -> Result<ExperimentConfig> {
+    let dataset = Dataset::by_name(&args.get_or("dataset", "sharegpt"))
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset"))?;
+    let deployment = deployment_from_args(args)?;
     let mut cfg = ExperimentConfig::new(deployment, dataset);
     cfg.seed = args.get_u64("seed", 42);
     cfg.duration = args.get_f64("duration", 240.0);
@@ -63,7 +92,9 @@ fn experiment_from_args(args: &Args) -> Result<ExperimentConfig> {
     Ok(cfg)
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_serve(args: &Args) -> Result<()> {
+    use ecoserve::server::{serve_poisson, ServeConfig};
     let mut cfg = ServeConfig::default();
     cfg.instances = args.get_usize("instances", 2);
     cfg.rate = args.get_f64("rate", 3.0);
@@ -74,6 +105,80 @@ fn cmd_serve(args: &Args) -> Result<()> {
     print!("{}", report.render());
     if !report.fatal_errors.is_empty() {
         bail!("worker errors: {:?}", report.fatal_errors);
+    }
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_serve(_args: &Args) -> Result<()> {
+    bail!(
+        "the `serve` subcommand needs the live PJRT path: rebuild with \
+         `cargo build --release --features pjrt` (and a real `xla` crate — \
+         see rust/vendor/xla)"
+    )
+}
+
+/// The multi-scenario evaluation suite (`scenarios` subcommand).
+fn cmd_scenarios(args: &Args) -> Result<()> {
+    if args.has_flag("list") {
+        println!("{:<12} {:>7} {:>9} {:>8}  summary", "scenario", "rate/s", "horizon", "classes");
+        for s in scenarios::registry() {
+            println!(
+                "{:<12} {:>7.1} {:>8.0}s {:>8}  {}",
+                s.name,
+                s.default_rate,
+                s.duration,
+                s.classes.len(),
+                s.summary
+            );
+        }
+        return Ok(());
+    }
+
+    let selected: Vec<scenarios::Scenario> = match args.get("scenario") {
+        Some(name) => vec![scenarios::by_name(name).ok_or_else(|| {
+            anyhow::anyhow!("unknown scenario '{name}' (try `ecoserve scenarios --list`)")
+        })?],
+        None => scenarios::registry(),
+    };
+    let systems: Vec<SystemKind> = match args.get("system") {
+        Some(name) => vec![SystemKind::by_name(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown system '{name}'"))?],
+        None => SystemKind::all().to_vec(),
+    };
+
+    let cfg = scenarios::ScenarioConfig {
+        deployment: deployment_from_args(args)?,
+        seed: args.get_u64("seed", 42),
+        rate: parse_f64_flag(args, "rate")?,
+        duration_override: parse_f64_flag(args, "duration")?,
+    };
+    if cfg.deployment.num_instances() == 0 {
+        bail!("deployment has zero instances (gpus < tp*pp)");
+    }
+
+    let d = &cfg.deployment;
+    println!(
+        "scenario suite: {} scenario(s) x {} system(s) on {} x{} instances (TP={}) / {}",
+        selected.len(),
+        systems.len(),
+        d.model.name,
+        d.num_instances(),
+        d.tp,
+        d.cluster.name,
+    );
+    let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(8);
+    let outcomes = scenarios::run_suite(&selected, &cfg, &systems, workers);
+    for outcome in &outcomes {
+        println!();
+        print!("{}", scenarios::render_table(outcome));
+    }
+
+    if let Some(path) = args.get("out") {
+        let json = scenarios::suite_to_json(&outcomes, &cfg).to_string();
+        std::fs::write(path, &json)
+            .map_err(|e| anyhow::anyhow!("write {path}: {e}"))?;
+        println!("\nwrote JSON report to {path}");
     }
     Ok(())
 }

@@ -12,12 +12,19 @@
 //! * [`engine`] — shape-bucketed prefill/decode execution over the store.
 //! * [`tokenizer`] — byte-level tokenizer matching TinyLM's vocab.
 
+//! `kv`, `weights`, and `tokenizer` are pure host-side code and always
+//! compile; `engine` and `pjrt` call into the `xla` crate and sit behind
+//! the `pjrt` feature.
+
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod kv;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod tokenizer;
 pub mod weights;
 
+#[cfg(feature = "pjrt")]
 pub use engine::Engine;
 pub use kv::KvStore;
 pub use tokenizer::Tokenizer;

@@ -1,0 +1,34 @@
+//! The scenario suite — a declarative, multi-scenario evaluation driver.
+//!
+//! The paper evaluates on three datasets at fixed Poisson rates; real
+//! fleets also face bursts, day curves, long-context heavy tails, and
+//! mixed interactive/batch SLO populations (DistServe arXiv:2401.09670
+//! and DynaServe arXiv:2504.09285 both show disaggregation trade-offs
+//! inverting under exactly these shapes). This subsystem turns each such
+//! shape into a named, deterministic scenario and runs every serving
+//! system through all of them with one command:
+//!
+//! ```text
+//! ecoserve scenarios --list
+//! ecoserve scenarios --scenario bursty --out report.json
+//! ecoserve scenarios --system vllm --rate 4 --duration 120
+//! ```
+//!
+//! * [`registry`] — the scenario catalog: traffic classes (dataset + SLO
+//!   + rate share) × load shape (steady / on-off / diurnal / ramp) ×
+//!   horizon, all built on [`crate::workload::TraceGenerator`] and
+//!   [`crate::workload::RampTrace`].
+//! * [`driver`] — runs (scenario × system) cells through
+//!   [`crate::harness::build_system`] and the simulator in parallel
+//!   ([`crate::util::threads::parallel_map`]), scoring strict per-class
+//!   attainment and delivered goodput.
+//! * [`report`] — the JSON contract (via [`crate::util::json`]) and the
+//!   human table.
+
+pub mod driver;
+pub mod registry;
+pub mod report;
+
+pub use driver::{run_scenario, run_suite, ScenarioConfig, ScenarioOutcome, SystemRow};
+pub use registry::{by_name, registry, LoadShape, Scenario, TrafficClass};
+pub use report::{render_table, suite_to_json};

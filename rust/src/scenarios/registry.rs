@@ -1,0 +1,337 @@
+//! The declarative scenario registry: each entry names a workload shape
+//! the serving stack must survive, built from the same primitives as the
+//! paper's evaluation (Table-4 datasets + Poisson/ramp arrival processes).
+//!
+//! A scenario is (traffic classes × load shape × horizon). Classes carry
+//! their own dataset and therefore their own SLO pair (Table 4), which is
+//! what lets `mixed-slo` score interactive and batch traffic separately;
+//! the load shape modulates the *total* offered rate over time and is
+//! normalized so `rate` is always the time-averaged offered rate.
+
+use crate::workload::{Dataset, RampTrace, Request, TraceGenerator};
+
+/// One class of traffic inside a scenario. `share` is this class's
+/// fraction of the scenario's total offered rate; shares sum to 1.
+#[derive(Debug, Clone)]
+pub struct TrafficClass {
+    pub name: &'static str,
+    pub dataset: Dataset,
+    pub share: f64,
+}
+
+/// How the total offered rate evolves over the scenario horizon. All
+/// shapes are normalized so the time-averaged rate equals the nominal
+/// `rate` handed to [`Scenario::build_trace`].
+#[derive(Debug, Clone)]
+pub enum LoadShape {
+    /// Fixed-rate Poisson — the paper's §4.1 setting.
+    Steady,
+    /// On/off square wave: `duty` of each `period` runs at
+    /// `peak_to_mean × rate`, the remainder at the complementary trough
+    /// rate (DistServe-style burst resilience probe).
+    OnOff { period: f64, duty: f64, peak_to_mean: f64 },
+    /// Half-sine day curve from `trough_mult` up to `peak_mult` and back,
+    /// discretized into `segments` constant-rate steps.
+    Diurnal { trough_mult: f64, peak_mult: f64, segments: usize },
+    /// Monotone escalation from `start_mult × rate` to `end_mult × rate`
+    /// in `increments` equal steps (the Figure-10 [`RampTrace`] shape).
+    Ramp { start_mult: f64, end_mult: f64, increments: usize },
+}
+
+impl LoadShape {
+    /// Piecewise-constant (rate, duration) steps covering `duration`
+    /// seconds at time-averaged rate `rate`.
+    pub fn steps(&self, rate: f64, duration: f64) -> Vec<(f64, f64)> {
+        // The arrival sampler needs strictly positive rates.
+        const MIN_RATE: f64 = 0.05;
+        match *self {
+            LoadShape::Steady => vec![(rate.max(MIN_RATE), duration)],
+            LoadShape::OnOff { period, duty, peak_to_mean } => {
+                let duty = duty.clamp(0.05, 0.95);
+                let peak = rate * peak_to_mean;
+                // Trough chosen so duty·peak + (1−duty)·trough = rate.
+                let trough = (rate * (1.0 - duty * peak_to_mean) / (1.0 - duty))
+                    .max(MIN_RATE);
+                let mut out = Vec::new();
+                let mut t = 0.0;
+                while t < duration {
+                    let on = (period * duty).min(duration - t);
+                    if on > 0.0 {
+                        out.push((peak.max(MIN_RATE), on));
+                        t += on;
+                    }
+                    let off = (period * (1.0 - duty)).min(duration - t);
+                    if off > 0.0 {
+                        out.push((trough, off));
+                        t += off;
+                    }
+                }
+                out
+            }
+            LoadShape::Diurnal { trough_mult, peak_mult, segments } => {
+                let n = segments.max(2);
+                let raw: Vec<f64> = (0..n)
+                    .map(|i| {
+                        let phase = std::f64::consts::PI * (i as f64 + 0.5) / n as f64;
+                        trough_mult + (peak_mult - trough_mult) * phase.sin()
+                    })
+                    .collect();
+                let mean = raw.iter().sum::<f64>() / n as f64;
+                raw.into_iter()
+                    .map(|m| ((rate * m / mean).max(MIN_RATE), duration / n as f64))
+                    .collect()
+            }
+            LoadShape::Ramp { start_mult, end_mult, increments } => {
+                let n = increments.max(2);
+                let ramp = RampTrace {
+                    start_rate: rate * start_mult,
+                    end_rate: rate * end_mult,
+                    increments: n,
+                    step_secs: duration / n as f64,
+                };
+                // Normalize so the time mean equals `rate` (a linear ramp's
+                // mean is (start+end)/2).
+                let mean = rate * (start_mult + end_mult) / 2.0;
+                ramp.steps()
+                    .into_iter()
+                    .map(|(r, d)| ((r * rate / mean.max(1e-9)).max(MIN_RATE), d))
+                    .collect()
+            }
+        }
+    }
+}
+
+/// A named workload scenario.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: &'static str,
+    pub summary: &'static str,
+    pub classes: Vec<TrafficClass>,
+    pub shape: LoadShape,
+    /// Trace horizon, seconds.
+    pub duration: f64,
+    /// Warm-up prefix excluded from scoring, seconds.
+    pub warmup: f64,
+    /// Nominal time-averaged offered rate (req/s) when the caller gives
+    /// none — tuned for the default 8-instance CodeLlama-34B/L20 layout.
+    pub default_rate: f64,
+}
+
+impl Scenario {
+    /// The dataset whose SLO pair drives the *scheduler* (admission and
+    /// routing decisions): the tightest-TTFT class. Scoring remains
+    /// per-class against each class's own SLOs.
+    pub fn scheduler_dataset(&self) -> Dataset {
+        self.classes
+            .iter()
+            .min_by(|a, b| {
+                a.dataset
+                    .slo_ttft
+                    .partial_cmp(&b.dataset.slo_ttft)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .expect("scenario has at least one class")
+            .dataset
+            .clone()
+    }
+
+    /// Which traffic class a request id belongs to (ids are tagged
+    /// `idx × n_classes + class` by [`Scenario::build_trace`]).
+    pub fn class_of(&self, id: u64) -> usize {
+        (id % self.classes.len() as u64) as usize
+    }
+
+    /// Deterministically generate the merged multi-class trace at
+    /// time-averaged `rate` req/s: bit-for-bit reproducible from
+    /// (scenario, seed, rate), matching the simulator's determinism
+    /// contract (`sim::engine` orders ties by insertion).
+    pub fn build_trace(&self, seed: u64, rate: f64) -> Vec<Request> {
+        let n_classes = self.classes.len() as u64;
+        let mut merged: Vec<Request> = Vec::new();
+        for (k, class) in self.classes.iter().enumerate() {
+            let steps = self.shape.steps(rate * class.share, self.duration);
+            // Per-class stream: distinct seeds give independent arrivals.
+            let gen = TraceGenerator::new(
+                class.dataset.clone(),
+                seed.wrapping_add(0x9E37_79B9u64.wrapping_mul(k as u64 + 1)),
+            );
+            for mut req in gen.ramp(&steps) {
+                req.id = req.id * n_classes + k as u64;
+                merged.push(req);
+            }
+        }
+        merged.sort_by(|a, b| {
+            a.arrival
+                .partial_cmp(&b.arrival)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.id.cmp(&b.id))
+        });
+        merged
+    }
+}
+
+fn single(class_name: &'static str, dataset: Dataset) -> Vec<TrafficClass> {
+    vec![TrafficClass { name: class_name, dataset, share: 1.0 }]
+}
+
+/// The built-in scenario registry (≥ 5 entries; `ecoserve scenarios
+/// --list` prints this table).
+pub fn registry() -> Vec<Scenario> {
+    vec![
+        Scenario {
+            name: "steady",
+            summary: "fixed-rate Poisson on ShareGPT — the paper's §4.1 operating point",
+            classes: single("chat", Dataset::sharegpt()),
+            shape: LoadShape::Steady,
+            duration: 240.0,
+            warmup: 30.0,
+            default_rate: 8.0,
+        },
+        Scenario {
+            name: "bursty",
+            summary: "on/off bursts at 2.5x the mean rate — flash-crowd resilience \
+                      (rolling activation must absorb each front)",
+            classes: single("chat", Dataset::sharegpt()),
+            shape: LoadShape::OnOff { period: 60.0, duty: 0.3, peak_to_mean: 2.5 },
+            duration: 300.0,
+            warmup: 30.0,
+            default_rate: 6.0,
+        },
+        Scenario {
+            name: "diurnal",
+            summary: "half-sine day curve, 0.4x..1.8x the mean rate in 12 steps",
+            classes: single("chat", Dataset::sharegpt()),
+            shape: LoadShape::Diurnal { trough_mult: 0.4, peak_mult: 1.8, segments: 12 },
+            duration: 360.0,
+            warmup: 30.0,
+            default_rate: 7.0,
+        },
+        Scenario {
+            name: "heavy-tail",
+            summary: "LongBench long-context prompts (heavy-tailed inputs, short \
+                      outputs) at steady rate — maximal prefill/decode interference",
+            classes: single("summarize", Dataset::longbench()),
+            shape: LoadShape::Steady,
+            duration: 240.0,
+            warmup: 30.0,
+            default_rate: 2.5,
+        },
+        Scenario {
+            name: "mixed-slo",
+            summary: "70% interactive (Alpaca, 1s TTFT SLO) + 30% batch (LongBench, \
+                      15s TTFT SLO) sharing the fleet; scored per class",
+            classes: vec![
+                TrafficClass { name: "interactive", dataset: Dataset::alpaca(), share: 0.7 },
+                TrafficClass { name: "batch", dataset: Dataset::longbench(), share: 0.3 },
+            ],
+            shape: LoadShape::Steady,
+            duration: 240.0,
+            warmup: 30.0,
+            default_rate: 6.0,
+        },
+        Scenario {
+            name: "surge",
+            summary: "monotone escalation 0.5x -> 1.5x of the mean rate in 6 steps \
+                      (the Figure-10 ramp, without autoscaling)",
+            classes: single("chat", Dataset::sharegpt()),
+            shape: LoadShape::Ramp { start_mult: 0.5, end_mult: 1.5, increments: 6 },
+            duration: 300.0,
+            warmup: 30.0,
+            default_rate: 6.0,
+        },
+    ]
+}
+
+/// Look a scenario up by (case-insensitive) name.
+pub fn by_name(name: &str) -> Option<Scenario> {
+    let lower = name.to_ascii_lowercase();
+    registry().into_iter().find(|s| s.name == lower)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_at_least_five_unique_scenarios() {
+        let all = registry();
+        assert!(all.len() >= 5, "only {} scenarios", all.len());
+        let mut names: Vec<&str> = all.iter().map(|s| s.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), all.len(), "duplicate scenario names");
+        for s in &all {
+            let share: f64 = s.classes.iter().map(|c| c.share).sum();
+            assert!((share - 1.0).abs() < 1e-9, "{}: shares sum {share}", s.name);
+            assert!(s.warmup < s.duration, "{}", s.name);
+            assert!(s.default_rate > 0.0, "{}", s.name);
+        }
+    }
+
+    #[test]
+    fn lookup_is_case_insensitive() {
+        assert!(by_name("BURSTY").is_some());
+        assert!(by_name("mixed-slo").is_some());
+        assert!(by_name("nonexistent").is_none());
+    }
+
+    #[test]
+    fn shapes_preserve_the_mean_rate() {
+        for s in registry() {
+            let rate = 6.0;
+            let steps = s.shape.steps(rate, s.duration);
+            let total_time: f64 = steps.iter().map(|(_, d)| d).sum();
+            let weighted: f64 = steps.iter().map(|(r, d)| r * d).sum();
+            assert!(
+                (total_time - s.duration).abs() < 1e-6,
+                "{}: steps cover {total_time}s of {}s",
+                s.name,
+                s.duration
+            );
+            let mean = weighted / total_time;
+            assert!(
+                (mean - rate).abs() / rate < 0.02,
+                "{}: mean rate {mean} vs nominal {rate}",
+                s.name
+            );
+            for (r, d) in steps {
+                assert!(r > 0.0 && d > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn onoff_alternates_peak_and_trough() {
+        let shape = LoadShape::OnOff { period: 60.0, duty: 0.3, peak_to_mean: 2.5 };
+        let steps = shape.steps(6.0, 300.0);
+        assert!(steps.len() >= 9, "{}", steps.len());
+        assert!((steps[0].0 - 15.0).abs() < 1e-9, "peak {}", steps[0].0);
+        assert!(steps[1].0 < 6.0, "trough {}", steps[1].0);
+        assert!((steps[0].1 - 18.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn trace_is_deterministic_and_class_tagged() {
+        let s = by_name("mixed-slo").unwrap();
+        let a = s.build_trace(42, 6.0);
+        let b = s.build_trace(42, 6.0);
+        assert_eq!(a, b, "same (scenario, seed, rate) must be bit-for-bit equal");
+        assert_ne!(a, s.build_trace(43, 6.0));
+        assert!(!a.is_empty());
+        let interactive = a.iter().filter(|r| s.class_of(r.id) == 0).count();
+        let batch = a.iter().filter(|r| s.class_of(r.id) == 1).count();
+        assert!(interactive > batch, "{interactive} vs {batch}");
+        assert!(batch > 0);
+        for w in a.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival, "merged trace must be sorted");
+        }
+    }
+
+    #[test]
+    fn scheduler_dataset_is_tightest_ttft_class() {
+        let s = by_name("mixed-slo").unwrap();
+        assert_eq!(s.scheduler_dataset().name, "Alpaca-gpt4");
+        let steady = by_name("steady").unwrap();
+        assert_eq!(steady.scheduler_dataset().name, "ShareGPT");
+    }
+}

@@ -1,0 +1,180 @@
+//! Machine-readable (JSON, via the in-tree `util::json`) and human
+//! (table) renderings of scenario-suite outcomes. The JSON shape is the
+//! contract consumed by CI artifacts and downstream tooling; keep it
+//! stable and additive.
+
+use super::driver::{ScenarioConfig, ScenarioOutcome, SystemRow};
+use crate::util::json::Json;
+
+fn pct_obj(p50: f64, p90: f64, p99: f64) -> Json {
+    Json::obj(vec![
+        ("p50", Json::num(p50)),
+        ("p90", Json::num(p90)),
+        ("p99", Json::num(p99)),
+    ])
+}
+
+fn row_to_json(row: &SystemRow) -> Json {
+    let s = &row.summary;
+    Json::obj(vec![
+        ("system", Json::str(row.system.label())),
+        ("arrived", Json::num(row.arrived as f64)),
+        ("completed", Json::num(row.completed as f64)),
+        ("met_slo", Json::num(row.met as f64)),
+        ("attainment", Json::num(row.attainment)),
+        ("goodput_rps", Json::num(row.goodput_rps)),
+        ("token_throughput", Json::num(s.token_throughput)),
+        ("ttft_s", pct_obj(s.ttft_p50, s.ttft_p90, s.ttft_p99)),
+        ("tpot_s", pct_obj(s.tpot_p50, s.tpot_p90, s.tpot_p99)),
+        (
+            "classes",
+            Json::arr(row.classes.iter().map(|c| {
+                Json::obj(vec![
+                    ("class", Json::str(c.class)),
+                    ("arrived", Json::num(c.arrived as f64)),
+                    ("met_slo", Json::num(c.met as f64)),
+                    ("attainment", Json::num(c.attainment)),
+                ])
+            })),
+        ),
+        ("sim_events", Json::num(row.events as f64)),
+    ])
+}
+
+fn outcome_to_json(outcome: &ScenarioOutcome) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(outcome.scenario.name)),
+        ("summary", Json::str(outcome.scenario.summary)),
+        ("offered_rate_rps", Json::num(outcome.rate)),
+        ("duration_s", Json::num(outcome.duration)),
+        ("warmup_s", Json::num(outcome.warmup)),
+        (
+            "best_system",
+            match outcome.best() {
+                Some(r) => Json::str(r.system.label()),
+                None => Json::Null,
+            },
+        ),
+        ("systems", Json::arr(outcome.rows.iter().map(row_to_json))),
+    ])
+}
+
+/// The full suite report.
+pub fn suite_to_json(outcomes: &[ScenarioOutcome], cfg: &ScenarioConfig) -> Json {
+    let d = &cfg.deployment;
+    Json::obj(vec![
+        ("suite", Json::str("ecoserve-scenarios")),
+        ("version", Json::num(1.0)),
+        ("seed", Json::num(cfg.seed as f64)),
+        (
+            "deployment",
+            Json::obj(vec![
+                ("model", Json::str(d.model.name)),
+                ("cluster", Json::str(d.cluster.name)),
+                ("gpus_used", Json::num(d.gpus_used as f64)),
+                ("tp", Json::num(d.tp as f64)),
+                ("pp", Json::num(d.pp as f64)),
+                ("instances", Json::num(d.num_instances() as f64)),
+            ]),
+        ),
+        ("scenarios", Json::arr(outcomes.iter().map(outcome_to_json))),
+    ])
+}
+
+/// Human-readable table for one scenario outcome.
+pub fn render_table(outcome: &ScenarioOutcome) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "--- scenario '{}' @ {:.2} req/s (window {:.0}..{:.0}s) ---\n",
+        outcome.scenario.name, outcome.rate, outcome.warmup, outcome.duration
+    ));
+    out.push_str(&format!(
+        "{:<10} {:>8} {:>9} {:>10} {:>11} {:>11} {:>11}\n",
+        "system", "arrived", "attain %", "goodput/s", "p99TTFT s", "p99TPOT ms", "tok/s"
+    ));
+    for row in &outcome.rows {
+        let s = &row.summary;
+        out.push_str(&format!(
+            "{:<10} {:>8} {:>9.1} {:>10.2} {:>11.2} {:>11.1} {:>11.0}\n",
+            row.system.label(),
+            row.arrived,
+            row.attainment * 100.0,
+            row.goodput_rps,
+            s.ttft_p99,
+            s.tpot_p99 * 1e3,
+            s.token_throughput,
+        ));
+        if row.classes.len() > 1 {
+            for c in &row.classes {
+                out.push_str(&format!(
+                    "  {:<12} class '{}': {}/{} met ({:.1}%)\n",
+                    "", c.class, c.met, c.arrived, c.attainment * 100.0
+                ));
+            }
+        }
+    }
+    if let Some(best) = outcome.best() {
+        out.push_str(&format!("  best: {}\n", best.system.label()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemKind;
+    use crate::scenarios::driver::run_scenario;
+    use crate::scenarios::registry::by_name;
+
+    fn outcome() -> (ScenarioOutcome, ScenarioConfig) {
+        let mut cfg = ScenarioConfig::default_l20();
+        cfg.deployment.gpus_used = 16;
+        cfg.duration_override = Some(45.0);
+        cfg.rate = Some(2.0);
+        let s = by_name("steady").unwrap();
+        (
+            run_scenario(&s, &cfg, &[SystemKind::EcoServe, SystemKind::Vllm]),
+            cfg,
+        )
+    }
+
+    #[test]
+    fn json_roundtrips_and_has_the_contract_fields() {
+        let (o, cfg) = outcome();
+        let j = suite_to_json(&[o], &cfg);
+        let text = j.to_string();
+        let back = Json::parse(&text).expect("report must be valid JSON");
+        assert_eq!(back.path(&["suite"]).unwrap().as_str(), Some("ecoserve-scenarios"));
+        assert_eq!(
+            back.path(&["deployment", "instances"]).unwrap().as_i64(),
+            Some(4)
+        );
+        let scenarios = back.get("scenarios").unwrap().as_arr().unwrap();
+        assert_eq!(scenarios.len(), 1);
+        let sc = &scenarios[0];
+        assert_eq!(sc.get("name").unwrap().as_str(), Some("steady"));
+        let systems = sc.get("systems").unwrap().as_arr().unwrap();
+        assert_eq!(systems.len(), 2);
+        for sys in systems {
+            for key in [
+                "system", "arrived", "attainment", "goodput_rps", "ttft_s",
+                "tpot_s", "classes",
+            ] {
+                assert!(sys.get(key).is_some(), "missing {key}");
+            }
+            let a = sys.get("attainment").unwrap().as_f64().unwrap();
+            assert!((0.0..=1.0).contains(&a));
+            assert!(sys.path(&["ttft_s", "p99"]).unwrap().as_f64().is_some());
+        }
+        assert!(sc.get("best_system").unwrap().as_str().is_some());
+    }
+
+    #[test]
+    fn table_renders_every_system() {
+        let (o, _) = outcome();
+        let table = render_table(&o);
+        assert!(table.contains("EcoServe"));
+        assert!(table.contains("vLLM"));
+        assert!(table.contains("best:"));
+    }
+}

@@ -140,6 +140,92 @@ mod tests {
         assert_eq!(r.total_duration(), 720.0);
     }
 
+    /// The PRNG beneath every arrival process is pinned bit-for-bit:
+    /// these u64 outputs are platform-independent integer arithmetic
+    /// (goldens computed from an independent PCG64 implementation), so a
+    /// silent change to `util::rng` — which would invalidate every
+    /// recorded experiment — fails here first.
+    #[test]
+    fn arrival_prng_is_pinned_bit_for_bit() {
+        let mut g = Pcg64::seeded(42);
+        assert_eq!(
+            [g.next_u64(), g.next_u64(), g.next_u64(), g.next_u64()],
+            [
+                4540806433264105130,
+                7249376888367367666,
+                1981322806045522308,
+                9441508507294158916,
+            ]
+        );
+        // The exact stream the Poisson generator forks for seed 7.
+        let mut p = Pcg64::new(7, 0xA11);
+        assert_eq!(p.next_u64(), 3821966030618647287);
+        assert_eq!(p.next_u64(), 14877528384138739846);
+    }
+
+    /// Golden first-arrivals for the Poisson process (seed 7, ShareGPT,
+    /// 10 req/s). Arrival times are pinned to 1e-9 relative (libm `ln`
+    /// may differ by an ulp across platforms); sampled lengths are exact.
+    #[test]
+    fn poisson_matches_golden_trace() {
+        let g = TraceGenerator::new(Dataset::sharegpt(), 7);
+        let reqs = g.poisson(10.0, 100.0);
+        let golden = [
+            (0.023217066548171496, 61usize, 1027usize),
+            (0.02627262761252519, 54, 45),
+            (0.08672561249800251, 642, 2048),
+        ];
+        for (i, (t, inp, out)) in golden.into_iter().enumerate() {
+            let r = &reqs[i];
+            assert!(
+                (r.arrival - t).abs() <= 1e-9 * t.max(1.0),
+                "req {i} arrival {} vs golden {t}",
+                r.arrival
+            );
+            assert_eq!(r.input_len, inp, "req {i} input");
+            assert_eq!(r.output_len, out, "req {i} output");
+        }
+    }
+
+    /// Ramp traces are bit-for-bit deterministic per seed: two generators
+    /// built independently from the same (dataset, seed) must emit equal
+    /// traces — the same contract `sim::engine` gives events — and the
+    /// first arrivals match goldens from the independent implementation.
+    #[test]
+    fn ramp_deterministic_per_seed_bit_for_bit() {
+        let steps = [(5.0, 40.0), (15.0, 40.0)];
+        let a = TraceGenerator::new(Dataset::sharegpt(), 7).ramp(&steps);
+        let b = TraceGenerator::new(Dataset::sharegpt(), 7).ramp(&steps);
+        assert_eq!(a, b, "same seed, same ramp, different traces");
+        assert_ne!(a, TraceGenerator::new(Dataset::sharegpt(), 8).ramp(&steps));
+
+        // Golden anchor (seed 7): ~812 arrivals, first three pinned.
+        assert!(
+            (810..=814).contains(&a.len()),
+            "ramp length {} drifted from golden 812",
+            a.len()
+        );
+        let golden = [
+            (0.6310978863584902, 156usize, 76usize),
+            (0.6331215153050598, 602, 246),
+            (0.6619256835496219, 318, 65),
+        ];
+        for (i, (t, inp, out)) in golden.into_iter().enumerate() {
+            assert!(
+                (a[i].arrival - t).abs() <= 1e-9 * t.max(1.0),
+                "req {i} arrival {} vs golden {t}",
+                a[i].arrival
+            );
+            assert_eq!(a[i].input_len, inp);
+            assert_eq!(a[i].output_len, out);
+        }
+        // Rate split across the two legs (5 vs 15 req/s over 40 s each).
+        let early = a.iter().filter(|r| r.arrival < 40.0).count();
+        let late = a.len() - early;
+        assert!((150..=230).contains(&early), "early {early}");
+        assert!(late > 2 * early, "late {late} vs early {early}");
+    }
+
     #[test]
     fn ramp_trace_rates_increase() {
         let g = TraceGenerator::new(Dataset::sharegpt(), 3);

@@ -1,0 +1,132 @@
+//! Integration tests over the scenario suite: the registry is populated,
+//! traces are deterministic, the JSON report honors its contract, and —
+//! the headline claim — the PaDG coordinator beats at least one baseline
+//! on the bursty scenario at a fixed offered rate.
+
+use ecoserve::config::{ClusterSpec, Deployment, SystemKind};
+use ecoserve::perfmodel::ModelSpec;
+use ecoserve::scenarios::{
+    by_name, registry, run_scenario, suite_to_json, ScenarioConfig,
+};
+use ecoserve::util::json::Json;
+
+#[test]
+fn registry_lists_at_least_five_scenarios() {
+    let names: Vec<&str> = registry().iter().map(|s| s.name).collect();
+    assert!(names.len() >= 5, "{names:?}");
+    for required in ["steady", "bursty", "diurnal", "heavy-tail", "mixed-slo"] {
+        assert!(names.contains(&required), "missing scenario '{required}'");
+        assert!(by_name(required).is_some());
+    }
+}
+
+#[test]
+fn scenario_traces_are_bit_for_bit_deterministic() {
+    for s in registry() {
+        let a = s.build_trace(7, 3.0);
+        let b = s.build_trace(7, 3.0);
+        assert_eq!(a, b, "scenario '{}' trace not deterministic", s.name);
+        assert!(!a.is_empty(), "scenario '{}' produced no requests", s.name);
+    }
+}
+
+/// The paper's core claim transplanted to bursty load: temporal
+/// disaggregation + rolling activation absorb 2.5x flash crowds that
+/// break at least one baseline. Llama-30B's MHA KV (1.52 MiB/token)
+/// makes the FuDG baselines transfer-bound over commodity Ethernet, and
+/// the bursts squeeze the NoDG systems' prefill/decode interference, so
+/// EcoServe must come out ahead of somebody at this operating point.
+#[test]
+fn padg_beats_a_baseline_on_bursty_load() {
+    let mut cfg = ScenarioConfig::default_l20();
+    cfg.deployment = Deployment::paper_default(
+        ModelSpec::llama_30b(),
+        ClusterSpec::l20_cluster(),
+    );
+    cfg.deployment.gpus_used = 32; // 8 instances at TP=4
+    cfg.rate = Some(5.0);
+    cfg.duration_override = Some(180.0);
+    let bursty = by_name("bursty").expect("bursty scenario registered");
+    let outcome = run_scenario(&bursty, &cfg, &SystemKind::all());
+    assert_eq!(outcome.rows.len(), 5);
+
+    let eco = outcome.row(SystemKind::EcoServe).expect("ecoserve row");
+    assert!(
+        eco.arrived > 200,
+        "too few requests to be meaningful: {}",
+        eco.arrived
+    );
+    let beaten: Vec<(SystemKind, f64)> = outcome
+        .rows
+        .iter()
+        .filter(|r| r.system != SystemKind::EcoServe)
+        .filter(|r| eco.attainment > r.attainment + 0.05)
+        .map(|r| (r.system, r.attainment))
+        .collect();
+    assert!(
+        !beaten.is_empty(),
+        "EcoServe ({:.3}) beat no baseline: {:?}",
+        eco.attainment,
+        outcome
+            .rows
+            .iter()
+            .map(|r| (r.system.label(), r.attainment))
+            .collect::<Vec<_>>()
+    );
+    // Sanity on the winner itself: the bursts are sized to strain, not to
+    // flatten, the PaDG coordinator.
+    assert!(
+        eco.attainment > 0.5,
+        "EcoServe collapsed on bursty load: {:.3}",
+        eco.attainment
+    );
+}
+
+#[test]
+fn mixed_slo_scenario_reports_per_class_attainment() {
+    let mut cfg = ScenarioConfig::default_l20();
+    cfg.deployment.gpus_used = 16;
+    cfg.rate = Some(3.0);
+    cfg.duration_override = Some(90.0);
+    let mixed = by_name("mixed-slo").unwrap();
+    let outcome = run_scenario(&mixed, &cfg, &[SystemKind::EcoServe]);
+    let row = &outcome.rows[0];
+    assert_eq!(row.classes.len(), 2);
+    let names: Vec<&str> = row.classes.iter().map(|c| c.class).collect();
+    assert_eq!(names, vec!["interactive", "batch"]);
+    for c in &row.classes {
+        assert!(c.arrived > 0, "class '{}' got no traffic", c.class);
+        assert!(c.met <= c.arrived);
+        assert!((0.0..=1.0).contains(&c.attainment));
+    }
+    assert_eq!(
+        row.arrived,
+        row.classes.iter().map(|c| c.arrived).sum::<usize>()
+    );
+}
+
+#[test]
+fn json_report_contract_holds_end_to_end() {
+    let mut cfg = ScenarioConfig::default_l20();
+    cfg.deployment.gpus_used = 16;
+    cfg.rate = Some(2.0);
+    cfg.duration_override = Some(60.0);
+    let steady = by_name("steady").unwrap();
+    let outcome = run_scenario(&steady, &cfg, &[SystemKind::EcoServe, SystemKind::Sarathi]);
+    let wire = suite_to_json(&[outcome], &cfg).to_string();
+    let parsed = Json::parse(&wire).expect("valid JSON");
+    assert_eq!(parsed.path(&["suite"]).unwrap().as_str(), Some("ecoserve-scenarios"));
+    let systems = parsed
+        .path(&["scenarios"])
+        .and_then(|s| s.idx(0))
+        .and_then(|s| s.get("systems"))
+        .and_then(|s| s.as_arr())
+        .expect("scenarios[0].systems");
+    assert_eq!(systems.len(), 2);
+    for sys in systems {
+        assert!(sys.path(&["ttft_s", "p50"]).is_some());
+        assert!(sys.path(&["tpot_s", "p99"]).is_some());
+        assert!(sys.get("goodput_rps").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(sys.get("attainment").unwrap().as_f64().unwrap() <= 1.0);
+    }
+}

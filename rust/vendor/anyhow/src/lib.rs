@@ -1,0 +1,202 @@
+//! In-tree substrate for the `anyhow` crate, API-compatible with the
+//! subset this workspace uses (the offline image has no crates.io access;
+//! see `rust/src/util/mod.rs` for the same pattern applied to `rand`,
+//! `serde_json`, `clap`, and `tokio`).
+//!
+//! Provided surface:
+//! * [`Error`] — a context-chain error; `{e}` prints the outermost
+//!   message, `{e:#}` the whole chain joined with `": "` (matching real
+//!   anyhow's alternate Display).
+//! * [`Result<T>`] with the `E = Error` default parameter.
+//! * [`Context`] — `.context(msg)` / `.with_context(|| msg)` on both
+//!   `Result` and `Option`.
+//! * [`anyhow!`], [`bail!`], [`ensure!`] macros.
+//!
+//! Like the real crate, [`Error`] deliberately does **not** implement
+//! `std::error::Error`, so the blanket `From<E: std::error::Error>`
+//! impl (which powers `?` on foreign errors) stays coherent.
+
+use std::fmt;
+
+/// A context-chain error. `chain[0]` is the outermost context, the last
+/// element the root cause.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a single message.
+    pub fn msg(message: impl fmt::Display) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context(mut self, message: impl fmt::Display) -> Error {
+        self.chain.insert(0, message.to_string());
+        self
+    }
+
+    /// The messages from outermost context to root cause.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Real anyhow's Debug prints the message plus a "Caused by" list;
+        // the joined chain carries the same information on one line.
+        f.write_str(&self.chain.join(": "))
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>`: `std::result::Result` with [`Error`] as the
+/// default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to `Result` and `Option` values.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built from format arguments.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_io() -> Result<String> {
+        let s = std::fs::read_to_string("/nonexistent/definitely/missing")
+            .context("read config")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn context_chain_formats() {
+        let err = fails_io().unwrap_err();
+        let plain = format!("{err}");
+        let alt = format!("{err:#}");
+        assert_eq!(plain, "read config");
+        assert!(alt.starts_with("read config: "), "{alt}");
+        assert!(alt.len() > plain.len());
+    }
+
+    #[test]
+    fn option_context() {
+        let x: Option<u32> = None;
+        let err = x.with_context(|| format!("missing {}", "field")).unwrap_err();
+        assert_eq!(format!("{err}"), "missing field");
+        assert_eq!(Some(7).context("unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn question_mark_converts_foreign_errors() {
+        fn parse() -> Result<u32> {
+            let n: u32 = "not a number".parse()?;
+            Ok(n)
+        }
+        assert!(parse().is_err());
+    }
+
+    #[test]
+    fn macros() {
+        fn inner(flag: bool) -> Result<()> {
+            ensure!(flag, "flag was {flag}");
+            bail!("reached the end: {}", 42);
+        }
+        assert_eq!(format!("{}", inner(false).unwrap_err()), "flag was false");
+        assert_eq!(format!("{}", inner(true).unwrap_err()), "reached the end: 42");
+        let e = anyhow!("plain");
+        assert_eq!(format!("{e}"), "plain");
+    }
+
+    #[test]
+    fn root_cause_is_innermost() {
+        let err = fails_io().unwrap_err();
+        assert_ne!(err.root_cause(), "read config");
+        assert!(err.chain().count() >= 2);
+    }
+}
