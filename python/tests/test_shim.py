@@ -1,0 +1,131 @@
+"""The vendored hypothesis shim's own contract (no jax needed).
+
+Loaded under an alias straight from python/vendor so these checks run —
+and keep the shim honest — even when a real hypothesis install shadows
+it on sys.path.
+"""
+
+import importlib.util
+import pathlib
+import sys
+
+import pytest
+
+_VENDOR = pathlib.Path(__file__).resolve().parents[1] / "vendor"
+_ALIAS = "ecoserve_hypothesis_shim"
+
+
+def _load_shim():
+    if _ALIAS in sys.modules:
+        return sys.modules[_ALIAS]
+    spec = importlib.util.spec_from_file_location(
+        _ALIAS,
+        _VENDOR / "hypothesis" / "__init__.py",
+        submodule_search_locations=[str(_VENDOR / "hypothesis")],
+    )
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules[_ALIAS] = mod
+    spec.loader.exec_module(mod)
+    return mod
+
+
+shim = _load_shim()
+st = shim.strategies
+
+
+def test_given_runs_max_examples_times():
+    calls = []
+
+    @shim.settings(max_examples=7, deadline=None)
+    @shim.given(n=st.integers(1, 16), d=st.sampled_from([8, 16, 32]))
+    def probe(n, d):
+        assert 1 <= n <= 16
+        assert d in (8, 16, 32)
+        calls.append((n, d))
+
+    probe()
+    assert len(calls) == 7
+
+
+def test_settings_composes_in_either_decorator_order():
+    calls = []
+
+    @shim.given(n=st.integers(0, 5))
+    def inner_given_first(n):
+        calls.append(n)
+
+    shim.settings(max_examples=3)(inner_given_first)()
+    assert len(calls) == 3
+
+
+def test_examples_are_deterministic_across_runs():
+    def record():
+        out = []
+
+        @shim.settings(max_examples=10)
+        @shim.given(n=st.integers(0, 2**31 - 1), xs=st.lists(st.integers(0, 9), min_size=2, max_size=4))
+        def probe(n, xs):
+            out.append((n, tuple(xs)))
+
+        probe()
+        return out
+
+    assert record() == record()
+
+
+def test_lists_respects_size_bounds():
+    sizes = set()
+
+    @shim.settings(max_examples=40)
+    @shim.given(xs=st.lists(st.integers(1, 3), min_size=2, max_size=5))
+    def probe(xs):
+        sizes.add(len(xs))
+        assert all(1 <= x <= 3 for x in xs)
+
+    probe()
+    assert sizes <= {2, 3, 4, 5}
+    assert len(sizes) > 1, "size should vary across examples"
+
+
+def test_data_draw_shares_the_example_stream():
+    drawn = []
+
+    @shim.settings(max_examples=5)
+    @shim.given(b=st.integers(1, 4), data=st.data())
+    def probe(b, data):
+        xs = data.draw(st.lists(st.integers(1, 10), min_size=b, max_size=b))
+        assert len(xs) == b
+        drawn.append(tuple(xs))
+
+    probe()
+    assert len(drawn) == 5
+
+
+def test_failing_example_surfaces_drawn_arguments():
+    @shim.given(n=st.integers(1, 1))
+    def probe(n):
+        raise ValueError("boom")
+
+    with pytest.raises(AssertionError, match=r"falsifying example #0.*'n': 1"):
+        probe()
+
+
+def test_integer_bounds_are_overweighted():
+    seen = []
+
+    @shim.settings(max_examples=60)
+    @shim.given(n=st.integers(0, 1000))
+    def probe(n):
+        seen.append(n)
+
+    probe()
+    assert 0 in seen and 1000 in seen, "edges should appear quickly"
+
+
+def test_degenerate_strategy_inputs_raise():
+    with pytest.raises(ValueError):
+        st.integers(5, 1)
+    with pytest.raises(ValueError):
+        st.sampled_from([])
+    with pytest.raises(ValueError):
+        st.lists(st.integers(0, 1), min_size=4, max_size=2)

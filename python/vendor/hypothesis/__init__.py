@@ -1,0 +1,117 @@
+"""Vendored fallback shim for the `hypothesis` property-testing library.
+
+Offline/bare CI runners often have jax but cannot reach PyPI for
+hypothesis, which used to skip the L1/L2 oracle suites entirely
+(ROADMAP "hypothesis on CI"). This shim implements just enough of the
+hypothesis API for ``python/tests/test_{kernel,model}.py`` to run:
+
+* ``@given(**strategies)`` — draws ``max_examples`` keyword sets from a
+  *deterministic* per-example PRNG (seeded from the test's qualified
+  name and the example index via crc32, never the salted ``hash()``),
+  so failures reproduce across processes and machines;
+* ``@settings(max_examples=..., deadline=...)`` — composes with
+  ``given`` in either decorator order; ``deadline`` is accepted and
+  ignored;
+* ``strategies`` (``st``) — ``integers``, ``sampled_from``, ``lists``,
+  and ``data()`` with mid-test ``data.draw(...)``.
+
+No shrinking, no database, no coverage-guided generation — a failing
+example simply raises with its drawn arguments visible in the traceback
+(pytest shows the parameter values). ``python/conftest.py`` puts this
+package on ``sys.path`` only when the real hypothesis is missing, so a
+proper install always wins.
+"""
+
+import functools
+import inspect
+import random
+import zlib
+
+from . import strategies
+from .strategies import DataStrategy
+
+__all__ = ["given", "settings", "strategies", "HealthCheck", "example"]
+
+__version__ = "0.0-ecoserve-shim"
+
+
+def _stable_seed(name, index):
+    """Cross-process-stable example seed (``hash()`` is salted; crc32 is
+    not)."""
+    return zlib.crc32(f"{name}:{index}".encode("utf-8"))
+
+
+class settings:
+    """Decorator recording example-count knobs for ``given``."""
+
+    DEFAULT_MAX_EXAMPLES = 20
+
+    def __init__(self, max_examples=DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+        self.max_examples = max_examples
+        self.deadline = deadline
+
+    def __call__(self, fn):
+        fn._shim_settings = self
+        return fn
+
+
+class HealthCheck:
+    """API-compatibility stub: real hypothesis exposes suppressible
+    health checks; the shim has none."""
+
+    all = classmethod(lambda cls: [])
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+
+
+def example(*_args, **_kwargs):
+    """API-compatibility stub: explicit examples are not replayed."""
+
+    def deco(fn):
+        return fn
+
+    return deco
+
+
+def given(**strats):
+    """Drive the wrapped test with deterministically drawn keyword sets.
+
+    Only keyword-style strategies are supported — which is how every
+    EcoServe test invokes hypothesis.
+    """
+    if not strats:
+        raise TypeError("shim given() requires keyword strategies")
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            cfg = getattr(wrapper, "_shim_settings", None) or getattr(
+                fn, "_shim_settings", None
+            )
+            n = cfg.max_examples if cfg else settings.DEFAULT_MAX_EXAMPLES
+            for i in range(n):
+                rng = random.Random(_stable_seed(fn.__qualname__, i))
+                drawn = {}
+                for name, strat in strats.items():
+                    drawn[name] = strat.example(rng)
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except Exception as err:
+                    shown = {
+                        k: v for k, v in drawn.items()
+                        if not isinstance(strats[k], DataStrategy)
+                    }
+                    raise AssertionError(
+                        f"falsifying example #{i} for {fn.__qualname__}: "
+                        f"{shown!r}"
+                    ) from err
+
+        wrapper.hypothesis_shim = True
+        # functools.wraps exposes the wrapped test's parameters through
+        # __wrapped__, which pytest would then demand as fixtures; pin an
+        # explicit zero-argument signature (inspect stops unwrapping at
+        # the first __signature__ it finds).
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+
+    return deco

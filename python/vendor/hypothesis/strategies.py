@@ -1,0 +1,99 @@
+"""Strategies for the vendored hypothesis fallback shim.
+
+Only the strategy surface the EcoServe test suites use is implemented:
+``integers``, ``sampled_from``, ``lists``, and ``data``. Each strategy is
+a tiny object with an ``example(rng)`` method drawing one value from a
+seeded ``random.Random`` — the shim's ``@given`` drives it with a
+deterministic per-example PRNG (see ``hypothesis/__init__.py``).
+"""
+
+
+class SearchStrategy:
+    """Base class: a drawable distribution over values."""
+
+    def example(self, rng):
+        raise NotImplementedError
+
+    def __repr__(self):  # pragma: no cover - debugging aid
+        return type(self).__name__
+
+
+class _Integers(SearchStrategy):
+    """Uniform integers on [min_value, max_value], with the bounds
+    themselves over-weighted (edge cases find bugs first)."""
+
+    def __init__(self, min_value, max_value):
+        if min_value > max_value:
+            raise ValueError(f"integers({min_value}, {max_value}): empty range")
+        self.min_value = min_value
+        self.max_value = max_value
+
+    def example(self, rng):
+        roll = rng.random()
+        if roll < 0.1:
+            return self.min_value
+        if roll < 0.2:
+            return self.max_value
+        return rng.randint(self.min_value, self.max_value)
+
+
+class _SampledFrom(SearchStrategy):
+    def __init__(self, elements):
+        self.elements = list(elements)
+        if not self.elements:
+            raise ValueError("sampled_from() needs a non-empty collection")
+
+    def example(self, rng):
+        return rng.choice(self.elements)
+
+
+class _Lists(SearchStrategy):
+    def __init__(self, elements, min_size=0, max_size=None):
+        if max_size is None:
+            max_size = min_size + 10
+        if min_size > max_size:
+            raise ValueError(f"lists(min_size={min_size}, max_size={max_size})")
+        self.elements = elements
+        self.min_size = min_size
+        self.max_size = max_size
+
+    def example(self, rng):
+        size = rng.randint(self.min_size, self.max_size)
+        return [self.elements.example(rng) for _ in range(size)]
+
+
+class DataStrategy(SearchStrategy):
+    """Marker strategy: ``@given(data=st.data())`` receives a
+    [`DataObject`] for interactive mid-test draws."""
+
+    def example(self, rng):
+        return DataObject(rng)
+
+
+class DataObject:
+    """Interactive draws sharing the example's PRNG stream."""
+
+    def __init__(self, rng):
+        self._rng = rng
+
+    def draw(self, strategy, label=None):
+        return strategy.example(self._rng)
+
+    def __repr__(self):  # pragma: no cover - debugging aid
+        return "data(...)"
+
+
+def integers(min_value, max_value):
+    return _Integers(min_value, max_value)
+
+
+def sampled_from(elements):
+    return _SampledFrom(elements)
+
+
+def lists(elements, min_size=0, max_size=None):
+    return _Lists(elements, min_size=min_size, max_size=max_size)
+
+
+def data():
+    return DataStrategy()

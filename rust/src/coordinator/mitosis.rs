@@ -63,6 +63,12 @@ impl MitosisState {
         self.macros.iter().position(|m| m.contains(&instance))
     }
 
+    /// Member count per macro instance — the shape the frontier's
+    /// mitosis-on telemetry reports after a run (e.g. `[6, 4]`).
+    pub fn macro_sizes(&self) -> Vec<usize> {
+        self.macros.iter().map(|m| m.len()).collect()
+    }
+
     /// Expansion: add `instance`, splitting if the growing macro would
     /// exceed `N_u`. Returns the ops performed.
     pub fn add_instance(&mut self, instance: usize) -> Vec<ScaleOp> {
@@ -253,5 +259,17 @@ mod tests {
         let s = MitosisState::with_initial(vec![3, 5, 9], 2, 6);
         assert_eq!(s.macro_of(5), Some(0));
         assert_eq!(s.macro_of(7), None);
+    }
+
+    #[test]
+    fn macro_sizes_reports_membership_shape() {
+        let s = MitosisState {
+            macros: vec![(0..6).collect(), (6..10).collect()],
+            n_lower: 3,
+            n_upper: 6,
+        };
+        assert_eq!(s.macro_sizes(), vec![6, 4]);
+        assert_eq!(s.macro_sizes().iter().sum::<usize>(), s.total_instances());
+        assert!(MitosisState::new(2, 4).macro_sizes().is_empty());
     }
 }

@@ -23,4 +23,4 @@ pub mod proxy;
 pub mod routing;
 
 pub use constraints::{check_constraints, ConstraintVerdict};
-pub use padg::EcoServeSystem;
+pub use padg::{AutoScalePolicy, EcoServeSystem, ScaleEvent};

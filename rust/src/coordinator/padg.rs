@@ -135,6 +135,26 @@ impl EcoServeSystem {
         Self::with_capacity(deployment, slo, params, n, n)
     }
 
+    /// Mitosis-on constructor (Figure 10 / the frontier's autoscale
+    /// variant): start from `N_l` active instances (clamped to the fleet)
+    /// and let the controller grow toward the full deployment under
+    /// `policy`. With `num_instances <= N_l` the variant degenerates to
+    /// fixed capacity — the controller then only ever sheds idle
+    /// instances.
+    pub fn with_autoscale(
+        deployment: &Deployment,
+        slo: SloSpec,
+        params: SystemParams,
+        policy: AutoScalePolicy,
+    ) -> Self {
+        let n = deployment.num_instances();
+        assert!(n >= 1, "deployment has zero instances (gpus < tp*pp)");
+        let initial = params.n_lower.clamp(1, n);
+        let mut sys = Self::with_capacity(deployment, slo, params, initial, n);
+        sys.autoscale = Some(policy);
+        sys
+    }
+
     pub fn active_count(&self) -> usize {
         self.active.iter().filter(|a| **a).count()
     }
@@ -572,6 +592,33 @@ mod tests {
         );
         assert!(sys.scale_log.iter().any(|e| e.kind == "up"));
         sys.mitosis.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn with_autoscale_starts_at_n_lower_and_grows() {
+        let mut d = small_deployment();
+        d.gpus_used = 32; // 8 instances at TP=4
+        let mut sys = EcoServeSystem::with_autoscale(
+            &d,
+            SloSpec::new(5.0, 0.1),
+            SystemParams::default(),
+            AutoScalePolicy::default(),
+        );
+        assert_eq!(sys.active_count(), 4, "starts at N_l");
+        let gen = TraceGenerator::new(Dataset::sharegpt(), 9);
+        let trace = gen.ramp(&[(2.0, 60.0), (10.0, 60.0), (16.0, 120.0)]);
+        let mut metrics = Collector::new();
+        run(&mut sys, trace, 10_000.0, &mut metrics);
+        assert!(
+            sys.active_count() > 4,
+            "autoscale variant should grow: {:?}",
+            sys.scale_log
+        );
+        sys.mitosis.check_invariants().unwrap();
+        assert_eq!(
+            sys.mitosis.macro_sizes().iter().sum::<usize>(),
+            sys.mitosis.total_instances()
+        );
     }
 
     #[test]

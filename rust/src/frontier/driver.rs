@@ -1,0 +1,286 @@
+//! Frontier execution: for every (scenario × system [× variant]) cell,
+//! adaptively search for the maximum sustainable offered rate at a target
+//! per-class attainment level, regenerating the scenario's trace at every
+//! probed rate (traces are pure functions of (scenario, seed, rate), so
+//! each probe is a fresh deterministic experiment, not a replay).
+//!
+//! The sustain criterion is *strict and per-class*: a rate counts only if
+//! every traffic class holds the target attainment, with never-completed
+//! arrivals scored as violations. The optional mitosis-on variant starts
+//! PaDG at `N_l` active instances and lets the §3.5 controller grow the
+//! fleet (DynaServe arXiv:2504.09285 motivates putting elastic
+//! configurations on the same frontier as static ones).
+
+use std::time::{Duration, Instant};
+
+use super::search::{rate_search, Probe, SearchOutcome, SearchParams, SearchPoint};
+use crate::config::SystemKind;
+use crate::coordinator::AutoScalePolicy;
+use crate::metrics::Attainment;
+use crate::scenarios::{
+    run_system_variant, ClassScore, Scenario, ScenarioConfig, VariantSpec,
+};
+use crate::util::threads::parallel_map;
+
+/// Shared knobs for a frontier run.
+#[derive(Debug, Clone)]
+pub struct FrontierConfig {
+    /// Deployment / seed / horizon-override base. Its `rate` field is
+    /// ignored — the search owns the rate.
+    pub base: ScenarioConfig,
+    /// Attainment level a rate must sustain (paper reports P90/P99).
+    pub level: Attainment,
+    /// Also run the mitosis-on PaDG variant per scenario.
+    pub autoscale: bool,
+    /// Coarse search + short horizons — the CI smoke setting.
+    pub quick: bool,
+}
+
+/// Horizon used by `--quick` when the caller gave no explicit override.
+const QUICK_HORIZON_SECS: f64 = 40.0;
+
+impl FrontierConfig {
+    pub fn new(base: ScenarioConfig, level: Attainment) -> Self {
+        FrontierConfig { base, level, autoscale: false, quick: false }
+    }
+
+    /// Search bracket for one scenario: registry sweep bounds at this
+    /// config's target, coarsened in quick mode.
+    pub fn search_params(&self, scenario: &Scenario) -> SearchParams {
+        let b = scenario.sweep;
+        let params = SearchParams {
+            target: self.level.fraction(),
+            floor: b.floor,
+            start: b.start,
+            ceiling: b.ceiling,
+            max_doublings: 10,
+            bisections: 5,
+        };
+        if self.quick { params.quick() } else { params }
+    }
+
+    /// Per-probe scenario config (quick mode shortens the horizon unless
+    /// the caller overrode it explicitly).
+    fn probe_base(&self) -> ScenarioConfig {
+        let mut base = self.base.clone();
+        if self.quick && base.duration_override.is_none() {
+            base.duration_override = Some(QUICK_HORIZON_SECS);
+        }
+        base
+    }
+}
+
+/// One system's (or variant's) point on a scenario's goodput frontier.
+#[derive(Debug, Clone)]
+pub struct FrontierCell {
+    pub system: SystemKind,
+    /// True for the mitosis-on PaDG variant.
+    pub autoscale: bool,
+    /// Max offered rate sustaining the target per-class attainment
+    /// (0.0 when nothing was sustained).
+    pub max_rate: f64,
+    /// Delivered SLO-meeting completions per second at `max_rate`.
+    pub goodput_rps: f64,
+    /// Min per-class attainment at `max_rate`.
+    pub attainment: f64,
+    /// Per-class scores at `max_rate` (empty when nothing sustained).
+    pub classes: Vec<ClassScore>,
+    /// The sampled rate→attainment curve, sorted by rate.
+    pub curve: Vec<SearchPoint>,
+    /// True when the search stopped (sweep ceiling or doubling budget)
+    /// while still sustaining the target — `max_rate` is then a lower
+    /// bound set by the bracket, not the system.
+    pub saturated: bool,
+    pub probes: usize,
+    pub wall: Duration,
+}
+
+impl FrontierCell {
+    /// Display label distinguishing the mitosis-on variant.
+    pub fn variant_label(&self) -> &'static str {
+        if self.autoscale { "mitosis" } else { "fixed" }
+    }
+}
+
+/// One scenario's frontier across all requested systems/variants.
+#[derive(Debug)]
+pub struct ScenarioFrontier {
+    pub scenario: Scenario,
+    pub level: Attainment,
+    pub rows: Vec<FrontierCell>,
+}
+
+impl ScenarioFrontier {
+    /// The cell sustaining the highest rate (ties: higher goodput).
+    pub fn best(&self) -> Option<&FrontierCell> {
+        self.rows.iter().max_by(|a, b| {
+            (a.max_rate, a.goodput_rps)
+                .partial_cmp(&(b.max_rate, b.goodput_rps))
+                .unwrap_or(std::cmp::Ordering::Equal)
+        })
+    }
+
+    pub fn row(&self, kind: SystemKind, autoscale: bool) -> Option<&FrontierCell> {
+        self.rows
+            .iter()
+            .find(|r| r.system == kind && r.autoscale == autoscale)
+    }
+}
+
+/// Search one cell: adaptive rate probes, each a full deterministic
+/// scenario run scored strictly per class.
+pub fn run_cell(
+    scenario: &Scenario,
+    cfg: &FrontierConfig,
+    kind: SystemKind,
+    autoscale: bool,
+) -> FrontierCell {
+    let params = cfg.search_params(scenario);
+    let variant = if autoscale {
+        // The controller must chase the same attainment the frontier
+        // demands — a P99 sweep with a 0.90-satisfied controller would
+        // under-scale and under-report elastic capacity.
+        let mut policy = AutoScalePolicy::default();
+        policy.target_attainment = cfg.level.fraction();
+        VariantSpec { autoscale: Some(policy) }
+    } else {
+        VariantSpec::default()
+    };
+    let base = cfg.probe_base();
+    let t0 = Instant::now();
+    let outcome = rate_search(&params, |rate| {
+        let mut probe_cfg = base.clone();
+        probe_cfg.rate = Some(rate);
+        let row = run_system_variant(scenario, &probe_cfg, kind, &variant);
+        Probe {
+            attainment: row.min_class_attainment(),
+            goodput_rps: row.goodput_rps,
+            result: row,
+        }
+    });
+    let wall = t0.elapsed();
+    let SearchOutcome { max_rate, best, curve, probes, saturated } = outcome;
+    let (goodput_rps, attainment, classes) = match best {
+        Some(row) => (row.goodput_rps, row.min_class_attainment(), row.classes),
+        None => (0.0, 0.0, Vec::new()),
+    };
+    FrontierCell {
+        system: kind,
+        autoscale,
+        max_rate,
+        goodput_rps,
+        attainment,
+        classes,
+        curve,
+        saturated,
+        probes,
+        wall,
+    }
+}
+
+/// Run the frontier for `scenarios` × `systems` (plus the mitosis-on PaDG
+/// variant when configured) as one parallel job pool. Cell order within a
+/// scenario follows `systems`, with the autoscale variant appended.
+pub fn run_frontier(
+    scenarios: &[Scenario],
+    cfg: &FrontierConfig,
+    systems: &[SystemKind],
+    workers: usize,
+) -> Vec<ScenarioFrontier> {
+    let mut jobs: Vec<(usize, SystemKind, bool)> = Vec::new();
+    for si in 0..scenarios.len() {
+        for &kind in systems {
+            jobs.push((si, kind, false));
+        }
+        if cfg.autoscale && systems.contains(&SystemKind::EcoServe) {
+            jobs.push((si, SystemKind::EcoServe, true));
+        }
+    }
+    let cells = parallel_map(jobs, workers.max(1), |(si, kind, auto)| {
+        (si, run_cell(&scenarios[si], cfg, kind, auto))
+    });
+    let mut fronts: Vec<ScenarioFrontier> = scenarios
+        .iter()
+        .map(|s| ScenarioFrontier {
+            scenario: s.clone(),
+            level: cfg.level,
+            rows: Vec::new(),
+        })
+        .collect();
+    for (si, cell) in cells {
+        fronts[si].rows.push(cell);
+    }
+    fronts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenarios::by_name;
+
+    fn quick_frontier_cfg() -> FrontierConfig {
+        let mut base = ScenarioConfig::default_l20();
+        base.deployment.gpus_used = 16; // 4 instances — fast tests
+        let mut cfg = FrontierConfig::new(base, Attainment::P90);
+        cfg.quick = true;
+        cfg
+    }
+
+    #[test]
+    fn cell_search_finds_a_positive_sustained_rate() {
+        let s = by_name("steady").unwrap();
+        let cfg = quick_frontier_cfg();
+        let cell = run_cell(&s, &cfg, SystemKind::EcoServe, false);
+        assert!(cell.max_rate > 0.0, "curve: {:?}", cell.curve);
+        assert!(cell.max_rate <= s.sweep.ceiling);
+        assert!(cell.attainment >= 0.90 - 1e-9, "{}", cell.attainment);
+        assert!(cell.goodput_rps > 0.0);
+        // The core only guarantees >= (equal-rate re-probes are deduped).
+        assert!(cell.probes >= cell.curve.len());
+        assert!(!cell.classes.is_empty());
+        for w in cell.curve.windows(2) {
+            assert!(w[0].rate < w[1].rate);
+        }
+    }
+
+    #[test]
+    fn quick_mode_bounds_probe_count() {
+        let s = by_name("steady").unwrap();
+        let cfg = quick_frontier_cfg();
+        let params = cfg.search_params(&s);
+        assert!(params.bisections <= 3);
+        assert!(params.max_doublings <= 6);
+        // Worst case: bracket probes + crumb + bisections.
+        let cell = run_cell(&s, &cfg, SystemKind::Vllm, false);
+        assert!(
+            cell.probes <= params.max_doublings + params.bisections + 2,
+            "{}",
+            cell.probes
+        );
+    }
+
+    #[test]
+    fn frontier_groups_rows_and_appends_autoscale_variant() {
+        let scenarios = vec![by_name("steady").unwrap()];
+        let mut cfg = quick_frontier_cfg();
+        cfg.autoscale = true;
+        // 8 instances so the mitosis variant (initial N_l=4) has headroom.
+        cfg.base.deployment.gpus_used = 32;
+        let systems = [SystemKind::EcoServe, SystemKind::Vllm];
+        let fronts = run_frontier(&scenarios, &cfg, &systems, 4);
+        assert_eq!(fronts.len(), 1);
+        let f = &fronts[0];
+        assert_eq!(f.rows.len(), 3);
+        assert_eq!(f.rows[0].system, SystemKind::EcoServe);
+        assert!(!f.rows[0].autoscale);
+        assert_eq!(f.rows[1].system, SystemKind::Vllm);
+        assert_eq!(f.rows[2].system, SystemKind::EcoServe);
+        assert!(f.rows[2].autoscale);
+        assert_eq!(f.rows[2].variant_label(), "mitosis");
+        assert!(f.best().is_some());
+        assert!(f.row(SystemKind::EcoServe, true).is_some());
+        assert!(f.row(SystemKind::Vllm, true).is_none());
+        // The elastic variant must still sustain something.
+        assert!(f.rows[2].max_rate > 0.0);
+    }
+}

@@ -1,0 +1,35 @@
+//! The goodput frontier — capacity planning over the scenario suite.
+//!
+//! The paper's headline comparison is not "who wins at rate X" but "what
+//! is the maximum rate each system can sustain at the target SLO
+//! attainment" (§4.1; DistServe arXiv:2401.09670 formalizes the same
+//! goodput-frontier methodology). PR 1's scenario suite scores systems at
+//! fixed rates; this subsystem runs, for every scenario × system pair, an
+//! adaptive rate search — coarse doubling then bisection, via the single
+//! shared [`search`] core that [`crate::harness::goodput_search`] also
+//! uses — to find that maximum, optionally with mitosis autoscaling
+//! enabled for PaDG:
+//!
+//! ```text
+//! ecoserve frontier --scenario bursty --level p90 --out BENCH_goodput.json
+//! ecoserve frontier --quick --autoscale          # CI smoke setting
+//! ecoserve frontier --system vllm --gpus 16
+//! ```
+//!
+//! * [`search`] — the one rate-search implementation (bracket + bisect),
+//!   generic over the probe; every probe is recorded so searches yield
+//!   full rate→attainment curves.
+//! * [`driver`] — (scenario × system × variant) cells: each probe
+//!   regenerates the scenario trace at the probed rate and scores strict
+//!   per-class attainment; the mitosis-on variant starts PaDG at `N_l`
+//!   instances under the §3.5 controller.
+//! * [`report`] — the frontier table and the schema-versioned
+//!   `BENCH_goodput.json` CI uploads so future PRs track the trajectory.
+
+pub mod driver;
+pub mod report;
+pub mod search;
+
+pub use driver::{run_cell, run_frontier, FrontierCell, FrontierConfig, ScenarioFrontier};
+pub use report::{frontier_to_json, render_frontier_table};
+pub use search::{rate_search, Probe, SearchOutcome, SearchParams, SearchPoint};

@@ -1,0 +1,237 @@
+//! Renderings of frontier results: the human table and the
+//! machine-readable `BENCH_goodput.json` that CI uploads as a build
+//! artifact so successive PRs can track the performance trajectory.
+//! The JSON shares its `schema_version` with the scenario-suite report
+//! ([`crate::scenarios::SCHEMA_VERSION`]); keep changes additive.
+
+use std::time::Duration;
+
+use super::driver::{FrontierCell, FrontierConfig, ScenarioFrontier};
+use crate::scenarios::{class_to_json, deployment_to_json, SCHEMA_VERSION};
+use crate::util::json::Json;
+
+fn cell_to_json(cell: &FrontierCell) -> Json {
+    Json::obj(vec![
+        ("system", Json::str(cell.system.label())),
+        ("autoscale", Json::Bool(cell.autoscale)),
+        ("max_rate_rps", Json::num(cell.max_rate)),
+        ("saturated", Json::Bool(cell.saturated)),
+        ("goodput_rps", Json::num(cell.goodput_rps)),
+        ("attainment_at_max", Json::num(cell.attainment)),
+        ("classes", Json::arr(cell.classes.iter().map(class_to_json))),
+        (
+            "curve",
+            Json::arr(cell.curve.iter().map(|p| {
+                Json::obj(vec![
+                    ("rate_rps", Json::num(p.rate)),
+                    ("attainment", Json::num(p.attainment)),
+                    ("goodput_rps", Json::num(p.goodput_rps)),
+                ])
+            })),
+        ),
+        ("probes", Json::num(cell.probes as f64)),
+        ("wall_s", Json::num(cell.wall.as_secs_f64())),
+    ])
+}
+
+fn frontier_to_json_one(f: &ScenarioFrontier) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(f.scenario.name)),
+        ("summary", Json::str(f.scenario.summary)),
+        (
+            "sweep",
+            Json::obj(vec![
+                ("floor_rps", Json::num(f.scenario.sweep.floor)),
+                ("start_rps", Json::num(f.scenario.sweep.start)),
+                ("ceiling_rps", Json::num(f.scenario.sweep.ceiling)),
+            ]),
+        ),
+        (
+            "best_system",
+            match f.best() {
+                Some(c) => Json::str(c.system.label()),
+                None => Json::Null,
+            },
+        ),
+        ("systems", Json::arr(f.rows.iter().map(cell_to_json))),
+    ])
+}
+
+/// The full `BENCH_goodput.json` document.
+pub fn frontier_to_json(
+    fronts: &[ScenarioFrontier],
+    cfg: &FrontierConfig,
+    wall: Duration,
+) -> Json {
+    // Report what actually ran, not what was requested: run_frontier
+    // skips the mitosis variant when PaDG is not among the systems, and
+    // the flag must never contradict the rows.
+    let variant_ran = fronts.iter().any(|f| f.rows.iter().any(|r| r.autoscale));
+    Json::obj(vec![
+        ("bench", Json::str("ecoserve-goodput-frontier")),
+        ("schema_version", Json::num(SCHEMA_VERSION)),
+        ("level", Json::str(cfg.level.label())),
+        ("target_attainment", Json::num(cfg.level.fraction())),
+        ("seed", Json::num(cfg.base.seed as f64)),
+        ("quick", Json::Bool(cfg.quick)),
+        ("autoscale_variant", Json::Bool(variant_ran)),
+        ("deployment", deployment_to_json(&cfg.base.deployment)),
+        ("wall_s", Json::num(wall.as_secs_f64())),
+        ("scenarios", Json::arr(fronts.iter().map(frontier_to_json_one))),
+    ])
+}
+
+/// Human-readable frontier table for one scenario.
+pub fn render_frontier_table(f: &ScenarioFrontier) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "--- goodput frontier '{}' @ {} per-class attainment ---\n",
+        f.scenario.name,
+        f.level.label()
+    ));
+    out.push_str(&format!(
+        "{:<10} {:>8} {:>11} {:>10} {:>11} {:>7} {:>8}\n",
+        "system", "variant", "max rate/s", "goodput/s", "attain@max", "probes", "wall"
+    ));
+    for cell in &f.rows {
+        let rate = format!(
+            "{:.2}{}",
+            cell.max_rate,
+            if cell.saturated { "+" } else { "" }
+        );
+        out.push_str(&format!(
+            "{:<10} {:>8} {:>11} {:>10.2} {:>10.1}% {:>7} {:>7.1}s\n",
+            cell.system.label(),
+            cell.variant_label(),
+            rate,
+            cell.goodput_rps,
+            cell.attainment * 100.0,
+            cell.probes,
+            cell.wall.as_secs_f64(),
+        ));
+    }
+    if f.rows.iter().any(|c| c.saturated) {
+        out.push_str("  (+ = hit the sweep ceiling; true max is at least this)\n");
+    }
+    if let Some(best) = f.best() {
+        out.push_str(&format!(
+            "  frontier: {} ({}) at {:.2} req/s\n",
+            best.system.label(),
+            best.variant_label(),
+            best.max_rate
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemKind;
+    use crate::frontier::search::SearchPoint;
+    use crate::metrics::Attainment;
+    use crate::scenarios::{by_name, ClassScore, ScenarioConfig};
+
+    /// Synthetic frontier — report tests must not pay for simulation.
+    fn synthetic() -> (Vec<ScenarioFrontier>, FrontierConfig) {
+        let scenario = by_name("bursty").unwrap();
+        let cell = |kind: SystemKind, auto: bool, rate: f64| FrontierCell {
+            system: kind,
+            autoscale: auto,
+            max_rate: rate,
+            goodput_rps: rate * 0.9,
+            attainment: 0.92,
+            classes: vec![ClassScore {
+                class: "chat",
+                arrived: 100,
+                met: 92,
+                attainment: 0.92,
+            }],
+            curve: vec![
+                SearchPoint { rate: rate / 2.0, attainment: 1.0, goodput_rps: rate / 2.0 },
+                SearchPoint { rate, attainment: 0.92, goodput_rps: rate * 0.9 },
+                SearchPoint { rate: rate * 2.0, attainment: 0.4, goodput_rps: rate },
+            ],
+            saturated: false,
+            probes: 3,
+            wall: Duration::from_millis(1500),
+        };
+        let fronts = vec![ScenarioFrontier {
+            scenario,
+            level: Attainment::P90,
+            rows: vec![
+                cell(SystemKind::EcoServe, false, 6.0),
+                cell(SystemKind::Vllm, false, 3.5),
+                cell(SystemKind::EcoServe, true, 5.0),
+            ],
+        }];
+        let mut base = ScenarioConfig::default_l20();
+        base.deployment.gpus_used = 16;
+        let mut cfg = FrontierConfig::new(base, Attainment::P90);
+        cfg.quick = true;
+        cfg.autoscale = true;
+        (fronts, cfg)
+    }
+
+    #[test]
+    fn bench_json_honors_the_contract() {
+        let (fronts, cfg) = synthetic();
+        let text = frontier_to_json(&fronts, &cfg, Duration::from_secs(9)).to_string();
+        let back = Json::parse(&text).expect("BENCH report must be valid JSON");
+        assert_eq!(
+            back.get("bench").unwrap().as_str(),
+            Some("ecoserve-goodput-frontier")
+        );
+        assert_eq!(
+            back.get("schema_version").unwrap().as_f64(),
+            Some(SCHEMA_VERSION)
+        );
+        assert_eq!(back.get("level").unwrap().as_str(), Some("P90"));
+        assert_eq!(back.get("target_attainment").unwrap().as_f64(), Some(0.9));
+        assert!(back.path(&["deployment", "instances"]).is_some());
+        let sc = back.get("scenarios").unwrap().idx(0).unwrap();
+        assert_eq!(sc.get("name").unwrap().as_str(), Some("bursty"));
+        assert!(sc.path(&["sweep", "ceiling_rps"]).is_some());
+        assert_eq!(sc.get("best_system").unwrap().as_str(), Some("EcoServe"));
+        let systems = sc.get("systems").unwrap().as_arr().unwrap();
+        assert_eq!(systems.len(), 3);
+        for sys in systems {
+            for key in [
+                "system", "autoscale", "max_rate_rps", "saturated", "goodput_rps",
+                "attainment_at_max", "classes", "curve", "probes", "wall_s",
+            ] {
+                assert!(sys.get(key).is_some(), "missing {key}");
+            }
+            let curve = sys.get("curve").unwrap().as_arr().unwrap();
+            assert_eq!(curve.len(), 3);
+            assert!(curve[0].get("rate_rps").unwrap().as_f64().is_some());
+        }
+        // The mitosis variant is distinguishable in the wire format, and
+        // the top-level flag reflects the rows that actually ran.
+        assert_eq!(systems[2].get("autoscale").unwrap().as_bool(), Some(true));
+        assert_eq!(back.get("autoscale_variant").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn autoscale_flag_reflects_rows_not_the_request() {
+        let (mut fronts, cfg) = synthetic();
+        // Drop the mitosis row: the flag must follow the data even though
+        // cfg.autoscale is still true.
+        fronts[0].rows.retain(|r| !r.autoscale);
+        assert!(cfg.autoscale);
+        let text = frontier_to_json(&fronts, &cfg, Duration::from_secs(1)).to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("autoscale_variant").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn frontier_table_lists_variants_and_winner() {
+        let (fronts, _) = synthetic();
+        let table = render_frontier_table(&fronts[0]);
+        assert!(table.contains("EcoServe"));
+        assert!(table.contains("vLLM"));
+        assert!(table.contains("mitosis"));
+        assert!(table.contains("fixed"));
+        assert!(table.contains("frontier: EcoServe"));
+    }
+}

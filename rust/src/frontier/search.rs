@@ -1,0 +1,295 @@
+//! The one rate-search implementation: exponential bracketing followed by
+//! bisection, generic over the probe (paper §4.1's "incrementally
+//! increasing the request rate until the system fails to reach the
+//! attainment"; DistServe arXiv:2401.09670 calls the same procedure the
+//! goodput frontier).
+//!
+//! Both consumers go through here so their semantics cannot drift:
+//! * [`crate::harness::goodput_search`] probes fixed-rate Poisson traces
+//!   (the paper's Figure-8 setting);
+//! * [`crate::frontier::driver`] probes whole scenarios — multi-class
+//!   traces with bursty/diurnal/ramp load shapes — and scores strict
+//!   per-class attainment, optionally with mitosis autoscaling on.
+//!
+//! Every probe is recorded, so a search yields not just the max
+//! sustainable rate but the sampled rate→attainment curve that
+//! `BENCH_goodput.json` ships to CI.
+
+/// One probed operating point on the rate→attainment curve.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchPoint {
+    /// Offered time-averaged rate, req/s.
+    pub rate: f64,
+    /// Score the probe reported at this rate (strict attainment).
+    pub attainment: f64,
+    /// Delivered SLO-meeting completions per second at this rate.
+    pub goodput_rps: f64,
+}
+
+/// What a probe hands back: an opaque payload plus the two scores the
+/// search needs. The payload at the found rate is returned untouched.
+#[derive(Debug)]
+pub struct Probe<R> {
+    pub result: R,
+    pub attainment: f64,
+    pub goodput_rps: f64,
+}
+
+/// Search knobs. `target` is the attainment fraction a rate must reach to
+/// count as sustained; the bracket runs `start, 2·start, …` capped at
+/// `ceiling`, with a final `floor` "crumb" probe when even `start` fails.
+#[derive(Debug, Clone)]
+pub struct SearchParams {
+    pub target: f64,
+    pub floor: f64,
+    pub start: f64,
+    pub ceiling: f64,
+    /// Max doubling steps in the bracket phase.
+    pub max_doublings: usize,
+    /// Bisection refinement steps after bracketing.
+    pub bisections: usize,
+}
+
+impl SearchParams {
+    /// The harness's historical settings (Figure 8): bracket from 0.5
+    /// req/s, crumb at 0.1, 12 doublings, 6 bisections.
+    pub fn paper_default(target: f64) -> Self {
+        SearchParams {
+            target,
+            floor: 0.1,
+            start: 0.5,
+            ceiling: 2048.0,
+            max_doublings: 12,
+            bisections: 6,
+        }
+    }
+
+    /// Coarse, wall-clock-bounded settings for CI smoke runs.
+    pub fn quick(mut self) -> Self {
+        self.max_doublings = self.max_doublings.min(6);
+        self.bisections = self.bisections.min(3);
+        self
+    }
+}
+
+/// Search outcome: the max sustained rate, the probe payload there, and
+/// the full sampled curve (sorted by rate).
+#[derive(Debug)]
+pub struct SearchOutcome<R> {
+    /// Max rate meeting `target` attainment (0.0 when even `floor` fails).
+    pub max_rate: f64,
+    /// Probe payload at `max_rate` (`None` when nothing sustained).
+    pub best: Option<R>,
+    /// Probed points sorted by rate — the attainment curve. Equal-rate
+    /// re-probes (a bisection mid landing on the floor) are collapsed, so
+    /// rates are strictly increasing.
+    pub curve: Vec<SearchPoint>,
+    /// Number of probes spent (>= `curve.len()`; equal only when no rate
+    /// was probed twice).
+    pub probes: usize,
+    /// True when the search stopped while the top probe still sustained
+    /// the target (ceiling hit or doubling budget exhausted): `max_rate`
+    /// is then a lower bound set by the bracket, not the system.
+    pub saturated: bool,
+}
+
+/// Find the maximum rate at which `probe` reports at least
+/// `params.target` attainment. Monotonicity is assumed statistically, not
+/// structurally: a non-monotone probe simply lands the search on *a*
+/// sustained rate inside the final bracket.
+pub fn rate_search<R>(
+    params: &SearchParams,
+    mut probe: impl FnMut(f64) -> Probe<R>,
+) -> SearchOutcome<R> {
+    fn finish<R>(
+        max_rate: f64,
+        best: Option<R>,
+        mut curve: Vec<SearchPoint>,
+        saturated: bool,
+    ) -> SearchOutcome<R> {
+        curve.sort_by(|a, b| {
+            a.rate.partial_cmp(&b.rate).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let probes = curve.len();
+        // A bisection mid can land exactly on the already-probed floor
+        // (e.g. floor = start/4 bit-exactly); probes are deterministic, so
+        // collapsing equal-rate samples loses nothing and keeps the curve
+        // strictly increasing.
+        curve.dedup_by(|a, b| a.rate == b.rate);
+        SearchOutcome { max_rate, best, curve, probes, saturated }
+    }
+
+    let mut curve: Vec<SearchPoint> = Vec::new();
+    let mut sample = |rate: f64, curve: &mut Vec<SearchPoint>| {
+        let p = probe(rate);
+        curve.push(SearchPoint {
+            rate,
+            attainment: p.attainment,
+            goodput_rps: p.goodput_rps,
+        });
+        p
+    };
+    let meets = |p: &Probe<R>| p.attainment >= params.target - 1e-12;
+
+    // Exponential bracket: double until the target breaks, the ceiling
+    // caps the climb, or the doubling budget runs out. In the latter two
+    // cases the top probe still sustains the target, so `hi` is a lower
+    // bound on capacity and the result is flagged saturated — treating
+    // it as the failing bisection bound would under-report max rate.
+    let mut lo = 0.0;
+    let mut lo_probe: Option<Probe<R>> = None;
+    let mut hi = params.start.max(params.floor).min(params.ceiling);
+    let mut hi_probe = sample(hi, &mut curve);
+    let mut guard = 0;
+    while meets(&hi_probe) {
+        if hi >= params.ceiling || guard >= params.max_doublings {
+            return finish(hi, Some(hi_probe.result), curve, true);
+        }
+        lo = hi;
+        lo_probe = Some(hi_probe);
+        hi = (hi * 2.0).min(params.ceiling);
+        hi_probe = sample(hi, &mut curve);
+        guard += 1;
+    }
+    if lo == 0.0 && !meets(&hi_probe) && params.floor < hi {
+        // Cannot sustain even the first probe: try a crumb, else zero.
+        let crumb = sample(params.floor, &mut curve);
+        if meets(&crumb) {
+            lo = params.floor;
+            lo_probe = Some(crumb);
+        }
+    }
+
+    // Bisect [lo, hi].
+    for _ in 0..params.bisections {
+        if hi - lo < 1e-9 {
+            break;
+        }
+        let mid = 0.5 * (lo + hi);
+        if mid <= 0.0 {
+            break;
+        }
+        let p = sample(mid, &mut curve);
+        if meets(&p) {
+            lo = mid;
+            lo_probe = Some(p);
+        } else {
+            hi = mid;
+        }
+    }
+    finish(lo, lo_probe.map(|p| p.result), curve, false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A sharp synthetic capacity cliff at `cap` req/s.
+    fn cliff(cap: f64) -> impl FnMut(f64) -> Probe<f64> {
+        move |rate| Probe {
+            result: rate,
+            attainment: if rate <= cap { 1.0 } else { 0.0 },
+            goodput_rps: rate.min(cap),
+        }
+    }
+
+    #[test]
+    fn converges_to_the_cliff() {
+        let params = SearchParams::paper_default(0.9);
+        let out = rate_search(&params, cliff(7.3));
+        assert!(out.max_rate > 6.0 && out.max_rate <= 7.3, "{}", out.max_rate);
+        assert_eq!(out.best, Some(out.max_rate));
+        assert!(!out.saturated, "a real cliff is not bracket-limited");
+        assert_eq!(out.probes, out.curve.len());
+        for w in out.curve.windows(2) {
+            assert!(w[0].rate < w[1].rate, "curve must be rate-sorted");
+        }
+    }
+
+    #[test]
+    fn hopeless_probe_returns_zero() {
+        // A system that sustains nothing at any rate.
+        let params = SearchParams::paper_default(0.9);
+        let out = rate_search(&params, cliff(0.0));
+        assert_eq!(out.max_rate, 0.0);
+        assert!(out.best.is_none());
+        // start + crumb + bisections worth of probes, all recorded.
+        assert!(out.probes >= 2);
+    }
+
+    #[test]
+    fn curve_collapses_equal_rate_reprobes() {
+        // floor = start/4 bit-exactly (the registry SweepBounds shape):
+        // for a hopeless probe, bisection of [0, start] revisits the floor
+        // (0.5 -> 0.25 -> 0.125), which must not produce a duplicate
+        // curve point.
+        let mut params = SearchParams::paper_default(0.9);
+        params.floor = 0.125;
+        params.start = 0.5;
+        let out = rate_search(&params, cliff(0.0));
+        assert_eq!(out.max_rate, 0.0);
+        assert!(out.probes > out.curve.len(), "{} probes", out.probes);
+        for w in out.curve.windows(2) {
+            assert!(w[0].rate < w[1].rate, "duplicate rate in {:?}", out.curve);
+        }
+    }
+
+    #[test]
+    fn crumb_rescues_a_tiny_capacity() {
+        let mut params = SearchParams::paper_default(0.9);
+        params.floor = 0.1;
+        params.start = 0.5;
+        let out = rate_search(&params, cliff(0.2));
+        assert!(out.max_rate >= 0.1, "{}", out.max_rate);
+        assert!(out.max_rate <= 0.2);
+        assert!(out.best.is_some());
+    }
+
+    #[test]
+    fn ceiling_caps_the_search() {
+        let mut params = SearchParams::paper_default(0.9);
+        params.ceiling = 16.0;
+        let out = rate_search(&params, cliff(1e9));
+        assert_eq!(out.max_rate, 16.0);
+        assert!(out.best.is_some());
+        assert!(out.saturated, "ceiling hit must be flagged");
+        assert!(out.curve.iter().all(|p| p.rate <= 16.0));
+    }
+
+    #[test]
+    fn exhausted_doubling_budget_is_saturated_not_bisected_down() {
+        // Capacity far above what the doubling budget can bracket: the
+        // top probe still sustains the target, so it must be reported as
+        // the (saturated) max, not treated as the failing bisection hi.
+        let mut params = SearchParams::paper_default(0.9);
+        params.ceiling = 1e9;
+        params.max_doublings = 3;
+        let out = rate_search(&params, cliff(1e9));
+        assert_eq!(out.max_rate, 0.5 * 2f64.powi(3));
+        assert!(out.saturated);
+        assert_eq!(out.best, Some(out.max_rate));
+    }
+
+    #[test]
+    fn quick_params_spend_fewer_probes() {
+        let full = rate_search(&SearchParams::paper_default(0.9), cliff(7.3));
+        let quick =
+            rate_search(&SearchParams::paper_default(0.9).quick(), cliff(7.3));
+        assert!(quick.probes < full.probes, "{} vs {}", quick.probes, full.probes);
+        assert!(quick.max_rate > 4.0);
+    }
+
+    #[test]
+    fn target_is_respected() {
+        // Attainment decays linearly: 1.0 at rate 0 down to 0.0 at 10.
+        let probe = |rate: f64| Probe {
+            result: (),
+            attainment: (1.0 - rate / 10.0).max(0.0),
+            goodput_rps: rate,
+        };
+        let strict = rate_search(&SearchParams::paper_default(0.99), probe);
+        let loose = rate_search(&SearchParams::paper_default(0.50), probe);
+        assert!(strict.max_rate < loose.max_rate);
+        assert!(strict.max_rate <= 0.1 + 1e-9 || strict.max_rate < 1.0);
+    }
+}

@@ -10,6 +10,7 @@
 use crate::baselines::{FudgMode, FudgSystem, SarathiSystem, VllmSystem};
 use crate::config::{ExperimentConfig, SystemKind};
 use crate::coordinator::EcoServeSystem;
+use crate::frontier::search::{rate_search, Probe, SearchParams, SearchPoint};
 use crate::metrics::{summarize, Attainment, Collector, SloSpec, Summary};
 use crate::sim::{run, System};
 use crate::util::threads::parallel_map;
@@ -136,11 +137,15 @@ pub struct Goodput {
     pub summary: Summary,
     /// FuDG split used (None for NoDG/PaDG).
     pub fudg_prefill: Option<usize>,
+    /// Every probed (rate, attainment) point, sorted by rate.
+    pub curve: Vec<SearchPoint>,
 }
 
 /// Find the maximum Poisson rate at which `kind` sustains `level`
-/// attainment: exponential bracketing then bisection (paper §4.1's
-/// "incrementally increasing the request rate").
+/// attainment (paper §4.1's "incrementally increasing the request
+/// rate"). Thin wrapper over the shared frontier search core
+/// ([`crate::frontier::search::rate_search`]) — the bracketing/bisection
+/// loop lives there, and only there.
 pub fn goodput_search(kind: SystemKind, cfg: &ExperimentConfig, level: Attainment) -> Goodput {
     let fudg_prefill = match kind {
         SystemKind::DistServe | SystemKind::MoonCake => Some(
@@ -150,51 +155,29 @@ pub fn goodput_search(kind: SystemKind, cfg: &ExperimentConfig, level: Attainmen
         ),
         _ => None,
     };
-    let probe = |rate: f64| run_once(kind, cfg, rate, fudg_prefill);
-
-    // Exponential bracket.
-    let mut lo = 0.0;
-    let mut lo_result: Option<RunResult> = None;
-    let mut hi = 0.5;
-    let mut hi_result = probe(hi);
-    let mut guard = 0;
-    while hi_result.meets(level) && guard < 12 {
-        lo = hi;
-        lo_result = Some(hi_result);
-        hi *= 2.0;
-        hi_result = probe(hi);
-        guard += 1;
-    }
-    if lo == 0.0 && !hi_result.meets(level) {
-        // Cannot sustain even the smallest probe: try a crumb, else zero.
-        let crumb = probe(0.1);
-        if crumb.meets(level) {
-            lo = 0.1;
-            lo_result = Some(crumb);
+    let params = SearchParams::paper_default(level.fraction());
+    let outcome = rate_search(&params, |rate| {
+        let r = run_once(kind, cfg, rate, fudg_prefill);
+        Probe {
+            attainment: r.attainment,
+            goodput_rps: r.met as f64 / (cfg.duration - cfg.warmup).max(1e-9),
+            result: r,
         }
-    }
-    // Bisect [lo, hi].
-    let mut best = lo;
-    let mut best_result = lo_result;
-    for _ in 0..6 {
-        let mid = 0.5 * (lo + hi);
-        if mid <= 0.0 {
-            break;
-        }
-        let r = probe(mid);
-        if r.meets(level) {
-            lo = mid;
-            best = mid;
-            best_result = Some(r);
-        } else {
-            hi = mid;
-        }
-    }
-    let summary = match best_result {
+    });
+    let summary = match outcome.best {
         Some(r) => r.summary,
-        None => probe(best.max(0.05)).summary,
+        None => {
+            run_once(kind, cfg, outcome.max_rate.max(0.05), fudg_prefill).summary
+        }
     };
-    Goodput { system: kind, level, rate: best, summary, fudg_prefill }
+    Goodput {
+        system: kind,
+        level,
+        rate: outcome.max_rate,
+        summary,
+        fudg_prefill,
+        curve: outcome.curve,
+    }
 }
 
 /// Convenience used by the crate docs and the quickstart example.
@@ -270,6 +253,12 @@ mod tests {
         let g = goodput_search(SystemKind::EcoServe, &cfg, Attainment::P90);
         assert!(g.rate > 0.5, "goodput {}", g.rate);
         assert!(g.rate < 200.0);
+        // The shared search core records the full attainment curve.
+        assert!(g.curve.len() >= 3, "{:?}", g.curve);
+        for w in g.curve.windows(2) {
+            assert!(w[0].rate < w[1].rate, "curve must be rate-sorted");
+        }
+        assert!(g.curve.iter().any(|p| (p.rate - g.rate).abs() < 1e-9));
     }
 
     #[test]

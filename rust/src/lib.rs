@@ -37,6 +37,7 @@
 pub mod baselines;
 pub mod config;
 pub mod coordinator;
+pub mod frontier;
 pub mod harness;
 pub mod metrics;
 pub mod perfmodel;

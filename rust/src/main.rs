@@ -6,6 +6,9 @@
 //!   simulate   — one simulated run of a system at a fixed request rate
 //!   goodput    — goodput search (paper §4.1) for one system
 //!   scenarios  — the multi-scenario evaluation suite (--list to browse)
+//!   frontier   — goodput-frontier sweep: max sustainable rate per
+//!                scenario x system at a target attainment level, with an
+//!                optional mitosis-on PaDG variant and a BENCH JSON
 //!   table2     — print the arithmetic-intensity table
 //!   table3     — print the KV-bandwidth table
 //!
@@ -16,6 +19,8 @@
 //!   ecoserve goodput --system vllm --dataset longbench --level p90
 //!   ecoserve scenarios --list
 //!   ecoserve scenarios --scenario bursty --out report.json
+//!   ecoserve frontier --scenario bursty --level p90 --out BENCH_goodput.json
+//!   ecoserve frontier --quick --autoscale --gpus 16
 
 // Same advisory lint posture as lib.rs (see its comment).
 #![allow(clippy::style, clippy::complexity, clippy::perf)]
@@ -23,6 +28,7 @@
 use anyhow::{bail, Result};
 
 use ecoserve::config::{ClusterSpec, Deployment, ExperimentConfig, SystemKind};
+use ecoserve::frontier;
 use ecoserve::harness;
 use ecoserve::metrics::Attainment;
 use ecoserve::perfmodel::{self, ModelSpec};
@@ -37,11 +43,12 @@ fn main() -> Result<()> {
         Some("simulate") => cmd_simulate(&args),
         Some("goodput") => cmd_goodput(&args),
         Some("scenarios") => cmd_scenarios(&args),
+        Some("frontier") => cmd_frontier(&args),
         Some("table2") => cmd_table2(&args),
         Some("table3") => cmd_table3(),
         _ => {
             eprintln!(
-                "usage: ecoserve <serve|simulate|goodput|scenarios|table2|table3> [--flags]"
+                "usage: ecoserve <serve|simulate|goodput|scenarios|frontier|table2|table3> [--flags]"
             );
             eprintln!("see rust/src/main.rs docs for examples");
             Ok(())
@@ -65,6 +72,17 @@ fn deployment_from_args(args: &Args) -> Result<Deployment> {
     }
     if let Some(g) = args.get("gpus") {
         deployment.gpus_used = g.parse()?;
+    }
+    // Guard every deployment-consuming subcommand here, not per command:
+    // downstream constructors (FuDG splits, mitosis N_l clamp) assume at
+    // least one instance.
+    if deployment.num_instances() == 0 {
+        bail!(
+            "deployment has zero instances (gpus {} < tp {} x pp {})",
+            deployment.gpus_used,
+            deployment.tp,
+            deployment.pp
+        );
     }
     Ok(deployment)
 }
@@ -118,6 +136,26 @@ fn cmd_serve(_args: &Args) -> Result<()> {
     )
 }
 
+/// Shared `--scenario` selection (scenarios + frontier): one named
+/// scenario, or the whole registry.
+fn select_scenarios(args: &Args) -> Result<Vec<scenarios::Scenario>> {
+    match args.get("scenario") {
+        Some(name) => Ok(vec![scenarios::by_name(name).ok_or_else(|| {
+            anyhow::anyhow!("unknown scenario '{name}' (try `ecoserve scenarios --list`)")
+        })?]),
+        None => Ok(scenarios::registry()),
+    }
+}
+
+/// Shared `--system` selection (scenarios + frontier): one system, or all.
+fn select_systems(args: &Args) -> Result<Vec<SystemKind>> {
+    match args.get("system") {
+        Some(name) => Ok(vec![SystemKind::by_name(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown system '{name}'"))?]),
+        None => Ok(SystemKind::all().to_vec()),
+    }
+}
+
 /// The multi-scenario evaluation suite (`scenarios` subcommand).
 fn cmd_scenarios(args: &Args) -> Result<()> {
     if args.has_flag("list") {
@@ -135,17 +173,8 @@ fn cmd_scenarios(args: &Args) -> Result<()> {
         return Ok(());
     }
 
-    let selected: Vec<scenarios::Scenario> = match args.get("scenario") {
-        Some(name) => vec![scenarios::by_name(name).ok_or_else(|| {
-            anyhow::anyhow!("unknown scenario '{name}' (try `ecoserve scenarios --list`)")
-        })?],
-        None => scenarios::registry(),
-    };
-    let systems: Vec<SystemKind> = match args.get("system") {
-        Some(name) => vec![SystemKind::by_name(name)
-            .ok_or_else(|| anyhow::anyhow!("unknown system '{name}'"))?],
-        None => SystemKind::all().to_vec(),
-    };
+    let selected = select_scenarios(args)?;
+    let systems = select_systems(args)?;
 
     let cfg = scenarios::ScenarioConfig {
         deployment: deployment_from_args(args)?,
@@ -153,9 +182,6 @@ fn cmd_scenarios(args: &Args) -> Result<()> {
         rate: parse_f64_flag(args, "rate")?,
         duration_override: parse_f64_flag(args, "duration")?,
     };
-    if cfg.deployment.num_instances() == 0 {
-        bail!("deployment has zero instances (gpus < tp*pp)");
-    }
 
     let d = &cfg.deployment;
     println!(
@@ -215,15 +241,13 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Goodput search for one system — a thin wrapper over the frontier
+/// search core via [`harness::goodput_search`].
 fn cmd_goodput(args: &Args) -> Result<()> {
     let cfg = experiment_from_args(args)?;
     let kind = SystemKind::by_name(&args.get_or("system", "ecoserve"))
         .ok_or_else(|| anyhow::anyhow!("unknown system"))?;
-    let level = match args.get_or("level", "p90").to_ascii_lowercase().as_str() {
-        "p50" => Attainment::P50,
-        "p99" => Attainment::P99,
-        _ => Attainment::P90,
-    };
+    let level = parse_level(args)?;
     let g = harness::goodput_search(kind, &cfg, level);
     println!(
         "{} {} goodput: {:.2} req/s ({:.0} tok/s) on {}/{}/{}",
@@ -238,6 +262,80 @@ fn cmd_goodput(args: &Args) -> Result<()> {
     if let Some(p) = g.fudg_prefill {
         println!("  (FuDG split: {p} prefill / {} decode)",
                  cfg.deployment.num_instances() - p);
+    }
+    println!("  explored {} operating points", g.curve.len());
+    if args.has("curve") {
+        for p in &g.curve {
+            println!(
+                "    {:>8.3} req/s -> attainment {:>5.1}%",
+                p.rate,
+                p.attainment * 100.0
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Shared `--level p50|p90|p99` parsing (goodput + frontier), erroring
+/// loudly on a typo instead of silently defaulting.
+fn parse_level(args: &Args) -> Result<Attainment> {
+    let raw = args.get_or("level", "p90");
+    Attainment::by_name(&raw)
+        .ok_or_else(|| anyhow::anyhow!("--level expects p50|p90|p99, got '{raw}'"))
+}
+
+/// The goodput-frontier sweep (`frontier` subcommand).
+fn cmd_frontier(args: &Args) -> Result<()> {
+    let selected = select_scenarios(args)?;
+    let systems = select_systems(args)?;
+    let level = parse_level(args)?;
+
+    let base = scenarios::ScenarioConfig {
+        deployment: deployment_from_args(args)?,
+        seed: args.get_u64("seed", 42),
+        rate: None, // the search owns the rate
+        duration_override: parse_f64_flag(args, "duration")?,
+    };
+    let mut cfg = frontier::FrontierConfig::new(base, level);
+    cfg.autoscale = args.has("autoscale");
+    cfg.quick = args.has("quick");
+    if cfg.autoscale && !systems.contains(&SystemKind::EcoServe) {
+        // Otherwise the BENCH report would claim autoscale_variant=true
+        // while containing no mitosis row.
+        bail!(
+            "--autoscale adds a mitosis-on PaDG variant, but the selected \
+             --system excludes ecoserve; drop --system or use --system ecoserve"
+        );
+    }
+
+    let d = &cfg.base.deployment;
+    let variants = if cfg.autoscale { " (+ mitosis-on PaDG variant)" } else { "" };
+    println!(
+        "goodput frontier: {} scenario(s) x {} system(s){} at {} on {} x{} instances (TP={}) / {}",
+        selected.len(),
+        systems.len(),
+        variants,
+        level.label(),
+        d.model.name,
+        d.num_instances(),
+        d.tp,
+        d.cluster.name,
+    );
+    let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(8);
+    let t0 = std::time::Instant::now();
+    let fronts = frontier::run_frontier(&selected, &cfg, &systems, workers);
+    let wall = t0.elapsed();
+    for f in &fronts {
+        println!();
+        print!("{}", frontier::render_frontier_table(f));
+    }
+    println!("\ntotal wall clock: {:.1}s", wall.as_secs_f64());
+
+    if let Some(path) = args.get("out") {
+        let json = frontier::frontier_to_json(&fronts, &cfg, wall).to_string();
+        std::fs::write(path, &json)
+            .map_err(|e| anyhow::anyhow!("write {path}: {e}"))?;
+        println!("wrote BENCH report to {path}");
     }
     Ok(())
 }

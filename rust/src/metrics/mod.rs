@@ -93,6 +93,17 @@ impl Attainment {
     pub fn all() -> [Attainment; 3] {
         [Attainment::P50, Attainment::P90, Attainment::P99]
     }
+
+    /// Parse "p50" / "p90" / "p99" (case-insensitive) — the CLI spelling
+    /// shared by the `goodput` and `frontier` subcommands.
+    pub fn by_name(name: &str) -> Option<Attainment> {
+        match name.to_ascii_lowercase().as_str() {
+            "p50" => Some(Attainment::P50),
+            "p90" => Some(Attainment::P90),
+            "p99" => Some(Attainment::P99),
+            _ => None,
+        }
+    }
 }
 
 /// Summary statistics over a set of completed requests.
@@ -206,6 +217,17 @@ mod tests {
         assert!((s.attained_frac - 1.0).abs() < 1e-9);
         assert!((s.ttft_p50 - 0.2).abs() < 1e-6);
         assert!((s.token_throughput - 11.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn attainment_by_name() {
+        assert_eq!(Attainment::by_name("p90"), Some(Attainment::P90));
+        assert_eq!(Attainment::by_name("P99"), Some(Attainment::P99));
+        assert_eq!(Attainment::by_name("p50"), Some(Attainment::P50));
+        assert_eq!(Attainment::by_name("p75"), None);
+        for level in Attainment::all() {
+            assert_eq!(Attainment::by_name(level.label()), Some(level));
+        }
     }
 
     #[test]

@@ -6,6 +6,7 @@
 
 use super::registry::Scenario;
 use crate::config::{ClusterSpec, Deployment, ExperimentConfig, SystemKind};
+use crate::coordinator::{AutoScalePolicy, EcoServeSystem};
 use crate::harness::build_system;
 use crate::metrics::{summarize, Collector, SloSpec, Summary};
 use crate::perfmodel::ModelSpec;
@@ -62,6 +63,36 @@ pub struct ClassScore {
     pub attainment: f64,
 }
 
+/// How to instantiate the serving system for one cell. The default is the
+/// fixed-capacity paper configuration every suite run used so far.
+#[derive(Debug, Clone, Default)]
+pub struct VariantSpec {
+    /// PaDG only (ignored by the baselines): run with the mitosis
+    /// autoscaler on, starting from `N_l` active instances that may grow
+    /// to the full deployment (paper Figure 10).
+    pub autoscale: Option<AutoScalePolicy>,
+}
+
+impl VariantSpec {
+    /// The mitosis-on variant with the Figure-10 default policy.
+    pub fn autoscaled() -> Self {
+        VariantSpec { autoscale: Some(AutoScalePolicy::default()) }
+    }
+}
+
+/// What the mitosis controller actually did during an autoscaled run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AutoscaleTelemetry {
+    pub scale_ups: usize,
+    pub scale_downs: usize,
+    /// Highest concurrently-active instance count observed.
+    pub peak_active: usize,
+    /// Active instances when the run ended.
+    pub final_active: usize,
+    /// Macro-instance membership shape at the end (e.g. `[6, 4]`).
+    pub final_macros: Vec<usize>,
+}
+
 /// One system's outcome on one scenario.
 #[derive(Debug)]
 pub struct SystemRow {
@@ -80,6 +111,19 @@ pub struct SystemRow {
     pub summary: Summary,
     pub classes: Vec<ClassScore>,
     pub events: u64,
+    /// Present on mitosis-on (autoscaled) runs only.
+    pub autoscale: Option<AutoscaleTelemetry>,
+}
+
+impl SystemRow {
+    /// The frontier's sustain criterion: the *weakest* class must hold the
+    /// target — a system cannot buy batch goodput with interactive misses.
+    pub fn min_class_attainment(&self) -> f64 {
+        self.classes
+            .iter()
+            .map(|c| c.attainment)
+            .fold(self.attainment, f64::min)
+    }
 }
 
 /// All systems' outcomes on one scenario.
@@ -108,9 +152,20 @@ impl ScenarioOutcome {
     }
 }
 
-/// Run one system through one scenario. Deterministic: the trace is a pure
-/// function of (scenario, seed, rate) and the simulator is event-ordered.
+/// Run one system through one scenario with the fixed-capacity variant.
 pub fn run_system(scenario: &Scenario, cfg: &ScenarioConfig, kind: SystemKind) -> SystemRow {
+    run_system_variant(scenario, cfg, kind, &VariantSpec::default())
+}
+
+/// Run one (system × variant) cell through one scenario. Deterministic:
+/// the trace is a pure function of (scenario, seed, rate) and the
+/// simulator is event-ordered.
+pub fn run_system_variant(
+    scenario: &Scenario,
+    cfg: &ScenarioConfig,
+    kind: SystemKind,
+    variant: &VariantSpec,
+) -> SystemRow {
     let (duration, warmup) = cfg.horizon(scenario);
     let rate = cfg.rate.unwrap_or(scenario.default_rate);
     let mut scoped = scenario.clone();
@@ -134,9 +189,40 @@ pub fn run_system(scenario: &Scenario, cfg: &ScenarioConfig, kind: SystemKind) -
     exp.duration = duration;
     exp.warmup = warmup;
 
-    let mut system = build_system(kind, &exp, None);
     let mut metrics = Collector::new();
-    let stats = run(system.as_mut(), trace, duration + DRAIN_SECS, &mut metrics);
+    let (stats, autoscale) = match &variant.autoscale {
+        Some(policy) if kind == SystemKind::EcoServe => {
+            let mut sys = EcoServeSystem::with_autoscale(
+                &exp.deployment,
+                sched_slo,
+                exp.params.clone(),
+                policy.clone(),
+            );
+            let initial = sys.active_count();
+            let stats = run(&mut sys, trace, duration + DRAIN_SECS, &mut metrics);
+            debug_assert!(sys.mitosis.check_invariants().is_ok());
+            let ups = sys.scale_log.iter().filter(|e| e.kind == "up").count();
+            let peak = sys
+                .scale_log
+                .iter()
+                .map(|e| e.active_instances)
+                .max()
+                .unwrap_or(0)
+                .max(initial);
+            let telemetry = AutoscaleTelemetry {
+                scale_ups: ups,
+                scale_downs: sys.scale_log.len() - ups,
+                peak_active: peak,
+                final_active: sys.active_count(),
+                final_macros: sys.mitosis.macro_sizes(),
+            };
+            (stats, Some(telemetry))
+        }
+        _ => {
+            let mut system = build_system(kind, &exp, None);
+            (run(system.as_mut(), trace, duration + DRAIN_SECS, &mut metrics), None)
+        }
+    };
     let records = metrics.records_in_window(warmup, duration);
 
     let mut met_per_class = vec![0usize; n_classes];
@@ -177,6 +263,7 @@ pub fn run_system(scenario: &Scenario, cfg: &ScenarioConfig, kind: SystemKind) -
         summary: summarize(&records, &sched_slo, window),
         classes,
         events: stats.events,
+        autoscale,
     }
 }
 
@@ -274,6 +361,41 @@ mod tests {
         assert!(interactive.arrived > batch.arrived);
         assert_eq!(row.arrived, interactive.arrived + batch.arrived);
         assert_eq!(row.met, interactive.met + batch.met);
+    }
+
+    #[test]
+    fn autoscaled_variant_reports_telemetry() {
+        let s = by_name("surge").unwrap();
+        let mut cfg = quick_cfg();
+        cfg.deployment.gpus_used = 32; // 8 instances; autoscale starts at N_l=4
+        cfg.rate = Some(6.0);
+        let row = run_system_variant(
+            &s,
+            &cfg,
+            SystemKind::EcoServe,
+            &VariantSpec::autoscaled(),
+        );
+        let t = row.autoscale.as_ref().expect("telemetry on autoscaled runs");
+        assert!(t.peak_active >= 4 && t.peak_active <= 8, "{t:?}");
+        assert!(t.final_active >= 1, "{t:?}");
+        assert!(row.arrived > 0);
+        // Baselines ignore the variant; fixed PaDG runs carry no telemetry.
+        let vllm = run_system_variant(&s, &cfg, SystemKind::Vllm, &VariantSpec::autoscaled());
+        assert!(vllm.autoscale.is_none());
+        assert!(run_system(&s, &cfg, SystemKind::EcoServe).autoscale.is_none());
+    }
+
+    #[test]
+    fn min_class_attainment_takes_the_weakest_class() {
+        let s = by_name("mixed-slo").unwrap();
+        let mut cfg = quick_cfg();
+        cfg.rate = Some(3.0);
+        let row = run_system(&s, &cfg, SystemKind::EcoServe);
+        let min = row.min_class_attainment();
+        for c in &row.classes {
+            assert!(min <= c.attainment + 1e-12);
+        }
+        assert!(min <= row.attainment + 1e-12);
     }
 
     #[test]

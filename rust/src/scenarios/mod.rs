@@ -29,6 +29,11 @@ pub mod driver;
 pub mod registry;
 pub mod report;
 
-pub use driver::{run_scenario, run_suite, ScenarioConfig, ScenarioOutcome, SystemRow};
-pub use registry::{by_name, registry, LoadShape, Scenario, TrafficClass};
-pub use report::{render_table, suite_to_json};
+pub use driver::{
+    run_scenario, run_suite, run_system_variant, AutoscaleTelemetry, ClassScore,
+    ScenarioConfig, ScenarioOutcome, SystemRow, VariantSpec,
+};
+pub use registry::{by_name, registry, LoadShape, Scenario, SweepBounds, TrafficClass};
+pub use report::{
+    class_to_json, deployment_to_json, render_table, suite_to_json, SCHEMA_VERSION,
+};

@@ -101,6 +101,34 @@ impl LoadShape {
     }
 }
 
+/// Rate-sweep bracket for the goodput-frontier search
+/// ([`crate::frontier`]): where to start probing this scenario and how
+/// far the search may climb. Bounds keep the adaptive search's wall
+/// clock predictable — they cap the doubling phase, they don't presume
+/// the answer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SweepBounds {
+    /// Smallest rate worth probing (the last-resort "crumb").
+    pub floor: f64,
+    /// First bracketing probe.
+    pub start: f64,
+    /// Hard cap on probed rates.
+    pub ceiling: f64,
+}
+
+impl SweepBounds {
+    /// Bracket derived from a scenario's nominal operating rate: crumb at
+    /// 1/16th, first probe at a quarter, cap at 8x. Registry entries use
+    /// this unless a scenario needs a bespoke bracket.
+    pub fn around(nominal_rate: f64) -> Self {
+        SweepBounds {
+            floor: (nominal_rate / 16.0).max(0.05),
+            start: (nominal_rate / 4.0).max(0.1),
+            ceiling: nominal_rate * 8.0,
+        }
+    }
+}
+
 /// A named workload scenario.
 #[derive(Debug, Clone)]
 pub struct Scenario {
@@ -115,6 +143,8 @@ pub struct Scenario {
     /// Nominal time-averaged offered rate (req/s) when the caller gives
     /// none — tuned for the default 8-instance CodeLlama-34B/L20 layout.
     pub default_rate: f64,
+    /// Frontier-search bracket for this scenario's rate sweep.
+    pub sweep: SweepBounds,
 }
 
 impl Scenario {
@@ -186,6 +216,7 @@ pub fn registry() -> Vec<Scenario> {
             duration: 240.0,
             warmup: 30.0,
             default_rate: 8.0,
+            sweep: SweepBounds::around(8.0),
         },
         Scenario {
             name: "bursty",
@@ -196,6 +227,7 @@ pub fn registry() -> Vec<Scenario> {
             duration: 300.0,
             warmup: 30.0,
             default_rate: 6.0,
+            sweep: SweepBounds::around(6.0),
         },
         Scenario {
             name: "diurnal",
@@ -205,6 +237,7 @@ pub fn registry() -> Vec<Scenario> {
             duration: 360.0,
             warmup: 30.0,
             default_rate: 7.0,
+            sweep: SweepBounds::around(7.0),
         },
         Scenario {
             name: "heavy-tail",
@@ -215,6 +248,7 @@ pub fn registry() -> Vec<Scenario> {
             duration: 240.0,
             warmup: 30.0,
             default_rate: 2.5,
+            sweep: SweepBounds::around(2.5),
         },
         Scenario {
             name: "mixed-slo",
@@ -228,6 +262,7 @@ pub fn registry() -> Vec<Scenario> {
             duration: 240.0,
             warmup: 30.0,
             default_rate: 6.0,
+            sweep: SweepBounds::around(6.0),
         },
         Scenario {
             name: "surge",
@@ -238,6 +273,7 @@ pub fn registry() -> Vec<Scenario> {
             duration: 300.0,
             warmup: 30.0,
             default_rate: 6.0,
+            sweep: SweepBounds::around(6.0),
         },
     ]
 }
@@ -266,6 +302,28 @@ mod tests {
             assert!(s.warmup < s.duration, "{}", s.name);
             assert!(s.default_rate > 0.0, "{}", s.name);
         }
+    }
+
+    #[test]
+    fn sweep_bounds_bracket_the_default_rate() {
+        for s in registry() {
+            let b = s.sweep;
+            assert!(b.floor > 0.0, "{}: floor {}", s.name, b.floor);
+            assert!(b.floor < b.start, "{}: floor {} >= start {}", s.name, b.floor, b.start);
+            assert!(b.start < b.ceiling, "{}: start {} >= ceiling {}", s.name, b.start, b.ceiling);
+            assert!(
+                b.floor <= s.default_rate && s.default_rate <= b.ceiling,
+                "{}: default rate {} outside sweep [{}, {}]",
+                s.name,
+                s.default_rate,
+                b.floor,
+                b.ceiling
+            );
+        }
+        let b = SweepBounds::around(8.0);
+        assert_eq!(b.floor, 0.5);
+        assert_eq!(b.start, 2.0);
+        assert_eq!(b.ceiling, 64.0);
     }
 
     #[test]

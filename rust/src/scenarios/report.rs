@@ -3,8 +3,36 @@
 //! contract consumed by CI artifacts and downstream tooling; keep it
 //! stable and additive.
 
-use super::driver::{ScenarioConfig, ScenarioOutcome, SystemRow};
+use super::driver::{ClassScore, ScenarioConfig, ScenarioOutcome, SystemRow};
+use crate::config::Deployment;
 use crate::util::json::Json;
+
+/// Version of the report contracts, shared by the scenario suite report
+/// and the frontier's `BENCH_goodput.json` so downstream tooling checks
+/// one number. Bump on any breaking (non-additive) change to either.
+pub const SCHEMA_VERSION: f64 = 2.0;
+
+/// The deployment block both report schemas embed.
+pub fn deployment_to_json(d: &Deployment) -> Json {
+    Json::obj(vec![
+        ("model", Json::str(d.model.name)),
+        ("cluster", Json::str(d.cluster.name)),
+        ("gpus_used", Json::num(d.gpus_used as f64)),
+        ("tp", Json::num(d.tp as f64)),
+        ("pp", Json::num(d.pp as f64)),
+        ("instances", Json::num(d.num_instances() as f64)),
+    ])
+}
+
+/// The per-traffic-class score block both report schemas embed.
+pub fn class_to_json(c: &ClassScore) -> Json {
+    Json::obj(vec![
+        ("class", Json::str(c.class)),
+        ("arrived", Json::num(c.arrived as f64)),
+        ("met_slo", Json::num(c.met as f64)),
+        ("attainment", Json::num(c.attainment)),
+    ])
+}
 
 fn pct_obj(p50: f64, p90: f64, p99: f64) -> Json {
     Json::obj(vec![
@@ -16,7 +44,7 @@ fn pct_obj(p50: f64, p90: f64, p99: f64) -> Json {
 
 fn row_to_json(row: &SystemRow) -> Json {
     let s = &row.summary;
-    Json::obj(vec![
+    let mut fields = vec![
         ("system", Json::str(row.system.label())),
         ("arrived", Json::num(row.arrived as f64)),
         ("completed", Json::num(row.completed as f64)),
@@ -26,19 +54,25 @@ fn row_to_json(row: &SystemRow) -> Json {
         ("token_throughput", Json::num(s.token_throughput)),
         ("ttft_s", pct_obj(s.ttft_p50, s.ttft_p90, s.ttft_p99)),
         ("tpot_s", pct_obj(s.tpot_p50, s.tpot_p90, s.tpot_p99)),
-        (
-            "classes",
-            Json::arr(row.classes.iter().map(|c| {
-                Json::obj(vec![
-                    ("class", Json::str(c.class)),
-                    ("arrived", Json::num(c.arrived as f64)),
-                    ("met_slo", Json::num(c.met as f64)),
-                    ("attainment", Json::num(c.attainment)),
-                ])
-            })),
-        ),
+        ("classes", Json::arr(row.classes.iter().map(class_to_json))),
         ("sim_events", Json::num(row.events as f64)),
-    ])
+    ];
+    if let Some(t) = &row.autoscale {
+        fields.push((
+            "autoscale",
+            Json::obj(vec![
+                ("scale_ups", Json::num(t.scale_ups as f64)),
+                ("scale_downs", Json::num(t.scale_downs as f64)),
+                ("peak_active", Json::num(t.peak_active as f64)),
+                ("final_active", Json::num(t.final_active as f64)),
+                (
+                    "final_macros",
+                    Json::arr(t.final_macros.iter().map(|&m| Json::num(m as f64))),
+                ),
+            ]),
+        ));
+    }
+    Json::obj(fields)
 }
 
 fn outcome_to_json(outcome: &ScenarioOutcome) -> Json {
@@ -61,22 +95,11 @@ fn outcome_to_json(outcome: &ScenarioOutcome) -> Json {
 
 /// The full suite report.
 pub fn suite_to_json(outcomes: &[ScenarioOutcome], cfg: &ScenarioConfig) -> Json {
-    let d = &cfg.deployment;
     Json::obj(vec![
         ("suite", Json::str("ecoserve-scenarios")),
-        ("version", Json::num(1.0)),
+        ("schema_version", Json::num(SCHEMA_VERSION)),
         ("seed", Json::num(cfg.seed as f64)),
-        (
-            "deployment",
-            Json::obj(vec![
-                ("model", Json::str(d.model.name)),
-                ("cluster", Json::str(d.cluster.name)),
-                ("gpus_used", Json::num(d.gpus_used as f64)),
-                ("tp", Json::num(d.tp as f64)),
-                ("pp", Json::num(d.pp as f64)),
-                ("instances", Json::num(d.num_instances() as f64)),
-            ]),
-        ),
+        ("deployment", deployment_to_json(&cfg.deployment)),
         ("scenarios", Json::arr(outcomes.iter().map(outcome_to_json))),
     ])
 }
@@ -123,8 +146,10 @@ pub fn render_table(outcome: &ScenarioOutcome) -> String {
 mod tests {
     use super::*;
     use crate::config::SystemKind;
-    use crate::scenarios::driver::run_scenario;
-    use crate::scenarios::registry::by_name;
+    use crate::metrics::Summary;
+    use crate::scenarios::driver::{run_scenario, ClassScore};
+    use crate::scenarios::registry::{by_name, LoadShape, Scenario, SweepBounds, TrafficClass};
+    use crate::workload::Dataset;
 
     fn outcome() -> (ScenarioOutcome, ScenarioConfig) {
         let mut cfg = ScenarioConfig::default_l20();
@@ -176,5 +201,80 @@ mod tests {
         assert!(table.contains("EcoServe"));
         assert!(table.contains("vLLM"));
         assert!(table.contains("best:"));
+    }
+
+    /// Golden output: a fully synthetic outcome must serialize to exactly
+    /// this string. Locks key names, key order (BTreeMap = alphabetical),
+    /// number formatting, and the shared `schema_version` — any schema
+    /// change, additive or not, must consciously update this fixture.
+    #[test]
+    fn suite_json_matches_golden_output() {
+        let scenario = Scenario {
+            name: "golden",
+            summary: "synthetic fixture",
+            classes: vec![TrafficClass {
+                name: "chat",
+                dataset: Dataset::sharegpt(),
+                share: 1.0,
+            }],
+            shape: LoadShape::Steady,
+            duration: 100.0,
+            warmup: 10.0,
+            default_rate: 2.0,
+            sweep: SweepBounds::around(2.0),
+        };
+        let row = SystemRow {
+            system: SystemKind::EcoServe,
+            arrived: 100,
+            completed: 98,
+            met: 95,
+            attainment: 0.95,
+            goodput_rps: 1.25,
+            summary: Summary {
+                count: 98,
+                ttft_p50: 0.5,
+                ttft_p90: 1.5,
+                ttft_p99: 2.5,
+                tpot_p50: 0.05,
+                tpot_p90: 0.075,
+                tpot_p99: 0.125,
+                attained_frac: 0.95,
+                throughput_rps: 1.5,
+                token_throughput: 250.0,
+            },
+            classes: vec![ClassScore {
+                class: "chat",
+                arrived: 100,
+                met: 95,
+                attainment: 0.95,
+            }],
+            events: 4242,
+            autoscale: None,
+        };
+        let outcome = ScenarioOutcome {
+            scenario,
+            rate: 2.0,
+            duration: 100.0,
+            warmup: 10.0,
+            rows: vec![row],
+        };
+        let mut cfg = ScenarioConfig::default_l20();
+        cfg.deployment.gpus_used = 16;
+        cfg.seed = 7;
+        cfg.rate = Some(2.0);
+        let text = suite_to_json(&[outcome], &cfg).to_string();
+        let golden = "{\"deployment\":{\"cluster\":\"L20-cluster\",\"gpus_used\":16,\
+\"instances\":4,\"model\":\"CodeLlama2-34B\",\"pp\":1,\"tp\":4},\"scenarios\":\
+[{\"best_system\":\"EcoServe\",\"duration_s\":100,\"name\":\"golden\",\
+\"offered_rate_rps\":2,\"summary\":\"synthetic fixture\",\"systems\":\
+[{\"arrived\":100,\"attainment\":0.95,\"classes\":[{\"arrived\":100,\
+\"attainment\":0.95,\"class\":\"chat\",\"met_slo\":95}],\"completed\":98,\
+\"goodput_rps\":1.25,\"met_slo\":95,\"sim_events\":4242,\"system\":\"EcoServe\",\
+\"token_throughput\":250,\"tpot_s\":{\"p50\":0.05,\"p90\":0.075,\"p99\":0.125},\
+\"ttft_s\":{\"p50\":0.5,\"p90\":1.5,\"p99\":2.5}}],\"warmup_s\":10}],\
+\"schema_version\":2,\"seed\":7,\"suite\":\"ecoserve-scenarios\"}";
+        assert_eq!(text, golden);
+        // And it round-trips through the parser.
+        assert!(Json::parse(&text).is_ok());
     }
 }

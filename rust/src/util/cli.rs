@@ -69,6 +69,25 @@ impl Args {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// True when the boolean switch `--name` is enabled — as a bare flag
+    /// (`--name`) or with a truthy value (`--name=1`, `--name true`).
+    /// Explicitly falsy values (`0`/`false`/`no`/`off`) disable it, so
+    /// `--quick=false` means what it says instead of silently enabling
+    /// quick mode. Switches may need the `=value` form when followed by a
+    /// non-flag token, since `--name foo` parses as an option.
+    pub fn has(&self, name: &str) -> bool {
+        if self.has_flag(name) {
+            return true;
+        }
+        match self.options.get(name) {
+            Some(v) => !matches!(
+                v.to_ascii_lowercase().as_str(),
+                "0" | "false" | "no" | "off"
+            ),
+            None => false,
+        }
+    }
+
     /// First positional (the subcommand), if any.
     pub fn command(&self) -> Option<&str> {
         self.positional.first().map(|s| s.as_str())
@@ -104,6 +123,29 @@ mod tests {
     fn trailing_flag() {
         let a = parse("run --dry-run");
         assert!(a.has_flag("dry-run"));
+    }
+
+    #[test]
+    fn has_accepts_flag_or_option_form() {
+        let a = parse("frontier --quick --autoscale=1 --level p90");
+        assert!(a.has("quick"));
+        assert!(a.has("autoscale"));
+        assert!(a.has("level"));
+        assert!(!a.has("out"));
+        // A switch followed by another --flag parses as a bare flag.
+        let b = parse("frontier --autoscale --quick");
+        assert!(b.has("autoscale") && b.has("quick"));
+    }
+
+    #[test]
+    fn has_rejects_explicitly_falsy_values() {
+        let a = parse("frontier --quick=false --autoscale=0 --verbose=off --x=no");
+        assert!(!a.has("quick"));
+        assert!(!a.has("autoscale"));
+        assert!(!a.has("verbose"));
+        assert!(!a.has("x"));
+        let b = parse("frontier --quick=true --autoscale=yes");
+        assert!(b.has("quick") && b.has("autoscale"));
     }
 
     #[test]

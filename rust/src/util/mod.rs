@@ -18,16 +18,22 @@ pub fn mean(xs: &[f64]) -> f64 {
 }
 
 /// p-th percentile (0..=100) by linear interpolation over a *sorted copy*.
+///
+/// Well-defined on degenerate input — callers feed it raw latency vectors
+/// and must never get a panic or NaN back:
+/// * empty (and all-NaN) input returns 0.0;
+/// * a single sample returns that sample at any `p`;
+/// * NaN samples are dropped before ranking;
+/// * `p` outside [0, 100] is clamped; a NaN `p` reads as 100 (the
+///   conservative upper tail for latency metrics).
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    if xs.is_empty() {
-        return 0.0;
-    }
-    let mut sorted = xs.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut sorted: Vec<f64> = xs.iter().copied().filter(|x| !x.is_nan()).collect();
+    sorted.sort_by(f64::total_cmp);
     percentile_sorted(&sorted, p)
 }
 
-/// p-th percentile over an already-sorted slice.
+/// p-th percentile over an already-sorted slice (same edge-case contract
+/// as [`percentile`], except NaN samples must already be absent).
 pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
     if sorted.is_empty() {
         return 0.0;
@@ -36,6 +42,7 @@ pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
     if n == 1 {
         return sorted[0];
     }
+    let p = if p.is_nan() { 100.0 } else { p };
     let rank = (p / 100.0).clamp(0.0, 1.0) * (n - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -71,5 +78,41 @@ mod tests {
     #[test]
     fn percentile_single() {
         assert_eq!(percentile(&[7.0], 99.0), 7.0);
+    }
+
+    #[test]
+    fn percentile_empty_is_zero_at_any_p() {
+        for p in [0.0, 50.0, 99.0, 100.0, f64::NAN, f64::INFINITY] {
+            assert_eq!(percentile(&[], p), 0.0);
+        }
+    }
+
+    #[test]
+    fn percentile_clamps_out_of_range_p() {
+        let xs = [1.0, 2.0, 3.0];
+        assert_eq!(percentile(&xs, -50.0), 1.0);
+        assert_eq!(percentile(&xs, 250.0), 3.0);
+        assert_eq!(percentile(&xs, f64::NEG_INFINITY), 1.0);
+        assert_eq!(percentile(&xs, f64::INFINITY), 3.0);
+    }
+
+    #[test]
+    fn percentile_nan_p_reads_as_upper_tail() {
+        let xs = [1.0, 2.0, 3.0];
+        let v = percentile(&xs, f64::NAN);
+        assert!(!v.is_nan());
+        assert_eq!(v, 3.0);
+        // Single-sample path is NaN-p safe too.
+        assert_eq!(percentile(&[7.0], f64::NAN), 7.0);
+    }
+
+    #[test]
+    fn percentile_ignores_nan_samples() {
+        // Previously this panicked in sort_by(partial_cmp().unwrap()).
+        let xs = [3.0, f64::NAN, 1.0, f64::NAN, 2.0];
+        assert_eq!(percentile(&xs, 50.0), 2.0);
+        assert_eq!(percentile(&xs, 100.0), 3.0);
+        let all_nan = [f64::NAN, f64::NAN];
+        assert_eq!(percentile(&all_nan, 90.0), 0.0);
     }
 }

@@ -1,0 +1,114 @@
+//! Integration tests over the goodput-frontier subsystem: the adaptive
+//! rate search finds, per scenario x system, the maximum sustainable rate
+//! at a target per-class attainment — and the headline claim holds on the
+//! frontier, not just at a fixed operating point: PaDG's max sustainable
+//! rate at P90 strictly exceeds at least one baseline's on bursty load.
+//! The same run feeds `BENCH_goodput.json`, whose contract is asserted
+//! end-to-end here.
+
+use std::time::Duration;
+
+use ecoserve::config::{ClusterSpec, Deployment, SystemKind};
+use ecoserve::frontier::{frontier_to_json, run_frontier, FrontierConfig};
+use ecoserve::metrics::Attainment;
+use ecoserve::perfmodel::ModelSpec;
+use ecoserve::scenarios::{by_name, ScenarioConfig, SCHEMA_VERSION};
+use ecoserve::util::json::Json;
+
+/// The scenario-suite bursty deployment (Llama-30B's MHA KV makes the
+/// FuDG baselines transfer-bound over commodity Ethernet), quick search.
+fn bursty_cfg() -> FrontierConfig {
+    let mut base = ScenarioConfig::default_l20();
+    base.deployment = Deployment::paper_default(
+        ModelSpec::llama_30b(),
+        ClusterSpec::l20_cluster(),
+    );
+    base.deployment.gpus_used = 32; // 8 instances at TP=4
+    base.duration_override = Some(90.0);
+    let mut cfg = FrontierConfig::new(base, Attainment::P90);
+    cfg.quick = true;
+    cfg.autoscale = true;
+    cfg
+}
+
+#[test]
+fn padg_frontier_dominates_a_baseline_on_bursty_load() {
+    let cfg = bursty_cfg();
+    let bursty = by_name("bursty").expect("bursty scenario registered");
+    let fronts = run_frontier(&[bursty], &cfg, &SystemKind::all(), 8);
+    assert_eq!(fronts.len(), 1);
+    let f = &fronts[0];
+    // 5 fixed rows + the mitosis-on PaDG variant.
+    assert_eq!(f.rows.len(), 6);
+
+    let eco = f.row(SystemKind::EcoServe, false).expect("fixed PaDG row");
+    assert!(
+        eco.max_rate > 0.5,
+        "PaDG sustained nothing on bursty load: curve {:?}",
+        eco.curve
+    );
+    assert!(eco.attainment >= 0.90 - 1e-9, "{}", eco.attainment);
+
+    let beaten: Vec<(SystemKind, f64)> = f
+        .rows
+        .iter()
+        .filter(|r| r.system != SystemKind::EcoServe)
+        .filter(|r| eco.max_rate > r.max_rate + 1e-9)
+        .map(|r| (r.system, r.max_rate))
+        .collect();
+    assert!(
+        !beaten.is_empty(),
+        "PaDG max rate ({:.3} req/s) strictly exceeded no baseline: {:?}",
+        eco.max_rate,
+        f.rows
+            .iter()
+            .map(|r| (r.system.label(), r.variant_label(), r.max_rate))
+            .collect::<Vec<_>>()
+    );
+
+    // The mitosis-on variant starts at N_l=4 of 8 instances and must
+    // still sustain a positive rate on the same frontier.
+    let mito = f.row(SystemKind::EcoServe, true).expect("mitosis-on row");
+    assert!(mito.max_rate > 0.0, "curve {:?}", mito.curve);
+    assert!(mito.max_rate <= f.scenario.sweep.ceiling + 1e-9);
+
+    // Every cell carries a usable attainment curve (probes can exceed the
+    // curve length when a bisection mid re-visits the floor rate).
+    for cell in &f.rows {
+        assert!(cell.probes >= 2, "{:?}", cell.system);
+        assert!(cell.probes >= cell.curve.len());
+        for w in cell.curve.windows(2) {
+            assert!(w[0].rate < w[1].rate, "curve must be rate-sorted");
+        }
+    }
+
+    // BENCH_goodput.json contract, end to end on real results.
+    let wire = frontier_to_json(&fronts, &cfg, Duration::from_secs(1)).to_string();
+    let parsed = Json::parse(&wire).expect("BENCH report must be valid JSON");
+    assert_eq!(
+        parsed.get("bench").unwrap().as_str(),
+        Some("ecoserve-goodput-frontier")
+    );
+    assert_eq!(
+        parsed.get("schema_version").unwrap().as_f64(),
+        Some(SCHEMA_VERSION)
+    );
+    assert_eq!(parsed.get("level").unwrap().as_str(), Some("P90"));
+    let systems = parsed
+        .path(&["scenarios"])
+        .and_then(|s| s.idx(0))
+        .and_then(|s| s.get("systems"))
+        .and_then(|s| s.as_arr())
+        .expect("scenarios[0].systems");
+    assert_eq!(systems.len(), 6);
+    let eco_json = systems
+        .iter()
+        .find(|s| {
+            s.get("system").and_then(|v| v.as_str()) == Some("EcoServe")
+                && s.get("autoscale").and_then(|v| v.as_bool()) == Some(false)
+        })
+        .expect("EcoServe fixed row in JSON");
+    let wired_rate = eco_json.get("max_rate_rps").unwrap().as_f64().unwrap();
+    assert!((wired_rate - eco.max_rate).abs() < 1e-9);
+    assert!(!eco_json.get("curve").unwrap().as_arr().unwrap().is_empty());
+}
