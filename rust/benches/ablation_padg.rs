@@ -35,8 +35,8 @@ fn main() {
         println!("{:<30} {:>10} {:>12} {:>12}", "variant", "attain %", "p90TTFT s", "p90TPOT ms");
         let jobs: Vec<_> = variants.iter().map(|(n, f)| (*n, *f)).collect();
         let rows = parallel_map(jobs, variants.len(), |(name, mutate)| {
-            let mut d = Deployment::paper_default(ModelSpec::llama_30b(),
-                                                  ClusterSpec::l20_cluster());
+            let mut d =
+                Deployment::paper_default(ModelSpec::llama_30b(), ClusterSpec::l20_cluster());
             d.gpus_used = gpus;
             let mut cfg = ExperimentConfig::new(d, dataset.clone());
             cfg.duration = 180.0;

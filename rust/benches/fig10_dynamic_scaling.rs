@@ -35,8 +35,10 @@ fn main() {
     let ramp = RampTrace { start_rate: 16.0, end_rate: 40.0, increments: 6, step_secs: 120.0 };
     let trace = TraceGenerator::new(dataset, 42).ramp(&ramp.steps());
     println!("== Figure 10: dynamic fine-grained scaling ==");
-    println!("ramp {} -> {} req/s in {} steps of {}s; start 8 instances, N_l=4 N_u=16\n",
-             ramp.start_rate, ramp.end_rate, ramp.increments, ramp.step_secs);
+    println!(
+        "ramp {} -> {} req/s in {} steps of {}s; start 8 instances, N_l=4 N_u=16\n",
+        ramp.start_rate, ramp.end_rate, ramp.increments, ramp.step_secs
+    );
 
     let mut metrics = Collector::new();
     let t0 = std::time::Instant::now();
@@ -63,7 +65,13 @@ fn main() {
     sys.mitosis.check_invariants().expect("mitosis invariants hold");
 
     let dips_recovered = series.windows(2).filter(|w| w[1].1 > w[0].1 + 0.05).count();
-    println!("\nshape check: {} recovery upticks after dips (paper: attainment dips at each", dips_recovered);
-    println!(" rate step and is restored by the newly added instance); {} sim events in {:?}",
-             stats.events, t0.elapsed());
+    println!(
+        "\nshape check: {} recovery upticks after dips (paper: attainment dips at each",
+        dips_recovered
+    );
+    println!(
+        " rate step and is restored by the newly added instance); {} sim events in {:?}",
+        stats.events,
+        t0.elapsed()
+    );
 }

@@ -85,10 +85,18 @@ fn main() {
     let beats_vllm_tight = get("EcoServe TP2xPP2", 100.0) > get("vLLM TP2xPP2", 100.0)
         && get("EcoServe TP2xPP2", 200.0) > get("vLLM TP2xPP2", 200.0);
     println!("\nshape checks:");
-    println!("  TP wins at tight TPOT SLO:                  {}",
-             if tight { "PASS" } else { "FAIL" });
-    println!("  PP/TP ratio grows as SLO relaxes ({:.2} -> {:.2}): {}",
-             ratio_tight, ratio_relaxed, if pp_gains { "PASS" } else { "FAIL" });
-    println!("  EcoServe-PP beats vLLM-PP at tight SLOs:    {}",
-             if beats_vllm_tight { "PASS" } else { "FAIL" });
+    println!(
+        "  TP wins at tight TPOT SLO:                  {}",
+        if tight { "PASS" } else { "FAIL" }
+    );
+    println!(
+        "  PP/TP ratio grows as SLO relaxes ({:.2} -> {:.2}): {}",
+        ratio_tight,
+        ratio_relaxed,
+        if pp_gains { "PASS" } else { "FAIL" }
+    );
+    println!(
+        "  EcoServe-PP beats vLLM-PP at tight SLOs:    {}",
+        if beats_vllm_tight { "PASS" } else { "FAIL" }
+    );
 }

@@ -99,8 +99,12 @@ fn main() {
     // (the paper reports +83.76% vLLM, +71.97% Sarathi, +192.41% DistServe,
     // +218.22% MoonCake).
     println!("\n== EcoServe mean P90 goodput improvement over baselines ==");
-    for baseline in [SystemKind::Vllm, SystemKind::Sarathi, SystemKind::DistServe,
-                     SystemKind::MoonCake] {
+    for baseline in [
+        SystemKind::Vllm,
+        SystemKind::Sarathi,
+        SystemKind::DistServe,
+        SystemKind::MoonCake,
+    ] {
         let mut gains = Vec::new();
         for cluster in &clusters {
             for model in &models {
@@ -126,7 +130,11 @@ fn main() {
             }
         }
         let mean = gains.iter().sum::<f64>() / gains.len().max(1) as f64;
-        println!("  vs {:<10}: {:+.1}% (paper: vLLM +83.8, Sarathi +72.0, DistServe +192.4, MoonCake +218.2)",
-                 baseline.label(), mean);
+        println!(
+            "  vs {:<10}: {:+.1}% (paper: vLLM +83.8, Sarathi +72.0, DistServe +192.4, \
+             MoonCake +218.2)",
+            baseline.label(),
+            mean
+        );
     }
 }

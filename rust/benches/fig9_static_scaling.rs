@@ -38,16 +38,28 @@ fn main() {
             (n, g.rate)
         });
         println!("\n{model_name} (TP={tp}):");
-        println!("{:>10} {:>8} {:>14} {:>12} {:>12}",
-                 "instances", "GPUs", "goodput req/s", "speedup", "vs linear");
+        println!(
+            "{:>10} {:>8} {:>14} {:>12} {:>12}",
+            "instances", "GPUs", "goodput req/s", "speedup", "vs linear"
+        );
         let base = results[0].1.max(1e-9);
         for (n, rate) in &results {
             let speedup = rate / base;
             let linear = *n as f64;
-            println!("{:>10} {:>8} {:>14.2} {:>11.2}x {:>11}",
-                     n, n * tp, rate, speedup,
-                     if speedup > linear * 1.02 { "SUPERLINEAR" }
-                     else if speedup > linear * 0.9 { "~linear" } else { "sublinear" });
+            println!(
+                "{:>10} {:>8} {:>14.2} {:>11.2}x {:>11}",
+                n,
+                n * tp,
+                rate,
+                speedup,
+                if speedup > linear * 1.02 {
+                    "SUPERLINEAR"
+                } else if speedup > linear * 0.9 {
+                    "~linear"
+                } else {
+                    "sublinear"
+                }
+            );
         }
     }
     println!("\n(paper: 5.6x at 4 instances for CodeLlama-34B — superlinear because a");

@@ -80,7 +80,9 @@ fn main() {
     // Proxy migration (paper budget: < 100 ms; re-init alternative ~3 min).
     let mut table_a = HandlerTable::default();
     for id in 0..16u64 {
-        table_a.handlers.push(InstanceHandler::new(id, format!("n{}:50{}", id / 8, id), 4, 1, 150_000));
+        table_a
+            .handlers
+            .push(InstanceHandler::new(id, format!("n{}:50{}", id / 8, id), 4, 1, 150_000));
     }
     let per = bench("proxy migration (serialize+deserialize)", 100_000, || {
         let wire = table_a.export(7).unwrap();
@@ -115,7 +117,11 @@ fn main() {
     let t0 = Instant::now();
     let r = run_once(SystemKind::EcoServe, &cfg, 10.0, None);
     let wall = t0.elapsed().as_secs_f64();
-    println!("\nsimulator end-to-end: {} events in {:.3}s = {:.2}M events/s (target >= 2M)",
-             r.events, wall, r.events as f64 / wall / 1e6);
+    println!(
+        "\nsimulator end-to-end: {} events in {:.3}s = {:.2}M events/s (target >= 2M)",
+        r.events,
+        wall,
+        r.events as f64 / wall / 1e6
+    );
     println!("sim-seconds per wall-second: {:.0}", (cfg.duration + 240.0) / wall);
 }

@@ -14,8 +14,10 @@ fn main() {
     for (b, s) in [(1.0, 128.0), (8.0, 512.0), (64.0, 2048.0)] {
         let (h, m) = (8192.0, 64.0);
         println!("B={b}, S={s}, H={h}, M={m}");
-        println!("{:<20} {:>8} {:>12} {:>14} {:>10} {:>12}",
-                 "Operation", "Phase", "GFLOPs", "MBytes", "AI", "paper-approx");
+        println!(
+            "{:<20} {:>8} {:>12} {:>14} {:>10} {:>12}",
+            "Operation", "Phase", "GFLOPs", "MBytes", "AI", "paper-approx"
+        );
         for op in table2_ops(b, s, h, m, 2.0) {
             let approx = match (op.name, op.phase) {
                 ("Attention QK^T" | "Attention (QK^T)V", Phase::Prefill) => format!("S={s}"),
@@ -40,8 +42,14 @@ fn main() {
     let mut ok = true;
     for (b, s) in [(1.0, 128.0), (8.0, 512.0), (64.0, 2048.0)] {
         let ops = table2_ops(b, s, 8192.0, 64.0, 2.0);
-        for name in ["QKV Projection", "Attention QK^T", "Attention (QK^T)V",
-                     "Output Projection", "Dim Expansion", "Dim Reduction"] {
+        for name in [
+            "QKV Projection",
+            "Attention QK^T",
+            "Attention (QK^T)V",
+            "Output Projection",
+            "Dim Expansion",
+            "Dim Reduction",
+        ] {
             let p = ops.iter().find(|o| o.name == name && o.phase == Phase::Prefill).unwrap();
             let d = ops.iter().find(|o| o.name == name && o.phase == Phase::Decode).unwrap();
             if p.arithmetic_intensity() <= d.arithmetic_intensity() {
@@ -50,6 +58,8 @@ fn main() {
             }
         }
     }
-    println!("paper claim check (prefill AI > decode AI for all six ops): {}",
-             if ok { "PASS" } else { "FAIL" });
+    println!(
+        "paper claim check (prefill AI > decode AI for all six ops): {}",
+        if ok { "PASS" } else { "FAIL" }
+    );
 }

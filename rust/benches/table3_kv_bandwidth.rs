@@ -20,38 +20,67 @@ struct Row {
 fn main() {
     // Paper Table 3 reference values.
     let rows = [
-        Row { model: ModelSpec::llama_30b(), gpu: GpuSpec::l20(), tp: 4,
-              paper_tokens: 6584.6, paper_bw_gbs: 9.796 },
-        Row { model: ModelSpec::llama_30b(), gpu: GpuSpec::a800(), tp: 2,
-              paper_tokens: 26189.2, paper_bw_gbs: 38.96 },
-        Row { model: ModelSpec::codellama_34b(), gpu: GpuSpec::l20(), tp: 4,
-              paper_tokens: 6838.92, paper_bw_gbs: 1.25 },
-        Row { model: ModelSpec::codellama_34b(), gpu: GpuSpec::a800(), tp: 2,
-              paper_tokens: 25978.88, paper_bw_gbs: 4.76 },
+        Row {
+            model: ModelSpec::llama_30b(),
+            gpu: GpuSpec::l20(),
+            tp: 4,
+            paper_tokens: 6584.6,
+            paper_bw_gbs: 9.796,
+        },
+        Row {
+            model: ModelSpec::llama_30b(),
+            gpu: GpuSpec::a800(),
+            tp: 2,
+            paper_tokens: 26189.2,
+            paper_bw_gbs: 38.96,
+        },
+        Row {
+            model: ModelSpec::codellama_34b(),
+            gpu: GpuSpec::l20(),
+            tp: 4,
+            paper_tokens: 6838.92,
+            paper_bw_gbs: 1.25,
+        },
+        Row {
+            model: ModelSpec::codellama_34b(),
+            gpu: GpuSpec::a800(),
+            tp: 2,
+            paper_tokens: 25978.88,
+            paper_bw_gbs: 4.76,
+        },
     ];
 
     println!("== Table 3: KV generation rate + required bandwidth (8-GPU node, all prefill) ==\n");
-    println!("{:<16} {:>6} {:>11} {:>11} {:>8} {:>11} {:>11} {:>8}",
-             "Model", "GPU", "tok/s", "paper", "ratio", "GB/s", "paper", "ratio");
+    println!(
+        "{:<16} {:>6} {:>11} {:>11} {:>8} {:>11} {:>11} {:>8}",
+        "Model", "GPU", "tok/s", "paper", "ratio", "GB/s", "paper", "ratio"
+    );
     let mut worst: f64 = 0.0;
     for r in &rows {
-        let timer = BatchTimer::new(r.model.clone(), r.gpu.clone(),
-                                    ParallelCfg::tp_only(r.tp, LinkSpec::pcie4()));
+        let timer = BatchTimer::new(
+            r.model.clone(),
+            r.gpu.clone(),
+            ParallelCfg::tp_only(r.tp, LinkSpec::pcie4()),
+        );
         let per_node = (8 / r.tp) as f64;
         let toks = timer.prefill_tokens_per_sec(1024) * per_node;
         let bw = required_kv_bandwidth(toks, r.model.kv_bytes_per_token()) / 1e9;
         let tok_ratio = toks / r.paper_tokens;
         let bw_ratio = bw / r.paper_bw_gbs;
         worst = worst.max((tok_ratio - 1.0).abs()).max((bw_ratio - 1.0).abs());
-        println!("{:<16} {:>6} {:>11.1} {:>11.1} {:>8.2} {:>11.2} {:>11.2} {:>8.2}",
-                 r.model.name, r.gpu.name, toks, r.paper_tokens, tok_ratio,
-                 bw, r.paper_bw_gbs, bw_ratio);
+        println!(
+            "{:<16} {:>6} {:>11.1} {:>11.1} {:>8.2} {:>11.2} {:>11.2} {:>8.2}",
+            r.model.name, r.gpu.name, toks, r.paper_tokens, tok_ratio, bw, r.paper_bw_gbs, bw_ratio
+        );
     }
     println!("\nworst deviation from paper: {:.1}%", worst * 100.0);
-    println!("\nfeasibility vs links: 10GbE = {:.2} GB/s, 25G-RoCE = {:.2} GB/s, 400G-IB = {:.0} GB/s",
-             LinkSpec::eth_10g().bandwidth / 1e9,
-             LinkSpec::roce_25g().bandwidth / 1e9,
-             LinkSpec::ib_400g().bandwidth / 1e9);
+    println!(
+        "\nfeasibility vs links: 10GbE = {:.2} GB/s, 25G-RoCE = {:.2} GB/s, \
+         400G-IB = {:.0} GB/s",
+        LinkSpec::eth_10g().bandwidth / 1e9,
+        LinkSpec::roce_25g().bandwidth / 1e9,
+        LinkSpec::ib_400g().bandwidth / 1e9
+    );
     println!("=> Llama-30B (MHA) KV cannot leave an L20 node over 10GbE (needs ~9.8 GB/s),");
     println!("   and A800 nodes need a 400Gbps-class fabric — the paper's FuDG cost argument.");
 }

@@ -69,6 +69,9 @@ fn main() -> Result<()> {
             r.events,
         );
     }
-    println!("\n(attain % = strict SLO attainment over requests arriving in the\n measurement window; incomplete requests count as violations)");
+    println!(
+        "\n(attain % = strict SLO attainment over requests arriving in the\
+         \n measurement window; incomplete requests count as violations)"
+    );
     Ok(())
 }

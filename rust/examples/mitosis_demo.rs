@@ -52,7 +52,10 @@ fn main() {
 
     println!("\nscale events:");
     for e in &sys.scale_log {
-        println!("  t={:>6.1}s  scale {}  -> {} active instances", e.time, e.kind, e.active_instances);
+        println!(
+            "  t={:>6.1}s  scale {}  -> {} active instances",
+            e.time, e.kind, e.active_instances
+        );
     }
     println!("\nfinal macro topology: {:?}", sys.mitosis.macros);
     sys.mitosis.check_invariants().expect("mitosis invariants");
@@ -62,14 +65,17 @@ fn main() {
     let mut table_a = HandlerTable::default();
     let mut table_b = HandlerTable::default();
     for id in 0..4u64 {
-        table_a.handlers.push(InstanceHandler::new(id, format!("node{}:500{}", id / 2, id), 4, 1, 150_000));
+        table_a
+            .handlers
+            .push(InstanceHandler::new(id, format!("node{}:500{}", id / 2, id), 4, 1, 150_000));
     }
     let t0 = std::time::Instant::now();
     let wire = table_a.export(2).expect("handler exists");
     let imported = table_b.import(&wire).expect("valid wire form");
     let dt = t0.elapsed();
     println!(
-        "\nproxy migration of instance {} took {:?} (paper budget: <100ms; \n re-initialization alternative: ~3 minutes of weight loading)",
+        "\nproxy migration of instance {} took {:?} (paper budget: <100ms; \
+         \n re-initialization alternative: ~3 minutes of weight loading)",
         imported.actor_id, dt
     );
     println!("wire form: {wire}");

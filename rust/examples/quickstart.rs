@@ -31,13 +31,19 @@ fn main() {
         cfg.deployment.cluster.name,
         cfg.dataset.name
     );
-    println!("searching P90 goodput (SLO: TTFT {:.0}s / TPOT {:.0}ms)...",
-             cfg.dataset.slo_ttft, cfg.dataset.slo_tpot * 1e3);
+    println!(
+        "searching P90 goodput (SLO: TTFT {:.0}s / TPOT {:.0}ms)...",
+        cfg.dataset.slo_ttft,
+        cfg.dataset.slo_tpot * 1e3
+    );
 
     let eco = goodput_search(SystemKind::EcoServe, &cfg, Attainment::P90);
     let vllm = goodput_search(SystemKind::Vllm, &cfg, Attainment::P90);
 
-    println!("\n{:<10} {:>14} {:>16} {:>14}", "system", "goodput req/s", "p90 TTFT (s)", "p90 TPOT (ms)");
+    println!(
+        "\n{:<10} {:>14} {:>16} {:>14}",
+        "system", "goodput req/s", "p90 TTFT (s)", "p90 TPOT (ms)"
+    );
     for g in [&eco, &vllm] {
         println!(
             "{:<10} {:>14.2} {:>16.2} {:>14.1}",
@@ -49,5 +55,9 @@ fn main() {
     }
     let gain = (eco.rate / vllm.rate.max(1e-9) - 1.0) * 100.0;
     println!("\nEcoServe goodput improvement over vLLM: {gain:+.1}%");
-    println!("(paper Figure 8 reports an 83.76% average P90 improvement over vLLM\n across the full 3-model x 3-dataset x 2-cluster grid — run\n `cargo bench --bench fig8_end_to_end_goodput` for the grid)");
+    println!(
+        "(paper Figure 8 reports an 83.76% average P90 improvement over vLLM\
+         \n across the full 3-model x 3-dataset x 2-cluster grid — run\
+         \n `cargo bench --bench fig8_end_to_end_goodput` for the grid)"
+    );
 }

@@ -72,11 +72,17 @@ impl FudgSystem {
     /// `prefill_count`: how many of the deployment's instances take the
     /// prefill role (the paper sweeps this ratio for MoonCake; the harness
     /// exposes the same sweep).
-    pub fn new(deployment: &Deployment, mode: FudgMode, prefill_count: usize,
-               params: SystemParams) -> Self {
+    pub fn new(
+        deployment: &Deployment,
+        mode: FudgMode,
+        prefill_count: usize,
+        params: SystemParams,
+    ) -> Self {
         let n = deployment.num_instances();
-        assert!(prefill_count >= 1 && prefill_count < n,
-                "need at least one prefill and one decode instance");
+        assert!(
+            prefill_count >= 1 && prefill_count < n,
+            "need at least one prefill and one decode instance"
+        );
         let instances: Vec<SimInstance> = (0..n)
             .map(|i| SimInstance::new(i, deployment.timer(), deployment.kv_reserve_frac))
             .collect();
@@ -153,8 +159,13 @@ impl FudgSystem {
     }
 
     /// Enqueue the KV transfer for `req` from prefill instance `src`.
-    fn start_transfer(&mut self, req: Request, src: usize, now: f64,
-                      sched: &mut EventScheduler) -> bool {
+    fn start_transfer(
+        &mut self,
+        req: Request,
+        src: usize,
+        now: f64,
+        sched: &mut EventScheduler,
+    ) -> bool {
         let Some(dest) = self.pick_decode_dest(&req, src) else {
             self.staged.push_back(req);
             return false;
@@ -240,8 +251,13 @@ impl FudgSystem {
 }
 
 impl System for FudgSystem {
-    fn on_arrival(&mut self, req: Request, now: f64, sched: &mut EventScheduler,
-                  _metrics: &mut Collector) {
+    fn on_arrival(
+        &mut self,
+        req: Request,
+        now: f64,
+        sched: &mut EventScheduler,
+        _metrics: &mut Collector,
+    ) {
         self.prefill_backlog.push_back(req);
         self.kick_prefill_fleet(now, sched);
     }

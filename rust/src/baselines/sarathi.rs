@@ -68,8 +68,13 @@ impl SarathiSystem {
 }
 
 impl System for SarathiSystem {
-    fn on_arrival(&mut self, req: Request, now: f64, sched: &mut EventScheduler,
-                  _metrics: &mut Collector) {
+    fn on_arrival(
+        &mut self,
+        req: Request,
+        now: f64,
+        sched: &mut EventScheduler,
+        _metrics: &mut Collector,
+    ) {
         if !self.backlog.is_empty() || !self.try_admit(&req, now, sched) {
             self.backlog.push_back(req);
         }

@@ -97,8 +97,13 @@ impl VllmSystem {
 }
 
 impl System for VllmSystem {
-    fn on_arrival(&mut self, req: Request, now: f64, sched: &mut EventScheduler,
-                  _metrics: &mut Collector) {
+    fn on_arrival(
+        &mut self,
+        req: Request,
+        now: f64,
+        sched: &mut EventScheduler,
+        _metrics: &mut Collector,
+    ) {
         if !self.backlog.is_empty() || !self.try_admit(&req, now, sched) {
             self.backlog.push_back(req);
         }

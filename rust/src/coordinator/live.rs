@@ -103,8 +103,10 @@ fn worker_loop(
     let mut shutdown = false;
     let mut prefill_ema = 2e-3f64; // seconds/token prior; refined by measurement
 
-    let send_status = |engine: &Engine, queue: &VecDeque<LiveRequest>,
-                       running: &Vec<RunningReq>, ema: f64| {
+    let send_status = |engine: &Engine,
+                       queue: &VecDeque<LiveRequest>,
+                       running: &Vec<RunningReq>,
+                       ema: f64| {
         let now = Instant::now();
         let slack = if running.is_empty() {
             f64::INFINITY
@@ -243,8 +245,12 @@ pub struct LiveCoordinator {
 impl LiveCoordinator {
     /// Spawn `n` instance workers, each with its own engine compiled from
     /// `artifacts`. Blocks until all workers report their first status.
-    pub fn start(n: usize, artifacts: &Path, slo: SloSpec,
-                 kv_capacity_tokens: usize) -> Result<Self> {
+    pub fn start(
+        n: usize,
+        artifacts: &Path,
+        slo: SloSpec,
+        kv_capacity_tokens: usize,
+    ) -> Result<Self> {
         let events: Inbox<WorkerEvent> = Inbox::new();
         let mut actors = Vec::with_capacity(n);
         for i in 0..n {

@@ -210,7 +210,11 @@ mod tests {
     /// Walk the contraction narrative (steps 5-8).
     #[test]
     fn figure7_contraction() {
-        let mut s = MitosisState { macros: vec![(0..6).collect(), (6..10).collect()], n_lower: 3, n_upper: 6 };
+        let mut s = MitosisState {
+            macros: vec![(0..6).collect(), (6..10).collect()],
+            n_lower: 3,
+            n_upper: 6,
+        };
         // Step 5: remove from the smallest macro until N_l.
         let (_, _) = s.remove_instance().unwrap();
         assert_eq!(s.macros[1].len(), 3);

@@ -211,8 +211,7 @@ impl EcoServeSystem {
     /// the member that (a) can still make its TTFT and (b) has the most
     /// saved-TPOT slack — trading the least TPOT damage for TTFT rescue.
     /// This is the "rescue" half of rolling activation under pressure.
-    fn relaxed_admit(&mut self, req: &Request, now: f64,
-                     sched: &mut EventScheduler) -> bool {
+    fn relaxed_admit(&mut self, req: &Request, now: f64, sched: &mut EventScheduler) -> bool {
         let margin = self.params.admission_margin;
         let waited = (now - req.arrival).max(0.0);
         let mut best: Option<(f64, usize)> = None;
@@ -435,8 +434,13 @@ impl EcoServeSystem {
 }
 
 impl System for EcoServeSystem {
-    fn on_arrival(&mut self, req: Request, now: f64, sched: &mut EventScheduler,
-                  _metrics: &mut Collector) {
+    fn on_arrival(
+        &mut self,
+        req: Request,
+        now: f64,
+        sched: &mut EventScheduler,
+        _metrics: &mut Collector,
+    ) {
         // Seed the controller tick lazily on the first arrival.
         if self.autoscale.is_some() && self.last_scale_at == f64::NEG_INFINITY {
             self.last_scale_at = now;
@@ -448,8 +452,13 @@ impl System for EcoServeSystem {
         }
     }
 
-    fn on_instance_wake(&mut self, idx: usize, now: f64, sched: &mut EventScheduler,
-                        metrics: &mut Collector) {
+    fn on_instance_wake(
+        &mut self,
+        idx: usize,
+        now: f64,
+        sched: &mut EventScheduler,
+        metrics: &mut Collector,
+    ) {
         if let Some((_, done)) = self.instances[idx].in_flight {
             if now + EPS < done {
                 return; // spurious kick; the completion wake is scheduled
@@ -462,8 +471,7 @@ impl System for EcoServeSystem {
         // were scheduled by try_route/force_admit.
     }
 
-    fn on_control_tick(&mut self, now: f64, sched: &mut EventScheduler,
-                       metrics: &mut Collector) {
+    fn on_control_tick(&mut self, now: f64, sched: &mut EventScheduler, metrics: &mut Collector) {
         let Some(policy) = self.autoscale.clone() else { return };
         let recs = metrics.records_in_window((now - policy.window).max(0.0), now);
         let attainment = attainment_fraction(&recs, &self.slo);
@@ -577,9 +585,13 @@ mod tests {
     #[test]
     fn autoscaler_adds_instances_under_ramp() {
         let d = small_deployment();
-        let mut sys =
-            EcoServeSystem::with_capacity(&d, SloSpec::new(5.0, 0.1),
-                                          SystemParams::default(), 2, 8);
+        let mut sys = EcoServeSystem::with_capacity(
+            &d,
+            SloSpec::new(5.0, 0.1),
+            SystemParams::default(),
+            2,
+            8,
+        );
         sys.autoscale = Some(AutoScalePolicy::default());
         let gen = TraceGenerator::new(Dataset::sharegpt(), 5);
         let trace = gen.ramp(&[(2.0, 60.0), (8.0, 60.0), (14.0, 120.0)]);

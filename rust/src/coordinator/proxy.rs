@@ -38,8 +38,13 @@ impl InstanceHandler {
             .collect()
     }
 
-    pub fn new(actor_id: u64, address: impl Into<String>, tp: usize, pp: usize,
-               kv_capacity_tokens: usize) -> Self {
+    pub fn new(
+        actor_id: u64,
+        address: impl Into<String>,
+        tp: usize,
+        pp: usize,
+        kv_capacity_tokens: usize,
+    ) -> Self {
         InstanceHandler {
             actor_id,
             address: address.into(),

@@ -47,8 +47,16 @@ pub fn route(
     slo: &SloSpec,
     admission_margin: usize,
 ) -> RouteOutcome {
-    route_with(state, members, instances, req, now, slo, admission_margin,
-               RouteOpts::default())
+    route_with(
+        state,
+        members,
+        instances,
+        req,
+        now,
+        slo,
+        admission_margin,
+        RouteOpts::default(),
+    )
 }
 
 /// Ablation switches for [`route_with`] (benches/ablation_padg.rs).

@@ -260,8 +260,10 @@ fn cmd_goodput(args: &Args) -> Result<()> {
         cfg.dataset.name,
     );
     if let Some(p) = g.fudg_prefill {
-        println!("  (FuDG split: {p} prefill / {} decode)",
-                 cfg.deployment.num_instances() - p);
+        println!(
+            "  (FuDG split: {p} prefill / {} decode)",
+            cfg.deployment.num_instances() - p
+        );
     }
     println!("  explored {} operating points", g.curve.len());
     if args.has("curve") {

@@ -50,30 +50,78 @@ impl OpCost {
 pub fn table2_ops(b: f64, s: f64, h: f64, m: f64, elem_bytes: f64) -> Vec<OpCost> {
     let e = elem_bytes;
     vec![
-        OpCost { name: "QKV Projection", phase: Phase::Prefill,
-                 flops: 6.0 * b * s * h * h, bytes: (6.0 * b * s * h + 3.0 * h * h) * e },
-        OpCost { name: "QKV Projection", phase: Phase::Decode,
-                 flops: 6.0 * b * h * h, bytes: (6.0 * b * h + 3.0 * h * h) * e },
-        OpCost { name: "Attention QK^T", phase: Phase::Prefill,
-                 flops: 2.0 * b * s * s * h, bytes: (2.0 * b * s * h + b * s * s * m) * e },
-        OpCost { name: "Attention QK^T", phase: Phase::Decode,
-                 flops: 2.0 * b * s * h, bytes: (2.0 * b * s * m + b * h * (s + 1.0)) * e },
-        OpCost { name: "Attention (QK^T)V", phase: Phase::Prefill,
-                 flops: 2.0 * b * s * s * h, bytes: (2.0 * b * s * h + b * s * s * m) * e },
-        OpCost { name: "Attention (QK^T)V", phase: Phase::Decode,
-                 flops: 2.0 * b * s * h, bytes: (2.0 * b * s * m + b * h * (s + 1.0)) * e },
-        OpCost { name: "Output Projection", phase: Phase::Prefill,
-                 flops: 2.0 * b * s * h * h, bytes: (2.0 * b * s * h + h * h) * e },
-        OpCost { name: "Output Projection", phase: Phase::Decode,
-                 flops: 2.0 * b * h * h, bytes: (2.0 * b * h + h * h) * e },
-        OpCost { name: "Dim Expansion", phase: Phase::Prefill,
-                 flops: 8.0 * b * s * h * h, bytes: (2.0 * b * s * h + 4.0 * h * h) * e },
-        OpCost { name: "Dim Expansion", phase: Phase::Decode,
-                 flops: 8.0 * b * h * h, bytes: (2.0 * b * h + 4.0 * h * h) * e },
-        OpCost { name: "Dim Reduction", phase: Phase::Prefill,
-                 flops: 8.0 * b * s * h * h, bytes: (2.0 * b * s * h + 4.0 * h * h) * e },
-        OpCost { name: "Dim Reduction", phase: Phase::Decode,
-                 flops: 8.0 * b * h * h, bytes: (2.0 * b * h + 4.0 * h * h) * e },
+        OpCost {
+            name: "QKV Projection",
+            phase: Phase::Prefill,
+            flops: 6.0 * b * s * h * h,
+            bytes: (6.0 * b * s * h + 3.0 * h * h) * e,
+        },
+        OpCost {
+            name: "QKV Projection",
+            phase: Phase::Decode,
+            flops: 6.0 * b * h * h,
+            bytes: (6.0 * b * h + 3.0 * h * h) * e,
+        },
+        OpCost {
+            name: "Attention QK^T",
+            phase: Phase::Prefill,
+            flops: 2.0 * b * s * s * h,
+            bytes: (2.0 * b * s * h + b * s * s * m) * e,
+        },
+        OpCost {
+            name: "Attention QK^T",
+            phase: Phase::Decode,
+            flops: 2.0 * b * s * h,
+            bytes: (2.0 * b * s * m + b * h * (s + 1.0)) * e,
+        },
+        OpCost {
+            name: "Attention (QK^T)V",
+            phase: Phase::Prefill,
+            flops: 2.0 * b * s * s * h,
+            bytes: (2.0 * b * s * h + b * s * s * m) * e,
+        },
+        OpCost {
+            name: "Attention (QK^T)V",
+            phase: Phase::Decode,
+            flops: 2.0 * b * s * h,
+            bytes: (2.0 * b * s * m + b * h * (s + 1.0)) * e,
+        },
+        OpCost {
+            name: "Output Projection",
+            phase: Phase::Prefill,
+            flops: 2.0 * b * s * h * h,
+            bytes: (2.0 * b * s * h + h * h) * e,
+        },
+        OpCost {
+            name: "Output Projection",
+            phase: Phase::Decode,
+            flops: 2.0 * b * h * h,
+            bytes: (2.0 * b * h + h * h) * e,
+        },
+        OpCost {
+            name: "Dim Expansion",
+            phase: Phase::Prefill,
+            flops: 8.0 * b * s * h * h,
+            bytes: (2.0 * b * s * h + 4.0 * h * h) * e,
+        },
+        OpCost {
+            name: "Dim Expansion",
+            phase: Phase::Decode,
+            flops: 8.0 * b * h * h,
+            bytes: (2.0 * b * h + 4.0 * h * h) * e,
+        },
+        OpCost {
+            name: "Dim Reduction",
+            phase: Phase::Prefill,
+            flops: 8.0 * b * s * h * h,
+            bytes: (2.0 * b * s * h + 4.0 * h * h) * e,
+        },
+        OpCost {
+            name: "Dim Reduction",
+            phase: Phase::Decode,
+            flops: 8.0 * b * h * h,
+            bytes: (2.0 * b * h + 4.0 * h * h) * e,
+        },
     ]
 }
 
@@ -119,8 +167,13 @@ mod tests {
     #[test]
     fn prefill_ai_dominates_decode() {
         let ops = table2_ops(16.0, 256.0, 4096.0, 32.0, 2.0);
-        for name in ["QKV Projection", "Attention QK^T", "Output Projection",
-                     "Dim Expansion", "Dim Reduction"] {
+        for name in [
+            "QKV Projection",
+            "Attention QK^T",
+            "Output Projection",
+            "Dim Expansion",
+            "Dim Reduction",
+        ] {
             let p = ops.iter().find(|o| o.name == name && o.phase == Phase::Prefill).unwrap();
             let d = ops.iter().find(|o| o.name == name && o.phase == Phase::Decode).unwrap();
             assert!(

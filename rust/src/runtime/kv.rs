@@ -122,8 +122,14 @@ impl KvStore {
     /// Install a freshly prefilled request. `k`/`v` are the prefill
     /// executable's outputs laid out `[L, 1, Hkv, S_bucket, D]`; only the
     /// first `len` positions are valid.
-    pub fn insert_prefill(&mut self, id: u64, k: &[f32], v: &[f32], bucket: usize,
-                          len: usize) -> Result<()> {
+    pub fn insert_prefill(
+        &mut self,
+        id: u64,
+        k: &[f32],
+        v: &[f32],
+        bucket: usize,
+        len: usize,
+    ) -> Result<()> {
         let c = self.cfg.clone();
         if self.entries.contains_key(&id) {
             bail!("request {id} already in KV store");

@@ -89,15 +89,34 @@ impl EventScheduler {
 
 /// A serving system under simulation: the five schedulers implement this.
 pub trait System {
-    fn on_arrival(&mut self, req: Request, now: f64, sched: &mut EventScheduler,
-                  metrics: &mut Collector);
-    fn on_instance_wake(&mut self, instance: usize, now: f64,
-                        sched: &mut EventScheduler, metrics: &mut Collector);
-    fn on_transfer_done(&mut self, _transfer: u64, _now: f64,
-                        _sched: &mut EventScheduler, _metrics: &mut Collector) {
+    fn on_arrival(
+        &mut self,
+        req: Request,
+        now: f64,
+        sched: &mut EventScheduler,
+        metrics: &mut Collector,
+    );
+    fn on_instance_wake(
+        &mut self,
+        instance: usize,
+        now: f64,
+        sched: &mut EventScheduler,
+        metrics: &mut Collector,
+    );
+    fn on_transfer_done(
+        &mut self,
+        _transfer: u64,
+        _now: f64,
+        _sched: &mut EventScheduler,
+        _metrics: &mut Collector,
+    ) {
     }
-    fn on_control_tick(&mut self, _now: f64, _sched: &mut EventScheduler,
-                       _metrics: &mut Collector) {
+    fn on_control_tick(
+        &mut self,
+        _now: f64,
+        _sched: &mut EventScheduler,
+        _metrics: &mut Collector,
+    ) {
     }
 }
 
@@ -163,8 +182,13 @@ mod tests {
     }
 
     impl System for Echo {
-        fn on_arrival(&mut self, req: Request, now: f64, sched: &mut EventScheduler,
-                      metrics: &mut Collector) {
+        fn on_arrival(
+            &mut self,
+            req: Request,
+            now: f64,
+            sched: &mut EventScheduler,
+            metrics: &mut Collector,
+        ) {
             metrics.on_first_token(req.id, now + self.service);
             self.pending.push((req.id, now + self.service));
             sched.at(now + self.service, Event::InstanceWake { instance: 0 });

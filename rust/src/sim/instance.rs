@@ -327,8 +327,13 @@ impl SimInstance {
     /// start of its first decode iteration — the gap is the phase-switching
     /// wait, charged to TTFT, with TPOT measured after it. (Requests whose
     /// entire output is the prefill token complete immediately.)
-    fn finish_prefill(&mut self, mut r: SimReq, now: f64, metrics: &mut Collector,
-                      finished: &mut Vec<SimReq>) {
+    fn finish_prefill(
+        &mut self,
+        mut r: SimReq,
+        now: f64,
+        metrics: &mut Collector,
+        finished: &mut Vec<SimReq>,
+    ) {
         r.prefilled = r.req.input_len;
         r.generated = 1; // the prefill's token; rendered at decode start
         self.kv_used += 1;
@@ -343,8 +348,7 @@ impl SimInstance {
         }
     }
 
-    fn apply_decode_step(&mut self, now: f64, metrics: &mut Collector,
-                         finished: &mut Vec<SimReq>) {
+    fn apply_decode_step(&mut self, now: f64, metrics: &mut Collector, finished: &mut Vec<SimReq>) {
         let started = self.batch_started;
         let batch = self.running.len().min(self.max_decode_batch);
         let mut i = 0;

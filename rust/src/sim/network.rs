@@ -72,8 +72,14 @@ impl Network {
 
     /// Enqueue a two-hop transfer (MoonCake: prefill node -> pool -> decode
     /// node). The second hop starts when the first completes.
-    pub fn enqueue_two_hop(&mut self, first: usize, second: usize, bytes: f64,
-                           tag: u64, now: f64) -> Transfer {
+    pub fn enqueue_two_hop(
+        &mut self,
+        first: usize,
+        second: usize,
+        bytes: f64,
+        tag: u64,
+        now: f64,
+    ) -> Transfer {
         let hop1 = self.enqueue(first, bytes, tag, now);
         // remove hop1 from in_flight; only the final hop is awaited
         self.in_flight.remove(&hop1.id);

@@ -59,8 +59,12 @@ impl Gen {
     }
 
     /// Vector with random length in [min_len, max_len].
-    pub fn vec<T>(&mut self, min_len: usize, max_len: usize,
-                  mut item: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+    pub fn vec<T>(
+        &mut self,
+        min_len: usize,
+        max_len: usize,
+        mut item: impl FnMut(&mut Gen) -> T,
+    ) -> Vec<T> {
         let n = self.usize(min_len, max_len);
         (0..n).map(|_| item(self)).collect()
     }

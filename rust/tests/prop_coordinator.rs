@@ -15,8 +15,8 @@ use ecoserve::testing::prop::{check, Gen};
 use ecoserve::workload::{Dataset, Request, TraceGenerator};
 
 fn deployment() -> Deployment {
-    let mut d = Deployment::paper_default(ModelSpec::codellama_34b(),
-                                          ClusterSpec::l20_cluster());
+    let mut d =
+        Deployment::paper_default(ModelSpec::codellama_34b(), ClusterSpec::l20_cluster());
     d.gpus_used = 16;
     d
 }
@@ -39,8 +39,11 @@ fn prop_mitosis_invariants_under_random_ops() {
                 live -= 1;
             }
             s.check_invariants().map_err(|e| e)?;
-            prop_assert!(s.total_instances() == live,
-                         "count {} != live {live}", s.total_instances());
+            prop_assert!(
+                s.total_instances() == live,
+                "count {} != live {live}",
+                s.total_instances()
+            );
         }
         Ok(())
     });
@@ -96,8 +99,7 @@ fn prop_routing_admits_only_satisfying_instances() {
         let budget = slo.ttft / n as f64;
         match route(&mut st, &members, &instances, &req, 0.0, &slo, 64) {
             RouteOutcome::Admitted(pos) => {
-                let v = check_constraints(&instances[members[pos]], &req, 0.0,
-                                          &slo, 64, budget);
+                let v = check_constraints(&instances[members[pos]], &req, 0.0, &slo, 64, budget);
                 prop_assert!(v.ok(), "admitted instance fails Algorithm 2: {v:?}");
             }
             RouteOutcome::Deferred => {
@@ -132,12 +134,15 @@ fn prop_simulation_conserves_kv_and_requests() {
         let n = trace.len();
         let mut m = Collector::new();
         run(&mut sys, trace, 5_000.0, &mut m);
-        prop_assert!(m.completed().len() == n,
-                     "completed {} of {n}", m.completed().len());
+        prop_assert!(m.completed().len() == n, "completed {} of {n}", m.completed().len());
         prop_assert!(m.in_flight() == 0, "{} stuck in flight", m.in_flight());
         for inst in &sys.instances {
-            prop_assert!(inst.kv_used == 0, "instance {} leaked {} KV tokens",
-                         inst.id, inst.kv_used);
+            prop_assert!(
+                inst.kv_used == 0,
+                "instance {} leaked {} KV tokens",
+                inst.id,
+                inst.kv_used
+            );
         }
         // Sanity on every record: first <= completion, ttft >= 0.
         for r in m.completed() {

@@ -127,8 +127,8 @@ fn phase_switch_counts_padg_below_nodg() {
     use ecoserve::sim::run;
     use ecoserve::workload::TraceGenerator;
 
-    let mut d = Deployment::paper_default(ModelSpec::codellama_34b(),
-                                          ClusterSpec::l20_cluster());
+    let mut d =
+        Deployment::paper_default(ModelSpec::codellama_34b(), ClusterSpec::l20_cluster());
     d.gpus_used = 16;
     let dataset = Dataset::sharegpt();
     let slo = SloSpec::new(dataset.slo_ttft, dataset.slo_tpot);
