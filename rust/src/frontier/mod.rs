@@ -14,7 +14,13 @@
 //! ecoserve frontier --scenario bursty --level p90 --out BENCH_goodput.json
 //! ecoserve frontier --quick --autoscale          # CI smoke setting
 //! ecoserve frontier --system vllm --gpus 16
+//! ecoserve frontier --replay trace.jsonl --quick # recorded arrival log
 //! ```
+//!
+//! `--replay` sweeps a recorded arrival log instead of a synthetic
+//! shape: every probe time-warps the log so the offered rate matches the
+//! probed rate while the recorded burst structure is preserved
+//! ([`crate::workload::ReplayTrace::requests_at`]).
 //!
 //! * [`search`] — the one rate-search implementation (bracket + bisect),
 //!   generic over the probe; every probe is recorded so searches yield

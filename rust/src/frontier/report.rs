@@ -35,7 +35,7 @@ fn cell_to_json(cell: &FrontierCell) -> Json {
 }
 
 fn frontier_to_json_one(f: &ScenarioFrontier) -> Json {
-    Json::obj(vec![
+    let mut fields = vec![
         ("name", Json::str(f.scenario.name)),
         ("summary", Json::str(f.scenario.summary)),
         (
@@ -54,7 +54,11 @@ fn frontier_to_json_one(f: &ScenarioFrontier) -> Json {
             },
         ),
         ("systems", Json::arr(f.rows.iter().map(cell_to_json))),
-    ])
+    ];
+    if let Some(block) = crate::scenarios::report::replay_to_json(&f.scenario) {
+        fields.push(block);
+    }
+    Json::obj(fields)
 }
 
 /// The full `BENCH_goodput.json` document.

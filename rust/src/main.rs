@@ -5,10 +5,13 @@
 //!                needs the `pjrt` cargo feature)
 //!   simulate   — one simulated run of a system at a fixed request rate
 //!   goodput    — goodput search (paper §4.1) for one system
-//!   scenarios  — the multi-scenario evaluation suite (--list to browse)
+//!   scenarios  — the multi-scenario evaluation suite (--list to browse;
+//!                --replay runs a recorded arrival log instead)
 //!   frontier   — goodput-frontier sweep: max sustainable rate per
 //!                scenario x system at a target attainment level, with an
 //!                optional mitosis-on PaDG variant and a BENCH JSON
+//!                (--replay sweeps a recorded log via time-warping)
+//!   record     — export a scenario's trace as a replay log (JSONL)
 //!   table2     — print the arithmetic-intensity table
 //!   table3     — print the KV-bandwidth table
 //!
@@ -21,6 +24,9 @@
 //!   ecoserve scenarios --scenario bursty --out report.json
 //!   ecoserve frontier --scenario bursty --level p90 --out BENCH_goodput.json
 //!   ecoserve frontier --quick --autoscale --gpus 16
+//!   ecoserve record --scenario bursty --rate 6 --out bursty.jsonl
+//!   ecoserve scenarios --replay bursty.jsonl
+//!   ecoserve frontier --replay bursty.jsonl --quick --autoscale
 
 // Same advisory lint posture as lib.rs (see its comment).
 #![allow(clippy::style, clippy::complexity, clippy::perf)]
@@ -44,11 +50,13 @@ fn main() -> Result<()> {
         Some("goodput") => cmd_goodput(&args),
         Some("scenarios") => cmd_scenarios(&args),
         Some("frontier") => cmd_frontier(&args),
+        Some("record") => cmd_record(&args),
         Some("table2") => cmd_table2(&args),
         Some("table3") => cmd_table3(),
         _ => {
             eprintln!(
-                "usage: ecoserve <serve|simulate|goodput|scenarios|frontier|table2|table3> [--flags]"
+                "usage: ecoserve <serve|simulate|goodput|scenarios|frontier|record|\
+                 table2|table3> [--flags]"
             );
             eprintln!("see rust/src/main.rs docs for examples");
             Ok(())
@@ -136,15 +144,65 @@ fn cmd_serve(_args: &Args) -> Result<()> {
     )
 }
 
-/// Shared `--scenario` selection (scenarios + frontier): one named
-/// scenario, or the whole registry.
+/// Shared `--scenario` / `--replay` selection (scenarios + frontier):
+/// a recorded arrival log, one named scenario, or the whole registry.
 fn select_scenarios(args: &Args) -> Result<Vec<scenarios::Scenario>> {
+    let replay = args.get_path("replay").map_err(|e| anyhow::anyhow!("{e}"))?;
+    if let Some(path) = replay {
+        if args.get("scenario").is_some() {
+            bail!("--replay and --scenario are mutually exclusive: a replay log IS the scenario");
+        }
+        let scenario = scenarios::Scenario::from_log(&path)?;
+        let trace = scenario.replay().expect("from_log builds a replay scenario");
+        eprintln!(
+            "replaying {}: {} requests over {:.0}s ({:.2} req/s native, {} class(es))",
+            path.display(),
+            trace.len(),
+            trace.duration(),
+            trace.native_rate(),
+            scenario.classes.len(),
+        );
+        return Ok(vec![scenario]);
+    }
     match args.get("scenario") {
         Some(name) => Ok(vec![scenarios::by_name(name).ok_or_else(|| {
             anyhow::anyhow!("unknown scenario '{name}' (try `ecoserve scenarios --list`)")
         })?]),
         None => Ok(scenarios::registry()),
     }
+}
+
+/// Export a scenario's deterministic trace in the replay-log format
+/// (`record` subcommand): the same JSONL `ecoserve scenarios --replay`
+/// and `ecoserve frontier --replay` consume, so any synthetic shape can
+/// round-trip through the wire format.
+fn cmd_record(args: &Args) -> Result<()> {
+    let name = args.get_or("scenario", "steady");
+    let mut scenario = scenarios::by_name(&name).ok_or_else(|| {
+        anyhow::anyhow!("unknown scenario '{name}' (try `ecoserve scenarios --list`)")
+    })?;
+    if let Some(d) = parse_f64_flag(args, "duration")? {
+        scenario.duration = d;
+        scenario.warmup = scenario.warmup.min(d / 4.0);
+    }
+    let seed = args.get_u64("seed", 42);
+    let rate = parse_f64_flag(args, "rate")?.unwrap_or(scenario.default_rate);
+    let log = scenario.record_log(seed, rate);
+    let lines = log.lines().count();
+    match args.get_path("out").map_err(|e| anyhow::anyhow!("{e}"))? {
+        Some(path) => {
+            std::fs::write(&path, &log)
+                .map_err(|e| anyhow::anyhow!("write {}: {e}", path.display()))?;
+            eprintln!(
+                "recorded scenario '{}' @ {rate} req/s (seed {seed}) -> {} ({} requests)",
+                scenario.name,
+                path.display(),
+                lines - 1, // minus the header line
+            );
+        }
+        None => print!("{log}"),
+    }
+    Ok(())
 }
 
 /// Shared `--system` selection (scenarios + frontier): one system, or all.

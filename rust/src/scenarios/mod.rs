@@ -12,12 +12,15 @@
 //! ecoserve scenarios --list
 //! ecoserve scenarios --scenario bursty --out report.json
 //! ecoserve scenarios --system vllm --rate 4 --duration 120
+//! ecoserve scenarios --replay trace.jsonl     # recorded arrival log
 //! ```
 //!
 //! * [`registry`] — the scenario catalog: traffic classes (dataset + SLO
-//!   + rate share) × load shape (steady / on-off / diurnal / ramp) ×
-//!   horizon, all built on [`crate::workload::TraceGenerator`] and
-//!   [`crate::workload::RampTrace`].
+//!   + rate share) × load shape (steady / on-off / diurnal / ramp /
+//!   recorded-log replay) × horizon, built on
+//!   [`crate::workload::TraceGenerator`], [`crate::workload::RampTrace`],
+//!   and [`crate::workload::ReplayTrace`] ([`Scenario::from_log`] wraps a
+//!   log; `ecoserve record` exports one).
 //! * [`driver`] — runs (scenario × system) cells through
 //!   [`crate::harness::build_system`] and the simulator in parallel
 //!   ([`crate::util::threads::parallel_map`]), scoring strict per-class
@@ -30,10 +33,11 @@ pub mod registry;
 pub mod report;
 
 pub use driver::{
-    run_scenario, run_suite, run_system_variant, AutoscaleTelemetry, ClassScore,
-    ScenarioConfig, ScenarioOutcome, SystemRow, VariantSpec,
+    run_scenario, run_suite, run_system, run_system_variant, AutoscaleTelemetry,
+    ClassScore, ScenarioConfig, ScenarioOutcome, SystemRow, VariantSpec,
 };
 pub use registry::{by_name, registry, LoadShape, Scenario, SweepBounds, TrafficClass};
 pub use report::{
-    class_to_json, deployment_to_json, render_table, suite_to_json, SCHEMA_VERSION,
+    class_to_json, deployment_to_json, render_table, replay_to_json, suite_to_json,
+    SCHEMA_VERSION,
 };

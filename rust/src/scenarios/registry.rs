@@ -8,6 +8,11 @@
 //! the load shape modulates the *total* offered rate over time and is
 //! normalized so `rate` is always the time-averaged offered rate.
 
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::workload::replay::{leak, render_log, ReplayClass, ReplayRecord, ReplayTrace};
 use crate::workload::{Dataset, RampTrace, Request, TraceGenerator};
 
 /// One class of traffic inside a scenario. `share` is this class's
@@ -36,17 +41,25 @@ pub enum LoadShape {
     /// Monotone escalation from `start_mult × rate` to `end_mult × rate`
     /// in `increments` equal steps (the Figure-10 [`RampTrace`] shape).
     Ramp { start_mult: f64, end_mult: f64, increments: usize },
+    /// Replay of a recorded arrival log ([`ReplayTrace`]): arrivals come
+    /// from the log, time-warped so the offered rate hits the nominal
+    /// `rate` (see [`ReplayTrace::requests_at`]). The log — not a PRNG —
+    /// is the randomness, so `seed` is unused on this path.
+    Replay(ReplayTrace),
 }
 
 impl LoadShape {
     /// Piecewise-constant (rate, duration) steps covering `duration`
-    /// seconds at time-averaged rate `rate`.
+    /// seconds at time-averaged rate `rate`. For [`LoadShape::Replay`]
+    /// this is only the *nominal* profile (one flat step at the warped
+    /// mean rate) — replay arrivals come straight from the log via
+    /// [`Scenario::build_trace`], never from these steps.
     pub fn steps(&self, rate: f64, duration: f64) -> Vec<(f64, f64)> {
         // The arrival sampler needs strictly positive rates.
         const MIN_RATE: f64 = 0.05;
-        match *self {
-            LoadShape::Steady => vec![(rate.max(MIN_RATE), duration)],
-            LoadShape::OnOff { period, duty, peak_to_mean } => {
+        match self {
+            LoadShape::Steady | LoadShape::Replay(_) => vec![(rate.max(MIN_RATE), duration)],
+            &LoadShape::OnOff { period, duty, peak_to_mean } => {
                 let duty = duty.clamp(0.05, 0.95);
                 let peak = rate * peak_to_mean;
                 // Trough chosen so duty·peak + (1−duty)·trough = rate.
@@ -68,7 +81,7 @@ impl LoadShape {
                 }
                 out
             }
-            LoadShape::Diurnal { trough_mult, peak_mult, segments } => {
+            &LoadShape::Diurnal { trough_mult, peak_mult, segments } => {
                 let n = segments.max(2);
                 let raw: Vec<f64> = (0..n)
                     .map(|i| {
@@ -81,7 +94,7 @@ impl LoadShape {
                     .map(|m| ((rate * m / mean).max(MIN_RATE), duration / n as f64))
                     .collect()
             }
-            LoadShape::Ramp { start_mult, end_mult, increments } => {
+            &LoadShape::Ramp { start_mult, end_mult, increments } => {
                 let n = increments.max(2);
                 let ramp = RampTrace {
                     start_rate: rate * start_mult,
@@ -165,21 +178,73 @@ impl Scenario {
             .clone()
     }
 
-    /// Which traffic class a request id belongs to (ids are tagged
-    /// `idx × n_classes + class` by [`Scenario::build_trace`]).
+    /// Which traffic class a request id belongs to. Synthetic traces tag
+    /// ids `idx × n_classes + class` and the class is the residue;
+    /// replayed traffic carries *log-assigned* classes with no such
+    /// structure, so attribution goes through the [`ReplayTrace`] side
+    /// table instead — the modulo arithmetic would silently misattribute
+    /// every replayed request whose class ≠ id mod n.
     pub fn class_of(&self, id: u64) -> usize {
-        (id % self.classes.len() as u64) as usize
+        match &self.shape {
+            LoadShape::Replay(trace) => trace.class_of(id),
+            _ => (id % self.classes.len() as u64) as usize,
+        }
+    }
+
+    /// True when this scenario replays a recorded log.
+    pub fn is_replay(&self) -> bool {
+        matches!(self.shape, LoadShape::Replay(_))
+    }
+
+    /// The recorded log behind a replay scenario.
+    pub fn replay(&self) -> Option<&ReplayTrace> {
+        match &self.shape {
+            LoadShape::Replay(trace) => Some(trace),
+            _ => None,
+        }
+    }
+
+    /// (duration, warmup) at offered rate `rate`. Synthetic shapes have a
+    /// rate-independent horizon. A replayed log's span *scales with the
+    /// time warp*: compressing (rate above native) shortens it, and
+    /// stretching is clipped at the recorded span — so the horizon never
+    /// exceeds the native span and the scored window always carries the
+    /// probe rate (a longer window would trail a dead, rate-diluting
+    /// tail; see [`ReplayTrace::requests_at`]).
+    pub fn horizon_at(&self, rate: f64) -> (f64, f64) {
+        match &self.shape {
+            LoadShape::Replay(trace) => {
+                let warp = trace.native_rate() / rate.max(1e-12);
+                let duration = self.duration * warp.min(1.0);
+                (duration, self.warmup.min(duration / 4.0))
+            }
+            _ => (self.duration, self.warmup),
+        }
     }
 
     /// Deterministically generate the merged multi-class trace at
     /// time-averaged `rate` req/s: bit-for-bit reproducible from
     /// (scenario, seed, rate), matching the simulator's determinism
-    /// contract (`sim::engine` orders ties by insertion).
+    /// contract (`sim::engine` orders ties by insertion). Replay
+    /// scenarios ignore `seed` — the recorded log is the randomness —
+    /// and time-warp the log to `rate`, clipped at `self.duration`.
     pub fn build_trace(&self, seed: u64, rate: f64) -> Vec<Request> {
+        self.build_trace_for(seed, rate, self.duration)
+    }
+
+    /// [`Scenario::build_trace`] with an explicit `horizon` (the driver's
+    /// possibly-overridden duration), so callers shortening the window
+    /// don't have to clone the scenario — a replay scenario carries the
+    /// whole recorded log by value, and the frontier probes each cell
+    /// many times.
+    pub fn build_trace_for(&self, seed: u64, rate: f64, horizon: f64) -> Vec<Request> {
+        if let LoadShape::Replay(trace) = &self.shape {
+            return trace.requests_at(rate, horizon);
+        }
         let n_classes = self.classes.len() as u64;
         let mut merged: Vec<Request> = Vec::new();
         for (k, class) in self.classes.iter().enumerate() {
-            let steps = self.shape.steps(rate * class.share, self.duration);
+            let steps = self.shape.steps(rate * class.share, horizon);
             // Per-class stream: distinct seeds give independent arrivals.
             let gen = TraceGenerator::new(
                 class.dataset.clone(),
@@ -197,6 +262,74 @@ impl Scenario {
                 .then(a.id.cmp(&b.id))
         });
         merged
+    }
+
+    /// Wrap a parsed arrival log as a scenario: classes, horizon, and
+    /// warm-up come from the log, the nominal rate is the log's native
+    /// rate, and the frontier sweep brackets around it. Runs flow through
+    /// the exact machinery synthetic scenarios use — per-class strict
+    /// scoring, frontier probes, the mitosis-on variant.
+    pub fn from_replay(trace: ReplayTrace) -> Scenario {
+        let native_rate = trace.native_rate();
+        let duration = trace.duration();
+        let warmup = trace.warmup();
+        let counts = trace.class_counts();
+        let total = trace.len().max(1) as f64;
+        let classes = trace
+            .classes()
+            .iter()
+            .zip(&counts)
+            .map(|(c, &n)| TrafficClass {
+                name: c.name,
+                dataset: c.dataset.clone(),
+                share: n as f64 / total,
+            })
+            .collect();
+        let name = leak(format!("replay:{}", trace.source()));
+        let summary = leak(format!(
+            "replayed arrival log '{}': {} requests over {:.0}s ({:.2} req/s native)",
+            trace.source(),
+            trace.len(),
+            duration,
+            native_rate,
+        ));
+        Scenario {
+            name,
+            summary,
+            classes,
+            shape: LoadShape::Replay(trace),
+            duration,
+            warmup,
+            default_rate: native_rate,
+            sweep: SweepBounds::around(native_rate),
+        }
+    }
+
+    /// Load a recorded arrival log from disk as a replay scenario
+    /// (`ecoserve scenarios --replay <log>` / `ecoserve frontier
+    /// --replay <log>`).
+    pub fn from_log(path: &Path) -> Result<Scenario> {
+        Ok(Scenario::from_replay(ReplayTrace::from_file(path)?))
+    }
+
+    /// Export this scenario's trace at (seed, rate) in the recorded-log
+    /// format (`ecoserve record`). Parsing the result back with
+    /// [`Scenario::from_log`] reproduces the trace bit-for-bit modulo id
+    /// retagging — the round-trip that keeps the wire format honest.
+    pub fn record_log(&self, seed: u64, rate: f64) -> String {
+        let classes: Vec<ReplayClass> = self
+            .classes
+            .iter()
+            .map(|c| ReplayClass { name: c.name, dataset: c.dataset.clone() })
+            .collect();
+        let source = format!("scenario '{}' seed {} @ {} req/s", self.name, seed, rate);
+        let records = self.build_trace(seed, rate).into_iter().map(|req| ReplayRecord {
+            arrival: req.arrival,
+            input_len: req.input_len,
+            output_len: req.output_len,
+            class: self.class_of(req.id),
+        });
+        render_log(&classes, self.duration, self.warmup, &source, records)
     }
 }
 
@@ -391,5 +524,70 @@ mod tests {
         assert_eq!(s.scheduler_dataset().name, "Alpaca-gpt4");
         let steady = by_name("steady").unwrap();
         assert_eq!(steady.scheduler_dataset().name, "ShareGPT");
+    }
+
+    /// A log whose classes do NOT follow the synthetic `id % n` tagging:
+    /// three consecutive class-1 records. The side table must attribute
+    /// them correctly where the modulo arithmetic would not.
+    #[test]
+    fn replay_class_attribution_uses_the_log_not_modulo() {
+        let text = "{\"ecoserve_trace\":1,\"duration_s\":8,\"warmup_s\":1,\"classes\":\
+                    [{\"name\":\"a\",\"dataset\":\"alpaca\"},\
+                     {\"name\":\"b\",\"dataset\":\"longbench\"}]}\n\
+                    {\"arrival_s\":1,\"input_len\":10,\"output_len\":5,\"class\":1}\n\
+                    {\"arrival_s\":2,\"input_len\":10,\"output_len\":5,\"class\":1}\n\
+                    {\"arrival_s\":3,\"input_len\":10,\"output_len\":5,\"class\":1}\n\
+                    {\"arrival_s\":4,\"input_len\":10,\"output_len\":5,\"class\":0}\n";
+        let s = Scenario::from_replay(ReplayTrace::parse_named(text, "t").unwrap());
+        assert!(s.is_replay());
+        let trace = s.build_trace(0, s.default_rate);
+        assert_eq!(trace.len(), 4);
+        let classes: Vec<usize> = trace.iter().map(|r| s.class_of(r.id)).collect();
+        assert_eq!(classes, vec![1, 1, 1, 0]);
+        // The modulo rule (id % n over sequential replay ids 0..4) would
+        // have produced [0, 1, 0, 1] here — every single one wrong.
+        let modulo: Vec<usize> = trace.iter().map(|r| (r.id % 2) as usize).collect();
+        assert_eq!(modulo, vec![0, 1, 0, 1]);
+        assert_ne!(classes, modulo);
+        // Shares follow the log's class mix.
+        assert!((s.classes[0].share - 0.25).abs() < 1e-12);
+        assert!((s.classes[1].share - 0.75).abs() < 1e-12);
+        assert_eq!(s.scheduler_dataset().name, "Alpaca-gpt4");
+    }
+
+    #[test]
+    fn replay_horizon_scales_with_the_time_warp() {
+        let text = "{\"ecoserve_trace\":1,\"duration_s\":100,\"warmup_s\":10}\n\
+                    {\"arrival_s\":10,\"input_len\":10,\"output_len\":5}\n\
+                    {\"arrival_s\":60,\"input_len\":10,\"output_len\":5}\n";
+        let s = Scenario::from_replay(ReplayTrace::parse_named(text, "t").unwrap());
+        let native = s.default_rate; // 2 / 100 = 0.02 req/s
+        assert!((native - 0.02).abs() < 1e-12);
+        // Native rate: the recorded horizon and warmup.
+        assert_eq!(s.horizon_at(native), (100.0, 10.0));
+        // Compress 4x: horizon shrinks 4x, warmup clamps inside it.
+        let (d, w) = s.horizon_at(native * 4.0);
+        assert!((d - 25.0).abs() < 1e-9);
+        assert!(w <= d / 4.0 + 1e-12);
+        // Stretch: clipped at the recorded span, never longer.
+        assert_eq!(s.horizon_at(native / 8.0), (100.0, 10.0));
+        // Synthetic scenarios are rate-independent.
+        let steady = by_name("steady").unwrap();
+        assert_eq!(steady.horizon_at(1.0), steady.horizon_at(100.0));
+        assert_eq!(steady.horizon_at(1.0), (steady.duration, steady.warmup));
+    }
+
+    #[test]
+    fn replay_scenario_is_deterministic_and_sweeps_around_native() {
+        let text = "{\"arrival_s\":0.5,\"input_len\":10,\"output_len\":5}\n\
+                    {\"arrival_s\":1.25,\"input_len\":20,\"output_len\":5}\n\
+                    {\"arrival_s\":2.5,\"input_len\":30,\"output_len\":5}\n";
+        let s = Scenario::from_replay(ReplayTrace::parse_named(text, "t").unwrap());
+        // Different seeds, same trace: the log is the randomness.
+        assert_eq!(s.build_trace(1, s.default_rate), s.build_trace(99, s.default_rate));
+        assert!(!s.build_trace(0, s.default_rate).is_empty());
+        let b = s.sweep;
+        assert!(b.floor < s.default_rate && s.default_rate < b.ceiling);
+        assert!(s.name.starts_with("replay:"));
     }
 }

@@ -75,8 +75,24 @@ fn row_to_json(row: &SystemRow) -> Json {
     Json::obj(fields)
 }
 
+/// The replay-provenance block both report schemas embed for scenarios
+/// backed by a recorded log (absent on synthetic scenarios — additive).
+pub fn replay_to_json(scenario: &crate::scenarios::Scenario) -> Option<(&'static str, Json)> {
+    scenario.replay().map(|trace| {
+        (
+            "replay",
+            Json::obj(vec![
+                ("source", Json::str(trace.source())),
+                ("requests", Json::num(trace.len() as f64)),
+                ("native_rate_rps", Json::num(trace.native_rate())),
+                ("recorded_duration_s", Json::num(trace.duration())),
+            ]),
+        )
+    })
+}
+
 fn outcome_to_json(outcome: &ScenarioOutcome) -> Json {
-    Json::obj(vec![
+    let mut fields = vec![
         ("name", Json::str(outcome.scenario.name)),
         ("summary", Json::str(outcome.scenario.summary)),
         ("offered_rate_rps", Json::num(outcome.rate)),
@@ -90,7 +106,11 @@ fn outcome_to_json(outcome: &ScenarioOutcome) -> Json {
             },
         ),
         ("systems", Json::arr(outcome.rows.iter().map(row_to_json))),
-    ])
+    ];
+    if let Some(block) = replay_to_json(&outcome.scenario) {
+        fields.push(block);
+    }
+    Json::obj(fields)
 }
 
 /// The full suite report.

@@ -88,6 +88,20 @@ impl Args {
         }
     }
 
+    /// A filesystem-path option (`--log trace.jsonl`). Distinguishes a
+    /// missing value from a missing flag so callers can error usefully:
+    /// `--log` followed by another `--flag` (or nothing) parses as a bare
+    /// flag, and `Err` names the switch that lost its value.
+    pub fn get_path(&self, key: &str) -> Result<Option<std::path::PathBuf>, String> {
+        if let Some(v) = self.get(key) {
+            return Ok(Some(std::path::PathBuf::from(v)));
+        }
+        if self.has_flag(key) {
+            return Err(format!("--{key} needs a value (e.g. --{key} <path>)"));
+        }
+        Ok(None)
+    }
+
     /// First positional (the subcommand), if any.
     pub fn command(&self) -> Option<&str> {
         self.positional.first().map(|s| s.as_str())
@@ -154,5 +168,17 @@ mod tests {
         assert_eq!(a.get_or("x", "d"), "d");
         assert_eq!(a.get_u64("seed", 42), 42);
         assert!(a.command().is_none());
+    }
+
+    #[test]
+    fn get_path_distinguishes_missing_value_from_missing_flag() {
+        let a = parse("scenarios --replay logs/trace.jsonl");
+        let p = a.get_path("replay").unwrap().unwrap();
+        assert_eq!(p, std::path::PathBuf::from("logs/trace.jsonl"));
+        assert_eq!(a.get_path("out"), Ok(None));
+        // Value swallowed by the next switch: error, not silent None.
+        let b = parse("frontier --replay --quick");
+        let err = b.get_path("replay").unwrap_err();
+        assert!(err.contains("--replay"), "{err}");
     }
 }

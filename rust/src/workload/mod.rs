@@ -6,9 +6,11 @@
 //! a fitted generator preserves scheduling behaviour (DESIGN.md §2).
 
 pub mod datasets;
+pub mod replay;
 pub mod trace;
 
 pub use datasets::{Dataset, LengthModel};
+pub use replay::{render_log, ReplayClass, ReplayRecord, ReplayTrace};
 pub use trace::{RampTrace, TraceGenerator};
 
 /// One inference request as the cluster sees it.

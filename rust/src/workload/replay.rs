@@ -1,0 +1,634 @@
+//! Trace replay: recorded arrival logs as first-class workloads.
+//!
+//! The scenario suite's six load shapes are synthetic. Real evaluations
+//! (DistServe arXiv:2401.09670, DynaServe arXiv:2504.09285) replay
+//! recorded production arrival logs — ShareGPT/BurstGPT-style traces of
+//! `(arrival time, input length, output length)` — so the measured
+//! frontier reflects traffic a fleet actually saw. This module parses
+//! that log format into the same [`Request`] stream every synthetic
+//! shape produces, and writes it back out (`ecoserve record`), so any
+//! scenario round-trips through the wire format.
+//!
+//! ## Log format (JSONL)
+//!
+//! One JSON object per line. The first line MAY be a header:
+//!
+//! ```text
+//! {"ecoserve_trace":1,"duration_s":300,"warmup_s":30,"source":"...",
+//!  "classes":[{"name":"chat","dataset":"sharegpt"}]}
+//! {"arrival_s":0.023,"input_len":61,"output_len":1027,"class":0}
+//! {"arrival_s":0.026,"input_len":54,"output_len":45,"class":0}
+//! ```
+//!
+//! Every other line is a record: `arrival_s` (seconds from trace start),
+//! `input_len`/`output_len` (tokens), and an optional `class` index into
+//! the header's class table (default 0). Headerless logs are accepted:
+//! classes are then inferred from the largest index seen and scored
+//! against ShareGPT SLOs, and the horizon is the last arrival.
+//!
+//! Parsing is strict: blank or malformed lines, non-finite arrivals,
+//! zero lengths, out-of-range class indices, and arrivals beyond a
+//! declared `duration_s` all fail with the offending line number —
+//! silently skipping a corrupt line would silently change the workload.
+//!
+//! ## Time-warp rescaling
+//!
+//! The frontier search needs a `rate` knob. [`ReplayTrace::requests_at`]
+//! uniformly rescales inter-arrival gaps (equivalently: all arrival
+//! times) by `native_rate / rate`, leaving lengths untouched, so the
+//! time-averaged offered rate over the replayed span equals the probe
+//! rate while burst *structure* is preserved. At the native rate the
+//! warp factor is exactly 1.0 and the replay is bit-for-bit the
+//! recorded trace.
+
+use std::fmt;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::datasets::Dataset;
+use super::Request;
+use crate::util::json::Json;
+
+/// Version tag of the log header (`"ecoserve_trace"` key).
+pub const FORMAT_VERSION: f64 = 1.0;
+
+/// Cap on class indices a *headerless* log may use (header-declared
+/// class tables carry their own exact bound). Class synthesis allocates
+/// `max_class + 1` entries, so an unbounded index in one corrupt record
+/// would turn into a giant allocation instead of a parse error.
+pub const MAX_INFERRED_CLASSES: usize = 64;
+
+/// Leak a small string into a `&'static str`. Replay class and scenario
+/// names feed APIs built around `&'static str` registry literals; logs
+/// are loaded O(1) times per process, so the leak is bounded and cheap.
+pub(crate) fn leak(s: String) -> &'static str {
+    Box::leak(s.into_boxed_str())
+}
+
+/// One traffic class declared by a log header (or synthesized for
+/// headerless logs): the SLO pair comes from the named dataset.
+#[derive(Debug, Clone)]
+pub struct ReplayClass {
+    pub name: &'static str,
+    pub dataset: Dataset,
+}
+
+/// One parsed log record, in native (un-warped) time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplayRecord {
+    /// Seconds from trace start.
+    pub arrival: f64,
+    /// Prompt tokens.
+    pub input_len: usize,
+    /// Generation tokens (the oracle value, as in [`Request`]).
+    pub output_len: usize,
+    /// Index into the class table.
+    pub class: usize,
+}
+
+/// A parsed arrival log: records sorted by `(arrival, line order)` — the
+/// same tie-break [`crate::scenarios::Scenario::build_trace`] applies to
+/// merged synthetic streams — plus the class table and horizon.
+#[derive(Clone)]
+pub struct ReplayTrace {
+    records: Vec<ReplayRecord>,
+    classes: Vec<ReplayClass>,
+    /// Recorded span, seconds (header `duration_s`, else last arrival).
+    duration: f64,
+    /// Scoring warm-up prefix, seconds (header `warmup_s`, else derived).
+    warmup: f64,
+    /// Short label for reports ("inline", a file name, ...).
+    source: String,
+}
+
+impl fmt::Debug for ReplayTrace {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("ReplayTrace")
+            .field("source", &self.source)
+            .field("requests", &self.records.len())
+            .field("classes", &self.classes.len())
+            .field("duration_s", &self.duration)
+            .field("native_rate", &self.native_rate())
+            .finish()
+    }
+}
+
+/// Header fields recognized on line 1.
+struct Header {
+    duration: Option<f64>,
+    warmup: Option<f64>,
+    classes: Option<Vec<ReplayClass>>,
+}
+
+fn parse_header(j: &Json, src: &str) -> Result<Header> {
+    let version = j
+        .get("ecoserve_trace")
+        .and_then(|v| v.as_f64())
+        .with_context(|| format!("{src}:1: header 'ecoserve_trace' must be a number"))?;
+    if version != FORMAT_VERSION {
+        bail!("{src}:1: unsupported trace format version {version} (expected {FORMAT_VERSION})");
+    }
+    let duration = match j.get("duration_s") {
+        Some(v) => {
+            let d = v
+                .as_f64()
+                .with_context(|| format!("{src}:1: 'duration_s' must be a number"))?;
+            if !d.is_finite() || d <= 0.0 {
+                bail!("{src}:1: 'duration_s' must be positive and finite, got {d}");
+            }
+            Some(d)
+        }
+        None => None,
+    };
+    let warmup = match j.get("warmup_s") {
+        Some(v) => {
+            let w = v
+                .as_f64()
+                .with_context(|| format!("{src}:1: 'warmup_s' must be a number"))?;
+            if !w.is_finite() || w < 0.0 {
+                bail!("{src}:1: 'warmup_s' must be non-negative and finite, got {w}");
+            }
+            Some(w)
+        }
+        None => None,
+    };
+    let classes = match j.get("classes") {
+        Some(v) => {
+            let arr = v
+                .as_arr()
+                .with_context(|| format!("{src}:1: 'classes' must be an array"))?;
+            if arr.is_empty() {
+                bail!("{src}:1: 'classes' must not be empty when present");
+            }
+            let mut out = Vec::with_capacity(arr.len());
+            for (k, c) in arr.iter().enumerate() {
+                let name = c
+                    .get("name")
+                    .and_then(|n| n.as_str())
+                    .map(|n| n.to_string())
+                    .unwrap_or_else(|| format!("class-{k}"));
+                let ds_name = c
+                    .get("dataset")
+                    .and_then(|d| d.as_str())
+                    .unwrap_or("sharegpt");
+                let dataset = Dataset::by_name(ds_name).with_context(|| {
+                    format!("{src}:1: classes[{k}]: unknown dataset '{ds_name}'")
+                })?;
+                out.push(ReplayClass { name: leak(name), dataset });
+            }
+            Some(out)
+        }
+        None => None,
+    };
+    Ok(Header { duration, warmup, classes })
+}
+
+/// A record field that must be a non-negative integer.
+fn usize_field(j: &Json, key: &str, src: &str, line: usize) -> Result<usize> {
+    let x = j
+        .get(key)
+        .and_then(|v| v.as_f64())
+        .with_context(|| format!("{src}:{line}: missing or non-numeric '{key}'"))?;
+    if !x.is_finite() || x < 0.0 || x.fract() != 0.0 || x > 1e12 {
+        bail!("{src}:{line}: '{key}' must be a non-negative integer, got {x}");
+    }
+    Ok(x as usize)
+}
+
+impl ReplayTrace {
+    /// Parse log text with a source label used in error messages and
+    /// reports.
+    pub fn parse_named(text: &str, src: &str) -> Result<ReplayTrace> {
+        let mut records: Vec<ReplayRecord> = Vec::new();
+        let mut header: Option<Header> = None;
+        for (idx, raw) in text.lines().enumerate() {
+            let n = idx + 1; // 1-based, as editors number lines
+            let line = raw.trim();
+            if line.is_empty() {
+                bail!("{src}:{n}: blank line (recorded logs carry one JSON record per line)");
+            }
+            let j = Json::parse(line)
+                .map_err(|e| anyhow::anyhow!("{src}:{n}: malformed record: {e}"))?;
+            if !matches!(j, Json::Obj(_)) {
+                bail!("{src}:{n}: expected a JSON object, got '{line}'");
+            }
+            if n == 1 && j.get("ecoserve_trace").is_some() {
+                header = Some(parse_header(&j, src)?);
+                continue;
+            }
+            let arrival = j
+                .get("arrival_s")
+                .and_then(|v| v.as_f64())
+                .with_context(|| format!("{src}:{n}: missing or non-numeric 'arrival_s'"))?;
+            if !arrival.is_finite() || arrival < 0.0 {
+                bail!("{src}:{n}: 'arrival_s' must be non-negative and finite, got {arrival}");
+            }
+            if let Some(d) = header.as_ref().and_then(|h| h.duration) {
+                if arrival > d {
+                    bail!(
+                        "{src}:{n}: arrival {arrival} lies beyond the declared \
+                         duration_s {d}"
+                    );
+                }
+            }
+            let input_len = usize_field(&j, "input_len", src, n)?;
+            let output_len = usize_field(&j, "output_len", src, n)?;
+            if input_len == 0 || output_len == 0 {
+                bail!("{src}:{n}: zero-token request (input {input_len}, output {output_len})");
+            }
+            let class = match j.get("class") {
+                Some(_) => usize_field(&j, "class", src, n)?,
+                None => 0,
+            };
+            match header.as_ref().and_then(|h| h.classes.as_ref()) {
+                Some(cs) => {
+                    if class >= cs.len() {
+                        bail!(
+                            "{src}:{n}: class {class} out of range (header declares {} classes)",
+                            cs.len()
+                        );
+                    }
+                }
+                None => {
+                    if class >= MAX_INFERRED_CLASSES {
+                        bail!(
+                            "{src}:{n}: class {class} exceeds the headerless cap of \
+                             {MAX_INFERRED_CLASSES} — declare a 'classes' table in the header"
+                        );
+                    }
+                }
+            }
+            records.push(ReplayRecord { arrival, input_len, output_len, class });
+        }
+        if records.is_empty() {
+            bail!("{src}: empty log — no records to replay");
+        }
+
+        // Re-sort out-of-order logs with build_trace's tie-break: arrival,
+        // then original order (a stable sort keeps equal arrivals in line
+        // order, exactly as merged synthetic streams order ties by id).
+        records.sort_by(|a, b| {
+            a.arrival
+                .partial_cmp(&b.arrival)
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+
+        let header = header.unwrap_or(Header { duration: None, warmup: None, classes: None });
+        let last_arrival = records.last().map(|r| r.arrival).unwrap_or(0.0);
+        let duration = header.duration.unwrap_or(last_arrival);
+        if duration <= 0.0 {
+            bail!(
+                "{src}: log spans zero seconds — declare a positive 'duration_s' \
+                 in the header"
+            );
+        }
+        let warmup = header.warmup.unwrap_or_else(|| (duration / 8.0).min(30.0));
+        if warmup >= duration {
+            bail!("{src}: warmup_s {warmup} must be smaller than the {duration}s horizon");
+        }
+        let classes = match header.classes {
+            Some(cs) => cs,
+            None => {
+                let n = records.iter().map(|r| r.class).max().unwrap_or(0) + 1;
+                (0..n)
+                    .map(|k| ReplayClass {
+                        name: leak(format!("class-{k}")),
+                        dataset: Dataset::sharegpt(),
+                    })
+                    .collect()
+            }
+        };
+        Ok(ReplayTrace {
+            records,
+            classes,
+            duration,
+            warmup,
+            source: src.to_string(),
+        })
+    }
+
+    /// Parse log text (source label "inline").
+    pub fn parse(text: &str) -> Result<ReplayTrace> {
+        Self::parse_named(text, "inline")
+    }
+
+    /// Read and parse a log file; errors carry the file name.
+    pub fn from_file(path: &Path) -> Result<ReplayTrace> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read arrival log {}", path.display()))?;
+        let label = path
+            .file_name()
+            .map(|n| n.to_string_lossy().into_owned())
+            .unwrap_or_else(|| path.display().to_string());
+        Self::parse_named(&text, &label)
+    }
+
+    // ---- accessors ------------------------------------------------------
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Records in replay order (sorted by arrival, ties by line order).
+    pub fn records(&self) -> &[ReplayRecord] {
+        &self.records
+    }
+
+    pub fn classes(&self) -> &[ReplayClass] {
+        &self.classes
+    }
+
+    /// Recorded span, seconds.
+    pub fn duration(&self) -> f64 {
+        self.duration
+    }
+
+    /// Scoring warm-up prefix, seconds (native time).
+    pub fn warmup(&self) -> f64 {
+        self.warmup
+    }
+
+    pub fn source(&self) -> &str {
+        &self.source
+    }
+
+    /// Time-averaged offered rate of the recorded log, req/s.
+    pub fn native_rate(&self) -> f64 {
+        self.records.len() as f64 / self.duration
+    }
+
+    /// The log-assigned class of replayed request `id` (ids are the
+    /// replay-order index — see [`ReplayTrace::requests_at`]). This is
+    /// the side table behind `Scenario::class_of` for replay scenarios:
+    /// log classes are arbitrary per request, so the synthetic id-tag
+    /// modulo arithmetic would misattribute them.
+    pub fn class_of(&self, id: u64) -> usize {
+        self.records[id as usize].class
+    }
+
+    /// Requests per class, whole log.
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.classes.len().max(1)];
+        for r in &self.records {
+            counts[r.class] += 1;
+        }
+        counts
+    }
+
+    /// Time-warped replay at time-averaged `rate` req/s: every arrival is
+    /// scaled by `native_rate / rate` (lengths untouched), then clipped
+    /// to `horizon` seconds. Request ids are the replay-order index, the
+    /// key [`ReplayTrace::class_of`] resolves. At `rate == native_rate`
+    /// the warp is exactly 1.0 — arrivals are bit-for-bit the recorded
+    /// values.
+    pub fn requests_at(&self, rate: f64, horizon: f64) -> Vec<Request> {
+        // A zero/negative/NaN rate (CLI typo) degrades to an extreme
+        // stretch whose arrivals all fall past the horizon — an empty
+        // window, like the synthetic shapes' MIN_RATE clamp — instead of
+        // panicking. Any real rate is far above the floor, so the warp
+        // (and the bit-for-bit native replay) is unaffected.
+        let warp = self.native_rate() / rate.max(1e-9);
+        let mut out = Vec::with_capacity(self.records.len());
+        for (i, rec) in self.records.iter().enumerate() {
+            let arrival = rec.arrival * warp;
+            if arrival > horizon {
+                break; // sorted: every later record is beyond the horizon too
+            }
+            out.push(Request {
+                id: i as u64,
+                arrival,
+                input_len: rec.input_len,
+                output_len: rec.output_len,
+            });
+        }
+        out
+    }
+
+    /// Serialize back to the wire format (header + one record per line).
+    pub fn render(&self) -> String {
+        render_log(
+            &self.classes,
+            self.duration,
+            self.warmup,
+            &self.source,
+            self.records.iter().cloned(),
+        )
+    }
+}
+
+/// Serialize a trace to the recorded-log JSONL format: a header line
+/// followed by one record per line, through [`crate::util::json`] so
+/// numbers round-trip bit-for-bit (shortest-representation floats).
+pub fn render_log(
+    classes: &[ReplayClass],
+    duration: f64,
+    warmup: f64,
+    source: &str,
+    records: impl Iterator<Item = ReplayRecord>,
+) -> String {
+    let header = Json::obj(vec![
+        ("ecoserve_trace", Json::num(FORMAT_VERSION)),
+        ("duration_s", Json::num(duration)),
+        ("warmup_s", Json::num(warmup)),
+        ("source", Json::str(source)),
+        (
+            "classes",
+            Json::arr(classes.iter().map(|c| {
+                Json::obj(vec![
+                    ("name", Json::str(c.name)),
+                    ("dataset", Json::str(c.dataset.name)),
+                ])
+            })),
+        ),
+    ]);
+    let mut out = header.to_string();
+    out.push('\n');
+    for rec in records {
+        let line = Json::obj(vec![
+            ("arrival_s", Json::num(rec.arrival)),
+            ("input_len", Json::num(rec.input_len as f64)),
+            ("output_len", Json::num(rec.output_len as f64)),
+            ("class", Json::num(rec.class as f64)),
+        ]);
+        out.push_str(&line.to_string());
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn line(arrival: f64, input: usize, output: usize) -> String {
+        format!(
+            "{{\"arrival_s\":{arrival},\"input_len\":{input},\"output_len\":{output}}}"
+        )
+    }
+
+    #[test]
+    fn parses_headerless_log_and_infers_shape() {
+        let text = [line(1.0, 10, 5), line(2.0, 20, 5), line(3.0, 30, 5), line(4.0, 40, 5)]
+            .join("\n");
+        let t = ReplayTrace::parse(&text).unwrap();
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.duration(), 4.0);
+        assert_eq!(t.native_rate(), 1.0);
+        assert_eq!(t.classes().len(), 1);
+        assert_eq!(t.classes()[0].dataset.name, "ShareGPT");
+        assert!(t.warmup() > 0.0 && t.warmup() < t.duration());
+        assert_eq!(t.class_counts(), vec![4]);
+    }
+
+    #[test]
+    fn out_of_order_arrivals_resort_with_stable_tie_break() {
+        // Line order: 2.0, 1.0, 1.0 — the two ties must keep line order
+        // after the sort (the build_trace tie-break).
+        let text = [line(2.0, 111, 5), line(1.0, 222, 5), line(1.0, 333, 5)].join("\n");
+        let t = ReplayTrace::parse(&text).unwrap();
+        let inputs: Vec<usize> = t.records().iter().map(|r| r.input_len).collect();
+        assert_eq!(inputs, vec![222, 333, 111]);
+        let reqs = t.requests_at(t.native_rate(), t.duration());
+        assert_eq!(reqs.len(), 3);
+        assert_eq!(reqs[0].id, 0);
+        assert_eq!(reqs[0].input_len, 222);
+        assert_eq!(reqs[2].input_len, 111);
+        for w in reqs.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival && w[0].id < w[1].id);
+        }
+    }
+
+    #[test]
+    fn malformed_and_blank_lines_error_with_line_numbers() {
+        let bad_json = format!("{}\n{{not json\n{}", line(1.0, 1, 1), line(2.0, 1, 1));
+        let err = format!("{:#}", ReplayTrace::parse_named(&bad_json, "log").unwrap_err());
+        assert!(err.contains("log:2"), "{err}");
+
+        let blank = format!("{}\n\n{}", line(1.0, 1, 1), line(2.0, 1, 1));
+        let err = format!("{:#}", ReplayTrace::parse_named(&blank, "log").unwrap_err());
+        assert!(err.contains("log:2") && err.contains("blank"), "{err}");
+
+        let missing = "{\"arrival_s\":1.0,\"input_len\":7}";
+        let err = format!("{:#}", ReplayTrace::parse_named(missing, "log").unwrap_err());
+        assert!(err.contains("log:1") && err.contains("output_len"), "{err}");
+
+        let zero_len = "{\"arrival_s\":1.0,\"input_len\":0,\"output_len\":5}";
+        let err = format!("{:#}", ReplayTrace::parse(zero_len).unwrap_err());
+        assert!(err.contains("zero-token"), "{err}");
+
+        let bad_arrival = "{\"arrival_s\":-2.0,\"input_len\":3,\"output_len\":5}";
+        let err = format!("{:#}", ReplayTrace::parse(bad_arrival).unwrap_err());
+        assert!(err.contains("arrival_s"), "{err}");
+
+        // Headerless class indices are capped: one corrupt record must be
+        // a parse error, not a max_class+1-sized allocation.
+        let huge = "{\"arrival_s\":1.0,\"input_len\":3,\"output_len\":5,\"class\":999999999}";
+        let err = format!("{:#}", ReplayTrace::parse_named(huge, "log").unwrap_err());
+        assert!(err.contains("log:1") && err.contains("headerless cap"), "{err}");
+    }
+
+    #[test]
+    fn empty_logs_are_rejected() {
+        let err = format!("{:#}", ReplayTrace::parse("").unwrap_err());
+        assert!(err.contains("empty log"), "{err}");
+        // A header with no records is still empty.
+        let header_only = "{\"ecoserve_trace\":1,\"duration_s\":10}";
+        let err = format!("{:#}", ReplayTrace::parse(header_only).unwrap_err());
+        assert!(err.contains("empty log"), "{err}");
+    }
+
+    #[test]
+    fn header_declares_classes_horizon_and_bounds() {
+        let text = "{\"ecoserve_trace\":1,\"duration_s\":10,\"warmup_s\":2,\"classes\":\
+                    [{\"name\":\"chat\",\"dataset\":\"sharegpt\"},\
+                     {\"name\":\"batch\",\"dataset\":\"longbench\"}]}\n\
+                    {\"arrival_s\":0.5,\"input_len\":100,\"output_len\":50,\"class\":0}\n\
+                    {\"arrival_s\":1.5,\"input_len\":2000,\"output_len\":20,\"class\":1}\n";
+        let t = ReplayTrace::parse(text).unwrap();
+        assert_eq!(t.duration(), 10.0);
+        assert_eq!(t.warmup(), 2.0);
+        assert_eq!(t.classes().len(), 2);
+        assert_eq!(t.classes()[0].name, "chat");
+        assert_eq!(t.classes()[1].dataset.name, "LongBench");
+        assert_eq!(t.class_of(0), 0);
+        assert_eq!(t.class_of(1), 1);
+        assert_eq!(t.class_counts(), vec![1, 1]);
+        assert!((t.native_rate() - 0.2).abs() < 1e-12);
+
+        // Class index beyond the declared table.
+        let bad = text.replace("\"class\":1}", "\"class\":2}");
+        let err = format!("{:#}", ReplayTrace::parse_named(&bad, "log").unwrap_err());
+        assert!(err.contains("log:3") && err.contains("out of range"), "{err}");
+
+        // Arrival beyond the declared horizon.
+        let bad = text.replace("\"arrival_s\":1.5", "\"arrival_s\":11.5");
+        let err = format!("{:#}", ReplayTrace::parse_named(&bad, "log").unwrap_err());
+        assert!(err.contains("log:3") && err.contains("beyond"), "{err}");
+
+        // Unknown dataset name in the class table.
+        let bad = text.replace("longbench", "imagenet");
+        let err = format!("{:#}", ReplayTrace::parse_named(&bad, "log").unwrap_err());
+        assert!(err.contains("unknown dataset"), "{err}");
+    }
+
+    #[test]
+    fn time_warp_rescales_arrivals_and_preserves_lengths() {
+        let text = [line(1.0, 10, 5), line(2.0, 20, 6), line(3.0, 30, 7), line(4.0, 40, 8)]
+            .join("\n");
+        let t = ReplayTrace::parse(&text).unwrap(); // native 1 req/s over 4s
+
+        // Compress 2x: arrivals halve, lengths untouched, all fit.
+        let fast = t.requests_at(2.0, t.duration());
+        assert_eq!(fast.len(), 4);
+        let arrivals: Vec<f64> = fast.iter().map(|r| r.arrival).collect();
+        assert_eq!(arrivals, vec![0.5, 1.0, 1.5, 2.0]);
+        assert_eq!(fast[2].input_len, 30);
+        assert_eq!(fast[3].output_len, 8);
+
+        // Stretch 2x with the native horizon: the tail is clipped and the
+        // offered rate over the window is the probe rate.
+        let slow = t.requests_at(0.5, t.duration());
+        assert_eq!(slow.len(), 2);
+        assert_eq!(slow[0].arrival, 2.0);
+        assert_eq!(slow[1].arrival, 4.0);
+
+        // Native rate: bit-for-bit the recorded arrivals.
+        let native = t.requests_at(t.native_rate(), t.duration());
+        for (req, rec) in native.iter().zip(t.records()) {
+            assert_eq!(req.arrival.to_bits(), rec.arrival.to_bits());
+        }
+    }
+
+    #[test]
+    fn render_parse_round_trip_is_bit_for_bit() {
+        // Awkward floats on purpose: shortest-representation serialization
+        // must reproduce them exactly.
+        let records = vec![
+            ReplayRecord {
+                arrival: 0.023217066548171496,
+                input_len: 61,
+                output_len: 1027,
+                class: 0,
+            },
+            ReplayRecord { arrival: 1.0 / 3.0, input_len: 54, output_len: 45, class: 1 },
+            ReplayRecord { arrival: 2.0, input_len: 642, output_len: 2048, class: 0 },
+        ];
+        let classes = vec![
+            ReplayClass { name: "chat", dataset: Dataset::sharegpt() },
+            ReplayClass { name: "batch", dataset: Dataset::longbench() },
+        ];
+        let text = render_log(&classes, 10.0, 1.5, "unit", records.iter().cloned());
+        let t = ReplayTrace::parse_named(&text, "unit").unwrap();
+        assert_eq!(t.records(), &records[..]);
+        assert_eq!(t.duration(), 10.0);
+        assert_eq!(t.warmup(), 1.5);
+        assert_eq!(t.classes()[1].name, "batch");
+        // And rendering the parsed trace reproduces the text verbatim.
+        assert_eq!(t.render(), text);
+    }
+}

@@ -1,0 +1,180 @@
+//! Integration tests over the trace-replay subsystem: the committed
+//! fixture log drives the scenario suite and the goodput frontier
+//! (including the mitosis-on PaDG variant) exactly like a synthetic
+//! scenario, and the `record` exporter round-trips bit-for-bit.
+
+use std::path::Path;
+use std::time::Duration;
+
+use ecoserve::config::SystemKind;
+use ecoserve::frontier::{frontier_to_json, run_frontier, FrontierConfig};
+use ecoserve::metrics::Attainment;
+use ecoserve::scenarios::{by_name, run_system, Scenario, ScenarioConfig};
+use ecoserve::util::json::Json;
+use ecoserve::workload::ReplayTrace;
+
+const FIXTURE: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/replay_mixed.jsonl");
+
+#[test]
+fn fixture_log_parses_with_header_classes_and_native_rate() {
+    let scenario = Scenario::from_log(Path::new(FIXTURE)).expect("committed fixture parses");
+    assert!(scenario.is_replay());
+    assert!(scenario.name.starts_with("replay:"), "{}", scenario.name);
+    let trace = scenario.replay().unwrap();
+    assert_eq!(trace.duration(), 60.0);
+    assert_eq!(trace.warmup(), 6.0);
+    assert!(trace.len() > 150, "{}", trace.len());
+    // Header class table with per-class SLO datasets.
+    assert_eq!(scenario.classes.len(), 2);
+    assert_eq!(scenario.classes[0].name, "interactive");
+    assert_eq!(scenario.classes[0].dataset.name, "Alpaca-gpt4");
+    assert_eq!(scenario.classes[1].name, "batch");
+    assert_eq!(scenario.classes[1].dataset.name, "LongBench");
+    // Interactive dominates the mix and the shares sum to 1.
+    let share: f64 = scenario.classes.iter().map(|c| c.share).sum();
+    assert!((share - 1.0).abs() < 1e-9);
+    assert!(scenario.classes[0].share > scenario.classes[1].share);
+    // The nominal rate is the log's own offered rate.
+    assert!((scenario.default_rate - trace.native_rate()).abs() < 1e-12);
+    assert!(trace.native_rate() > 3.0 && trace.native_rate() < 5.0);
+    // Sorted arrivals, replay-order ids.
+    let reqs = scenario.build_trace(0, scenario.default_rate);
+    assert_eq!(reqs.len(), trace.len());
+    for w in reqs.windows(2) {
+        assert!(w[0].arrival <= w[1].arrival && w[0].id < w[1].id);
+    }
+}
+
+#[test]
+fn fixture_replay_runs_through_the_scenario_suite() {
+    let scenario = Scenario::from_log(Path::new(FIXTURE)).unwrap();
+    let mut cfg = ScenarioConfig::default_l20();
+    cfg.deployment.gpus_used = 16; // 4 instances — fast test
+    let row = run_system(&scenario, &cfg, SystemKind::EcoServe);
+    assert!(row.arrived > 100, "{}", row.arrived);
+    assert!(row.completed > 0);
+    assert_eq!(row.classes.len(), 2);
+    // Per-class arrivals must equal the log's class mix inside the
+    // scoring window — the class_of side-table contract, end to end.
+    let trace = scenario.replay().unwrap();
+    let (duration, warmup) = scenario.horizon_at(scenario.default_rate);
+    let mut want = vec![0usize; 2];
+    for rec in trace.records() {
+        if rec.arrival >= warmup && rec.arrival < duration {
+            want[rec.class] += 1;
+        }
+    }
+    assert_eq!(row.classes[0].arrived, want[0]);
+    assert_eq!(row.classes[1].arrived, want[1]);
+    assert_eq!(row.arrived, want[0] + want[1]);
+}
+
+/// The acceptance criterion: `frontier --replay --quick` semantics — a
+/// replayed log produces a frontier row set including the mitosis-on
+/// PaDG variant, every cell searched through the same bracket+bisect
+/// core, and the BENCH JSON carries the replay provenance block.
+#[test]
+fn fixture_replay_sweeps_the_frontier_with_mitosis_variant() {
+    let scenario = Scenario::from_log(Path::new(FIXTURE)).unwrap();
+    let mut base = ScenarioConfig::default_l20();
+    base.deployment.gpus_used = 32; // 8 instances; mitosis starts at N_l=4
+    let mut cfg = FrontierConfig::new(base, Attainment::P90);
+    cfg.quick = true;
+    cfg.autoscale = true;
+    let systems = [SystemKind::EcoServe, SystemKind::Vllm];
+    let fronts = run_frontier(&[scenario], &cfg, &systems, 4);
+    assert_eq!(fronts.len(), 1);
+    let f = &fronts[0];
+    assert_eq!(f.rows.len(), 3, "2 fixed rows + the mitosis variant");
+
+    let eco = f.row(SystemKind::EcoServe, false).expect("fixed PaDG row");
+    assert!(eco.max_rate > 0.0, "curve {:?}", eco.curve);
+    assert!(eco.max_rate <= f.scenario.sweep.ceiling + 1e-9);
+    assert!(eco.attainment >= 0.90 - 1e-9, "{}", eco.attainment);
+    assert!(!eco.classes.is_empty());
+
+    let mito = f.row(SystemKind::EcoServe, true).expect("mitosis-on row");
+    assert!(mito.max_rate > 0.0, "curve {:?}", mito.curve);
+    for cell in &f.rows {
+        assert!(cell.probes >= 2);
+        for w in cell.curve.windows(2) {
+            assert!(w[0].rate < w[1].rate, "curve must be rate-sorted");
+        }
+    }
+
+    // BENCH provenance: the replay block names the log and its native
+    // rate so a frontier computed from recorded traffic is identifiable.
+    let wire = frontier_to_json(&fronts, &cfg, Duration::from_secs(1)).to_string();
+    let parsed = Json::parse(&wire).expect("valid BENCH JSON");
+    let sc = parsed.get("scenarios").unwrap().idx(0).unwrap();
+    assert!(sc.get("name").unwrap().as_str().unwrap().starts_with("replay:"));
+    let replay = sc.get("replay").expect("replay provenance block");
+    assert_eq!(
+        replay.get("source").unwrap().as_str(),
+        Some("replay_mixed.jsonl")
+    );
+    assert!(replay.get("native_rate_rps").unwrap().as_f64().unwrap() > 3.0);
+    assert_eq!(replay.get("recorded_duration_s").unwrap().as_f64(), Some(60.0));
+    assert_eq!(parsed.get("autoscale_variant").unwrap().as_bool(), Some(true));
+}
+
+/// Round-trip: export a synthetic scenario with `record_log`, parse it
+/// back, and the replayed trace at the native rate is the original
+/// trace bit-for-bit — arrivals (to the bit), lengths, and class
+/// attribution — modulo id retagging.
+#[test]
+fn record_then_replay_round_trips_bit_for_bit() {
+    let synthetic = by_name("mixed-slo").unwrap();
+    let (seed, rate) = (42, 6.0);
+    let log = synthetic.record_log(seed, rate);
+    let replayed = Scenario::from_replay(ReplayTrace::parse_named(&log, "roundtrip").unwrap());
+
+    let original = synthetic.build_trace(seed, rate);
+    let replay = replayed.build_trace(7, replayed.default_rate); // seed is ignored
+    assert_eq!(original.len(), replay.len(), "request count must survive the round trip");
+    for (a, b) in original.iter().zip(&replay) {
+        assert_eq!(
+            a.arrival.to_bits(),
+            b.arrival.to_bits(),
+            "arrival drifted through the wire format: {} vs {}",
+            a.arrival,
+            b.arrival
+        );
+        assert_eq!(a.input_len, b.input_len);
+        assert_eq!(a.output_len, b.output_len);
+        assert_eq!(synthetic.class_of(a.id), replayed.class_of(b.id));
+    }
+    // Class metadata survives too.
+    assert_eq!(replayed.classes.len(), synthetic.classes.len());
+    for (a, b) in synthetic.classes.iter().zip(&replayed.classes) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.dataset.name, b.dataset.name);
+    }
+    // The recorded horizon is the scenario's, so the native rate the
+    // parser reconstructs matches the request count over that span.
+    assert_eq!(replayed.duration, synthetic.duration);
+    assert!(
+        (replayed.default_rate - original.len() as f64 / synthetic.duration).abs() < 1e-12
+    );
+}
+
+/// Time-warped probes preserve the offered-rate contract on the real
+/// fixture: warping to rate r yields (about) r × window requests inside
+/// the scored window, at every probe rate the frontier would visit.
+#[test]
+fn fixture_time_warp_hits_probe_rates() {
+    let scenario = Scenario::from_log(Path::new(FIXTURE)).unwrap();
+    let native = scenario.default_rate;
+    for mult in [0.5, 1.0, 2.0, 4.0] {
+        let rate = native * mult;
+        let (duration, _) = scenario.horizon_at(rate);
+        let reqs = scenario.build_trace_for(0, rate, duration);
+        let offered = reqs.len() as f64 / duration;
+        assert!(
+            (offered - rate).abs() / rate < 0.05,
+            "mult {mult}: offered {offered:.3} vs probe {rate:.3}"
+        );
+        // Lengths never warp.
+        assert!(reqs.iter().all(|r| r.input_len >= 1 && r.output_len >= 1));
+    }
+}
