@@ -16,7 +16,7 @@ use std::time::{Duration, Instant};
 use super::search::{rate_search, Probe, SearchOutcome, SearchParams, SearchPoint};
 use crate::config::SystemKind;
 use crate::coordinator::AutoScalePolicy;
-use crate::metrics::Attainment;
+use crate::metrics::{AbandonPolicy, Attainment};
 use crate::scenarios::{
     run_system_variant, ClassScore, Scenario, ScenarioConfig, VariantSpec,
 };
@@ -34,6 +34,10 @@ pub struct FrontierConfig {
     pub autoscale: bool,
     /// Coarse search + short horizons — the CI smoke setting.
     pub quick: bool,
+    /// Abort doomed probes the moment the online SLO monitor proves the
+    /// target unreachable (default). Off runs every probe to completion;
+    /// results are bit-identical either way — only cost changes.
+    pub early_abandon: bool,
 }
 
 /// Horizon used by `--quick` when the caller gave no explicit override.
@@ -41,7 +45,7 @@ const QUICK_HORIZON_SECS: f64 = 40.0;
 
 impl FrontierConfig {
     pub fn new(base: ScenarioConfig, level: Attainment) -> Self {
-        FrontierConfig { base, level, autoscale: false, quick: false }
+        FrontierConfig { base, level, autoscale: false, quick: false, early_abandon: true }
     }
 
     /// Search bracket for one scenario: registry sweep bounds at this
@@ -70,6 +74,27 @@ impl FrontierConfig {
     }
 }
 
+/// Simulator-cost counters for one frontier cell, aggregated over all of
+/// its rate probes — the raw material of `BENCH_simperf.json`. These
+/// track *cost*, not answers: they are the only cell fields allowed to
+/// differ between early-abandon on and off.
+#[derive(Debug, Clone, Default)]
+pub struct CellPerf {
+    /// Rate probes run for this cell.
+    pub probes: usize,
+    /// Events simulated across all probes.
+    pub events: u64,
+    /// Of those, events simulated inside probes that were abandoned.
+    pub abandoned_events: u64,
+    /// Events still queued when abandoned probes stopped — a lower bound
+    /// on the work abandonment avoided.
+    pub events_saved: u64,
+    /// Probes the SLO monitor cut short.
+    pub abandoned_probes: usize,
+    /// Simulation wall time summed over probes (excludes search overhead).
+    pub sim_wall: Duration,
+}
+
 /// One system's (or variant's) point on a scenario's goodput frontier.
 #[derive(Debug, Clone)]
 pub struct FrontierCell {
@@ -93,6 +118,8 @@ pub struct FrontierCell {
     pub saturated: bool,
     pub probes: usize,
     pub wall: Duration,
+    /// Simulator-cost counters for the `BENCH_simperf.json` artifact.
+    pub perf: CellPerf,
 }
 
 impl FrontierCell {
@@ -147,11 +174,22 @@ pub fn run_cell(
         VariantSpec::default()
     };
     let base = cfg.probe_base();
+    let abandon = AbandonPolicy { target: cfg.level.fraction(), stop_early: cfg.early_abandon };
+    let mut perf = CellPerf::default();
     let t0 = Instant::now();
     let outcome = rate_search(&params, |rate| {
         let mut probe_cfg = base.clone();
         probe_cfg.rate = Some(rate);
+        probe_cfg.abandon = Some(abandon);
         let row = run_system_variant(scenario, &probe_cfg, kind, &variant);
+        perf.probes += 1;
+        perf.events += row.events;
+        perf.sim_wall += row.wall;
+        if row.abandoned {
+            perf.abandoned_probes += 1;
+            perf.abandoned_events += row.events;
+            perf.events_saved += row.events_saved;
+        }
         Probe {
             attainment: row.min_class_attainment(),
             goodput_rps: row.goodput_rps,
@@ -175,6 +213,7 @@ pub fn run_cell(
         saturated,
         probes,
         wall,
+        perf,
     }
 }
 
@@ -241,6 +280,24 @@ mod tests {
         for w in cell.curve.windows(2) {
             assert!(w[0].rate < w[1].rate);
         }
+    }
+
+    /// The bracket phase always overshoots the capacity cliff (sweep
+    /// ceilings sit at 8x nominal), so a cell search must both abandon
+    /// doomed probes and account for the work it skipped.
+    #[test]
+    fn cell_perf_counters_track_abandoned_probes() {
+        let s = by_name("steady").unwrap();
+        let cfg = quick_frontier_cfg();
+        assert!(cfg.early_abandon, "abandonment is the default");
+        let cell = run_cell(&s, &cfg, SystemKind::EcoServe, false);
+        assert_eq!(cell.perf.probes, cell.probes);
+        assert!(cell.perf.events > 0);
+        assert!(cell.perf.abandoned_probes > 0, "{:?}", cell.perf);
+        assert!(cell.perf.abandoned_probes <= cell.perf.probes);
+        assert!(cell.perf.abandoned_events > 0);
+        assert!(cell.perf.events_saved > 0, "{:?}", cell.perf);
+        assert!(cell.perf.abandoned_events <= cell.perf.events);
     }
 
     #[test]

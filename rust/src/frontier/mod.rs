@@ -36,6 +36,8 @@ pub mod driver;
 pub mod report;
 pub mod search;
 
-pub use driver::{run_cell, run_frontier, FrontierCell, FrontierConfig, ScenarioFrontier};
-pub use report::{frontier_to_json, render_frontier_table};
+pub use driver::{
+    run_cell, run_frontier, CellPerf, FrontierCell, FrontierConfig, ScenarioFrontier,
+};
+pub use report::{frontier_to_json, render_frontier_table, simperf_to_json};
 pub use search::{rate_search, Probe, SearchOutcome, SearchParams, SearchPoint};

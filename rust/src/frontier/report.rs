@@ -6,7 +6,7 @@
 
 use std::time::Duration;
 
-use super::driver::{FrontierCell, FrontierConfig, ScenarioFrontier};
+use super::driver::{CellPerf, FrontierCell, FrontierConfig, ScenarioFrontier};
 use crate::scenarios::{class_to_json, deployment_to_json, SCHEMA_VERSION};
 use crate::util::json::Json;
 
@@ -85,6 +85,68 @@ pub fn frontier_to_json(
     ])
 }
 
+fn perf_fields(p: &CellPerf) -> Vec<(&'static str, Json)> {
+    let secs = p.sim_wall.as_secs_f64();
+    vec![
+        ("probes", Json::num(p.probes as f64)),
+        ("events", Json::num(p.events as f64)),
+        ("abandoned_probes", Json::num(p.abandoned_probes as f64)),
+        ("abandoned_events", Json::num(p.abandoned_events as f64)),
+        ("events_saved", Json::num(p.events_saved as f64)),
+        ("sim_wall_s", Json::num(secs)),
+        (
+            "events_per_sec",
+            Json::num(if secs > 0.0 { p.events as f64 / secs } else { 0.0 }),
+        ),
+    ]
+}
+
+/// The full `BENCH_simperf.json` document: simulator *cost* per
+/// (scenario × system × variant) cell — events simulated, events saved by
+/// early abandonment, wall time — so the simulator's own throughput is a
+/// tracked trajectory, separate from the answer-bearing
+/// `BENCH_goodput.json` (whose cells must stay bit-identical whether or
+/// not abandonment is on).
+pub fn simperf_to_json(
+    fronts: &[ScenarioFrontier],
+    cfg: &FrontierConfig,
+    wall: Duration,
+) -> Json {
+    let mut totals = CellPerf::default();
+    let mut cells = Vec::new();
+    for f in fronts {
+        for cell in &f.rows {
+            let p = &cell.perf;
+            totals.probes += p.probes;
+            totals.events += p.events;
+            totals.abandoned_probes += p.abandoned_probes;
+            totals.abandoned_events += p.abandoned_events;
+            totals.events_saved += p.events_saved;
+            totals.sim_wall += p.sim_wall;
+            let mut fields = vec![
+                ("scenario", Json::str(f.scenario.name)),
+                ("system", Json::str(cell.system.label())),
+                ("variant", Json::str(cell.variant_label())),
+                ("max_rate_rps", Json::num(cell.max_rate)),
+            ];
+            fields.extend(perf_fields(p));
+            cells.push(Json::obj(fields));
+        }
+    }
+    Json::obj(vec![
+        ("bench", Json::str("ecoserve-simperf")),
+        ("schema_version", Json::num(SCHEMA_VERSION)),
+        ("level", Json::str(cfg.level.label())),
+        ("quick", Json::Bool(cfg.quick)),
+        ("seed", Json::num(cfg.base.seed as f64)),
+        ("early_abandon", Json::Bool(cfg.early_abandon)),
+        ("deployment", deployment_to_json(&cfg.base.deployment)),
+        ("wall_s", Json::num(wall.as_secs_f64())),
+        ("totals", Json::obj(perf_fields(&totals))),
+        ("cells", Json::arr(cells)),
+    ])
+}
+
 /// Human-readable frontier table for one scenario.
 pub fn render_frontier_table(f: &ScenarioFrontier) -> String {
     let mut out = String::new();
@@ -159,6 +221,14 @@ mod tests {
             saturated: false,
             probes: 3,
             wall: Duration::from_millis(1500),
+            perf: CellPerf {
+                probes: 3,
+                events: 9000,
+                abandoned_events: 1000,
+                events_saved: 4000,
+                abandoned_probes: 1,
+                sim_wall: Duration::from_millis(1200),
+            },
         };
         let fronts = vec![ScenarioFrontier {
             scenario,
@@ -214,6 +284,47 @@ mod tests {
         // the top-level flag reflects the rows that actually ran.
         assert_eq!(systems[2].get("autoscale").unwrap().as_bool(), Some(true));
         assert_eq!(back.get("autoscale_variant").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn simperf_json_honors_the_contract() {
+        let (fronts, cfg) = synthetic();
+        let text = simperf_to_json(&fronts, &cfg, Duration::from_secs(4)).to_string();
+        let back = Json::parse(&text).expect("simperf report must be valid JSON");
+        assert_eq!(back.get("bench").unwrap().as_str(), Some("ecoserve-simperf"));
+        assert_eq!(
+            back.get("schema_version").unwrap().as_f64(),
+            Some(SCHEMA_VERSION)
+        );
+        assert_eq!(back.get("level").unwrap().as_str(), Some("P90"));
+        assert_eq!(back.get("early_abandon").unwrap().as_bool(), Some(true));
+        assert!(back.path(&["deployment", "instances"]).is_some());
+        // Totals aggregate the three synthetic cells.
+        assert_eq!(back.path(&["totals", "probes"]).unwrap().as_i64(), Some(9));
+        assert_eq!(
+            back.path(&["totals", "events"]).unwrap().as_i64(),
+            Some(27_000)
+        );
+        assert_eq!(
+            back.path(&["totals", "events_saved"]).unwrap().as_i64(),
+            Some(12_000)
+        );
+        let cells = back.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells.len(), 3);
+        for cell in cells {
+            for key in [
+                "scenario", "system", "variant", "max_rate_rps", "probes", "events",
+                "abandoned_probes", "abandoned_events", "events_saved", "sim_wall_s",
+                "events_per_sec",
+            ] {
+                assert!(cell.get(key).is_some(), "missing {key}");
+            }
+            // events_per_sec = events / sim_wall (synthetic: 9000 / 1.2s).
+            let eps = cell.get("events_per_sec").unwrap().as_f64().unwrap();
+            assert!((eps - 7500.0).abs() < 1e-6, "{eps}");
+        }
+        assert_eq!(cells[0].get("scenario").unwrap().as_str(), Some("bursty"));
+        assert_eq!(cells[2].get("variant").unwrap().as_str(), Some("mitosis"));
     }
 
     #[test]

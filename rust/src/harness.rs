@@ -11,8 +11,10 @@ use crate::baselines::{FudgMode, FudgSystem, SarathiSystem, VllmSystem};
 use crate::config::{ExperimentConfig, SystemKind};
 use crate::coordinator::EcoServeSystem;
 use crate::frontier::search::{rate_search, Probe, SearchParams, SearchPoint};
-use crate::metrics::{summarize, Attainment, Collector, SloSpec, Summary};
-use crate::sim::{run, System};
+use crate::metrics::{
+    summarize_from, AbandonPolicy, Attainment, Collector, SloMonitor, SloSpec, Summary,
+};
+use crate::sim::{run_abandonable, StopReason, System};
 use crate::util::threads::parallel_map;
 use crate::workload::TraceGenerator;
 
@@ -31,6 +33,12 @@ pub struct RunResult {
     /// Strict attainment = met / arrived.
     pub attainment: f64,
     pub events: u64,
+    /// Events still queued when the SLO monitor aborted the run (0 on
+    /// full runs) — a lower bound on the work abandonment avoided.
+    pub events_saved: u64,
+    /// True when the run was cut short because the attainment target
+    /// became mathematically unreachable.
+    pub abandoned: bool,
     pub wall: std::time::Duration,
 }
 
@@ -70,9 +78,26 @@ pub fn build_system(
     }
 }
 
-/// Run `kind` at `rate` req/s and measure strict attainment.
+/// Run `kind` at `rate` req/s and measure strict attainment (full
+/// simulation, no online monitor).
 pub fn run_once(kind: SystemKind, cfg: &ExperimentConfig, rate: f64,
                 fudg_prefill: Option<usize>) -> RunResult {
+    run_probe(kind, cfg, rate, fudg_prefill, None)
+}
+
+/// [`run_once`] with an optional [`AbandonPolicy`]: when set, an online
+/// [`SloMonitor`] watches every measurement-window arrival and the run is
+/// scored through the monitor's decision snapshot; with
+/// `policy.stop_early` the simulation also aborts the moment the target
+/// becomes unreachable. Verdicts and reported numbers are bit-identical
+/// across `stop_early` on/off — only `events`/`wall` change.
+pub fn run_probe(
+    kind: SystemKind,
+    cfg: &ExperimentConfig,
+    rate: f64,
+    fudg_prefill: Option<usize>,
+    abandon: Option<AbandonPolicy>,
+) -> RunResult {
     let slo = SloSpec::new(cfg.dataset.slo_ttft, cfg.dataset.slo_tpot);
     let gen = TraceGenerator::new(cfg.dataset.clone(), cfg.seed);
     let trace = gen.poisson(rate, cfg.duration);
@@ -82,17 +107,38 @@ pub fn run_once(kind: SystemKind, cfg: &ExperimentConfig, rate: f64,
         .filter(|r| r.arrival >= window.0 && r.arrival < window.1)
         .count();
     let mut system = build_system(kind, cfg, fudg_prefill);
-    let mut metrics = Collector::new();
-    let stats = run(system.as_mut(), trace, cfg.duration + DRAIN_SECS, &mut metrics);
-    let records = metrics.records_in_window(window.0, window.1);
-    let met = records.iter().filter(|r| r.meets(&slo)).count();
+    let mut metrics = match abandon {
+        Some(policy) => {
+            let mut monitor = SloMonitor::new(policy.target, 1);
+            for req in &trace {
+                if req.arrival >= window.0 && req.arrival < window.1 {
+                    monitor.track(req.id, req.arrival, slo, 0);
+                }
+            }
+            Collector::with_monitor(monitor)
+        }
+        None => Collector::new(),
+    };
+    let horizon = cfg.duration + DRAIN_SECS;
+    let stop_early = abandon.is_some_and(|p| p.stop_early);
+    let stats = run_abandonable(system.as_mut(), trace, horizon, &mut metrics, stop_early);
+    let met = metrics
+        .window_records(window.0, window.1)
+        .filter(|r| r.meets(&slo))
+        .count();
     let attainment = if arrived == 0 { 1.0 } else { met as f64 / arrived as f64 };
     RunResult {
-        summary: summarize(&records, &slo, window.1 - window.0),
+        summary: summarize_from(
+            metrics.window_records(window.0, window.1),
+            &slo,
+            window.1 - window.0,
+        ),
         arrived,
         met,
         attainment,
         events: stats.events,
+        events_saved: stats.events_saved,
+        abandoned: stats.stop == StopReason::Abandoned,
         wall: stats.wall_time,
     }
 }
@@ -156,8 +202,12 @@ pub fn goodput_search(kind: SystemKind, cfg: &ExperimentConfig, level: Attainmen
         _ => None,
     };
     let params = SearchParams::paper_default(level.fraction());
+    // Every probe runs under the online SLO monitor: doomed rates abort
+    // the moment the target is provably unreachable, with the same
+    // verdict (and reported numbers) a full run would produce.
+    let abandon = AbandonPolicy::stop_at(level.fraction());
     let outcome = rate_search(&params, |rate| {
-        let r = run_once(kind, cfg, rate, fudg_prefill);
+        let r = run_probe(kind, cfg, rate, fudg_prefill, Some(abandon));
         Probe {
             attainment: r.attainment,
             goodput_rps: r.met as f64 / (cfg.duration - cfg.warmup).max(1e-9),
@@ -205,7 +255,10 @@ impl GoodputReport {
 /// Run a goodput search for several systems in parallel (used by benches).
 pub fn run_goodput_search(cfg: &ExperimentConfig) -> GoodputReport {
     let kinds: Vec<SystemKind> = SystemKind::all().to_vec();
-    let rows = parallel_map(kinds, 5, |kind| {
+    // One worker per system — a hardcoded width would silently serialize
+    // the moment a sixth system joins the registry.
+    let workers = kinds.len();
+    let rows = parallel_map(kinds, workers, |kind| {
         goodput_search(kind, cfg, Attainment::P90)
     });
     GoodputReport { rows }
@@ -269,6 +322,70 @@ mod tests {
         let p = pick_fudg_ratio(SystemKind::MoonCake, &cfg, 1.0);
         let n = cfg.deployment.num_instances();
         assert!(p >= 1 && p < n);
+    }
+
+    /// Early abandonment must change cost, never answers: an overload
+    /// probe stopped at decision time and the same probe driven to
+    /// completion report bit-identical verdict fields.
+    #[test]
+    fn early_abandon_matches_full_run_bit_for_bit_on_overload() {
+        let cfg = small_cfg();
+        let on = run_probe(
+            SystemKind::Vllm,
+            &cfg,
+            80.0,
+            None,
+            Some(AbandonPolicy::stop_at(0.90)),
+        );
+        let off = run_probe(
+            SystemKind::Vllm,
+            &cfg,
+            80.0,
+            None,
+            Some(AbandonPolicy::monitor_only(0.90)),
+        );
+        assert!(on.abandoned, "an 80 req/s probe on 4 instances must abandon");
+        assert!(!off.abandoned);
+        assert_eq!(on.arrived, off.arrived);
+        assert_eq!(on.met, off.met);
+        assert_eq!(on.attainment.to_bits(), off.attainment.to_bits());
+        assert_eq!(on.summary.count, off.summary.count);
+        assert_eq!(on.summary.ttft_p90.to_bits(), off.summary.ttft_p90.to_bits());
+        assert_eq!(on.summary.tpot_p99.to_bits(), off.summary.tpot_p99.to_bits());
+        // The whole point: the abandoned run simulated far less.
+        assert!(
+            on.events * 2 <= off.events,
+            "expected >=2x fewer events: {} vs {}",
+            on.events,
+            off.events
+        );
+        assert!(on.events_saved > 0);
+        assert_eq!(off.events_saved, 0);
+        // And both agree with the legacy full run's verdict.
+        let legacy = run_once(SystemKind::Vllm, &cfg, 80.0, None);
+        assert!(!legacy.meets(Attainment::P90));
+        assert!(on.attainment < 0.90 - 1e-12);
+    }
+
+    /// On a healthy (passing) probe the monitor never decides, so the
+    /// monitored run is the legacy run, bit for bit.
+    #[test]
+    fn monitored_passing_probe_equals_the_legacy_run() {
+        let cfg = small_cfg();
+        let probe = run_probe(
+            SystemKind::EcoServe,
+            &cfg,
+            2.0,
+            None,
+            Some(AbandonPolicy::stop_at(0.90)),
+        );
+        let legacy = run_once(SystemKind::EcoServe, &cfg, 2.0, None);
+        assert!(!probe.abandoned);
+        assert_eq!(probe.arrived, legacy.arrived);
+        assert_eq!(probe.met, legacy.met);
+        assert_eq!(probe.attainment.to_bits(), legacy.attainment.to_bits());
+        assert_eq!(probe.events, legacy.events);
+        assert_eq!(probe.summary.ttft_p99.to_bits(), legacy.summary.ttft_p99.to_bits());
     }
 
     #[test]

@@ -10,7 +10,10 @@
 //!   frontier   — goodput-frontier sweep: max sustainable rate per
 //!                scenario x system at a target attainment level, with an
 //!                optional mitosis-on PaDG variant and a BENCH JSON
-//!                (--replay sweeps a recorded log via time-warping)
+//!                (--replay sweeps a recorded log via time-warping;
+//!                --perf-out emits the BENCH_simperf simulator-cost
+//!                artifact; --no-abandon disables early probe
+//!                abandonment — same answers, more events)
 //!   record     — export a scenario's trace as a replay log (JSONL)
 //!   table2     — print the arithmetic-intensity table
 //!   table3     — print the KV-bandwidth table
@@ -23,7 +26,7 @@
 //!   ecoserve scenarios --list
 //!   ecoserve scenarios --scenario bursty --out report.json
 //!   ecoserve frontier --scenario bursty --level p90 --out BENCH_goodput.json
-//!   ecoserve frontier --quick --autoscale --gpus 16
+//!   ecoserve frontier --quick --autoscale --gpus 16 --perf-out BENCH_simperf.json
 //!   ecoserve record --scenario bursty --rate 6 --out bursty.jsonl
 //!   ecoserve scenarios --replay bursty.jsonl
 //!   ecoserve frontier --replay bursty.jsonl --quick --autoscale
@@ -239,6 +242,7 @@ fn cmd_scenarios(args: &Args) -> Result<()> {
         seed: args.get_u64("seed", 42),
         rate: parse_f64_flag(args, "rate")?,
         duration_override: parse_f64_flag(args, "duration")?,
+        abandon: None,
     };
 
     let d = &cfg.deployment;
@@ -355,10 +359,16 @@ fn cmd_frontier(args: &Args) -> Result<()> {
         seed: args.get_u64("seed", 42),
         rate: None, // the search owns the rate
         duration_override: parse_f64_flag(args, "duration")?,
+        abandon: None, // the search arms the monitor per probe
     };
     let mut cfg = frontier::FrontierConfig::new(base, level);
     cfg.autoscale = args.has("autoscale");
     cfg.quick = args.has("quick");
+    // Doomed probes abort as soon as the verdict is decided; --no-abandon
+    // runs every probe to completion (results are bit-identical — the
+    // flag only changes simulator cost, and exists for exactly that
+    // comparison).
+    cfg.early_abandon = !args.has("no-abandon");
     if cfg.autoscale && !systems.contains(&SystemKind::EcoServe) {
         // Otherwise the BENCH report would claim autoscale_variant=true
         // while containing no mitosis row.
@@ -390,12 +400,32 @@ fn cmd_frontier(args: &Args) -> Result<()> {
         print!("{}", frontier::render_frontier_table(f));
     }
     println!("\ntotal wall clock: {:.1}s", wall.as_secs_f64());
+    let (events, saved, abandoned): (u64, u64, usize) = fronts
+        .iter()
+        .flat_map(|f| &f.rows)
+        .fold((0, 0, 0), |acc, c| {
+            (
+                acc.0 + c.perf.events,
+                acc.1 + c.perf.events_saved,
+                acc.2 + c.perf.abandoned_probes,
+            )
+        });
+    println!(
+        "simulated {events} events; {abandoned} probe(s) abandoned early, \
+         saving >= {saved} queued events"
+    );
 
     if let Some(path) = args.get("out") {
         let json = frontier::frontier_to_json(&fronts, &cfg, wall).to_string();
         std::fs::write(path, &json)
             .map_err(|e| anyhow::anyhow!("write {path}: {e}"))?;
         println!("wrote BENCH report to {path}");
+    }
+    if let Some(path) = args.get("perf-out") {
+        let json = frontier::simperf_to_json(&fronts, &cfg, wall).to_string();
+        std::fs::write(path, &json)
+            .map_err(|e| anyhow::anyhow!("write {path}: {e}"))?;
+        println!("wrote simperf report to {path}");
     }
     Ok(())
 }

@@ -2,10 +2,16 @@
 //! during a run (simulated or live) and finalizes [`RequestRecord`]s.
 //!
 //! Also maintains windowed attainment series for the Figure 10 experiment
-//! (SLO attainment sampled every 30 s while the request rate ramps).
+//! (SLO attainment sampled every 30 s while the request rate ramps), and
+//! optionally hosts a [`SloMonitor`]: when armed, the collector forwards
+//! every token event to it and latches a *scoring snapshot* — the length
+//! of the completed-record log — the instant the monitor proves the
+//! attainment target unreachable. Scoring through that snapshot is what
+//! makes an early-abandoned run and a full run report identical numbers.
 
 use std::collections::HashMap;
 
+use super::monitor::SloMonitor;
 use super::{RequestRecord, SloSpec};
 use crate::workload::Request;
 
@@ -26,11 +32,49 @@ pub struct Collector {
     done: Vec<RequestRecord>,
     /// Count of requests rejected at admission (capacity overflow).
     pub rejected: usize,
+    monitor: Option<SloMonitor>,
+    /// `done.len()` at the moment the monitor decided the verdict.
+    decision_cut: Option<usize>,
+    /// Latest simulation time observed through [`Collector::observe_time`]
+    /// (the engine advances it once per event).
+    clock: f64,
 }
 
 impl Collector {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// A collector with an armed SLO monitor: the verdict is watched
+    /// online and the scoring snapshot latched at decision time.
+    pub fn with_monitor(monitor: SloMonitor) -> Self {
+        Collector { monitor: Some(monitor), ..Default::default() }
+    }
+
+    fn latch_decision(&mut self) {
+        if self.decision_cut.is_none() && self.monitor.as_ref().is_some_and(|m| m.decided()) {
+            self.decision_cut = Some(self.done.len());
+        }
+    }
+
+    /// Advance the monitor clock (TTFT deadline sweep). The engine calls
+    /// this once per event; without a monitor it is a no-op.
+    pub fn observe_time(&mut self, now: f64) {
+        self.clock = self.clock.max(now);
+        if let Some(m) = self.monitor.as_mut() {
+            m.advance(now);
+        }
+        self.latch_decision();
+    }
+
+    /// Has the armed monitor proven the attainment target unreachable?
+    pub fn decided(&self) -> bool {
+        self.decision_cut.is_some()
+    }
+
+    /// The armed monitor, if any (violation counts, decision time).
+    pub fn monitor(&self) -> Option<&SloMonitor> {
+        self.monitor.as_ref()
     }
 
     /// Register arrival (idempotent per id).
@@ -52,6 +96,10 @@ impl Collector {
             o.last_token = now;
             o.tokens = 1;
         }
+        if let Some(m) = self.monitor.as_mut() {
+            m.on_first_token(id, now);
+        }
+        self.latch_decision();
     }
 
     /// Record a subsequent decode token.
@@ -66,21 +114,34 @@ impl Collector {
     pub fn on_complete(&mut self, id: u64, now: f64) {
         if let Some(o) = self.open.remove(&id) {
             let first = o.first_token.unwrap_or(now);
-            self.done.push(RequestRecord {
+            let rec = RequestRecord {
                 id,
                 arrival: o.arrival,
                 first_token: first,
                 completion: now.max(first),
                 input_len: o.input_len,
                 output_len: o.tokens.max(1),
-            });
+            };
+            if let Some(m) = self.monitor.as_mut() {
+                m.on_complete(&rec, now);
+            }
+            self.done.push(rec);
+            self.latch_decision();
         }
     }
 
     /// Request rejected at admission — tracked separately so overloaded
     /// systems can't improve their attainment by shedding load invisibly.
     pub fn on_reject(&mut self, id: u64) {
-        self.open.remove(&id);
+        if let Some(o) = self.open.remove(&id) {
+            // Rejections happen while dispatching an event, so the engine
+            // clock (never behind the arrival) is the rejection time.
+            let now = self.clock.max(o.arrival);
+            if let Some(m) = self.monitor.as_mut() {
+                m.on_reject(id, now);
+            }
+            self.latch_decision();
+        }
         self.rejected += 1;
     }
 
@@ -96,8 +157,32 @@ impl Collector {
         self.done
     }
 
-    /// Completed records whose arrival fell in [t0, t1) — used both to trim
-    /// warm-up/cool-down and for Figure 10's 30-second attainment windows.
+    /// How much of the completed log is eligible for probe scoring:
+    /// everything, unless the monitor decided mid-run — then only the
+    /// records completed before the decision, so early-abandoned and
+    /// full runs score bit-identically.
+    pub fn scoring_cut(&self) -> usize {
+        self.decision_cut.unwrap_or(self.done.len())
+    }
+
+    /// Borrow-based windowed view over the scoring records (arrival in
+    /// `[t0, t1)`): the clone-free replacement for [`records_in_window`]
+    /// on the probe scoring path.
+    ///
+    /// [`records_in_window`]: Collector::records_in_window
+    pub fn window_records(&self, t0: f64, t1: f64) -> impl Iterator<Item = &RequestRecord> + '_ {
+        self.done[..self.scoring_cut()]
+            .iter()
+            .filter(move |r| r.arrival >= t0 && r.arrival < t1)
+    }
+
+    /// Completed records whose arrival fell in [t0, t1), over the *full*
+    /// (uncut) log — used both to trim warm-up/cool-down and for Figure
+    /// 10's 30-second attainment windows, including the live mitosis
+    /// controller's mid-run view, which must never freeze at the
+    /// monitor's decision snapshot. Probe *scoring* paths should prefer
+    /// [`Collector::window_records`], which is clone-free and respects
+    /// the snapshot.
     pub fn records_in_window(&self, t0: f64, t1: f64) -> Vec<RequestRecord> {
         self.done
             .iter()
@@ -165,6 +250,9 @@ mod tests {
         }
         assert_eq!(c.records_in_window(0.0, 30.0).len(), 1);
         assert_eq!(c.records_in_window(30.0, 60.0).len(), 1);
+        assert_eq!(c.window_records(0.0, 30.0).count(), 1);
+        assert_eq!(c.window_records(30.0, 60.0).count(), 1);
+        assert_eq!(c.window_records(0.0, 90.0).count(), 3);
         let series = c.attainment_series(&SloSpec::new(1.0, 1.0), 30.0, 90.0);
         assert_eq!(series.len(), 3);
         assert!(series.iter().all(|(_, f)| *f == 1.0));
@@ -177,5 +265,53 @@ mod tests {
         c.on_token(99, 1.1);
         c.on_complete(99, 1.2);
         assert!(c.completed().is_empty());
+    }
+
+    #[test]
+    fn without_monitor_never_decides() {
+        let mut c = Collector::new();
+        c.observe_time(1e9);
+        assert!(!c.decided());
+        assert_eq!(c.scoring_cut(), 0);
+        assert!(c.monitor().is_none());
+    }
+
+    #[test]
+    fn armed_monitor_latches_the_scoring_snapshot() {
+        // Two arrivals at P90: the budget is zero violations, so the
+        // first blown deadline decides the verdict. A completion landing
+        // after the decision must stay outside the scoring cut.
+        let mut m = SloMonitor::new(0.9, 1);
+        m.track(1, 0.0, SloSpec::new(1.0, 0.1), 0);
+        m.track(2, 0.0, SloSpec::new(1.0, 0.1), 0);
+        let mut c = Collector::with_monitor(m);
+        c.on_arrival(&req(1, 0.0));
+        c.on_arrival(&req(2, 0.0));
+        c.observe_time(0.9);
+        assert!(!c.decided());
+        c.observe_time(2.0); // both TTFT deadlines blown: decided
+        assert!(c.decided());
+        assert_eq!(c.scoring_cut(), 0);
+        c.on_first_token(1, 2.5);
+        c.on_complete(1, 2.6);
+        assert_eq!(c.completed().len(), 1);
+        assert_eq!(c.scoring_cut(), 0, "post-decision completions excluded");
+        assert_eq!(c.window_records(0.0, 10.0).count(), 0);
+        assert_eq!(c.monitor().unwrap().violations(), 2);
+    }
+
+    #[test]
+    fn healthy_run_with_monitor_scores_everything() {
+        let mut m = SloMonitor::new(0.9, 1);
+        m.track(1, 0.0, SloSpec::new(1.0, 1.0), 0);
+        let mut c = Collector::with_monitor(m);
+        c.on_arrival(&req(1, 0.0));
+        c.observe_time(0.2);
+        c.on_first_token(1, 0.4);
+        c.on_complete(1, 0.6);
+        c.observe_time(50.0);
+        assert!(!c.decided());
+        assert_eq!(c.scoring_cut(), 1);
+        assert_eq!(c.window_records(0.0, 10.0).count(), 1);
     }
 }

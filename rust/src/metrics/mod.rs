@@ -7,10 +7,12 @@
 //! per request, as the mean inter-token time.
 
 pub mod collector;
+pub mod monitor;
 
 pub use collector::Collector;
+pub use monitor::{AbandonPolicy, SloMonitor};
 
-use crate::util::percentile;
+use crate::util::percentile_sorted;
 
 /// Completed-request latency record.
 #[derive(Debug, Clone, PartialEq)]
@@ -136,19 +138,47 @@ pub fn meets_attainment(records: &[RequestRecord], slo: &SloSpec, level: Attainm
 
 /// Build a [`Summary`] over `records` for the window `[0, duration]`.
 pub fn summarize(records: &[RequestRecord], slo: &SloSpec, duration: f64) -> Summary {
-    let ttfts: Vec<f64> = records.iter().map(|r| r.ttft()).collect();
-    let tpots: Vec<f64> = records.iter().map(|r| r.tpot()).collect();
-    let tokens: usize = records.iter().map(|r| r.output_len).sum();
+    summarize_from(records.iter(), slo, duration)
+}
+
+/// [`summarize`] over any borrowed record stream (e.g. the collector's
+/// clone-free [`Collector::window_records`] view). Latency vectors are
+/// sorted once and every percentile reads the sorted copy
+/// ([`crate::util::percentile_sorted`]) instead of re-sorting per call;
+/// the numbers are bit-identical to the sort-per-percentile path.
+pub fn summarize_from<'a, I>(records: I, slo: &SloSpec, duration: f64) -> Summary
+where
+    I: Iterator<Item = &'a RequestRecord>,
+{
+    let mut ttfts: Vec<f64> = Vec::new();
+    let mut tpots: Vec<f64> = Vec::new();
+    let mut met = 0usize;
+    let mut tokens = 0usize;
+    for r in records {
+        ttfts.push(r.ttft());
+        tpots.push(r.tpot());
+        tokens += r.output_len;
+        if r.meets(slo) {
+            met += 1;
+        }
+    }
+    let count = ttfts.len();
+    // Match `util::percentile`'s contract exactly: NaN samples dropped,
+    // then a total-order sort.
+    ttfts.retain(|x| !x.is_nan());
+    tpots.retain(|x| !x.is_nan());
+    ttfts.sort_by(f64::total_cmp);
+    tpots.sort_by(f64::total_cmp);
     Summary {
-        count: records.len(),
-        ttft_p50: percentile(&ttfts, 50.0),
-        ttft_p90: percentile(&ttfts, 90.0),
-        ttft_p99: percentile(&ttfts, 99.0),
-        tpot_p50: percentile(&tpots, 50.0),
-        tpot_p90: percentile(&tpots, 90.0),
-        tpot_p99: percentile(&tpots, 99.0),
-        attained_frac: attainment_fraction(records, slo),
-        throughput_rps: records.len() as f64 / duration.max(1e-9),
+        count,
+        ttft_p50: percentile_sorted(&ttfts, 50.0),
+        ttft_p90: percentile_sorted(&ttfts, 90.0),
+        ttft_p99: percentile_sorted(&ttfts, 99.0),
+        tpot_p50: percentile_sorted(&tpots, 50.0),
+        tpot_p90: percentile_sorted(&tpots, 90.0),
+        tpot_p99: percentile_sorted(&tpots, 99.0),
+        attained_frac: if count == 0 { 0.0 } else { met as f64 / count as f64 },
+        throughput_rps: count as f64 / duration.max(1e-9),
         token_throughput: tokens as f64 / duration.max(1e-9),
     }
 }
@@ -217,6 +247,40 @@ mod tests {
         assert!((s.attained_frac - 1.0).abs() < 1e-9);
         assert!((s.ttft_p50 - 0.2).abs() < 1e-6);
         assert!((s.token_throughput - 11.0).abs() < 1e-9);
+    }
+
+    /// The sort-once percentile path must be bit-identical to calling
+    /// `util::percentile` (which re-sorts) on the raw unsorted vectors.
+    #[test]
+    fn summarize_matches_the_unsorted_percentile_path() {
+        use crate::util::percentile;
+        let slo = SloSpec::new(1.0, 0.1);
+        // Deterministic scrambled latencies, single-token requests mixed in.
+        let records: Vec<_> = (0..97u64)
+            .map(|i| {
+                let a = ((i * 37) % 97) as f64 * 0.11;
+                let out = if i % 5 == 0 { 1 } else { 10 + (i % 7) as usize };
+                rec(a, a + 0.1 + ((i * 13) % 17) as f64 * 0.07, a + 2.0, out)
+            })
+            .collect();
+        let s = summarize(&records, &slo, 60.0);
+        let ttfts: Vec<f64> = records.iter().map(|r| r.ttft()).collect();
+        let tpots: Vec<f64> = records.iter().map(|r| r.tpot()).collect();
+        for (got, want) in [
+            (s.ttft_p50, percentile(&ttfts, 50.0)),
+            (s.ttft_p90, percentile(&ttfts, 90.0)),
+            (s.ttft_p99, percentile(&ttfts, 99.0)),
+            (s.tpot_p50, percentile(&tpots, 50.0)),
+            (s.tpot_p90, percentile(&tpots, 90.0)),
+            (s.tpot_p99, percentile(&tpots, 99.0)),
+        ] {
+            assert_eq!(got.to_bits(), want.to_bits(), "{got} vs {want}");
+        }
+        assert!((s.attained_frac - attainment_fraction(&records, &slo)).abs() < 1e-15);
+        // The iterator entry point agrees with the slice entry point.
+        let s2 = summarize_from(records.iter(), &slo, 60.0);
+        assert_eq!(s.ttft_p99.to_bits(), s2.ttft_p99.to_bits());
+        assert_eq!(s.count, s2.count);
     }
 
     #[test]

@@ -1,0 +1,365 @@
+//! Online SLO verdict monitor: proves, mid-run, the moment a probe's
+//! attainment target becomes mathematically unreachable.
+//!
+//! A rate probe's verdict is "does strict attainment (met / arrived, with
+//! never-completed arrivals as violations) reach the target?". Two kinds
+//! of violation are *guaranteed* before the run ends:
+//!
+//! * a measurement-window arrival whose TTFT deadline has passed with no
+//!   first token — any future first token would already be late;
+//! * a completed request whose recorded latencies miss its SLO pair.
+//!
+//! The monitor counts those per traffic class as they become inevitable.
+//! Once any class's best-possible attainment (every still-open request
+//! assumed to meet its SLOs) drops below the target, the verdict is
+//! decided: no continuation of the run can pass. [`Collector`] latches a
+//! scoring snapshot at that instant, so a run abandoned there and a run
+//! driven to completion report bit-identical numbers — the optimization
+//! changes cost, never answers.
+//!
+//! Violation checks reuse the exact comparisons of
+//! [`RequestRecord::meets`], so the online verdict can never contradict
+//! the post-hoc scoring.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+use super::{RequestRecord, SloSpec};
+
+/// Probe-abandonment policy: the attainment target the online monitor
+/// proves unreachable, and whether the engine should actually stop there
+/// (`stop_early: false` still arms the monitor — the scoring snapshot is
+/// latched either way, which is what makes the two modes bit-identical).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AbandonPolicy {
+    /// Attainment fraction every class must sustain (e.g. 0.90 for P90).
+    pub target: f64,
+    /// Abort the simulation once the verdict is decided.
+    pub stop_early: bool,
+}
+
+impl AbandonPolicy {
+    /// Monitor and abort: the production frontier setting.
+    pub fn stop_at(target: f64) -> Self {
+        AbandonPolicy { target, stop_early: true }
+    }
+
+    /// Monitor only: run the full simulation but score through the same
+    /// decision snapshot. The equivalence baseline for abandonment.
+    pub fn monitor_only(target: f64) -> Self {
+        AbandonPolicy { target, stop_early: false }
+    }
+}
+
+/// One watched measurement-window arrival.
+#[derive(Debug, Clone, Copy)]
+struct Tracked {
+    class: usize,
+    arrival: f64,
+    slo: SloSpec,
+    /// First token arrived within its deadline; only the completion-time
+    /// TPOT check remains.
+    first_token: bool,
+}
+
+/// Min-heap entry: approximate TTFT deadline used to schedule the exact
+/// per-request check (the check itself recomputes `now - arrival` so it
+/// bit-matches [`RequestRecord::meets`]).
+#[derive(Debug)]
+struct Deadline {
+    at: f64,
+    id: u64,
+}
+
+impl PartialEq for Deadline {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.id == other.id
+    }
+}
+impl Eq for Deadline {}
+impl PartialOrd for Deadline {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Deadline {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.at.total_cmp(&other.at).then(self.id.cmp(&other.id))
+    }
+}
+
+/// Counts guaranteed SLO violations per class as they become inevitable
+/// and decides when the attainment target is out of reach.
+#[derive(Debug)]
+pub struct SloMonitor {
+    target: f64,
+    /// Window arrivals registered per class (the attainment denominator).
+    arrived: Vec<usize>,
+    /// Guaranteed violations per class so far.
+    violations: Vec<usize>,
+    tracked: HashMap<u64, Tracked>,
+    deadlines: BinaryHeap<Reverse<Deadline>>,
+    decided_at: Option<f64>,
+}
+
+impl SloMonitor {
+    pub fn new(target: f64, n_classes: usize) -> Self {
+        SloMonitor {
+            target,
+            arrived: vec![0; n_classes],
+            violations: vec![0; n_classes],
+            tracked: HashMap::new(),
+            deadlines: BinaryHeap::new(),
+            decided_at: None,
+        }
+    }
+
+    /// Register one measurement-window arrival before the run starts.
+    /// Requests outside the window must not be tracked — they do not
+    /// count toward strict attainment.
+    pub fn track(&mut self, id: u64, arrival: f64, slo: SloSpec, class: usize) {
+        self.arrived[class] += 1;
+        self.tracked.insert(id, Tracked { class, arrival, slo, first_token: false });
+        self.deadlines.push(Reverse(Deadline { at: arrival + slo.ttft, id }));
+    }
+
+    /// Total window arrivals under watch.
+    pub fn tracked_arrivals(&self) -> usize {
+        self.arrived.iter().sum()
+    }
+
+    /// Guaranteed violations counted so far, across classes.
+    pub fn violations(&self) -> usize {
+        self.violations.iter().sum()
+    }
+
+    /// Has the target been proven unreachable?
+    pub fn decided(&self) -> bool {
+        self.decided_at.is_some()
+    }
+
+    /// Sim time at which the target became unreachable.
+    pub fn decided_at(&self) -> Option<f64> {
+        self.decided_at
+    }
+
+    fn violate(&mut self, class: usize, now: f64) {
+        self.violations[class] += 1;
+        if self.decided_at.is_none() {
+            let arrived = self.arrived[class];
+            // Best case: every not-yet-violated request meets its SLOs.
+            let best = (arrived - self.violations[class]) as f64 / arrived as f64;
+            // Same epsilon as the rate search's sustain test, so the
+            // online verdict and the post-hoc verdict cannot disagree.
+            if best < self.target - 1e-12 {
+                self.decided_at = Some(now);
+            }
+        }
+    }
+
+    /// Advance the clock: any watched request whose first token could no
+    /// longer arrive in time (`now - arrival > slo.ttft`, the exact
+    /// [`RequestRecord::meets`] comparison) is a guaranteed violation.
+    pub fn advance(&mut self, now: f64) {
+        loop {
+            let (at, id) = match self.deadlines.peek() {
+                Some(Reverse(d)) => (d.at, d.id),
+                None => break,
+            };
+            if at > now {
+                break;
+            }
+            self.deadlines.pop();
+            let state = match self.tracked.get(&id) {
+                Some(t) if !t.first_token => Some((t.class, t.arrival, t.slo.ttft)),
+                _ => None, // first token made it in time, or already resolved
+            };
+            if let Some((class, arrival, slo_ttft)) = state {
+                if now - arrival > slo_ttft {
+                    self.tracked.remove(&id);
+                    self.violate(class, now);
+                } else {
+                    // The heap key rounded below the exact threshold; put
+                    // the entry back and retry at the next event time.
+                    self.deadlines.push(Reverse(Deadline { at, id }));
+                    break;
+                }
+            }
+        }
+    }
+
+    /// First output token observed. A late first token (TTFT already
+    /// blown, by the same comparison [`RequestRecord::meets`] will apply)
+    /// counts immediately; a timely one leaves only the completion check.
+    pub fn on_first_token(&mut self, id: u64, now: f64) {
+        let late = match self.tracked.get_mut(&id) {
+            Some(t) => {
+                if t.first_token {
+                    return;
+                }
+                if now - t.arrival > t.slo.ttft {
+                    Some(t.class)
+                } else {
+                    t.first_token = true;
+                    None
+                }
+            }
+            None => return,
+        };
+        if let Some(class) = late {
+            self.tracked.remove(&id);
+            self.violate(class, now);
+        }
+    }
+
+    /// Completion observed: the finalized record either meets its class
+    /// SLO pair or is a violation. Resolves the watch either way.
+    pub fn on_complete(&mut self, rec: &RequestRecord, now: f64) {
+        if let Some(t) = self.tracked.remove(&rec.id) {
+            if !rec.meets(&t.slo) {
+                self.violate(t.class, now);
+            }
+        }
+    }
+
+    /// Admission rejection: the request will never complete, so it is a
+    /// guaranteed violation under strict attainment.
+    pub fn on_reject(&mut self, id: u64, now: f64) {
+        if let Some(t) = self.tracked.remove(&id) {
+            self.violate(t.class, now);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn slo() -> SloSpec {
+        SloSpec::new(1.0, 0.1)
+    }
+
+    fn rec(id: u64, arrival: f64, first: f64, done: f64, out: usize) -> RequestRecord {
+        RequestRecord {
+            id,
+            arrival,
+            first_token: first,
+            completion: done,
+            input_len: 64,
+            output_len: out,
+        }
+    }
+
+    #[test]
+    fn deadline_pass_without_first_token_is_a_violation() {
+        let mut m = SloMonitor::new(0.9, 1);
+        for id in 0..10 {
+            m.track(id, 0.0, slo(), 0);
+        }
+        m.advance(0.5);
+        assert_eq!(m.violations(), 0);
+        m.advance(1.0); // exactly on the deadline: ttft == slo still meets
+        assert_eq!(m.violations(), 0);
+        assert!(!m.decided());
+        m.advance(1.5); // one second of SLO, all ten blown
+        assert_eq!(m.violations(), 10);
+        assert!(m.decided());
+        assert_eq!(m.decided_at(), Some(1.5));
+    }
+
+    #[test]
+    fn decides_exactly_when_target_becomes_unreachable() {
+        // 10 arrivals at P90: the budget is one violation; the second
+        // guaranteed miss decides the verdict.
+        let mut m = SloMonitor::new(0.9, 1);
+        for id in 0..10 {
+            m.track(id, id as f64, slo(), 0);
+        }
+        m.advance(2.5); // id 0 (deadline 1.0) and id 1 (deadline 2.0) blown
+        assert_eq!(m.violations(), 2);
+        assert!(m.decided());
+        // A P50 monitor with the same stream is still undecided.
+        let mut loose = SloMonitor::new(0.5, 1);
+        for id in 0..10 {
+            loose.track(id, id as f64, slo(), 0);
+        }
+        loose.advance(2.5);
+        assert_eq!(loose.violations(), 2);
+        assert!(!loose.decided());
+    }
+
+    #[test]
+    fn timely_first_token_defuses_the_deadline() {
+        let mut m = SloMonitor::new(0.9, 1);
+        for id in 0..4 {
+            m.track(id, 0.0, slo(), 0);
+        }
+        m.on_first_token(0, 0.5);
+        m.on_first_token(1, 1.0); // exactly at the deadline: meets
+        m.advance(5.0);
+        assert_eq!(m.violations(), 2); // only ids 2 and 3
+        // A completion meeting both SLOs never counts.
+        m.on_complete(&rec(0, 0.0, 0.5, 1.0, 6), 1.0);
+        assert_eq!(m.violations(), 2);
+    }
+
+    #[test]
+    fn late_first_token_and_blown_tpot_count_once_each() {
+        let mut m = SloMonitor::new(0.6, 1);
+        for id in 0..4 {
+            m.track(id, 0.0, slo(), 0);
+        }
+        m.on_first_token(0, 2.0); // ttft 2.0 > 1.0: immediate violation
+        assert_eq!(m.violations(), 1);
+        // Completing id 0 later must not double count.
+        m.on_complete(&rec(0, 0.0, 2.0, 2.1, 2), 2.1);
+        assert_eq!(m.violations(), 1);
+        // id 1: timely first token, then TPOT blown at completion.
+        m.on_first_token(1, 0.5);
+        m.on_complete(&rec(1, 0.0, 0.5, 3.5, 11), 3.5); // tpot 0.3 > 0.1
+        assert_eq!(m.violations(), 2);
+        assert!(m.decided()); // best case 2/4 = 0.5 < 0.6 target
+    }
+
+    #[test]
+    fn rejects_are_guaranteed_violations() {
+        let mut m = SloMonitor::new(0.9, 1);
+        for id in 0..3 {
+            m.track(id, 0.0, slo(), 0);
+        }
+        m.on_reject(0, 0.1);
+        assert_eq!(m.violations(), 1);
+        assert!(m.decided()); // 2/3 < 0.9
+        m.on_reject(99, 0.1); // unknown ids are ignored
+        assert_eq!(m.violations(), 1);
+    }
+
+    #[test]
+    fn per_class_budgets_are_independent() {
+        // Class 0 has 10 arrivals, class 1 has 2; one miss in class 1
+        // (best 0.5) decides a P90 verdict even though class 0 is clean.
+        let mut m = SloMonitor::new(0.9, 2);
+        for id in 0..10 {
+            m.track(id, 0.0, slo(), 0);
+        }
+        m.track(100, 0.0, slo(), 1);
+        m.track(101, 0.0, slo(), 1);
+        for id in 0..10 {
+            m.on_first_token(id, 0.2);
+        }
+        m.on_first_token(100, 0.2);
+        m.advance(10.0); // id 101 blows its TTFT deadline
+        assert_eq!(m.violations(), 1);
+        assert!(m.decided());
+    }
+
+    #[test]
+    fn untracked_requests_are_invisible() {
+        let mut m = SloMonitor::new(0.9, 1);
+        m.track(1, 0.0, slo(), 0);
+        m.on_first_token(7, 99.0);
+        m.on_complete(&rec(8, 0.0, 99.0, 99.0, 5), 99.0);
+        assert_eq!(m.violations(), 0);
+        assert_eq!(m.tracked_arrivals(), 1);
+    }
+}

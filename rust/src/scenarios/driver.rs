@@ -4,13 +4,15 @@
 //! never-completed requests counted as violations — plus per-class scoring
 //! against each traffic class's own SLO pair.
 
+use std::time::Duration;
+
 use super::registry::Scenario;
 use crate::config::{ClusterSpec, Deployment, ExperimentConfig, SystemKind};
 use crate::coordinator::{AutoScalePolicy, EcoServeSystem};
 use crate::harness::build_system;
-use crate::metrics::{summarize, Collector, SloSpec, Summary};
+use crate::metrics::{summarize_from, AbandonPolicy, Collector, SloMonitor, SloSpec, Summary};
 use crate::perfmodel::ModelSpec;
-use crate::sim::run;
+use crate::sim::{run_abandonable, StopReason};
 use crate::util::threads::parallel_map;
 
 /// How long past the trace end the simulator may drain in-flight requests
@@ -28,6 +30,9 @@ pub struct ScenarioConfig {
     /// Override the scenario horizon (quick CLI runs / tests). The warmup
     /// is clamped to stay inside the shortened horizon.
     pub duration_override: Option<f64>,
+    /// Arm the online SLO monitor at this policy (set per probe by the
+    /// frontier search); `None` runs the legacy full simulation.
+    pub abandon: Option<AbandonPolicy>,
 }
 
 impl ScenarioConfig {
@@ -42,6 +47,7 @@ impl ScenarioConfig {
             seed: 42,
             rate: None,
             duration_override: None,
+            abandon: None,
         }
     }
 
@@ -127,6 +133,14 @@ pub struct SystemRow {
     pub summary: Summary,
     pub classes: Vec<ClassScore>,
     pub events: u64,
+    /// Events still queued when the SLO monitor aborted the run (0 on
+    /// full runs) — a lower bound on the work abandonment avoided.
+    pub events_saved: u64,
+    /// True when the run was cut short because the attainment target
+    /// became mathematically unreachable for some traffic class.
+    pub abandoned: bool,
+    /// Simulation wall time for this run.
+    pub wall: Duration,
     /// Present on mitosis-on (autoscaled) runs only.
     pub autoscale: Option<AutoscaleTelemetry>,
 }
@@ -203,7 +217,25 @@ pub fn run_system_variant(
     exp.duration = duration;
     exp.warmup = warmup;
 
-    let mut metrics = Collector::new();
+    // Frontier probes arm the online SLO monitor: every measurement-window
+    // arrival is watched against its own class's SLO pair, and the run is
+    // scored through the monitor's decision snapshot — identically whether
+    // or not the simulation is actually cut short at that point.
+    let mut metrics = match cfg.abandon {
+        Some(policy) => {
+            let mut monitor = SloMonitor::new(policy.target, n_classes);
+            for req in &trace {
+                if req.arrival >= warmup && req.arrival < duration {
+                    let k = scenario.class_of(req.id);
+                    let d = &scenario.classes[k].dataset;
+                    monitor.track(req.id, req.arrival, SloSpec::new(d.slo_ttft, d.slo_tpot), k);
+                }
+            }
+            Collector::with_monitor(monitor)
+        }
+        None => Collector::new(),
+    };
+    let stop_early = cfg.abandon.is_some_and(|p| p.stop_early);
     let (stats, autoscale) = match &variant.autoscale {
         Some(policy) if kind == SystemKind::EcoServe => {
             let mut sys = EcoServeSystem::with_autoscale(
@@ -213,7 +245,8 @@ pub fn run_system_variant(
                 policy.clone(),
             );
             let initial = sys.active_count();
-            let stats = run(&mut sys, trace, duration + DRAIN_SECS, &mut metrics);
+            let stats =
+                run_abandonable(&mut sys, trace, duration + DRAIN_SECS, &mut metrics, stop_early);
             debug_assert!(sys.mitosis.check_invariants().is_ok());
             let ups = sys.scale_log.iter().filter(|e| e.kind == "up").count();
             let peak = sys
@@ -234,13 +267,23 @@ pub fn run_system_variant(
         }
         _ => {
             let mut system = build_system(kind, &exp, None);
-            (run(system.as_mut(), trace, duration + DRAIN_SECS, &mut metrics), None)
+            let stats = run_abandonable(
+                system.as_mut(),
+                trace,
+                duration + DRAIN_SECS,
+                &mut metrics,
+                stop_early,
+            );
+            (stats, None)
         }
     };
-    let records = metrics.records_in_window(warmup, duration);
 
+    // Borrow-based windowed scoring: the collector's view respects the
+    // monitor's decision snapshot and never clones the record log.
     let mut met_per_class = vec![0usize; n_classes];
-    for rec in &records {
+    let mut completed = 0usize;
+    for rec in metrics.window_records(warmup, duration) {
+        completed += 1;
         let k = scenario.class_of(rec.id);
         let d = &scenario.classes[k].dataset;
         if rec.meets(&SloSpec::new(d.slo_ttft, d.slo_tpot)) {
@@ -270,13 +313,16 @@ pub fn run_system_variant(
     SystemRow {
         system: kind,
         arrived,
-        completed: records.len(),
+        completed,
         met,
         attainment: if arrived == 0 { 1.0 } else { met as f64 / arrived as f64 },
         goodput_rps: met as f64 / window,
-        summary: summarize(&records, &sched_slo, window),
+        summary: summarize_from(metrics.window_records(warmup, duration), &sched_slo, window),
         classes,
         events: stats.events,
+        events_saved: stats.events_saved,
+        abandoned: stats.stop == StopReason::Abandoned,
+        wall: stats.wall_time,
         autoscale,
     }
 }
@@ -450,6 +496,48 @@ mod tests {
         assert_eq!(row.arrived, again.arrived);
         assert_eq!(row.met, again.met);
         assert_eq!(row.events, again.events);
+    }
+
+    /// Scenario-level early-abandon equivalence: an overloaded cell cut
+    /// short by the monitor reports the same verdict fields as the same
+    /// cell driven to completion — only the event count shrinks.
+    #[test]
+    fn abandoned_overload_cell_matches_the_monitored_full_run() {
+        let s = by_name("mixed-slo").unwrap();
+        let mut cfg = quick_cfg();
+        cfg.rate = Some(60.0); // far beyond 4 instances' capacity
+        cfg.abandon = Some(AbandonPolicy::stop_at(0.90));
+        let fast = run_system(&s, &cfg, SystemKind::EcoServe);
+        cfg.abandon = Some(AbandonPolicy::monitor_only(0.90));
+        let full = run_system(&s, &cfg, SystemKind::EcoServe);
+        assert!(fast.abandoned, "overload must abandon");
+        assert!(!full.abandoned);
+        assert!(fast.events_saved > 0);
+        assert!(fast.events < full.events, "{} vs {}", fast.events, full.events);
+        assert_eq!(fast.arrived, full.arrived);
+        assert_eq!(fast.met, full.met);
+        assert_eq!(fast.completed, full.completed);
+        assert_eq!(fast.attainment.to_bits(), full.attainment.to_bits());
+        assert_eq!(
+            fast.min_class_attainment().to_bits(),
+            full.min_class_attainment().to_bits()
+        );
+        assert_eq!(fast.classes.len(), full.classes.len());
+        for (a, b) in fast.classes.iter().zip(&full.classes) {
+            assert_eq!(a.class, b.class);
+            assert_eq!(a.arrived, b.arrived);
+            assert_eq!(a.met, b.met);
+            assert_eq!(a.attainment.to_bits(), b.attainment.to_bits());
+        }
+        assert_eq!(fast.summary.count, full.summary.count);
+        assert_eq!(fast.summary.ttft_p99.to_bits(), full.summary.ttft_p99.to_bits());
+        // Both verdicts are "fail" — and so says the legacy full run.
+        assert!(fast.min_class_attainment() < 0.90 - 1e-12);
+        cfg.abandon = None;
+        let legacy = run_system(&s, &cfg, SystemKind::EcoServe);
+        assert!(legacy.min_class_attainment() < 0.90 - 1e-12);
+        assert!(!legacy.abandoned);
+        assert_eq!(legacy.events_saved, 0);
     }
 
     #[test]

@@ -56,6 +56,9 @@ fn row_to_json(row: &SystemRow) -> Json {
         ("tpot_s", pct_obj(s.tpot_p50, s.tpot_p90, s.tpot_p99)),
         ("classes", Json::arr(row.classes.iter().map(class_to_json))),
         ("sim_events", Json::num(row.events as f64)),
+        ("sim_events_saved", Json::num(row.events_saved as f64)),
+        ("abandoned", Json::Bool(row.abandoned)),
+        ("wall_s", Json::num(row.wall.as_secs_f64())),
     ];
     if let Some(t) = &row.autoscale {
         fields.push((
@@ -269,6 +272,9 @@ mod tests {
                 attainment: 0.95,
             }],
             events: 4242,
+            events_saved: 0,
+            abandoned: false,
+            wall: std::time::Duration::from_secs(2),
             autoscale: None,
         };
         let outcome = ScenarioOutcome {
@@ -287,11 +293,13 @@ mod tests {
 \"instances\":4,\"model\":\"CodeLlama2-34B\",\"pp\":1,\"tp\":4},\"scenarios\":\
 [{\"best_system\":\"EcoServe\",\"duration_s\":100,\"name\":\"golden\",\
 \"offered_rate_rps\":2,\"summary\":\"synthetic fixture\",\"systems\":\
-[{\"arrived\":100,\"attainment\":0.95,\"classes\":[{\"arrived\":100,\
-\"attainment\":0.95,\"class\":\"chat\",\"met_slo\":95}],\"completed\":98,\
-\"goodput_rps\":1.25,\"met_slo\":95,\"sim_events\":4242,\"system\":\"EcoServe\",\
-\"token_throughput\":250,\"tpot_s\":{\"p50\":0.05,\"p90\":0.075,\"p99\":0.125},\
-\"ttft_s\":{\"p50\":0.5,\"p90\":1.5,\"p99\":2.5}}],\"warmup_s\":10}],\
+[{\"abandoned\":false,\"arrived\":100,\"attainment\":0.95,\"classes\":\
+[{\"arrived\":100,\"attainment\":0.95,\"class\":\"chat\",\"met_slo\":95}],\
+\"completed\":98,\"goodput_rps\":1.25,\"met_slo\":95,\"sim_events\":4242,\
+\"sim_events_saved\":0,\"system\":\"EcoServe\",\"token_throughput\":250,\
+\"tpot_s\":{\"p50\":0.05,\"p90\":0.075,\"p99\":0.125},\
+\"ttft_s\":{\"p50\":0.5,\"p90\":1.5,\"p99\":2.5},\"wall_s\":2}],\
+\"warmup_s\":10}],\
 \"schema_version\":2,\"seed\":7,\"suite\":\"ecoserve-scenarios\"}";
         assert_eq!(text, golden);
         // And it round-trips through the parser.

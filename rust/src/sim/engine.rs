@@ -2,6 +2,14 @@
 //!
 //! Events are totally ordered by (time, sequence number) so simultaneous
 //! events fire in insertion order and runs are deterministic bit-for-bit.
+//!
+//! The run loop does *not* preload the trace into the heap: arrivals are
+//! merged from a cursor over the (already time-sorted) trace, so the heap
+//! only ever holds the dynamic events currently in flight — its size
+//! tracks active work, not total trace length. A pluggable stop condition
+//! lets callers abandon a run the moment its outcome is decided (see
+//! [`crate::metrics::SloMonitor`]); [`reference_run`] keeps the original
+//! preload-everything engine as a differential-testing oracle.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -43,10 +51,10 @@ impl PartialOrd for Entry {
 }
 impl Ord for Entry {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.time
-            .partial_cmp(&other.time)
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then(self.seq.cmp(&other.seq))
+        // total_cmp, not partial_cmp-or-Equal: a NaN event time must not
+        // be able to corrupt the heap's ordering invariant in release
+        // builds (the debug_assert in `at` only guards debug runs).
+        self.time.total_cmp(&other.time).then(self.seq.cmp(&other.seq))
     }
 }
 
@@ -55,8 +63,6 @@ impl Ord for Entry {
 pub struct EventScheduler {
     heap: BinaryHeap<Reverse<Entry>>,
     seq: u64,
-    /// Events processed so far (simulator §Perf metric).
-    pub processed: u64,
 }
 
 impl EventScheduler {
@@ -72,10 +78,18 @@ impl EventScheduler {
     }
 
     fn pop(&mut self) -> Option<(f64, Event)> {
-        self.heap.pop().map(|Reverse(e)| {
-            self.processed += 1;
-            (e.time, e.event)
-        })
+        self.heap.pop().map(|Reverse(e)| (e.time, e.event))
+    }
+
+    /// Fire time of the earliest queued dynamic event.
+    fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|Reverse(e)| e.time)
+    }
+
+    /// Queued events that would still fire at or before `horizon` — the
+    /// ones a full run would actually have dispatched.
+    fn len_within(&self, horizon: f64) -> usize {
+        self.heap.iter().filter(|Reverse(e)| e.time <= horizon).count()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -120,11 +134,30 @@ pub trait System {
     }
 }
 
+/// Why a simulation run ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StopReason {
+    /// Every event drained before the horizon.
+    Drained,
+    /// The horizon cut the run off with events still queued.
+    Horizon,
+    /// The stop condition fired (e.g. the SLO verdict became decided).
+    Abandoned,
+}
+
 /// Outcome of a simulation run.
 #[derive(Debug)]
 pub struct RunStats {
     pub sim_time: f64,
+    /// Events dispatched to the system (arrivals included).
     pub events: u64,
+    /// Events still queued *within the horizon* (remaining trace
+    /// arrivals + dynamic heap) when the stop condition fired — a lower
+    /// bound on the work abandonment avoided, since a full run would
+    /// also have scheduled follow-on events. 0 unless
+    /// `stop == StopReason::Abandoned`.
+    pub events_saved: u64,
+    pub stop: StopReason,
     pub wall_time: std::time::Duration,
 }
 
@@ -136,18 +169,68 @@ pub fn run(
     horizon: f64,
     metrics: &mut Collector,
 ) -> RunStats {
+    run_until(system, trace, horizon, metrics, |_, _| false)
+}
+
+/// [`run`] with a pluggable stop condition, checked once per event after
+/// the clock (and any armed [`crate::metrics::SloMonitor`]) advances to
+/// the event's time but *before* the event is dispatched. Returning true
+/// ends the run with [`StopReason::Abandoned`]; the popped event is not
+/// dispatched and counts toward `events_saved`, not `events`.
+pub fn run_until(
+    system: &mut dyn System,
+    mut trace: Vec<Request>,
+    horizon: f64,
+    metrics: &mut Collector,
+    mut stop: impl FnMut(f64, &Collector) -> bool,
+) -> RunStats {
     let wall_start = std::time::Instant::now();
-    let mut sched = EventScheduler::new();
-    for req in trace {
-        sched.at(req.arrival, Event::Arrival(req));
+    // The cursor merge needs a time-sorted trace. Generators emit sorted
+    // traces; an unsorted one is stable-sorted, which reproduces exactly
+    // the (time, insertion seq) order the preload heap used to impose.
+    if !trace.windows(2).all(|w| w[0].arrival <= w[1].arrival) {
+        trace.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
     }
+    let mut arrivals = trace.into_iter().peekable();
+    let mut sched = EventScheduler::new();
     let mut now = 0.0;
-    while let Some((t, event)) = sched.pop() {
+    let mut dispatched: u64 = 0;
+    let mut events_saved: u64 = 0;
+    let mut reason = StopReason::Drained;
+    loop {
+        // Merge: next trace arrival vs. earliest dynamic event. Arrivals
+        // win ties, matching the preloaded engine where every arrival
+        // held a smaller sequence number than any dynamic event.
+        let take_arrival = match (arrivals.peek(), sched.peek_time()) {
+            (Some(req), Some(t)) => req.arrival <= t,
+            (Some(_), None) => true,
+            (None, Some(_)) => false,
+            (None, None) => break,
+        };
+        let (t, event) = if take_arrival {
+            let req = arrivals.next().expect("peeked arrival");
+            (req.arrival, Event::Arrival(req))
+        } else {
+            sched.pop().expect("peeked dynamic event")
+        };
         if t > horizon {
+            reason = StopReason::Horizon;
             break;
         }
         debug_assert!(t >= now - 1e-9, "time went backwards: {t} < {now}");
         now = t;
+        metrics.observe_time(now);
+        if stop(now, metrics) {
+            reason = StopReason::Abandoned;
+            // Count only work a full run would actually have dispatched:
+            // the popped event (t <= horizon, checked above) plus every
+            // queued event firing at or before the horizon.
+            let arrivals_left =
+                arrivals.by_ref().filter(|r| r.arrival <= horizon).count() as u64;
+            events_saved = 1 + arrivals_left + sched.len_within(horizon) as u64;
+            break;
+        }
+        dispatched += 1;
         match event {
             Event::Arrival(req) => {
                 metrics.on_arrival(&req);
@@ -166,7 +249,80 @@ pub fn run(
     }
     RunStats {
         sim_time: now,
-        events: sched.processed,
+        events: dispatched,
+        events_saved,
+        stop: reason,
+        wall_time: wall_start.elapsed(),
+    }
+}
+
+/// Probe-run chooser shared by the harness and the scenario driver:
+/// abort the moment the collector's armed SLO monitor decides the
+/// verdict (`stop_early`), or drive the run to completion. Both modes
+/// score identically — see [`crate::metrics::SloMonitor`].
+pub fn run_abandonable(
+    system: &mut dyn System,
+    trace: Vec<Request>,
+    horizon: f64,
+    metrics: &mut Collector,
+    stop_early: bool,
+) -> RunStats {
+    if stop_early {
+        run_until(system, trace, horizon, metrics, |_, m: &Collector| m.decided())
+    } else {
+        run(system, trace, horizon, metrics)
+    }
+}
+
+/// The original engine: preloads every trace arrival into the heap, so
+/// heap size starts at the full trace length. Retained purely as a
+/// differential-testing oracle for the cursor engine — tests pin that
+/// both produce bit-identical completed records on the same trace.
+#[doc(hidden)]
+pub fn reference_run(
+    system: &mut dyn System,
+    trace: Vec<Request>,
+    horizon: f64,
+    metrics: &mut Collector,
+) -> RunStats {
+    let wall_start = std::time::Instant::now();
+    let mut sched = EventScheduler::new();
+    for req in trace {
+        sched.at(req.arrival, Event::Arrival(req));
+    }
+    let mut now = 0.0;
+    let mut dispatched: u64 = 0;
+    let mut reason = StopReason::Drained;
+    while let Some((t, event)) = sched.pop() {
+        if t > horizon {
+            reason = StopReason::Horizon;
+            break;
+        }
+        debug_assert!(t >= now - 1e-9, "time went backwards: {t} < {now}");
+        now = t;
+        metrics.observe_time(now);
+        dispatched += 1;
+        match event {
+            Event::Arrival(req) => {
+                metrics.on_arrival(&req);
+                system.on_arrival(req, now, &mut sched, metrics);
+            }
+            Event::InstanceWake { instance } => {
+                system.on_instance_wake(instance, now, &mut sched, metrics);
+            }
+            Event::TransferDone { transfer } => {
+                system.on_transfer_done(transfer, now, &mut sched, metrics);
+            }
+            Event::ControlTick => {
+                system.on_control_tick(now, &mut sched, metrics);
+            }
+        }
+    }
+    RunStats {
+        sim_time: now,
+        events: dispatched,
+        events_saved: 0,
+        stop: reason,
         wall_time: wall_start.elapsed(),
     }
 }
@@ -194,8 +350,13 @@ mod tests {
             sched.at(now + self.service, Event::InstanceWake { instance: 0 });
         }
 
-        fn on_instance_wake(&mut self, _i: usize, now: f64, _s: &mut EventScheduler,
-                            metrics: &mut Collector) {
+        fn on_instance_wake(
+            &mut self,
+            _i: usize,
+            now: f64,
+            _s: &mut EventScheduler,
+            metrics: &mut Collector,
+        ) {
             let done: Vec<u64> = self
                 .pending
                 .iter()
@@ -219,10 +380,12 @@ mod tests {
         sched.at(3.0, Event::ControlTick);
         sched.at(1.0, Event::InstanceWake { instance: 7 });
         sched.at(2.0, Event::ControlTick);
+        assert_eq!(sched.peek_time(), Some(1.0));
         let t1 = sched.pop().unwrap().0;
         let t2 = sched.pop().unwrap().0;
         let t3 = sched.pop().unwrap().0;
         assert_eq!((t1, t2, t3), (1.0, 2.0, 3.0));
+        assert_eq!(sched.peek_time(), None);
     }
 
     #[test]
@@ -246,6 +409,8 @@ mod tests {
         let stats = run(&mut system, trace, 100.0, &mut metrics);
         assert_eq!(metrics.completed().len(), 10);
         assert!(stats.events >= 20);
+        assert_eq!(stats.stop, StopReason::Drained);
+        assert_eq!(stats.events_saved, 0);
         for r in metrics.completed() {
             assert!((r.ttft() - 0.25).abs() < 1e-9);
         }
@@ -256,8 +421,111 @@ mod tests {
         let mut system = Echo { service: 10.0, pending: vec![] };
         let trace = vec![req(0, 0.0), req(1, 50.0)];
         let mut metrics = Collector::new();
-        run(&mut system, trace, 5.0, &mut metrics);
+        let stats = run(&mut system, trace, 5.0, &mut metrics);
         assert!(metrics.completed().is_empty());
         assert_eq!(metrics.in_flight(), 1); // only the first arrived
+        assert_eq!(stats.stop, StopReason::Horizon);
+    }
+
+    /// The cursor engine must reproduce the preload oracle bit for bit on
+    /// a golden trace with same-time ties and interleaved dynamic events.
+    #[test]
+    fn cursor_engine_matches_reference_engine_bit_for_bit() {
+        let golden: Vec<Request> = (0..200)
+            .map(|i| {
+                // Clustered arrivals with exact ties every third request,
+                // so arrival-vs-arrival and arrival-vs-wake tie-breaking
+                // are both exercised.
+                let t = (i / 3) as f64 * 0.25;
+                req(i, t)
+            })
+            .collect();
+        let mut sys_a = Echo { service: 0.25, pending: vec![] };
+        let mut sys_b = Echo { service: 0.25, pending: vec![] };
+        let mut m_a = Collector::new();
+        let mut m_b = Collector::new();
+        let a = run(&mut sys_a, golden.clone(), 1_000.0, &mut m_a);
+        let b = reference_run(&mut sys_b, golden, 1_000.0, &mut m_b);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.sim_time.to_bits(), b.sim_time.to_bits());
+        assert_eq!(m_a.completed().len(), m_b.completed().len());
+        for (ra, rb) in m_a.completed().iter().zip(m_b.completed()) {
+            assert_eq!(ra, rb, "records diverged");
+            assert_eq!(ra.first_token.to_bits(), rb.first_token.to_bits());
+            assert_eq!(ra.completion.to_bits(), rb.completion.to_bits());
+        }
+    }
+
+    /// An unsorted trace must behave as if it had been preloaded into the
+    /// ordering heap (stable time order).
+    #[test]
+    fn unsorted_trace_matches_reference_engine() {
+        let mut shuffled: Vec<Request> =
+            (0..50).map(|i| req(i, ((i * 7) % 50) as f64 * 0.1)).collect();
+        shuffled.reverse();
+        let mut sys_a = Echo { service: 0.1, pending: vec![] };
+        let mut sys_b = Echo { service: 0.1, pending: vec![] };
+        let mut m_a = Collector::new();
+        let mut m_b = Collector::new();
+        run(&mut sys_a, shuffled.clone(), 1_000.0, &mut m_a);
+        reference_run(&mut sys_b, shuffled, 1_000.0, &mut m_b);
+        assert_eq!(m_a.completed().len(), 50);
+        let mut a: Vec<_> = m_a.completed().to_vec();
+        let mut b: Vec<_> = m_b.completed().to_vec();
+        a.sort_by_key(|r| r.id);
+        b.sort_by_key(|r| r.id);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn stop_condition_abandons_and_reports_saved_events() {
+        let mut system = Echo { service: 0.25, pending: vec![] };
+        let trace: Vec<Request> = (0..100).map(|i| req(i, i as f64 * 0.1)).collect();
+        let mut metrics = Collector::new();
+        let stats = run_until(&mut system, trace, 1_000.0, &mut metrics, |now, _| now >= 2.0);
+        assert_eq!(stats.stop, StopReason::Abandoned);
+        assert!(stats.events_saved > 0, "{stats:?}");
+        assert!(stats.events < 200, "{stats:?}");
+        // The run stopped around t=2.0: roughly 20 of 100 arrivals seen.
+        assert!(metrics.completed().len() < 30);
+    }
+
+    #[test]
+    fn heap_tracks_active_events_not_trace_length() {
+        // 10_000 arrivals, but Echo keeps at most one pending wake per
+        // arrival in flight; the dynamic heap must stay tiny. Probed via
+        // the scheduler a system sees mid-run.
+        struct Probe {
+            inner: Echo,
+            max_heap: usize,
+        }
+        impl System for Probe {
+            fn on_arrival(
+                &mut self,
+                req: Request,
+                now: f64,
+                sched: &mut EventScheduler,
+                metrics: &mut Collector,
+            ) {
+                self.inner.on_arrival(req, now, sched, metrics);
+                self.max_heap = self.max_heap.max(sched.len());
+            }
+            fn on_instance_wake(
+                &mut self,
+                i: usize,
+                now: f64,
+                sched: &mut EventScheduler,
+                metrics: &mut Collector,
+            ) {
+                self.inner.on_instance_wake(i, now, sched, metrics);
+                self.max_heap = self.max_heap.max(sched.len());
+            }
+        }
+        let mut probe = Probe { inner: Echo { service: 0.01, pending: vec![] }, max_heap: 0 };
+        let trace: Vec<Request> = (0..10_000).map(|i| req(i, i as f64 * 0.1)).collect();
+        let mut metrics = Collector::new();
+        run(&mut probe, trace, 2_000.0, &mut metrics);
+        assert_eq!(metrics.completed().len(), 10_000);
+        assert!(probe.max_heap < 64, "heap grew to {}", probe.max_heap);
     }
 }

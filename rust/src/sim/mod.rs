@@ -17,6 +17,9 @@ pub mod engine;
 pub mod instance;
 pub mod network;
 
-pub use engine::{run, Event, EventScheduler, System};
+pub use engine::{
+    reference_run, run, run_abandonable, run_until, Event, EventScheduler, RunStats, StopReason,
+    System,
+};
 pub use instance::{BatchKind, SimInstance, SimReq};
 pub use network::{Network, TransferId};

@@ -1,0 +1,119 @@
+//! Early-abandon equivalence, end to end: running the goodput frontier
+//! with doomed-probe abandonment ON must produce bit-for-bit the same
+//! answers as running every probe to completion — identical max rates,
+//! identical verdict at every probed rate, identical per-class scores,
+//! identical `BENCH_goodput.json` (up to wall-clock fields). Only the
+//! simulator *cost* may differ, and on overload probes it must shrink by
+//! at least 2x.
+
+use std::time::Duration;
+
+use ecoserve::config::SystemKind;
+use ecoserve::frontier::{frontier_to_json, run_frontier, FrontierConfig, ScenarioFrontier};
+use ecoserve::metrics::Attainment;
+use ecoserve::scenarios::{by_name, ScenarioConfig};
+use ecoserve::util::json::Json;
+
+fn quick_cfg(early_abandon: bool) -> FrontierConfig {
+    let mut base = ScenarioConfig::default_l20();
+    base.deployment.gpus_used = 16; // 4 instances — fast tests
+    let mut cfg = FrontierConfig::new(base, Attainment::P90);
+    cfg.quick = true;
+    cfg.early_abandon = early_abandon;
+    cfg
+}
+
+/// Strip every wall-clock field (the only legitimately nondeterministic
+/// part of the BENCH report) so the rest can be compared as strings.
+fn strip_walls(j: &mut Json) {
+    match j {
+        Json::Obj(m) => {
+            m.remove("wall_s");
+            for v in m.values_mut() {
+                strip_walls(v);
+            }
+        }
+        Json::Arr(v) => {
+            for item in v.iter_mut() {
+                strip_walls(item);
+            }
+        }
+        _ => {}
+    }
+}
+
+#[test]
+fn frontier_answers_are_bit_identical_with_abandon_on_and_off() {
+    let scenarios = vec![by_name("steady").unwrap(), by_name("bursty").unwrap()];
+    let systems = [SystemKind::EcoServe, SystemKind::Vllm];
+    let on_cfg = quick_cfg(true);
+    let off_cfg = quick_cfg(false);
+    let on: Vec<ScenarioFrontier> = run_frontier(&scenarios, &on_cfg, &systems, 4);
+    let off: Vec<ScenarioFrontier> = run_frontier(&scenarios, &off_cfg, &systems, 4);
+    assert_eq!(on.len(), 2);
+    assert_eq!(off.len(), 2);
+
+    let mut any_abandoned = false;
+    let mut any_halved = false;
+    for (fa, fb) in on.iter().zip(&off) {
+        assert_eq!(fa.scenario.name, fb.scenario.name);
+        assert_eq!(fa.rows.len(), fb.rows.len());
+        for (a, b) in fa.rows.iter().zip(&fb.rows) {
+            let tag = format!("{} / {}", fa.scenario.name, a.system.label());
+            assert_eq!(a.system, b.system, "{tag}");
+            // The answers: max rate, saturation, probe-by-probe curve.
+            assert_eq!(a.max_rate.to_bits(), b.max_rate.to_bits(), "{tag}");
+            assert_eq!(a.saturated, b.saturated, "{tag}");
+            assert_eq!(a.probes, b.probes, "{tag}");
+            assert_eq!(a.goodput_rps.to_bits(), b.goodput_rps.to_bits(), "{tag}");
+            assert_eq!(a.attainment.to_bits(), b.attainment.to_bits(), "{tag}");
+            assert_eq!(a.curve.len(), b.curve.len(), "{tag}");
+            for (pa, pb) in a.curve.iter().zip(&b.curve) {
+                assert_eq!(pa.rate.to_bits(), pb.rate.to_bits(), "{tag}");
+                assert_eq!(pa.attainment.to_bits(), pb.attainment.to_bits(), "{tag}");
+                assert_eq!(pa.goodput_rps.to_bits(), pb.goodput_rps.to_bits(), "{tag}");
+                // Same verdict at every probed rate.
+                assert_eq!(
+                    pa.attainment >= 0.90 - 1e-12,
+                    pb.attainment >= 0.90 - 1e-12,
+                    "{tag} verdict flipped at {} req/s",
+                    pa.rate
+                );
+            }
+            assert_eq!(a.classes.len(), b.classes.len(), "{tag}");
+            for (ca, cb) in a.classes.iter().zip(&b.classes) {
+                assert_eq!(ca.class, cb.class, "{tag}");
+                assert_eq!(ca.arrived, cb.arrived, "{tag}");
+                assert_eq!(ca.met, cb.met, "{tag}");
+                assert_eq!(ca.attainment.to_bits(), cb.attainment.to_bits(), "{tag}");
+            }
+            // The cost: abandonment must only ever shrink it.
+            assert_eq!(b.perf.abandoned_probes, 0, "{tag}: off mode never aborts");
+            assert_eq!(b.perf.events_saved, 0, "{tag}");
+            assert!(a.perf.events <= b.perf.events, "{tag}");
+            if a.perf.abandoned_probes > 0 {
+                any_abandoned = true;
+                // Events the full run spent on the probes the fast run
+                // abandoned (passing probes are identical in both runs).
+                let passing = a.perf.events - a.perf.abandoned_events;
+                let off_on_failing = b.perf.events - passing;
+                if a.perf.abandoned_events * 2 <= off_on_failing {
+                    any_halved = true;
+                }
+            }
+        }
+    }
+    assert!(any_abandoned, "no probe abandoned across 2 scenarios x 2 systems");
+    assert!(
+        any_halved,
+        "abandonment never halved the event count on overload probes"
+    );
+
+    // BENCH_goodput.json, the shipped artifact, is identical up to wall
+    // clocks.
+    let mut ja = frontier_to_json(&on, &on_cfg, Duration::from_secs(1));
+    let mut jb = frontier_to_json(&off, &off_cfg, Duration::from_secs(1));
+    strip_walls(&mut ja);
+    strip_walls(&mut jb);
+    assert_eq!(ja.to_string(), jb.to_string());
+}

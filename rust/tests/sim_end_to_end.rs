@@ -118,6 +118,54 @@ fn distserve_beats_mooncake_intra_node() {
     );
 }
 
+/// The arrival-cursor engine must reproduce the seed (preload-everything)
+/// engine bit for bit on a golden trace, for every serving system — the
+/// heap rewrite changes memory behavior, never event order.
+#[test]
+fn cursor_engine_reproduces_reference_engine_on_every_system() {
+    use ecoserve::harness::build_system;
+    use ecoserve::metrics::Collector;
+    use ecoserve::sim::{reference_run, run};
+    use ecoserve::workload::TraceGenerator;
+
+    let cfg = cfg(ModelSpec::codellama_34b(), Dataset::sharegpt(), 16);
+    let trace = TraceGenerator::new(cfg.dataset.clone(), 1234).poisson(6.0, 60.0);
+    for kind in SystemKind::all() {
+        let mut sys_a = build_system(kind, &cfg, Some(1));
+        let mut sys_b = build_system(kind, &cfg, Some(1));
+        let mut m_a = Collector::new();
+        let mut m_b = Collector::new();
+        let a = run(sys_a.as_mut(), trace.clone(), 300.0, &mut m_a);
+        let b = reference_run(sys_b.as_mut(), trace.clone(), 300.0, &mut m_b);
+        assert_eq!(a.events, b.events, "{}", kind.label());
+        assert_eq!(a.sim_time.to_bits(), b.sim_time.to_bits(), "{}", kind.label());
+        assert_eq!(
+            m_a.completed().len(),
+            m_b.completed().len(),
+            "{}",
+            kind.label()
+        );
+        for (ra, rb) in m_a.completed().iter().zip(m_b.completed()) {
+            assert_eq!(ra.id, rb.id, "{}", kind.label());
+            assert_eq!(
+                ra.first_token.to_bits(),
+                rb.first_token.to_bits(),
+                "{} request {}",
+                kind.label(),
+                ra.id
+            );
+            assert_eq!(
+                ra.completion.to_bits(),
+                rb.completion.to_bits(),
+                "{} request {}",
+                kind.label(),
+                ra.id
+            );
+            assert_eq!(ra.output_len, rb.output_len, "{}", kind.label());
+        }
+    }
+}
+
 #[test]
 fn phase_switch_counts_padg_below_nodg() {
     use ecoserve::baselines::VllmSystem;
