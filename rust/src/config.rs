@@ -23,6 +23,9 @@ pub struct ClusterSpec {
     pub intra_link: LinkSpec,
     /// Inter-node network (MoonCake KV pool traffic).
     pub inter_link: LinkSpec,
+    /// Host overhead, USD per occupied node per hour (CPUs, DRAM, chassis,
+    /// power) — the capacity planner's per-node term on top of GPU rental.
+    pub node_overhead_per_hour: f64,
 }
 
 impl ClusterSpec {
@@ -34,6 +37,7 @@ impl ClusterSpec {
             gpus_per_node: 8,
             intra_link: LinkSpec::pcie4(),
             inter_link: LinkSpec::eth_10g(),
+            node_overhead_per_hour: 0.55,
         }
     }
 
@@ -45,6 +49,7 @@ impl ClusterSpec {
             gpus_per_node: 8,
             intra_link: LinkSpec::pcie4(),
             inter_link: LinkSpec::roce_25g(),
+            node_overhead_per_hour: 0.75,
         }
     }
 
@@ -123,6 +128,70 @@ impl Deployment {
     pub fn timer(&self) -> BatchTimer {
         BatchTimer::new(self.model.clone(), self.cluster.gpu.clone(), self.parallel_cfg())
     }
+
+    /// Nodes this deployment occupies (instances fill nodes in order, so
+    /// partial nodes at the tail still count — you rent whole hosts).
+    pub fn nodes_used(&self) -> usize {
+        self.gpus_used.div_ceil(self.cluster.gpus_per_node)
+    }
+}
+
+/// Smallest KV capacity (tokens) a deployment must retain after weights to
+/// count as servable in [`enumerate_deployments`]: one max-length prompt
+/// (4096) plus decode headroom. Anything tighter thrashes admission before
+/// the first batch forms.
+pub const MIN_PLANNABLE_KV_TOKENS: usize = 8192;
+
+/// Enumerate the feasible deployments of `model` on `cluster` for the
+/// capacity planner ([`crate::planner`]): every (TP × PP × instance count)
+/// shape that (a) keeps each instance inside one node — the paper's
+/// placement invariant, so `tp·pp` must divide `gpus_per_node` — (b) fits
+/// the GPU budget `max_gpus` (clamped to the cluster), and (c) leaves at
+/// least [`MIN_PLANNABLE_KV_TOKENS`] of KV room after weights. Order is
+/// deterministic: tp-major, then pp, then instance count.
+pub fn enumerate_deployments(
+    model: &ModelSpec,
+    cluster: &ClusterSpec,
+    tp_options: &[usize],
+    pp_options: &[usize],
+    instance_options: &[usize],
+    max_gpus: usize,
+) -> Vec<Deployment> {
+    let cap = max_gpus.min(cluster.total_gpus());
+    let mut out = Vec::new();
+    for &tp in tp_options {
+        for &pp in pp_options {
+            let per_instance = tp * pp;
+            if per_instance == 0
+                || per_instance > cluster.gpus_per_node
+                || cluster.gpus_per_node % per_instance != 0
+            {
+                continue;
+            }
+            for &instances in instance_options {
+                if instances == 0 {
+                    continue;
+                }
+                let gpus_used = per_instance * instances;
+                if gpus_used > cap {
+                    continue;
+                }
+                let d = Deployment {
+                    model: model.clone(),
+                    cluster: cluster.clone(),
+                    tp,
+                    pp,
+                    gpus_used,
+                    kv_reserve_frac: 0.10,
+                };
+                if d.timer().kv_capacity_tokens(d.kv_reserve_frac) < MIN_PLANNABLE_KV_TOKENS {
+                    continue; // weights (nearly) fill memory: not servable
+                }
+                out.push(d);
+            }
+        }
+    }
+    out
 }
 
 /// Which serving system to run (paper §4.1 baselines + EcoServe).
@@ -312,5 +381,76 @@ mod tests {
         assert!(ClusterSpec::by_name("l20").is_some());
         assert!(ClusterSpec::by_name("tpu").is_none());
         assert_eq!(ClusterSpec::l20_cluster().total_gpus(), 64);
+    }
+
+    #[test]
+    fn nodes_used_counts_partial_tail_nodes() {
+        let mut d = Deployment::paper_default(
+            ModelSpec::codellama_34b(),
+            ClusterSpec::l20_cluster(),
+        );
+        d.gpus_used = 32;
+        assert_eq!(d.nodes_used(), 4);
+        d.gpus_used = 12; // one and a half nodes: rent two hosts
+        assert_eq!(d.nodes_used(), 2);
+        d.gpus_used = 4;
+        assert_eq!(d.nodes_used(), 1);
+    }
+
+    #[test]
+    fn enumeration_respects_placement_budget_and_memory() {
+        let l20 = ClusterSpec::l20_cluster();
+        let model = ModelSpec::llama_30b();
+        let all = enumerate_deployments(
+            &model,
+            &l20,
+            &[1, 2, 4, 8],
+            &[1, 2],
+            &[1, 2, 4, 8, 16],
+            32,
+        );
+        assert!(!all.is_empty());
+        for d in &all {
+            // Instances never span nodes and the budget is a hard cap.
+            assert_eq!(l20.gpus_per_node % d.gpus_per_instance(), 0, "{d:?}");
+            assert!(d.gpus_used <= 32, "{d:?}");
+            assert!(d.num_instances() >= 1);
+            // Every emitted deployment is actually servable.
+            assert!(
+                d.timer().kv_capacity_tokens(d.kv_reserve_frac) >= MIN_PLANNABLE_KV_TOKENS,
+                "{d:?}"
+            );
+        }
+        // The paper's 8x TP=4 layout is in the space.
+        assert!(all
+            .iter()
+            .any(|d| d.tp == 4 && d.pp == 1 && d.num_instances() == 8));
+        // TP=1 on a 48GB card cannot hold 30B of bf16 weights: excluded.
+        assert!(all.iter().all(|d| d.gpus_per_instance() >= 2));
+        // Deterministic order: tp-major, then pp, then instance count.
+        let again = enumerate_deployments(
+            &model,
+            &l20,
+            &[1, 2, 4, 8],
+            &[1, 2],
+            &[1, 2, 4, 8, 16],
+            32,
+        );
+        let shape = |d: &Deployment| (d.tp, d.pp, d.gpus_used);
+        assert_eq!(
+            all.iter().map(shape).collect::<Vec<_>>(),
+            again.iter().map(shape).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn enumeration_excludes_node_spanning_shapes() {
+        let l20 = ClusterSpec::l20_cluster();
+        let model = ModelSpec::llama_30b();
+        // tp*pp = 16 > 8 GPUs/node: nothing may be emitted.
+        let spanning = enumerate_deployments(&model, &l20, &[8], &[2], &[1, 2], 64);
+        assert!(spanning.is_empty());
+        // A zero budget yields an empty space, not a panic.
+        assert!(enumerate_deployments(&model, &l20, &[2], &[1], &[1], 0).is_empty());
     }
 }

@@ -38,6 +38,10 @@ pub struct FrontierConfig {
     /// target unreachable (default). Off runs every probe to completion;
     /// results are bit-identical either way — only cost changes.
     pub early_abandon: bool,
+    /// Wall-clock budget per cell's rate search, seconds (`--budget-s`).
+    /// A truncated cell reports its confirmed-so-far max rate and is
+    /// flagged in `BENCH_simperf.json` (`budget_truncated`).
+    pub budget_s: Option<f64>,
 }
 
 /// Horizon used by `--quick` when the caller gave no explicit override.
@@ -45,7 +49,14 @@ const QUICK_HORIZON_SECS: f64 = 40.0;
 
 impl FrontierConfig {
     pub fn new(base: ScenarioConfig, level: Attainment) -> Self {
-        FrontierConfig { base, level, autoscale: false, quick: false, early_abandon: true }
+        FrontierConfig {
+            base,
+            level,
+            autoscale: false,
+            quick: false,
+            early_abandon: true,
+            budget_s: None,
+        }
     }
 
     /// Search bracket for one scenario: registry sweep bounds at this
@@ -59,6 +70,7 @@ impl FrontierConfig {
             ceiling: b.ceiling,
             max_doublings: 10,
             bisections: 5,
+            budget_s: self.budget_s,
         };
         if self.quick { params.quick() } else { params }
     }
@@ -116,6 +128,9 @@ pub struct FrontierCell {
     /// while still sustaining the target — `max_rate` is then a lower
     /// bound set by the bracket, not the system.
     pub saturated: bool,
+    /// True when the per-cell wall-clock budget (`--budget-s`) cut the
+    /// rate search short: `max_rate` is confirmed but unrefined.
+    pub truncated: bool,
     pub probes: usize,
     pub wall: Duration,
     /// Simulator-cost counters for the `BENCH_simperf.json` artifact.
@@ -197,7 +212,7 @@ pub fn run_cell(
         }
     });
     let wall = t0.elapsed();
-    let SearchOutcome { max_rate, best, curve, probes, saturated } = outcome;
+    let SearchOutcome { max_rate, best, curve, probes, saturated, truncated } = outcome;
     let (goodput_rps, attainment, classes) = match best {
         Some(row) => (row.goodput_rps, row.min_class_attainment(), row.classes),
         None => (0.0, 0.0, Vec::new()),
@@ -211,6 +226,7 @@ pub fn run_cell(
         classes,
         curve,
         saturated,
+        truncated,
         probes,
         wall,
         perf,
@@ -298,6 +314,27 @@ mod tests {
         assert!(cell.perf.abandoned_events > 0);
         assert!(cell.perf.events_saved > 0, "{:?}", cell.perf);
         assert!(cell.perf.abandoned_events <= cell.perf.events);
+    }
+
+    /// `--budget-s 0`: the mandatory first probe still runs, the cell is
+    /// flagged truncated, and its (confirmed) rate never exceeds what an
+    /// unbudgeted search reports.
+    #[test]
+    fn zero_budget_truncates_a_cell_but_still_answers() {
+        let s = by_name("steady").unwrap();
+        let mut cfg = quick_frontier_cfg();
+        cfg.budget_s = Some(0.0);
+        let cell = run_cell(&s, &cfg, SystemKind::EcoServe, false);
+        assert!(cell.truncated, "zero budget must truncate");
+        assert_eq!(cell.probes, 1);
+        let full = run_cell(&s, &quick_frontier_cfg(), SystemKind::EcoServe, false);
+        assert!(!full.truncated);
+        assert!(
+            cell.max_rate <= full.max_rate,
+            "{} vs {}",
+            cell.max_rate,
+            full.max_rate
+        );
     }
 
     #[test]

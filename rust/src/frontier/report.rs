@@ -128,6 +128,7 @@ pub fn simperf_to_json(
                 ("system", Json::str(cell.system.label())),
                 ("variant", Json::str(cell.variant_label())),
                 ("max_rate_rps", Json::num(cell.max_rate)),
+                ("budget_truncated", Json::Bool(cell.truncated)),
             ];
             fields.extend(perf_fields(p));
             cells.push(Json::obj(fields));
@@ -140,6 +141,7 @@ pub fn simperf_to_json(
         ("quick", Json::Bool(cfg.quick)),
         ("seed", Json::num(cfg.base.seed as f64)),
         ("early_abandon", Json::Bool(cfg.early_abandon)),
+        ("budget_s", Json::opt_num(cfg.budget_s)),
         ("deployment", deployment_to_json(&cfg.base.deployment)),
         ("wall_s", Json::num(wall.as_secs_f64())),
         ("totals", Json::obj(perf_fields(&totals))),
@@ -161,9 +163,10 @@ pub fn render_frontier_table(f: &ScenarioFrontier) -> String {
     ));
     for cell in &f.rows {
         let rate = format!(
-            "{:.2}{}",
+            "{:.2}{}{}",
             cell.max_rate,
-            if cell.saturated { "+" } else { "" }
+            if cell.saturated { "+" } else { "" },
+            if cell.truncated { "~" } else { "" }
         );
         out.push_str(&format!(
             "{:<10} {:>8} {:>11} {:>10.2} {:>10.1}% {:>7} {:>7.1}s\n",
@@ -178,6 +181,9 @@ pub fn render_frontier_table(f: &ScenarioFrontier) -> String {
     }
     if f.rows.iter().any(|c| c.saturated) {
         out.push_str("  (+ = hit the sweep ceiling; true max is at least this)\n");
+    }
+    if f.rows.iter().any(|c| c.truncated) {
+        out.push_str("  (~ = wall-clock budget cut the search; rate is unrefined)\n");
     }
     if let Some(best) = f.best() {
         out.push_str(&format!(
@@ -219,6 +225,7 @@ mod tests {
                 SearchPoint { rate: rate * 2.0, attainment: 0.4, goodput_rps: rate },
             ],
             saturated: false,
+            truncated: false,
             probes: 3,
             wall: Duration::from_millis(1500),
             perf: CellPerf {
@@ -298,6 +305,7 @@ mod tests {
         );
         assert_eq!(back.get("level").unwrap().as_str(), Some("P90"));
         assert_eq!(back.get("early_abandon").unwrap().as_bool(), Some(true));
+        assert_eq!(back.get("budget_s"), Some(&Json::Null), "no budget set");
         assert!(back.path(&["deployment", "instances"]).is_some());
         // Totals aggregate the three synthetic cells.
         assert_eq!(back.path(&["totals", "probes"]).unwrap().as_i64(), Some(9));
@@ -313,12 +321,13 @@ mod tests {
         assert_eq!(cells.len(), 3);
         for cell in cells {
             for key in [
-                "scenario", "system", "variant", "max_rate_rps", "probes", "events",
-                "abandoned_probes", "abandoned_events", "events_saved", "sim_wall_s",
-                "events_per_sec",
+                "scenario", "system", "variant", "max_rate_rps", "budget_truncated",
+                "probes", "events", "abandoned_probes", "abandoned_events",
+                "events_saved", "sim_wall_s", "events_per_sec",
             ] {
                 assert!(cell.get(key).is_some(), "missing {key}");
             }
+            assert_eq!(cell.get("budget_truncated").unwrap().as_bool(), Some(false));
             // events_per_sec = events / sim_wall (synthetic: 9000 / 1.2s).
             let eps = cell.get("events_per_sec").unwrap().as_f64().unwrap();
             assert!((eps - 7500.0).abs() < 1e-6, "{eps}");

@@ -48,6 +48,12 @@ pub struct SearchParams {
     pub max_doublings: usize,
     /// Bisection refinement steps after bracketing.
     pub bisections: usize,
+    /// Wall-clock budget for the whole search, seconds (`--budget-s`).
+    /// Checked between probes — the first probe always runs, so a search
+    /// always has an answer. Truncation only forgoes *refinement*: the
+    /// reported max rate is whatever the probes already confirmed, so a
+    /// bigger budget can never report a lower rate on a monotone probe.
+    pub budget_s: Option<f64>,
 }
 
 impl SearchParams {
@@ -61,6 +67,7 @@ impl SearchParams {
             ceiling: 2048.0,
             max_doublings: 12,
             bisections: 6,
+            budget_s: None,
         }
     }
 
@@ -91,6 +98,10 @@ pub struct SearchOutcome<R> {
     /// the target (ceiling hit or doubling budget exhausted): `max_rate`
     /// is then a lower bound set by the bracket, not the system.
     pub saturated: bool,
+    /// True when the wall-clock budget (`SearchParams::budget_s`) cut the
+    /// search short: `max_rate` is confirmed but unrefined (bisections
+    /// and/or bracket steps were skipped).
+    pub truncated: bool,
 }
 
 /// Find the maximum rate at which `probe` reports at least
@@ -106,6 +117,7 @@ pub fn rate_search<R>(
         best: Option<R>,
         mut curve: Vec<SearchPoint>,
         saturated: bool,
+        truncated: bool,
     ) -> SearchOutcome<R> {
         curve.sort_by(|a, b| {
             a.rate.partial_cmp(&b.rate).unwrap_or(std::cmp::Ordering::Equal)
@@ -116,8 +128,11 @@ pub fn rate_search<R>(
         // collapsing equal-rate samples loses nothing and keeps the curve
         // strictly increasing.
         curve.dedup_by(|a, b| a.rate == b.rate);
-        SearchOutcome { max_rate, best, curve, probes, saturated }
+        SearchOutcome { max_rate, best, curve, probes, saturated, truncated }
     }
+
+    let wall_start = std::time::Instant::now();
+    let over_budget = || params.budget_s.is_some_and(|b| wall_start.elapsed().as_secs_f64() >= b);
 
     let mut curve: Vec<SearchPoint> = Vec::new();
     let mut sample = |rate: f64, curve: &mut Vec<SearchPoint>| {
@@ -143,7 +158,13 @@ pub fn rate_search<R>(
     let mut guard = 0;
     while meets(&hi_probe) {
         if hi >= params.ceiling || guard >= params.max_doublings {
-            return finish(hi, Some(hi_probe.result), curve, true);
+            return finish(hi, Some(hi_probe.result), curve, true, false);
+        }
+        if over_budget() {
+            // The top probe still sustains the target, so `hi` is a
+            // confirmed (bracket-limited) lower bound — report it rather
+            // than bisecting down from an unconfirmed rate.
+            return finish(hi, Some(hi_probe.result), curve, true, true);
         }
         lo = hi;
         lo_probe = Some(hi_probe);
@@ -151,18 +172,27 @@ pub fn rate_search<R>(
         hi_probe = sample(hi, &mut curve);
         guard += 1;
     }
+    let mut truncated = false;
     if lo == 0.0 && !meets(&hi_probe) && params.floor < hi {
-        // Cannot sustain even the first probe: try a crumb, else zero.
-        let crumb = sample(params.floor, &mut curve);
-        if meets(&crumb) {
-            lo = params.floor;
-            lo_probe = Some(crumb);
+        if over_budget() {
+            truncated = true;
+        } else {
+            // Cannot sustain even the first probe: try a crumb, else zero.
+            let crumb = sample(params.floor, &mut curve);
+            if meets(&crumb) {
+                lo = params.floor;
+                lo_probe = Some(crumb);
+            }
         }
     }
 
     // Bisect [lo, hi].
     for _ in 0..params.bisections {
         if hi - lo < 1e-9 {
+            break;
+        }
+        if over_budget() {
+            truncated = true;
             break;
         }
         let mid = 0.5 * (lo + hi);
@@ -177,7 +207,7 @@ pub fn rate_search<R>(
             hi = mid;
         }
     }
-    finish(lo, lo_probe.map(|p| p.result), curve, false)
+    finish(lo, lo_probe.map(|p| p.result), curve, false, truncated)
 }
 
 #[cfg(test)]
@@ -270,11 +300,51 @@ mod tests {
         assert_eq!(out.best, Some(out.max_rate));
     }
 
+    /// "More budget never yields lower best goodput": a zero budget
+    /// truncates after the mandatory first probe, and whatever it reports
+    /// is a confirmed rate no larger than the unbudgeted search's.
+    #[test]
+    fn tighter_budget_never_reports_a_higher_rate() {
+        let mut tight = SearchParams::paper_default(0.9);
+        tight.budget_s = Some(0.0);
+        let out = rate_search(&tight, cliff(7.3));
+        assert!(out.truncated, "zero budget must truncate");
+        assert_eq!(out.probes, 1, "only the mandatory first probe runs");
+        assert!(out.saturated, "the sustained start probe is bracket-limited");
+        assert_eq!(out.max_rate, tight.start);
+
+        let full = rate_search(&SearchParams::paper_default(0.9), cliff(7.3));
+        assert!(!full.truncated, "no budget, no truncation");
+        assert!(out.max_rate <= full.max_rate, "{} vs {}", out.max_rate, full.max_rate);
+        assert!(out.best.is_some());
+    }
+
+    #[test]
+    fn zero_budget_on_a_hopeless_probe_reports_zero_truncated() {
+        let mut tight = SearchParams::paper_default(0.9);
+        tight.budget_s = Some(0.0);
+        let out = rate_search(&tight, cliff(0.0));
+        assert_eq!(out.max_rate, 0.0);
+        assert!(out.best.is_none());
+        assert!(out.truncated, "crumb and bisections were skipped");
+        assert_eq!(out.probes, 1);
+    }
+
+    #[test]
+    fn generous_budget_changes_nothing() {
+        let mut roomy = SearchParams::paper_default(0.9);
+        roomy.budget_s = Some(3600.0);
+        let budgeted = rate_search(&roomy, cliff(7.3));
+        let free = rate_search(&SearchParams::paper_default(0.9), cliff(7.3));
+        assert!(!budgeted.truncated);
+        assert_eq!(budgeted.max_rate, free.max_rate);
+        assert_eq!(budgeted.probes, free.probes);
+    }
+
     #[test]
     fn quick_params_spend_fewer_probes() {
         let full = rate_search(&SearchParams::paper_default(0.9), cliff(7.3));
-        let quick =
-            rate_search(&SearchParams::paper_default(0.9).quick(), cliff(7.3));
+        let quick = rate_search(&SearchParams::paper_default(0.9).quick(), cliff(7.3));
         assert!(quick.probes < full.probes, "{} vs {}", quick.probes, full.probes);
         assert!(quick.max_rate > 4.0);
     }

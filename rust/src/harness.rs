@@ -112,7 +112,7 @@ pub fn run_probe(
             let mut monitor = SloMonitor::new(policy.target, 1);
             for req in &trace {
                 if req.arrival >= window.0 && req.arrival < window.1 {
-                    monitor.track(req.id, req.arrival, slo, 0);
+                    monitor.track(req.id, req.arrival, slo, 0, req.output_len);
                 }
             }
             Collector::with_monitor(monitor)

@@ -41,6 +41,7 @@ pub mod frontier;
 pub mod harness;
 pub mod metrics;
 pub mod perfmodel;
+pub mod planner;
 pub mod runtime;
 pub mod scenarios;
 #[cfg(feature = "pjrt")]

@@ -13,7 +13,14 @@
 //!                (--replay sweeps a recorded log via time-warping;
 //!                --perf-out emits the BENCH_simperf simulator-cost
 //!                artifact; --no-abandon disables early probe
-//!                abandonment — same answers, more events)
+//!                abandonment — same answers, more events; --budget-s
+//!                caps each cell's search wall clock)
+//!   plan       — capacity planner: enumerate (GPU x TP/PP x instances x
+//!                link tier x system) candidates, price each, search each
+//!                non-dominated candidate's max sustainable rate, and
+//!                report the $/hr-vs-goodput Pareto frontier, the best
+//!                goodput-per-dollar config, and (--target-rate) the
+//!                cheapest config meeting the target (BENCH_plan.json)
 //!   record     — export a scenario's trace as a replay log (JSONL)
 //!   table2     — print the arithmetic-intensity table
 //!   table3     — print the KV-bandwidth table
@@ -30,6 +37,10 @@
 //!   ecoserve record --scenario bursty --rate 6 --out bursty.jsonl
 //!   ecoserve scenarios --replay bursty.jsonl
 //!   ecoserve frontier --replay bursty.jsonl --quick --autoscale
+//!   ecoserve scenarios --replay short.jsonl --loop 600   # tile a short log
+//!   ecoserve plan --quick --scenario bursty --model llama-30b --gpus 32
+//!   ecoserve plan --scenario steady --target-rate 5 --cluster all \
+//!       --out BENCH_plan.json
 
 // Same advisory lint posture as lib.rs (see its comment).
 #![allow(clippy::style, clippy::complexity, clippy::perf)]
@@ -53,13 +64,14 @@ fn main() -> Result<()> {
         Some("goodput") => cmd_goodput(&args),
         Some("scenarios") => cmd_scenarios(&args),
         Some("frontier") => cmd_frontier(&args),
+        Some("plan") => cmd_plan(&args),
         Some("record") => cmd_record(&args),
         Some("table2") => cmd_table2(&args),
         Some("table3") => cmd_table3(),
         _ => {
             eprintln!(
-                "usage: ecoserve <serve|simulate|goodput|scenarios|frontier|record|\
-                 table2|table3> [--flags]"
+                "usage: ecoserve <serve|simulate|goodput|scenarios|frontier|plan|\
+                 record|table2|table3> [--flags]"
             );
             eprintln!("see rust/src/main.rs docs for examples");
             Ok(())
@@ -98,14 +110,19 @@ fn deployment_from_args(args: &Args) -> Result<Deployment> {
     Ok(deployment)
 }
 
-/// An optional numeric flag that errors loudly on a typo instead of
-/// silently falling back to a default.
+/// An optional numeric flag that errors loudly on a typo — or on a
+/// value-less `--flag` (which the parser files as a boolean switch) —
+/// instead of silently falling back to a default: `--loop` without a
+/// horizon must not quietly run the un-tiled replay.
 fn parse_f64_flag(args: &Args, key: &str) -> Result<Option<f64>> {
     match args.get(key) {
         Some(v) => v
             .parse()
             .map(Some)
             .map_err(|_| anyhow::anyhow!("--{key} expects a number, got '{v}'")),
+        None if args.has_flag(key) => {
+            Err(anyhow::anyhow!("--{key} needs a numeric value (e.g. --{key}=30)"))
+        }
         None => Ok(None),
     }
 }
@@ -147,16 +164,24 @@ fn cmd_serve(_args: &Args) -> Result<()> {
     )
 }
 
-/// Shared `--scenario` / `--replay` selection (scenarios + frontier):
-/// a recorded arrival log, one named scenario, or the whole registry.
+/// Shared `--scenario` / `--replay` selection (scenarios + frontier +
+/// plan): a recorded arrival log (optionally `--loop`-tiled to a longer
+/// horizon), one named scenario, or the whole registry.
 fn select_scenarios(args: &Args) -> Result<Vec<scenarios::Scenario>> {
     let replay = args.get_path("replay").map_err(|e| anyhow::anyhow!("{e}"))?;
     if let Some(path) = replay {
         if args.get("scenario").is_some() {
             bail!("--replay and --scenario are mutually exclusive: a replay log IS the scenario");
         }
-        let scenario = scenarios::Scenario::from_log(&path)?;
-        let trace = scenario.replay().expect("from_log builds a replay scenario");
+        let mut trace = ecoserve::workload::ReplayTrace::from_file(&path)?;
+        if let Some(horizon) = parse_f64_flag(args, "loop")? {
+            if !horizon.is_finite() || horizon <= 0.0 {
+                bail!("--loop expects a positive finite horizon in seconds, got {horizon}");
+            }
+            trace = trace.loop_to(horizon);
+        }
+        let scenario = scenarios::Scenario::from_replay(trace);
+        let trace = scenario.replay().expect("from_replay builds a replay scenario");
         eprintln!(
             "replaying {}: {} requests over {:.0}s ({:.2} req/s native, {} class(es))",
             path.display(),
@@ -166,6 +191,9 @@ fn select_scenarios(args: &Args) -> Result<Vec<scenarios::Scenario>> {
             scenario.classes.len(),
         );
         return Ok(vec![scenario]);
+    }
+    if args.get("loop").is_some() || args.has_flag("loop") {
+        bail!("--loop tiles a recorded log and needs --replay <log>");
     }
     match args.get("scenario") {
         Some(name) => Ok(vec![scenarios::by_name(name).ok_or_else(|| {
@@ -369,6 +397,9 @@ fn cmd_frontier(args: &Args) -> Result<()> {
     // flag only changes simulator cost, and exists for exactly that
     // comparison).
     cfg.early_abandon = !args.has("no-abandon");
+    // Per-cell wall-clock cap: truncated cells report their confirmed
+    // rate and are flagged in BENCH_simperf.json.
+    cfg.budget_s = parse_f64_flag(args, "budget-s")?;
     if cfg.autoscale && !systems.contains(&SystemKind::EcoServe) {
         // Otherwise the BENCH report would claim autoscale_variant=true
         // while containing no mitosis row.
@@ -426,6 +457,74 @@ fn cmd_frontier(args: &Args) -> Result<()> {
         std::fs::write(path, &json)
             .map_err(|e| anyhow::anyhow!("write {path}: {e}"))?;
         println!("wrote simperf report to {path}");
+    }
+    Ok(())
+}
+
+/// The capacity planner (`plan` subcommand): goodput-per-dollar search
+/// over the deployment space for one workload.
+fn cmd_plan(args: &Args) -> Result<()> {
+    let mut selected = select_scenarios(args)?;
+    if args.get("scenario").is_none() && args.get_path("replay").ok().flatten().is_none() {
+        bail!("plan needs one workload: --scenario <name> or --replay <log>");
+    }
+    let scenario = selected.remove(0);
+    let model = ModelSpec::by_name(&args.get_or("model", "codellama-34b"))
+        .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
+    let clusters = match args.get_or("cluster", "l20").as_str() {
+        "all" => vec![ClusterSpec::l20_cluster(), ClusterSpec::a800_cluster()],
+        name => vec![ClusterSpec::by_name(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown cluster '{name}' (l20|a800|all)"))?],
+    };
+
+    let mut cfg = if args.has("quick") {
+        ecoserve::planner::PlanConfig::quick(scenario, model)
+    } else {
+        ecoserve::planner::PlanConfig::new(scenario, model)
+    };
+    cfg.clusters = clusters;
+    cfg.level = parse_level(args)?;
+    cfg.seed = args.get_u64("seed", 42);
+    cfg.target_rate = parse_f64_flag(args, "target-rate")?;
+    cfg.budget_s = parse_f64_flag(args, "budget-s")?;
+    cfg.duration_override = parse_f64_flag(args, "duration")?;
+    if let Some(g) = args.get("gpus") {
+        cfg.max_gpus = Some(g.parse()?);
+    }
+    if let Some(name) = args.get("system") {
+        cfg.systems = vec![SystemKind::by_name(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown system '{name}'"))?];
+    }
+
+    let candidates = ecoserve::planner::enumerate_candidates(&cfg);
+    if candidates.is_empty() {
+        bail!(
+            "no feasible candidate: {} does not fit the GPU budget on {} \
+             (raise --gpus or pick a bigger cluster)",
+            cfg.model.name,
+            cfg.clusters.iter().map(|c| c.name).collect::<Vec<_>>().join(",")
+        );
+    }
+    println!(
+        "capacity plan: {} candidate(s) for '{}' ({} at {}) across {} cluster tier(s) \
+         x {} system(s)",
+        candidates.len(),
+        cfg.scenario.name,
+        cfg.model.name,
+        cfg.level.label(),
+        cfg.clusters.len(),
+        cfg.systems.len(),
+    );
+    let outcome = ecoserve::planner::run_plan_on(&cfg, candidates);
+    println!();
+    print!("{}", ecoserve::planner::render_plan_table(&outcome));
+    println!("\ntotal wall clock: {:.1}s", outcome.wall.as_secs_f64());
+
+    if let Some(path) = args.get("out") {
+        let json = ecoserve::planner::plan_to_json(&outcome, &cfg, outcome.wall).to_string();
+        std::fs::write(path, &json)
+            .map_err(|e| anyhow::anyhow!("write {path}: {e}"))?;
+        println!("wrote BENCH plan report to {path}");
     }
     Ok(())
 }

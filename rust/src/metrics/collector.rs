@@ -282,8 +282,8 @@ mod tests {
         // first blown deadline decides the verdict. A completion landing
         // after the decision must stay outside the scoring cut.
         let mut m = SloMonitor::new(0.9, 1);
-        m.track(1, 0.0, SloSpec::new(1.0, 0.1), 0);
-        m.track(2, 0.0, SloSpec::new(1.0, 0.1), 0);
+        m.track(1, 0.0, SloSpec::new(1.0, 0.1), 0, 5);
+        m.track(2, 0.0, SloSpec::new(1.0, 0.1), 0, 5);
         let mut c = Collector::with_monitor(m);
         c.on_arrival(&req(1, 0.0));
         c.on_arrival(&req(2, 0.0));
@@ -303,7 +303,7 @@ mod tests {
     #[test]
     fn healthy_run_with_monitor_scores_everything() {
         let mut m = SloMonitor::new(0.9, 1);
-        m.track(1, 0.0, SloSpec::new(1.0, 1.0), 0);
+        m.track(1, 0.0, SloSpec::new(1.0, 1.0), 0, 5);
         let mut c = Collector::with_monitor(m);
         c.on_arrival(&req(1, 0.0));
         c.observe_time(0.2);

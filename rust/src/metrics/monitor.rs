@@ -7,6 +7,11 @@
 //!
 //! * a measurement-window arrival whose TTFT deadline has passed with no
 //!   first token — any future first token would already be late;
+//! * a decoding request whose TPOT budget has run out with no completion —
+//!   the request needs `slo.tpot · (output_len − 1)` seconds after its
+//!   first token, and once that much time has passed any future completion
+//!   already averages over budget (the simulator's oracle `output_len` is
+//!   exact, so the deadline is, too);
 //! * a completed request whose recorded latencies miss its SLO pair.
 //!
 //! The monitor counts those per traffic class as they become inevitable.
@@ -57,23 +62,37 @@ struct Tracked {
     class: usize,
     arrival: f64,
     slo: SloSpec,
-    /// First token arrived within its deadline; only the completion-time
-    /// TPOT check remains.
-    first_token: bool,
+    /// Oracle generation length (the simulator knows it; schedulers don't).
+    /// Arms the decode-phase TPOT deadline once the first token is timely.
+    output_len: usize,
+    /// Time of a first token that arrived within its deadline; the TTFT
+    /// check is then settled and only the TPOT budget remains.
+    first_token: Option<f64>,
 }
 
-/// Min-heap entry: approximate TTFT deadline used to schedule the exact
-/// per-request check (the check itself recomputes `now - arrival` so it
+/// Which exact check a heap entry schedules.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+enum DeadlineKind {
+    /// `now - arrival > slo.ttft` with no first token yet.
+    Ttft,
+    /// `now - first_token > slo.tpot · (output_len - 1)` with no
+    /// completion yet (armed by a timely first token).
+    Tpot,
+}
+
+/// Min-heap entry: approximate deadline used to schedule the exact
+/// per-request check (the check itself recomputes the elapsed time so it
 /// bit-matches [`RequestRecord::meets`]).
 #[derive(Debug)]
 struct Deadline {
     at: f64,
     id: u64,
+    kind: DeadlineKind,
 }
 
 impl PartialEq for Deadline {
     fn eq(&self, other: &Self) -> bool {
-        self.at == other.at && self.id == other.id
+        self.at == other.at && self.id == other.id && self.kind == other.kind
     }
 }
 impl Eq for Deadline {}
@@ -84,7 +103,10 @@ impl PartialOrd for Deadline {
 }
 impl Ord for Deadline {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.at.total_cmp(&other.at).then(self.id.cmp(&other.id))
+        self.at
+            .total_cmp(&other.at)
+            .then(self.id.cmp(&other.id))
+            .then(self.kind.cmp(&other.kind))
     }
 }
 
@@ -116,11 +138,14 @@ impl SloMonitor {
 
     /// Register one measurement-window arrival before the run starts.
     /// Requests outside the window must not be tracked — they do not
-    /// count toward strict attainment.
-    pub fn track(&mut self, id: u64, arrival: f64, slo: SloSpec, class: usize) {
+    /// count toward strict attainment. `output_len` is the oracle
+    /// generation length, which prices the decode-phase TPOT budget.
+    pub fn track(&mut self, id: u64, arrival: f64, slo: SloSpec, class: usize, output_len: usize) {
         self.arrived[class] += 1;
-        self.tracked.insert(id, Tracked { class, arrival, slo, first_token: false });
-        self.deadlines.push(Reverse(Deadline { at: arrival + slo.ttft, id }));
+        self.tracked
+            .insert(id, Tracked { class, arrival, slo, output_len, first_token: None });
+        self.deadlines
+            .push(Reverse(Deadline { at: arrival + slo.ttft, id, kind: DeadlineKind::Ttft }));
     }
 
     /// Total window arrivals under watch.
@@ -158,50 +183,75 @@ impl SloMonitor {
     }
 
     /// Advance the clock: any watched request whose first token could no
-    /// longer arrive in time (`now - arrival > slo.ttft`, the exact
-    /// [`RequestRecord::meets`] comparison) is a guaranteed violation.
+    /// longer arrive in time (`now - arrival > slo.ttft`) — or whose
+    /// decode could no longer finish inside its TPOT budget
+    /// (`(now - first_token) / (output_len - 1) > slo.tpot`) — is a
+    /// guaranteed violation. Both are the exact [`RequestRecord::meets`]
+    /// comparisons: a completion at any time `>= now` can only make the
+    /// measured latency larger.
     pub fn advance(&mut self, now: f64) {
         loop {
-            let (at, id) = match self.deadlines.peek() {
-                Some(Reverse(d)) => (d.at, d.id),
+            let (at, id, kind) = match self.deadlines.peek() {
+                Some(Reverse(d)) => (d.at, d.id, d.kind),
                 None => break,
             };
             if at > now {
                 break;
             }
             self.deadlines.pop();
-            let state = match self.tracked.get(&id) {
-                Some(t) if !t.first_token => Some((t.class, t.arrival, t.slo.ttft)),
-                _ => None, // first token made it in time, or already resolved
+            // (class, blown?) for a still-live deadline; None when the
+            // watch was already resolved (timely first token defuses
+            // Ttft, completion defuses Tpot). Each check reuses the exact
+            // floating-point expression of [`RequestRecord::meets`] — the
+            // TTFT path its subtraction, the TPOT path its *division*
+            // (`tpot() = (completion - first) / (out - 1)`): completion
+            // can only land at or after `now` and both forms are monotone
+            // in it, so a blown check here is blown in every future
+            // scoring, bit for bit.
+            let state = match (self.tracked.get(&id), kind) {
+                (Some(t), DeadlineKind::Ttft) if t.first_token.is_none() => {
+                    Some((t.class, now - t.arrival > t.slo.ttft))
+                }
+                (Some(t), DeadlineKind::Tpot) => t.first_token.map(|first| {
+                    let m = t.output_len.saturating_sub(1).max(1) as f64;
+                    (t.class, (now - first) / m > t.slo.tpot)
+                }),
+                _ => None,
             };
-            if let Some((class, arrival, slo_ttft)) = state {
-                if now - arrival > slo_ttft {
+            match state {
+                Some((class, true)) => {
                     self.tracked.remove(&id);
                     self.violate(class, now);
-                } else {
+                }
+                Some((_, false)) => {
                     // The heap key rounded below the exact threshold; put
                     // the entry back and retry at the next event time.
-                    self.deadlines.push(Reverse(Deadline { at, id }));
+                    self.deadlines.push(Reverse(Deadline { at, id, kind }));
                     break;
                 }
+                None => {}
             }
         }
     }
 
     /// First output token observed. A late first token (TTFT already
     /// blown, by the same comparison [`RequestRecord::meets`] will apply)
-    /// counts immediately; a timely one leaves only the completion check.
+    /// counts immediately; a timely one settles TTFT and arms the
+    /// decode-phase TPOT deadline (single-token requests have no TPOT
+    /// clock — their recorded TPOT is defined as 0).
     pub fn on_first_token(&mut self, id: u64, now: f64) {
-        let late = match self.tracked.get_mut(&id) {
+        let (late, arm_tpot) = match self.tracked.get_mut(&id) {
             Some(t) => {
-                if t.first_token {
+                if t.first_token.is_some() {
                     return;
                 }
                 if now - t.arrival > t.slo.ttft {
-                    Some(t.class)
+                    (Some(t.class), None)
                 } else {
-                    t.first_token = true;
-                    None
+                    t.first_token = Some(now);
+                    let budget = t.slo.tpot * t.output_len.saturating_sub(1) as f64;
+                    let deadline = (t.output_len > 1).then(|| now + budget);
+                    (None, deadline)
                 }
             }
             None => return,
@@ -209,6 +259,8 @@ impl SloMonitor {
         if let Some(class) = late {
             self.tracked.remove(&id);
             self.violate(class, now);
+        } else if let Some(at) = arm_tpot {
+            self.deadlines.push(Reverse(Deadline { at, id, kind: DeadlineKind::Tpot }));
         }
     }
 
@@ -254,7 +306,7 @@ mod tests {
     fn deadline_pass_without_first_token_is_a_violation() {
         let mut m = SloMonitor::new(0.9, 1);
         for id in 0..10 {
-            m.track(id, 0.0, slo(), 0);
+            m.track(id, 0.0, slo(), 0, 5);
         }
         m.advance(0.5);
         assert_eq!(m.violations(), 0);
@@ -273,7 +325,7 @@ mod tests {
         // guaranteed miss decides the verdict.
         let mut m = SloMonitor::new(0.9, 1);
         for id in 0..10 {
-            m.track(id, id as f64, slo(), 0);
+            m.track(id, id as f64, slo(), 0, 5);
         }
         m.advance(2.5); // id 0 (deadline 1.0) and id 1 (deadline 2.0) blown
         assert_eq!(m.violations(), 2);
@@ -281,7 +333,7 @@ mod tests {
         // A P50 monitor with the same stream is still undecided.
         let mut loose = SloMonitor::new(0.5, 1);
         for id in 0..10 {
-            loose.track(id, id as f64, slo(), 0);
+            loose.track(id, id as f64, slo(), 0, 5);
         }
         loose.advance(2.5);
         assert_eq!(loose.violations(), 2);
@@ -292,7 +344,9 @@ mod tests {
     fn timely_first_token_defuses_the_deadline() {
         let mut m = SloMonitor::new(0.9, 1);
         for id in 0..4 {
-            m.track(id, 0.0, slo(), 0);
+            // TPOT budget 5.0s (51 tokens at 0.1): no decode deadline
+            // fires inside this test's horizon.
+            m.track(id, 0.0, slo(), 0, 51);
         }
         m.on_first_token(0, 0.5);
         m.on_first_token(1, 1.0); // exactly at the deadline: meets
@@ -307,7 +361,7 @@ mod tests {
     fn late_first_token_and_blown_tpot_count_once_each() {
         let mut m = SloMonitor::new(0.6, 1);
         for id in 0..4 {
-            m.track(id, 0.0, slo(), 0);
+            m.track(id, 0.0, slo(), 0, 11);
         }
         m.on_first_token(0, 2.0); // ttft 2.0 > 1.0: immediate violation
         assert_eq!(m.violations(), 1);
@@ -325,7 +379,7 @@ mod tests {
     fn rejects_are_guaranteed_violations() {
         let mut m = SloMonitor::new(0.9, 1);
         for id in 0..3 {
-            m.track(id, 0.0, slo(), 0);
+            m.track(id, 0.0, slo(), 0, 5);
         }
         m.on_reject(0, 0.1);
         assert_eq!(m.violations(), 1);
@@ -340,10 +394,12 @@ mod tests {
         // (best 0.5) decides a P90 verdict even though class 0 is clean.
         let mut m = SloMonitor::new(0.9, 2);
         for id in 0..10 {
-            m.track(id, 0.0, slo(), 0);
+            // Single-token requests: no TPOT clock, so class 0 stays clean
+            // no matter how far the clock advances.
+            m.track(id, 0.0, slo(), 0, 1);
         }
-        m.track(100, 0.0, slo(), 1);
-        m.track(101, 0.0, slo(), 1);
+        m.track(100, 0.0, slo(), 1, 1);
+        m.track(101, 0.0, slo(), 1, 1);
         for id in 0..10 {
             m.on_first_token(id, 0.2);
         }
@@ -356,10 +412,84 @@ mod tests {
     #[test]
     fn untracked_requests_are_invisible() {
         let mut m = SloMonitor::new(0.9, 1);
-        m.track(1, 0.0, slo(), 0);
+        m.track(1, 0.0, slo(), 0, 5);
         m.on_first_token(7, 99.0);
         m.on_complete(&rec(8, 0.0, 99.0, 99.0, 5), 99.0);
         assert_eq!(m.violations(), 0);
         assert_eq!(m.tracked_arrivals(), 1);
+    }
+
+    /// The decode-phase deadline: a request whose first token was timely
+    /// but whose TPOT budget (`slo.tpot · (output_len - 1)`) runs out with
+    /// no completion is a guaranteed violation — any future completion
+    /// already averages over budget.
+    #[test]
+    fn tpot_deadline_fires_without_completion() {
+        // Binary-exact timestamps so "exactly on budget" is exact: the
+        // check divides like RequestRecord::tpot, and (1.5 - 0.25) / 10
+        // == 0.125 == slo.tpot must still meet.
+        let slo = SloSpec::new(1.0, 0.125);
+        let mut m = SloMonitor::new(0.9, 1);
+        for id in 0..10 {
+            m.track(id, 0.0, slo, 0, 11); // budget: 1.25s after first token
+        }
+        for id in 0..10 {
+            m.on_first_token(id, 0.25);
+        }
+        m.advance(1.5); // exactly on the budget: 0.125 per token still meets
+        assert_eq!(m.violations(), 0);
+        assert!(!m.decided());
+        m.advance(2.0); // 0.175 per token > 0.125: all ten blown
+        assert_eq!(m.violations(), 10);
+        assert!(m.decided());
+        assert_eq!(m.decided_at(), Some(2.0));
+    }
+
+    #[test]
+    fn completion_defuses_the_tpot_deadline() {
+        let mut m = SloMonitor::new(0.9, 1);
+        m.track(0, 0.0, slo(), 0, 11);
+        m.track(1, 0.0, slo(), 0, 11);
+        m.on_first_token(0, 0.2);
+        m.on_first_token(1, 0.2);
+        // id 0 completes inside its budget with a meeting TPOT (0.05/token).
+        m.on_complete(&rec(0, 0.0, 0.2, 0.7, 11), 0.7);
+        assert_eq!(m.violations(), 0);
+        m.advance(10.0); // only id 1's decode deadline is still live
+        assert_eq!(m.violations(), 1);
+        // The stale deadline of the completed request never re-fires.
+        m.advance(20.0);
+        assert_eq!(m.violations(), 1);
+    }
+
+    /// Single-token requests have no inter-token time (recorded TPOT is 0
+    /// by definition), so a timely first token settles them for good.
+    #[test]
+    fn single_token_requests_never_arm_a_tpot_deadline() {
+        let mut m = SloMonitor::new(0.9, 1);
+        m.track(0, 0.0, slo(), 0, 1);
+        m.on_first_token(0, 0.5);
+        m.advance(1e6);
+        assert_eq!(m.violations(), 0);
+        assert!(!m.decided());
+    }
+
+    /// The TPOT deadline decides strictly earlier than the completion-time
+    /// check would: violations are counted while the requests are still
+    /// in flight, which is what lets overload probes abandon sooner.
+    #[test]
+    fn tpot_deadline_decides_before_any_completion() {
+        let mut m = SloMonitor::new(0.9, 1);
+        for id in 0..10 {
+            m.track(id, 0.0, SloSpec::new(5.0, 0.1), 0, 101); // 10s budget
+        }
+        for id in 0..10 {
+            m.on_first_token(id, 1.0);
+        }
+        m.advance(12.0); // 11s elapsed > 10s budget, nothing completed
+        assert!(m.decided(), "verdict must not wait for completions");
+        // The completion-time path agrees when the stragglers finish.
+        m.on_complete(&rec(0, 0.0, 1.0, 30.0, 101), 30.0);
+        assert_eq!(m.violations(), 10, "no double count on late completion");
     }
 }

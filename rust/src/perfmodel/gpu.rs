@@ -6,6 +6,13 @@
 //! (validated in rust/tests/perfmodel_validation.rs). They absorb kernel
 //! inefficiency, scheduling gaps, and framework overhead — a standard
 //! simulator technique when the physical testbed is unavailable.
+//!
+//! `price_per_hour` is the rental rate the capacity planner
+//! ([`crate::planner`]) charges per GPU: representative cloud/colo rates
+//! for the paper's cost-effectiveness argument (commodity L20s vs.
+//! A800-class accelerators), not a quote. Node-level overhead and
+//! interconnect premiums live on [`crate::config::ClusterSpec`] and
+//! [`crate::perfmodel::interconnect::LinkSpec`].
 
 /// A GPU (or pseudo-GPU) device model.
 #[derive(Debug, Clone, PartialEq)]
@@ -21,6 +28,8 @@ pub struct GpuSpec {
     pub flops_eff: f64,
     /// Achievable fraction of peak HBM bandwidth in memory-bound phases.
     pub bw_eff: f64,
+    /// Rental rate, USD per GPU-hour (capacity-planner cost model).
+    pub price_per_hour: f64,
 }
 
 impl GpuSpec {
@@ -33,6 +42,7 @@ impl GpuSpec {
             mem_bytes: 48.0 * 1e9,
             flops_eff: 0.55,
             bw_eff: 0.80,
+            price_per_hour: 1.05,
         }
     }
 
@@ -45,6 +55,7 @@ impl GpuSpec {
             mem_bytes: 80.0 * 1e9,
             flops_eff: 0.72,
             bw_eff: 0.85,
+            price_per_hour: 3.40,
         }
     }
 
@@ -79,6 +90,9 @@ mod tests {
         assert!(a800.hbm_bw > 2.0 * l20.hbm_bw);
         assert!(a800.mem_bytes > l20.mem_bytes);
         assert!(l20.flops_eff > 0.0 && l20.flops_eff <= 1.0);
+        // The commodity card is the cheap one — the paper's premise.
+        assert!(l20.price_per_hour > 0.0);
+        assert!(a800.price_per_hour > 2.0 * l20.price_per_hour);
     }
 
     #[test]

@@ -22,33 +22,69 @@ pub struct LinkSpec {
     /// on the paper's L20 nodes (§2.3), validated in
     /// rust/tests/perfmodel_validation.rs.
     pub collective_eff: f64,
+    /// Fabric premium, USD per attached GPU per hour, charged by the
+    /// capacity planner ([`crate::planner`]) on top of the GPU rental
+    /// rate. Commodity PCIe is free (it ships with the node); NVLink
+    /// switches and InfiniBand HCAs+spines are what make FuDG-class
+    /// hyper-clusters expensive — the cost axis of the paper's argument.
+    pub price_per_gpu_hour: f64,
 }
 
 impl LinkSpec {
     /// PCIe 4.0 x16: ~32 GB/s line, ~25 GB/s usable p2p; host-routed
     /// collectives reach ~8-9 GB/s with ~20 us sync latency.
     pub fn pcie4() -> Self {
-        LinkSpec { name: "PCIe4x16", bandwidth: 25.0e9, latency: 20e-6, collective_eff: 0.35 }
+        LinkSpec {
+            name: "PCIe4x16",
+            bandwidth: 25.0e9,
+            latency: 20e-6,
+            collective_eff: 0.35,
+            price_per_gpu_hour: 0.0,
+        }
     }
 
     /// NVLink (A100/A800-class NVSwitch): ~400 GB/s per GPU usable ~300.
     pub fn nvlink() -> Self {
-        LinkSpec { name: "NVLink", bandwidth: 300.0e9, latency: 2e-6, collective_eff: 0.85 }
+        LinkSpec {
+            name: "NVLink",
+            bandwidth: 300.0e9,
+            latency: 2e-6,
+            collective_eff: 0.85,
+            price_per_gpu_hour: 0.60,
+        }
     }
 
     /// 10 Gbps datacenter Ethernet: ~1.1 GB/s usable after TCP overheads.
     pub fn eth_10g() -> Self {
-        LinkSpec { name: "10GbE", bandwidth: 1.1e9, latency: 50e-6, collective_eff: 0.7 }
+        LinkSpec {
+            name: "10GbE",
+            bandwidth: 1.1e9,
+            latency: 50e-6,
+            collective_eff: 0.7,
+            price_per_gpu_hour: 0.03,
+        }
     }
 
     /// 25 Gbps RoCE: ~2.9 GB/s usable.
     pub fn roce_25g() -> Self {
-        LinkSpec { name: "25G-RoCE", bandwidth: 2.9e9, latency: 10e-6, collective_eff: 0.8 }
+        LinkSpec {
+            name: "25G-RoCE",
+            bandwidth: 2.9e9,
+            latency: 10e-6,
+            collective_eff: 0.8,
+            price_per_gpu_hour: 0.10,
+        }
     }
 
     /// 400 Gbps InfiniBand (the class of link FuDG hyper-clusters assume).
     pub fn ib_400g() -> Self {
-        LinkSpec { name: "400G-IB", bandwidth: 45.0e9, latency: 3e-6, collective_eff: 0.85 }
+        LinkSpec {
+            name: "400G-IB",
+            bandwidth: 45.0e9,
+            latency: 3e-6,
+            collective_eff: 0.85,
+            price_per_gpu_hour: 0.45,
+        }
     }
 
     pub fn by_name(name: &str) -> Option<LinkSpec> {
@@ -143,5 +179,11 @@ mod tests {
         assert!(LinkSpec::nvlink().bandwidth > LinkSpec::pcie4().bandwidth);
         assert!(LinkSpec::pcie4().bandwidth > LinkSpec::roce_25g().bandwidth);
         assert!(LinkSpec::roce_25g().bandwidth > LinkSpec::eth_10g().bandwidth);
+        // Faster fabrics carry higher planner premiums; commodity PCIe and
+        // 10GbE stay (near-)free — the paper's cost axis.
+        assert_eq!(LinkSpec::pcie4().price_per_gpu_hour, 0.0);
+        assert!(LinkSpec::nvlink().price_per_gpu_hour > LinkSpec::roce_25g().price_per_gpu_hour);
+        assert!(LinkSpec::ib_400g().price_per_gpu_hour > LinkSpec::roce_25g().price_per_gpu_hour);
+        assert!(LinkSpec::roce_25g().price_per_gpu_hour > LinkSpec::eth_10g().price_per_gpu_hour);
     }
 }

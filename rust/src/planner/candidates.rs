@@ -1,0 +1,196 @@
+//! Candidate enumeration and the cheap roofline ceiling.
+//!
+//! A candidate is (serving system × deployment), where the deployment
+//! space is GPU type × TP/PP degree × instance count × inter-node
+//! interconnect tier ([`crate::config::enumerate_deployments`] supplies
+//! the shapes; [`link_tiers`] the fabric upgrades). Each candidate
+//! carries its hourly price ([`crate::planner::cost::CostModel`]) and a
+//! roofline upper bound on the rate it could possibly sustain — the two
+//! numbers dominance pruning compares before paying for a simulation.
+
+use crate::config::{enumerate_deployments, ClusterSpec, Deployment, SystemKind};
+use crate::perfmodel::LinkSpec;
+use crate::scenarios::Scenario;
+use crate::workload::replay::leak;
+
+use super::cost::{CostBreakdown, CostModel};
+use super::PlanConfig;
+
+/// Safety factor on the roofline ceiling. The bound below is already
+/// optimistic everywhere (perfect batching, zero queueing, no SLO or
+/// burst penalty); the slack absorbs the residual modeling gap so the
+/// bound stays a *sound* ceiling on anything the simulator measures —
+/// pruning soundness (rust/tests/planner.rs) leans on exactly this.
+pub const ROOFLINE_SLACK: f64 = 1.5;
+
+/// Optimistic ceiling on the SLO-attaining request rate of `d` under
+/// `scenario`'s traffic mix, req/s: expected per-request service demand
+/// with every favorable assumption — prefill amortized over a batch of 4,
+/// decode amortized over a 512-deep batch at decode-start context, phases
+/// perfectly overlapped across the fleet — then scaled by instance count
+/// and [`ROOFLINE_SLACK`]. System-independent by construction: no
+/// scheduler can beat the hardware's roofline.
+pub fn roofline_rate_ub(d: &Deployment, scenario: &Scenario) -> f64 {
+    let timer = d.timer();
+    let mut t_per_req = 0.0;
+    for class in &scenario.classes {
+        let mean_in = class.dataset.input.untruncated_mean().round().max(1.0) as usize;
+        let mean_out = class.dataset.output.untruncated_mean().round().max(1.0);
+        // Prefill: batch-4 amortizes the weight stream (prefill is
+        // compute-bound, so deeper batches barely improve on this).
+        let t_prefill = timer.prefill_time(&[mean_in; 4]) / 4.0;
+        // Decode: per-token occupancy at the efficient asymptote, charged
+        // at decode-*start* context (the cheapest any token gets).
+        let batch = 512;
+        let t_decode_tok = timer.decode_iter_time(batch, batch * mean_in) / batch as f64;
+        let t_req = t_prefill + (mean_out - 1.0).max(0.0) * t_decode_tok;
+        t_per_req += class.share * t_req;
+    }
+    d.num_instances() as f64 / t_per_req.max(1e-9) * ROOFLINE_SLACK
+}
+
+/// Inter-node fabric tiers to price for `cluster`: the native network
+/// plus purchasable upgrades (25G RoCE, 400G InfiniBand). Quick mode
+/// sticks to the native tier. Intra-node fabric is fixed — it ships with
+/// the node (the paper's L20 boxes are PCIe-only by construction).
+pub fn link_tiers(cluster: &ClusterSpec, quick: bool) -> Vec<ClusterSpec> {
+    let mut out = vec![cluster.clone()];
+    if quick {
+        return out;
+    }
+    for link in [LinkSpec::roce_25g(), LinkSpec::ib_400g()] {
+        if link.name == cluster.inter_link.name {
+            continue;
+        }
+        let mut c = cluster.clone();
+        c.name = leak(format!("{}+{}", cluster.name, link.name));
+        c.inter_link = link;
+        out.push(c);
+    }
+    out
+}
+
+/// One point of the plan's search space: a serving system on a priced
+/// deployment, with its roofline ceiling under the plan's scenario.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub system: SystemKind,
+    pub deployment: Deployment,
+    pub price: CostBreakdown,
+    /// Roofline ceiling on sustainable rate, req/s ([`roofline_rate_ub`]).
+    pub roofline_ub: f64,
+}
+
+impl Candidate {
+    pub fn new(
+        system: SystemKind,
+        deployment: Deployment,
+        cost: &CostModel,
+        scenario: &Scenario,
+    ) -> Self {
+        let price = cost.breakdown(&deployment);
+        let roofline_ub = roofline_rate_ub(&deployment, scenario);
+        Candidate { system, deployment, price, roofline_ub }
+    }
+
+    /// Compact shape label: `tp4x1 x8` = TP4, PP1, 8 instances.
+    pub fn shape(&self) -> String {
+        let d = &self.deployment;
+        format!("tp{}x{} x{}", d.tp, d.pp, d.num_instances())
+    }
+}
+
+/// The full candidate list for a plan, in enumeration order (clusters ×
+/// link tiers × deployment shapes × systems). Price-sorting happens in
+/// the search, which needs it for wave-ordered dominance pruning.
+pub fn enumerate_candidates(cfg: &PlanConfig) -> Vec<Candidate> {
+    let cost = CostModel::default();
+    let tp = cfg.tp_options();
+    let pp = cfg.pp_options();
+    let instances = cfg.instance_options();
+    let mut out = Vec::new();
+    for cluster in &cfg.clusters {
+        let cap = cfg.max_gpus.unwrap_or(cluster.total_gpus());
+        for tier in link_tiers(cluster, cfg.quick) {
+            for d in enumerate_deployments(&cfg.model, &tier, &tp, &pp, &instances, cap) {
+                for &system in &cfg.systems {
+                    out.push(Candidate::new(system, d.clone(), &cost, &cfg.scenario));
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterSpec;
+    use crate::perfmodel::ModelSpec;
+    use crate::scenarios::by_name;
+
+    fn deployment(tp: usize, pp: usize, gpus: usize) -> Deployment {
+        let mut d = Deployment::paper_default(
+            ModelSpec::llama_30b(),
+            ClusterSpec::l20_cluster(),
+        );
+        d.tp = tp;
+        d.pp = pp;
+        d.gpus_used = gpus;
+        d
+    }
+
+    #[test]
+    fn roofline_ub_is_positive_and_scales_with_instances() {
+        let s = by_name("steady").unwrap();
+        let two = roofline_rate_ub(&deployment(4, 1, 8), &s);
+        let eight = roofline_rate_ub(&deployment(4, 1, 32), &s);
+        assert!(two > 0.0);
+        assert!((eight / two - 4.0).abs() < 1e-9, "{eight} vs {two}");
+    }
+
+    #[test]
+    fn roofline_ub_ranks_hardware_sanely() {
+        let s = by_name("steady").unwrap();
+        // Same shape on A800 beats L20 (≈2.6x the compute).
+        let mut a800 = deployment(4, 1, 16);
+        a800.cluster = ClusterSpec::a800_cluster();
+        assert!(roofline_rate_ub(&a800, &s) > roofline_rate_ub(&deployment(4, 1, 16), &s));
+        // PP taxes the bound: same GPUs, fewer (slower-per-batch)
+        // instances.
+        let pp2 = deployment(4, 2, 16); // 2 instances of 8 GPUs
+        let pp1 = deployment(4, 1, 16); // 4 instances of 4 GPUs
+        assert!(roofline_rate_ub(&pp2, &s) < roofline_rate_ub(&pp1, &s));
+        // Long-context traffic (heavy-tail) lowers the ceiling.
+        let heavy = by_name("heavy-tail").unwrap();
+        let d = deployment(4, 1, 32);
+        assert!(roofline_rate_ub(&d, &heavy) < roofline_rate_ub(&d, &s));
+    }
+
+    #[test]
+    fn link_tiers_native_plus_upgrades() {
+        let l20 = ClusterSpec::l20_cluster();
+        let quick = link_tiers(&l20, true);
+        assert_eq!(quick.len(), 1);
+        assert_eq!(quick[0].inter_link.name, "10GbE");
+        let full = link_tiers(&l20, false);
+        assert_eq!(full.len(), 3);
+        assert_eq!(full[0].inter_link.name, "10GbE");
+        assert!(full.iter().any(|c| c.inter_link.name == "400G-IB"));
+        assert!(full[1].name.contains('+'));
+        // The A800 cluster is natively RoCE: the RoCE tier dedups away.
+        let a800_tiers = link_tiers(&ClusterSpec::a800_cluster(), false);
+        assert_eq!(a800_tiers.len(), 2);
+    }
+
+    #[test]
+    fn candidate_carries_price_ceiling_and_shape() {
+        let s = by_name("steady").unwrap();
+        let cost = CostModel::default();
+        let c = Candidate::new(SystemKind::EcoServe, deployment(4, 1, 32), &cost, &s);
+        assert_eq!(c.shape(), "tp4x1 x8");
+        assert!(c.roofline_ub > 0.0);
+        assert!((c.price.total - cost.price_per_hour(&c.deployment)).abs() < 1e-12);
+        assert!(c.price.total > 30.0, "32 L20s cost real money: {:?}", c.price);
+    }
+}

@@ -1,0 +1,129 @@
+//! The deployment cost model: what a candidate cluster shape rents for,
+//! USD per hour, decomposed the way a capacity bill actually reads —
+//! GPUs, interconnect premium, host overhead.
+//!
+//! Rates live on the hardware catalog so the planner and any future
+//! consumer price identically: [`crate::perfmodel::GpuSpec::price_per_hour`]
+//! per GPU, [`crate::perfmodel::LinkSpec::price_per_gpu_hour`] per
+//! attached GPU for each fabric (intra-node switch + inter-node NIC/spine
+//! share), and [`crate::config::ClusterSpec::node_overhead_per_hour`] per
+//! occupied host. This is the denominator of the paper's headline metric:
+//! goodput per dollar on commodity clusters vs. FuDG hyper-clusters.
+
+use crate::config::Deployment;
+
+/// One deployment's hourly price, split by component. `total` is the sum
+/// of the parts; keep them additive so reports can show the bill.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostBreakdown {
+    /// GPU rental: `gpus_used × gpu.price_per_hour`.
+    pub gpu: f64,
+    /// Fabric premium: `gpus_used × (intra + inter).price_per_gpu_hour`.
+    pub interconnect: f64,
+    /// Host overhead: `nodes_used × node_overhead_per_hour`.
+    pub nodes: f64,
+    pub total: f64,
+}
+
+/// Prices deployments. A plain markup knob is the only state: the catalog
+/// rates are list prices, and a fleet with negotiated discounts (or a
+/// different margin model) scales every component uniformly.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    /// Uniform multiplier on every component (1.0 = catalog rates).
+    pub markup: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel { markup: 1.0 }
+    }
+}
+
+impl CostModel {
+    /// Hourly bill for `d`, component by component.
+    pub fn breakdown(&self, d: &Deployment) -> CostBreakdown {
+        let gpus = d.gpus_used as f64;
+        let gpu = gpus * d.cluster.gpu.price_per_hour * self.markup;
+        let interconnect = gpus
+            * (d.cluster.intra_link.price_per_gpu_hour
+                + d.cluster.inter_link.price_per_gpu_hour)
+            * self.markup;
+        let nodes = d.nodes_used() as f64 * d.cluster.node_overhead_per_hour * self.markup;
+        CostBreakdown { gpu, interconnect, nodes, total: gpu + interconnect + nodes }
+    }
+
+    /// Hourly bill for `d`, total only.
+    pub fn price_per_hour(&self, d: &Deployment) -> f64 {
+        self.breakdown(d).total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterSpec, Deployment};
+    use crate::perfmodel::{LinkSpec, ModelSpec};
+
+    fn l20_deployment(gpus_used: usize) -> Deployment {
+        let mut d = Deployment::paper_default(
+            ModelSpec::codellama_34b(),
+            ClusterSpec::l20_cluster(),
+        );
+        d.gpus_used = gpus_used;
+        d
+    }
+
+    #[test]
+    fn breakdown_components_sum_and_scale() {
+        let cost = CostModel::default();
+        let d32 = l20_deployment(32);
+        let b = cost.breakdown(&d32);
+        assert!((b.gpu + b.interconnect + b.nodes - b.total).abs() < 1e-12);
+        // 32 L20s at $1.05, 10GbE at $0.03/GPU, 4 hosts at $0.55.
+        assert!((b.gpu - 32.0 * 1.05).abs() < 1e-9);
+        assert!((b.interconnect - 32.0 * 0.03).abs() < 1e-9);
+        assert!((b.nodes - 4.0 * 0.55).abs() < 1e-9);
+        // Half the GPUs on half the hosts: strictly cheaper, and the GPU
+        // component halves exactly.
+        let b16 = cost.breakdown(&l20_deployment(16));
+        assert!(b16.total < b.total);
+        assert!((b16.gpu * 2.0 - b.gpu).abs() < 1e-9);
+    }
+
+    #[test]
+    fn premium_fabric_costs_more_on_identical_hardware() {
+        let cost = CostModel::default();
+        let commodity = l20_deployment(32);
+        let mut upgraded = commodity.clone();
+        upgraded.cluster.inter_link = LinkSpec::ib_400g();
+        let delta = cost.price_per_hour(&upgraded) - cost.price_per_hour(&commodity);
+        // The IB premium over 10GbE, per GPU, across 32 GPUs.
+        let want = 32.0 * (0.45 - 0.03);
+        assert!((delta - want).abs() < 1e-9, "delta {delta} want {want}");
+    }
+
+    #[test]
+    fn a800_nodes_price_above_l20_nodes() {
+        let cost = CostModel::default();
+        let l20 = l20_deployment(16);
+        let mut a800 = Deployment::paper_default(
+            ModelSpec::codellama_34b(),
+            ClusterSpec::a800_cluster(),
+        );
+        a800.gpus_used = 16;
+        assert!(cost.price_per_hour(&a800) > 2.0 * cost.price_per_hour(&l20));
+    }
+
+    #[test]
+    fn markup_scales_every_component() {
+        let list = CostModel::default();
+        let discounted = CostModel { markup: 0.8 };
+        let d = l20_deployment(32);
+        let a = list.breakdown(&d);
+        let b = discounted.breakdown(&d);
+        assert!((b.total - 0.8 * a.total).abs() < 1e-9);
+        assert!((b.gpu - 0.8 * a.gpu).abs() < 1e-9);
+        assert!((b.nodes - 0.8 * a.nodes).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,47 @@
+//! Capacity planner — goodput-per-dollar search over deployments.
+//!
+//! The measurement stack answers "how fast is this deployment"
+//! ([`crate::scenarios`] at a fixed rate, [`crate::frontier`] at the max
+//! sustainable rate). This subsystem closes the loop the paper's
+//! cost-effectiveness claim actually needs: *given my traffic and SLO,
+//! what cluster should I buy and how should I shape it?* DistServe
+//! (arXiv:2401.09670) shows the placement/parallelism search is where
+//! disaggregated systems win or lose; DynaServe (arXiv:2504.09285) argues
+//! unit sizing must be chosen per workload. `ecoserve plan` runs that
+//! search end to end:
+//!
+//! ```text
+//! ecoserve plan --scenario bursty --model llama-30b --target-rate 5
+//! ecoserve plan --quick --scenario bursty --gpus 32 --out BENCH_plan.json
+//! ecoserve plan --replay trace.jsonl --loop 600 --cluster all --level p99
+//! ecoserve plan --scenario steady --budget-s 30   # cap each cell's search
+//! ```
+//!
+//! * [`cost`] — the `CostModel`: USD/hr per candidate from the hardware
+//!   catalog's rates (GPU rental + fabric premium + host overhead).
+//! * [`candidates`] — the search space: GPU type × TP/PP × instance
+//!   count × inter-node link tier × serving system, each with a cheap
+//!   roofline ceiling on sustainable rate
+//!   ([`candidates::roofline_rate_ub`]).
+//! * [`search`] — cheapest-first waves through [`crate::frontier`]'s
+//!   cell search (one shared bracket+bisect core), with sound dominance
+//!   pruning: a candidate whose roofline ceiling is already delivered by
+//!   a no-more-expensive measured cell is never simulated.
+//! * [`report`] — the plan table and the schema-versioned
+//!   `BENCH_plan.json` CI uploads next to `BENCH_goodput.json`.
+//!
+//! The answers: the Pareto frontier of $/hr vs. goodput, the best
+//! goodput-per-dollar config, and (with `--target-rate`) the cheapest
+//! config sustaining the target.
+
+pub mod candidates;
+pub mod cost;
+pub mod report;
+pub mod search;
+
+pub use candidates::{enumerate_candidates, link_tiers, roofline_rate_ub, Candidate};
+pub use cost::{CostBreakdown, CostModel};
+pub use report::{plan_to_json, render_plan_table};
+pub use search::{
+    dominated_by, pareto_indices, run_plan, run_plan_on, PlanCell, PlanConfig, PlanOutcome,
+};

@@ -1,0 +1,329 @@
+//! Renderings of a finished plan: the human table and the
+//! schema-versioned `BENCH_plan.json` CI uploads next to the other BENCH
+//! artifacts. The JSON shares [`crate::scenarios::SCHEMA_VERSION`] with
+//! the scenario and frontier reports; keep changes additive.
+
+use std::time::Duration;
+
+use crate::scenarios::{replay_to_json, SCHEMA_VERSION};
+use crate::util::json::Json;
+
+use super::search::{PlanCell, PlanConfig, PlanOutcome};
+
+fn cell_to_json(cell: &PlanCell) -> Json {
+    let cand = &cell.candidate;
+    let d = &cand.deployment;
+    let mut fields = vec![
+        ("system", Json::str(cand.system.label())),
+        ("gpu", Json::str(d.cluster.gpu.name)),
+        ("cluster", Json::str(d.cluster.name)),
+        ("intra_link", Json::str(d.cluster.intra_link.name)),
+        ("inter_link", Json::str(d.cluster.inter_link.name)),
+        ("tp", Json::num(d.tp as f64)),
+        ("pp", Json::num(d.pp as f64)),
+        ("instances", Json::num(d.num_instances() as f64)),
+        ("gpus", Json::num(d.gpus_used as f64)),
+        ("nodes", Json::num(d.nodes_used() as f64)),
+        ("price_per_hour", Json::num(cand.price.total)),
+        (
+            "price",
+            Json::obj(vec![
+                ("gpu", Json::num(cand.price.gpu)),
+                ("interconnect", Json::num(cand.price.interconnect)),
+                ("nodes", Json::num(cand.price.nodes)),
+            ]),
+        ),
+        ("roofline_ub_rps", Json::num(cand.roofline_ub)),
+        ("pruned", Json::Bool(cell.pruned())),
+        ("pruned_by", Json::opt_num(cell.pruned_by.map(|i| i as f64))),
+    ];
+    if !cell.pruned() {
+        fields.extend([
+            ("max_rate_rps", Json::num(cell.max_rate)),
+            ("goodput_rps", Json::num(cell.goodput_rps)),
+            ("goodput_per_dollar", Json::num(cell.value())),
+            ("attainment_at_max", Json::num(cell.attainment)),
+            ("saturated", Json::Bool(cell.saturated)),
+            ("budget_truncated", Json::Bool(cell.truncated)),
+            ("probes", Json::num(cell.probes as f64)),
+            ("sim_events", Json::num(cell.events as f64)),
+            ("wall_s", Json::num(cell.wall.as_secs_f64())),
+        ]);
+    }
+    Json::obj(fields)
+}
+
+/// The full `BENCH_plan.json` document.
+pub fn plan_to_json(outcome: &PlanOutcome, cfg: &PlanConfig, wall: Duration) -> Json {
+    let idx = |i: Option<usize>| Json::opt_num(i.map(|v| v as f64));
+    let mut scenario_fields = vec![
+        ("name", Json::str(outcome.scenario.name)),
+        ("summary", Json::str(outcome.scenario.summary)),
+    ];
+    if let Some(block) = replay_to_json(&outcome.scenario) {
+        scenario_fields.push(block);
+    }
+    Json::obj(vec![
+        ("bench", Json::str("ecoserve-plan")),
+        ("schema_version", Json::num(SCHEMA_VERSION)),
+        ("level", Json::str(outcome.level.label())),
+        ("quick", Json::Bool(cfg.quick)),
+        ("seed", Json::num(cfg.seed as f64)),
+        ("model", Json::str(cfg.model.name)),
+        ("scenario", Json::obj(scenario_fields)),
+        ("target_rate_rps", Json::opt_num(outcome.target_rate)),
+        ("budget_s", Json::opt_num(cfg.budget_s)),
+        ("candidates", Json::arr(outcome.cells.iter().map(cell_to_json))),
+        (
+            "pareto",
+            Json::arr(outcome.pareto.iter().map(|&i| Json::num(i as f64))),
+        ),
+        ("best_value", idx(outcome.best_value)),
+        ("cheapest_meeting_target", idx(outcome.cheapest_meeting_target)),
+        ("wall_s", Json::num(wall.as_secs_f64())),
+    ])
+}
+
+/// Human-readable plan table, cheapest row first.
+pub fn render_plan_table(outcome: &PlanOutcome) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "--- capacity plan: '{}' @ {} per-class attainment{} ---\n",
+        outcome.scenario.name,
+        outcome.level.label(),
+        match outcome.target_rate {
+            Some(t) => format!(" (target {t:.2} req/s)"),
+            None => String::new(),
+        },
+    ));
+    out.push_str(&format!(
+        "{:<10} {:<6} {:>10} {:<22} {:>8} {:>8} {:>10} {:>9}  {}\n",
+        "system", "gpu", "shape", "links", "$/hr", "ub r/s", "goodput/s", "good/$", "note"
+    ));
+    let pareto: std::collections::BTreeSet<usize> = outcome.pareto.iter().copied().collect();
+    for (i, cell) in outcome.cells.iter().enumerate() {
+        let cand = &cell.candidate;
+        let d = &cand.deployment;
+        let mut note = String::new();
+        if pareto.contains(&i) {
+            note.push_str("pareto ");
+        }
+        if outcome.best_value == Some(i) {
+            note.push_str("best-$ ");
+        }
+        if outcome.cheapest_meeting_target == Some(i) {
+            note.push_str("target ");
+        }
+        if cell.saturated {
+            note.push('+');
+        }
+        if cell.truncated {
+            note.push('~');
+        }
+        let (goodput, value) = if cell.pruned() {
+            ("--".to_string(), format!("pruned<-{}", cell.pruned_by.unwrap()))
+        } else {
+            (format!("{:.2}", cell.goodput_rps), format!("{:.4}", cell.value()))
+        };
+        out.push_str(&format!(
+            "{:<10} {:<6} {:>10} {:<22} {:>8.2} {:>8.1} {:>10} {:>9}  {}\n",
+            cand.system.label(),
+            d.cluster.gpu.name,
+            cand.shape(),
+            format!("{}/{}", d.cluster.intra_link.name, d.cluster.inter_link.name),
+            cand.price.total,
+            cand.roofline_ub,
+            goodput,
+            value,
+            note.trim_end(),
+        ));
+    }
+    if let Some(i) = outcome.best_value {
+        let c = &outcome.cells[i];
+        out.push_str(&format!(
+            "  best goodput/$: {} {} on {} — {:.2} req/s at ${:.2}/hr ({:.4} (req/s)/($/hr))\n",
+            c.candidate.system.label(),
+            c.candidate.shape(),
+            c.candidate.deployment.cluster.name,
+            c.goodput_rps,
+            c.candidate.price.total,
+            c.value(),
+        ));
+    }
+    match (outcome.target_rate, outcome.cheapest_meeting_target) {
+        (Some(t), Some(i)) => {
+            let c = &outcome.cells[i];
+            out.push_str(&format!(
+                "  cheapest >= {t:.2} req/s: {} {} on {} at ${:.2}/hr (sustains {:.2})\n",
+                c.candidate.system.label(),
+                c.candidate.shape(),
+                c.candidate.deployment.cluster.name,
+                c.candidate.price.total,
+                c.max_rate,
+            ));
+        }
+        (Some(t), None) => {
+            out.push_str(&format!(
+                "  no measured config sustains {t:.2} req/s — raise --gpus or relax --level\n"
+            ));
+        }
+        (None, _) => {}
+    }
+    let pruned = outcome.cells.iter().filter(|c| c.pruned()).count();
+    if pruned > 0 {
+        out.push_str(&format!(
+            "  ({pruned} candidate(s) pruned by price x roofline dominance, never simulated)\n"
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterSpec, Deployment, SystemKind};
+    use crate::metrics::Attainment;
+    use crate::perfmodel::ModelSpec;
+    use crate::planner::candidates::Candidate;
+    use crate::planner::cost::CostModel;
+    use crate::planner::search::pareto_indices;
+    use crate::scenarios::by_name;
+
+    /// Synthetic plan — report tests must not pay for simulation.
+    fn synthetic() -> (PlanOutcome, PlanConfig) {
+        let scenario = by_name("bursty").unwrap();
+        let cost = CostModel::default();
+        let cand = |system: SystemKind, gpus: usize| {
+            let mut d = Deployment::paper_default(
+                ModelSpec::llama_30b(),
+                ClusterSpec::l20_cluster(),
+            );
+            d.gpus_used = gpus;
+            Candidate::new(system, d, &cost, &scenario)
+        };
+        let measured = |c: Candidate, goodput: f64| PlanCell {
+            candidate: c,
+            pruned_by: None,
+            max_rate: goodput / 0.9,
+            goodput_rps: goodput,
+            attainment: 0.91,
+            saturated: false,
+            truncated: false,
+            probes: 7,
+            events: 120_000,
+            wall: Duration::from_millis(900),
+        };
+        let cells = vec![
+            measured(cand(SystemKind::Vllm, 8), 1.2),
+            measured(cand(SystemKind::EcoServe, 8), 2.0),
+            PlanCell::skipped(cand(SystemKind::DistServe, 16), 1),
+            measured(cand(SystemKind::EcoServe, 32), 6.5),
+        ];
+        let pareto = pareto_indices(&cells);
+        let mut cfg = PlanConfig::quick(scenario.clone(), ModelSpec::llama_30b());
+        cfg.target_rate = Some(2.0);
+        let outcome = PlanOutcome {
+            scenario,
+            level: Attainment::P90,
+            target_rate: cfg.target_rate,
+            cells,
+            pareto,
+            best_value: Some(1),
+            cheapest_meeting_target: Some(1),
+            wall: Duration::from_secs(30),
+        };
+        (outcome, cfg)
+    }
+
+    #[test]
+    fn bench_plan_json_honors_the_contract() {
+        let (outcome, cfg) = synthetic();
+        let text = plan_to_json(&outcome, &cfg, Duration::from_secs(31)).to_string();
+        let back = Json::parse(&text).expect("BENCH_plan must be valid JSON");
+        assert_eq!(back.get("bench").unwrap().as_str(), Some("ecoserve-plan"));
+        assert_eq!(
+            back.get("schema_version").unwrap().as_f64(),
+            Some(SCHEMA_VERSION)
+        );
+        assert_eq!(back.get("level").unwrap().as_str(), Some("P90"));
+        assert_eq!(back.get("quick").unwrap().as_bool(), Some(true));
+        assert_eq!(back.get("model").unwrap().as_str(), Some("Llama-30B"));
+        assert_eq!(
+            back.path(&["scenario", "name"]).unwrap().as_str(),
+            Some("bursty")
+        );
+        assert_eq!(back.get("target_rate_rps").unwrap().as_f64(), Some(2.0));
+        assert_eq!(back.get("budget_s"), Some(&Json::Null));
+        assert_eq!(back.get("best_value").unwrap().as_i64(), Some(1));
+        assert_eq!(
+            back.get("cheapest_meeting_target").unwrap().as_i64(),
+            Some(1)
+        );
+
+        let cands = back.get("candidates").unwrap().as_arr().unwrap();
+        assert_eq!(cands.len(), 4);
+        for c in cands {
+            for key in [
+                "system", "gpu", "cluster", "intra_link", "inter_link", "tp", "pp",
+                "instances", "gpus", "nodes", "price_per_hour", "price",
+                "roofline_ub_rps", "pruned", "pruned_by",
+            ] {
+                assert!(c.get(key).is_some(), "missing {key}");
+            }
+            let b = c.get("price").unwrap();
+            let total = c.get("price_per_hour").unwrap().as_f64().unwrap();
+            let sum = b.get("gpu").unwrap().as_f64().unwrap()
+                + b.get("interconnect").unwrap().as_f64().unwrap()
+                + b.get("nodes").unwrap().as_f64().unwrap();
+            assert!((sum - total).abs() < 1e-9, "breakdown must sum to total");
+        }
+        // Measured cells carry the measurement block; pruned cells don't.
+        let measured = &cands[1];
+        for key in [
+            "max_rate_rps", "goodput_rps", "goodput_per_dollar", "attainment_at_max",
+            "saturated", "budget_truncated", "probes", "sim_events", "wall_s",
+        ] {
+            assert!(measured.get(key).is_some(), "missing {key}");
+        }
+        let pruned = &cands[2];
+        assert_eq!(pruned.get("pruned").unwrap().as_bool(), Some(true));
+        assert_eq!(pruned.get("pruned_by").unwrap().as_i64(), Some(1));
+        assert!(pruned.get("goodput_rps").is_none());
+
+        // The Pareto set indexes measured cells in ascending price with
+        // strictly rising goodput.
+        let front: Vec<usize> = back
+            .get("pareto")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|j| j.as_usize().unwrap())
+            .collect();
+        assert_eq!(front, vec![1, 3], "vLLM at equal price is dominated");
+    }
+
+    #[test]
+    fn plan_table_flags_winners_and_pruned_rows() {
+        let (outcome, _) = synthetic();
+        let table = render_plan_table(&outcome);
+        assert!(table.contains("EcoServe"));
+        assert!(table.contains("vLLM"));
+        assert!(table.contains("pruned<-1"));
+        assert!(table.contains("best-$"));
+        assert!(table.contains("pareto"));
+        assert!(table.contains("target"));
+        assert!(table.contains("best goodput/$"));
+        assert!(table.contains("cheapest >= 2.00 req/s"));
+        assert!(table.contains("1 candidate(s) pruned"));
+    }
+
+    #[test]
+    fn unmet_target_is_called_out() {
+        let (mut outcome, _) = synthetic();
+        outcome.target_rate = Some(50.0);
+        outcome.cheapest_meeting_target = None;
+        let table = render_plan_table(&outcome);
+        assert!(table.contains("no measured config sustains 50.00"));
+    }
+}

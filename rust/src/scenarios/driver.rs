@@ -228,7 +228,13 @@ pub fn run_system_variant(
                 if req.arrival >= warmup && req.arrival < duration {
                     let k = scenario.class_of(req.id);
                     let d = &scenario.classes[k].dataset;
-                    monitor.track(req.id, req.arrival, SloSpec::new(d.slo_ttft, d.slo_tpot), k);
+                    monitor.track(
+                        req.id,
+                        req.arrival,
+                        SloSpec::new(d.slo_ttft, d.slo_tpot),
+                        k,
+                        req.output_len,
+                    );
                 }
             }
             Collector::with_monitor(monitor)

@@ -50,6 +50,14 @@ impl Json {
         Json::Num(x.into())
     }
 
+    /// Optional numeric report field: `Some(x)` → number, `None` → null.
+    pub fn opt_num<T: Into<f64>>(x: Option<T>) -> Json {
+        match x {
+            Some(v) => Json::num(v),
+            None => Json::Null,
+        }
+    }
+
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }

@@ -59,6 +59,11 @@ pub const FORMAT_VERSION: f64 = 1.0;
 /// would turn into a giant allocation instead of a parse error.
 pub const MAX_INFERRED_CLASSES: usize = 64;
 
+/// Cap on `--loop` tiling copies ([`ReplayTrace::tiled`]): a horizon
+/// large enough to exceed this is a typo (`--loop 1e30`), and an
+/// uncapped copy count would allocate `repeats × len` requests.
+pub const MAX_TILE_REPEATS: usize = 10_000;
+
 /// Leak a small string into a `&'static str`. Replay class and scenario
 /// names feed APIs built around `&'static str` registry literals; logs
 /// are loaded O(1) times per process, so the leak is bounded and cheap.
@@ -409,6 +414,54 @@ impl ReplayTrace {
         out
     }
 
+    /// Tile the log end-to-end `repeats` times: copy `k` replays the
+    /// recorded arrivals shifted by `k · duration`, with lengths and
+    /// class assignments untouched, so a short capture drives an
+    /// arbitrarily long horizon while preserving the recorded burst
+    /// structure (`--loop`). The native rate is preserved (`repeats·n`
+    /// requests over `repeats·duration` seconds); the warm-up prefix
+    /// stays the original one — later tiles are steady state by
+    /// construction. `repeats == 1` is the identity; requests are
+    /// clamped at [`MAX_TILE_REPEATS`] copies so a typo'd horizon (or a
+    /// saturated float cast) caps the allocation instead of exhausting
+    /// memory.
+    pub fn tiled(&self, repeats: usize) -> ReplayTrace {
+        let repeats = repeats.clamp(1, MAX_TILE_REPEATS);
+        if repeats == 1 {
+            return self.clone();
+        }
+        let total = repeats as f64 * self.duration;
+        let mut records = Vec::with_capacity(self.records.len() * repeats);
+        for k in 0..repeats {
+            let shift = k as f64 * self.duration;
+            for rec in &self.records {
+                // The clamp only ever acts on a record sitting exactly on
+                // the recorded horizon whose shifted sum rounds an ulp past
+                // `total` — everything else round-trips bit-for-bit.
+                let arrival = (rec.arrival + shift).min(total);
+                records.push(ReplayRecord { arrival, ..rec.clone() });
+            }
+        }
+        ReplayTrace {
+            records,
+            classes: self.classes.clone(),
+            duration: total,
+            warmup: self.warmup,
+            source: format!("{} x{repeats}", self.source),
+        }
+    }
+
+    /// [`ReplayTrace::tiled`] to at least `horizon` seconds: the smallest
+    /// whole number of copies whose span covers it. Non-finite or
+    /// not-longer horizons are the identity (the CLI rejects them before
+    /// this); the copy count is capped at [`MAX_TILE_REPEATS`].
+    pub fn loop_to(&self, horizon: f64) -> ReplayTrace {
+        if !horizon.is_finite() || !(horizon > self.duration) {
+            return self.clone();
+        }
+        self.tiled((horizon / self.duration).ceil() as usize)
+    }
+
     /// Serialize back to the wire format (header + one record per line).
     pub fn render(&self) -> String {
         render_log(
@@ -601,6 +654,58 @@ mod tests {
         let native = t.requests_at(t.native_rate(), t.duration());
         for (req, rec) in native.iter().zip(t.records()) {
             assert_eq!(req.arrival.to_bits(), rec.arrival.to_bits());
+        }
+    }
+
+    #[test]
+    fn tiling_shifts_copies_and_preserves_rate_and_classes() {
+        let text = "{\"ecoserve_trace\":1,\"duration_s\":10,\"warmup_s\":2,\"classes\":\
+                    [{\"name\":\"chat\",\"dataset\":\"sharegpt\"},\
+                     {\"name\":\"batch\",\"dataset\":\"longbench\"}]}\n\
+                    {\"arrival_s\":1.5,\"input_len\":100,\"output_len\":50,\"class\":0}\n\
+                    {\"arrival_s\":7.25,\"input_len\":2000,\"output_len\":20,\"class\":1}\n";
+        let t = ReplayTrace::parse_named(text, "unit").unwrap();
+        let t3 = t.tiled(3);
+        assert_eq!(t3.len(), 6);
+        assert_eq!(t3.duration(), 30.0);
+        assert_eq!(t3.warmup(), t.warmup());
+        assert_eq!(t3.class_counts(), vec![3, 3]);
+        assert!((t3.native_rate() - t.native_rate()).abs() < 1e-12);
+        let arrivals: Vec<f64> = t3.records().iter().map(|r| r.arrival).collect();
+        assert_eq!(arrivals, vec![1.5, 7.25, 11.5, 17.25, 21.5, 27.25]);
+        // Copies carry the same lengths and log-assigned classes.
+        assert_eq!(t3.records()[2].input_len, 100);
+        assert_eq!(t3.records()[3].class, 1);
+        assert_eq!(t3.class_of(4), 0);
+        assert_eq!(t3.source(), "unit x3");
+        // tiled(1) and a loop inside the recorded span are the identity.
+        assert_eq!(t.tiled(1).records(), t.records());
+        assert_eq!(t.loop_to(5.0).records(), t.records());
+        assert_eq!(t.loop_to(10.0).duration(), 10.0);
+        // loop_to rounds up to whole copies.
+        assert_eq!(t.loop_to(25.0).duration(), 30.0);
+        assert_eq!(t.loop_to(25.0).len(), 6);
+        // Absurd horizons cap at MAX_TILE_REPEATS instead of allocating
+        // unboundedly (a saturated float cast lands on usize::MAX).
+        assert_eq!(t.tiled(usize::MAX).len(), 2 * MAX_TILE_REPEATS);
+        assert_eq!(t.loop_to(1e300).len(), 2 * MAX_TILE_REPEATS);
+        // Non-finite horizons are the identity (the CLI rejects them).
+        assert_eq!(t.loop_to(f64::INFINITY).records(), t.records());
+        assert_eq!(t.loop_to(f64::NAN).records(), t.records());
+    }
+
+    #[test]
+    fn tiled_log_renders_and_parses_round_trip() {
+        let text = "{\"ecoserve_trace\":1,\"duration_s\":8,\"warmup_s\":1}\n\
+                    {\"arrival_s\":0.3333333333333333,\"input_len\":10,\"output_len\":5}\n\
+                    {\"arrival_s\":6.1,\"input_len\":20,\"output_len\":7}\n";
+        let tiled = ReplayTrace::parse_named(text, "unit").unwrap().tiled(4);
+        let back = ReplayTrace::parse_named(&tiled.render(), "unit x4").unwrap();
+        assert_eq!(back.records(), tiled.records());
+        assert_eq!(back.duration(), tiled.duration());
+        assert_eq!(back.warmup(), tiled.warmup());
+        for (a, b) in back.records().iter().zip(tiled.records()) {
+            assert_eq!(a.arrival.to_bits(), b.arrival.to_bits());
         }
     }
 

@@ -158,6 +158,47 @@ fn record_then_replay_round_trips_bit_for_bit() {
     );
 }
 
+/// `--loop` on the committed fixture: tiling the 60s capture to a longer
+/// horizon preserves every recorded arrival bit-for-bit inside each tile,
+/// keeps the native rate and class mix, and round-trips through the wire
+/// format unchanged.
+#[test]
+fn fixture_loop_tiles_round_trip_through_the_wire_format() {
+    let base = ReplayTrace::from_file(Path::new(FIXTURE)).unwrap();
+    let tiled = base.loop_to(170.0); // 60s capture -> 3 tiles
+    assert_eq!(tiled.duration(), 180.0);
+    assert_eq!(tiled.len(), 3 * base.len());
+    assert!((tiled.native_rate() - base.native_rate()).abs() < 1e-12);
+    assert_eq!(tiled.warmup(), base.warmup());
+    let counts = base.class_counts();
+    assert_eq!(
+        tiled.class_counts(),
+        counts.iter().map(|&c| 3 * c).collect::<Vec<_>>()
+    );
+    // Tile k is the capture shifted by k·60s, arrivals bit-for-bit where
+    // the shift is exact, classes and lengths always.
+    for (i, rec) in tiled.records().iter().enumerate() {
+        let src = &base.records()[i % base.len()];
+        let shift = (i / base.len()) as f64 * base.duration();
+        assert_eq!(rec.arrival.to_bits(), (src.arrival + shift).to_bits());
+        assert_eq!(rec.input_len, src.input_len);
+        assert_eq!(rec.output_len, src.output_len);
+        assert_eq!(rec.class, src.class);
+    }
+    // Wire-format round trip of the tiled log.
+    let back = ReplayTrace::parse_named(&tiled.render(), "tiled").unwrap();
+    assert_eq!(back.records(), tiled.records());
+    assert_eq!(back.duration(), tiled.duration());
+
+    // And the tiled log is a runnable scenario with the same class names.
+    let scenario = Scenario::from_replay(tiled);
+    assert_eq!(scenario.classes.len(), 2);
+    assert_eq!(scenario.classes[0].name, "interactive");
+    assert!((scenario.duration - 180.0).abs() < 1e-12);
+    let reqs = scenario.build_trace(0, scenario.default_rate);
+    assert_eq!(reqs.len(), 3 * base.len());
+}
+
 /// Time-warped probes preserve the offered-rate contract on the real
 /// fixture: warping to rate r yields (about) r × window requests inside
 /// the scored window, at every probe rate the frontier would visit.
