@@ -19,9 +19,13 @@
 
 use std::collections::{HashMap, VecDeque};
 
+use super::BaselineChurn;
 use crate::config::{Deployment, SystemParams};
 use crate::metrics::Collector;
-use crate::sim::{Event, EventScheduler, Network, SimInstance, SimReq, System};
+use crate::sim::{
+    ChurnTelemetry, Event, EventScheduler, FaultEvent, Health, Network, SimInstance, SimReq,
+    System,
+};
 use crate::workload::Request;
 
 const EPS: f64 = 1e-9;
@@ -66,6 +70,12 @@ pub struct FudgSystem {
     /// Scratch collector for prefill-side bookkeeping (first token is
     /// recorded on the decode side per §3.3).
     scratch: Collector,
+    /// Native fault handling (crashes lose resident work).
+    pub churn: BaselineChurn,
+    /// Interconnect slowdown under an active link-degrade fault (1.0 =
+    /// healthy). FuDG pays this on every KV migration; the co-located
+    /// systems do not — the fragility the churn scenarios expose.
+    link_factor: f64,
 }
 
 impl FudgSystem {
@@ -132,6 +142,8 @@ impl FudgSystem {
             kv_bytes_per_token: deployment.model.kv_bytes_per_token(),
             cross_node_transfers: 0,
             scratch: Collector::new(),
+            churn: BaselineChurn::new(n),
+            link_factor: 1.0,
         }
     }
 
@@ -144,7 +156,8 @@ impl FudgSystem {
     fn pick_decode_dest(&self, req: &Request, src: usize) -> Option<usize> {
         let margin = self.params.admission_margin;
         let candidates = self.decode_ids.iter().copied().filter(|&d| {
-            self.instances[d].kv_room_for(req.input_len, margin)
+            self.instances[d].health == Health::Up
+                && self.instances[d].kv_room_for(req.input_len, margin)
         });
         match self.mode {
             FudgMode::DistServe => {
@@ -173,7 +186,9 @@ impl FudgSystem {
         // Reserve decode-side KV at transfer start so the room is there on
         // arrival (prompt + margin).
         self.instances[dest].kv_used += req.input_len;
-        let bytes = self.kv_bytes_per_token * req.input_len as f64;
+        // A degraded interconnect stretches the transfer: under the FIFO
+        // link model, scaling bytes is scaling time.
+        let bytes = self.kv_bytes_per_token * req.input_len as f64 * self.link_factor;
         let (src_node, dst_node) = (self.node_of[src], self.node_of[dest]);
         let transfer = match self.mode {
             FudgMode::MoonCake => {
@@ -214,7 +229,7 @@ impl FudgSystem {
                 break;
             }
             let inst = &mut self.instances[pi];
-            if inst.idle() && inst.prefill_queue.is_empty() {
+            if inst.health == Health::Up && inst.idle() && inst.prefill_queue.is_empty() {
                 let mut count = 0;
                 let mut tokens = 0;
                 while let Some(req) = self.prefill_backlog.front() {
@@ -300,6 +315,56 @@ impl System for FudgSystem {
                 sched.at(done, Event::InstanceWake { instance: idx });
             }
         }
+    }
+
+    fn on_fault(
+        &mut self,
+        fault: FaultEvent,
+        now: f64,
+        sched: &mut EventScheduler,
+        _metrics: &mut Collector,
+    ) {
+        match fault {
+            FaultEvent::LinkDegrade { factor } => {
+                self.churn.telemetry.faults += 1;
+                self.link_factor = factor;
+                return;
+            }
+            FaultEvent::LinkRestore => {
+                self.churn.telemetry.faults += 1;
+                self.link_factor = 1.0;
+                return;
+            }
+            _ => {}
+        }
+        let wake = self.churn.on_fault(&mut self.instances, fault, now);
+        if let FaultEvent::InstanceDown { instance } = fault {
+            // KV already in flight toward the dead decode instance has
+            // nowhere to land: its reservation died with the KV cache, so
+            // the transfer is dropped (the stale TransferDone is ignored).
+            let doomed: Vec<u64> = self
+                .transfers
+                .iter()
+                .filter(|(_, t)| t.dest == instance)
+                .map(|(id, _)| *id)
+                .collect();
+            for id in doomed {
+                self.transfers.remove(&id);
+                self.churn.telemetry.lost += 1;
+            }
+        }
+        if let Some(instance) = wake {
+            sched.at(now, Event::InstanceWake { instance });
+            // A restored decode instance has fresh KV room: staged
+            // transfers can move again (a wake alone only re-dispatches).
+            if !self.is_prefill_instance(instance) {
+                self.retry_staged(now, sched);
+            }
+        }
+    }
+
+    fn churn_telemetry(&self) -> Option<ChurnTelemetry> {
+        self.churn.telemetry()
     }
 
     fn on_transfer_done(&mut self, transfer: u64, now: f64, sched: &mut EventScheduler,
@@ -412,6 +477,61 @@ mod tests {
             "ttft {} should include ~{}s transfer",
             rec.ttft(),
             transfer
+        );
+    }
+
+    #[test]
+    fn decode_crash_loses_in_flight_work_but_conserves_accounting() {
+        use crate::sim::{run_faulted, Fault, FaultKind, FaultSchedule};
+        let d = deployment(ModelSpec::codellama_34b());
+        let mut sys = FudgSystem::new(&d, FudgMode::MoonCake, 3, SystemParams::default());
+        let victim = sys.decode_ids[0];
+        let trace = TraceGenerator::new(Dataset::sharegpt(), 5).poisson(4.0, 60.0);
+        let n = trace.len();
+        let faults = FaultSchedule::new(vec![Fault {
+            at: 20.0,
+            kind: FaultKind::Crash { instance: victim, down_s: 15.0 },
+        }])
+        .unwrap();
+        let mut m = Collector::new();
+        run_faulted(&mut sys, trace, &faults.events(&d), 10_000.0, &mut m, false);
+        assert_eq!(sys.churn.telemetry.downs, 1);
+        assert_eq!(sys.instances[victim].health, Health::Up, "restored");
+        // No re-routing: everything resident (or in flight toward) the
+        // victim is lost, and nothing else leaks.
+        assert_eq!(m.completed().len() + sys.churn.telemetry.lost as usize, n);
+        assert_eq!(m.in_flight(), sys.churn.telemetry.lost as usize);
+    }
+
+    #[test]
+    fn link_degrade_inflates_mooncake_ttft() {
+        use crate::sim::{run_faulted, Fault, FaultKind, FaultSchedule};
+        use crate::util::percentile;
+        let d = deployment(ModelSpec::llama_30b());
+        let trace = TraceGenerator::new(Dataset::sharegpt(), 6).poisson(3.0, 60.0);
+
+        let mut base = FudgSystem::new(&d, FudgMode::MoonCake, 3, SystemParams::default());
+        let mut m0 = Collector::new();
+        run(&mut base, trace.clone(), 10_000.0, &mut m0);
+
+        let mut sys = FudgSystem::new(&d, FudgMode::MoonCake, 3, SystemParams::default());
+        let faults = FaultSchedule::new(vec![Fault {
+            at: 0.0,
+            kind: FaultKind::LinkDegrade { factor: 8.0, for_s: 600.0 },
+        }])
+        .unwrap();
+        let mut m1 = Collector::new();
+        run_faulted(&mut sys, trace, &faults.events(&d), 10_000.0, &mut m1, false);
+
+        let p90 = |m: &Collector| {
+            let v: Vec<f64> = m.completed().iter().map(|r| r.ttft()).collect();
+            percentile(&v, 90.0)
+        };
+        assert!(
+            p90(&m1) > p90(&m0),
+            "8x slower interconnect must hurt TTFT: {} vs {}",
+            p90(&m1),
+            p90(&m0)
         );
     }
 

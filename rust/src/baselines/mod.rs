@@ -19,12 +19,14 @@ pub use fudg::{FudgMode, FudgSystem};
 pub use sarathi::SarathiSystem;
 pub use vllm::VllmSystem;
 
-use crate::sim::SimInstance;
+use crate::sim::{ChurnTelemetry, FaultEvent, Health, SimInstance};
 use crate::workload::Request;
 
 /// Least-outstanding-load routing used by both NoDG baselines: pick the
-/// instance with the smallest (KV in use + queued prompt tokens) that has
-/// KV room; `None` when every instance is at capacity.
+/// healthy instance with the smallest (KV in use + queued prompt tokens)
+/// that has KV room; `None` when every instance is at capacity. The health
+/// filter models the load balancer's liveness probe — even baseline stacks
+/// stop sending traffic to a dead replica.
 pub fn least_loaded_with_room(
     instances: &[SimInstance],
     req: &Request,
@@ -32,11 +34,76 @@ pub fn least_loaded_with_room(
 ) -> Option<usize> {
     instances
         .iter()
-        .filter(|i| i.kv_room_for(req.input_len, margin))
+        .filter(|i| i.health == Health::Up && i.kv_room_for(req.input_len, margin))
         .min_by_key(|i| {
             i.kv_used + i.prefill_queue.iter().map(|r| r.req.input_len).sum::<usize>()
         })
         .map(|i| i.id)
+}
+
+/// Native fault handling shared by the baselines: no coordinator-level
+/// re-routing — everything resident on a crashed replica is lost, the
+/// restored replica simply rejoins the pool, preemption notices are
+/// ignored, and recovery latency is the raw outage duration. This is the
+/// (weaker) recovery the paper's comparison systems get so churn scenarios
+/// stay a fair fight.
+#[derive(Debug, Default)]
+pub struct BaselineChurn {
+    pub telemetry: ChurnTelemetry,
+    down_since: Vec<Option<f64>>,
+}
+
+impl BaselineChurn {
+    pub fn new(n: usize) -> Self {
+        BaselineChurn { telemetry: ChurnTelemetry::default(), down_since: vec![None; n] }
+    }
+
+    /// Apply one fault event. Returns the instance to wake, if the event
+    /// restored one.
+    pub fn on_fault(
+        &mut self,
+        instances: &mut [SimInstance],
+        fault: FaultEvent,
+        now: f64,
+    ) -> Option<usize> {
+        self.telemetry.faults += 1;
+        match fault {
+            FaultEvent::InstanceDown { instance } => {
+                self.telemetry.downs += 1;
+                if instance >= instances.len() || instances[instance].health == Health::Down {
+                    return None;
+                }
+                let lost = instances[instance].crash();
+                self.telemetry.lost += lost.len() as u64;
+                self.down_since[instance] = Some(now);
+                None
+            }
+            FaultEvent::InstanceUp { instance } => {
+                if instance >= instances.len() || instances[instance].health != Health::Down {
+                    return None;
+                }
+                instances[instance].restore();
+                if let Some(t0) = self.down_since[instance].take() {
+                    self.telemetry.recovery_s_sum += now - t0;
+                    self.telemetry.recoveries += 1;
+                }
+                Some(instance)
+            }
+            FaultEvent::PreemptNotice { .. } => {
+                self.telemetry.notices += 1;
+                None
+            }
+            FaultEvent::LinkDegrade { .. } | FaultEvent::LinkRestore => None,
+        }
+    }
+
+    pub fn telemetry(&self) -> Option<ChurnTelemetry> {
+        if self.telemetry.any() {
+            Some(self.telemetry.clone())
+        } else {
+            None
+        }
+    }
 }
 
 #[cfg(test)]
@@ -79,5 +146,34 @@ mod tests {
         assert_eq!(least_loaded_with_room(&insts, &req(64), 0), Some(1));
         insts[1].kv_used = insts[1].kv_capacity;
         assert_eq!(least_loaded_with_room(&insts, &req(64), 0), None);
+    }
+
+    #[test]
+    fn skips_down_instances() {
+        let mut insts = instances(2);
+        insts[0].health = Health::Down;
+        assert_eq!(least_loaded_with_room(&insts, &req(64), 0), Some(1));
+    }
+
+    #[test]
+    fn baseline_churn_loses_residents_and_times_the_outage() {
+        let mut insts = instances(2);
+        insts[1].admit(req(100));
+        let mut churn = BaselineChurn::new(2);
+        assert!(churn
+            .on_fault(&mut insts, FaultEvent::InstanceDown { instance: 1 }, 10.0)
+            .is_none());
+        assert_eq!(insts[1].health, Health::Down);
+        assert_eq!(churn.telemetry.lost, 1);
+        assert_eq!(insts[1].kv_used, 0);
+        // Duplicate Down (merged windows are defensive-guarded) is a no-op.
+        churn.on_fault(&mut insts, FaultEvent::InstanceDown { instance: 1 }, 11.0);
+        assert_eq!(churn.telemetry.lost, 1);
+        let wake = churn.on_fault(&mut insts, FaultEvent::InstanceUp { instance: 1 }, 25.0);
+        assert_eq!(wake, Some(1));
+        assert_eq!(insts[1].health, Health::Up);
+        let t = churn.telemetry().unwrap();
+        assert_eq!(t.recoveries, 1);
+        assert!((t.mean_recovery_s() - 15.0).abs() < 1e-12);
     }
 }

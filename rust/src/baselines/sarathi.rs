@@ -9,10 +9,10 @@
 
 use std::collections::VecDeque;
 
-use super::least_loaded_with_room;
+use super::{least_loaded_with_room, BaselineChurn};
 use crate::config::{Deployment, SystemParams};
 use crate::metrics::Collector;
-use crate::sim::{Event, EventScheduler, SimInstance, System};
+use crate::sim::{ChurnTelemetry, Event, EventScheduler, FaultEvent, Health, SimInstance, System};
 use crate::workload::Request;
 
 const EPS: f64 = 1e-9;
@@ -22,6 +22,8 @@ pub struct SarathiSystem {
     pub instances: Vec<SimInstance>,
     pub backlog: VecDeque<Request>,
     pub params: SystemParams,
+    /// Native fault handling (crashes lose resident work).
+    pub churn: BaselineChurn,
 }
 
 impl SarathiSystem {
@@ -30,7 +32,12 @@ impl SarathiSystem {
         let instances = (0..n)
             .map(|i| SimInstance::new(i, deployment.timer(), deployment.kv_reserve_frac))
             .collect();
-        SarathiSystem { instances, backlog: VecDeque::new(), params }
+        SarathiSystem {
+            instances,
+            backlog: VecDeque::new(),
+            params,
+            churn: BaselineChurn::new(n),
+        }
     }
 
     fn try_admit(&mut self, req: &Request, now: f64, sched: &mut EventScheduler) -> bool {
@@ -59,7 +66,7 @@ impl SarathiSystem {
     fn dispatch(&mut self, idx: usize, now: f64, sched: &mut EventScheduler) {
         let chunk = self.params.sarathi_chunk;
         let inst = &mut self.instances[idx];
-        if !inst.idle() || !inst.has_work() {
+        if inst.health == Health::Down || !inst.idle() || !inst.has_work() {
             return;
         }
         let done = inst.start_hybrid(chunk, now);
@@ -90,6 +97,22 @@ impl System for SarathiSystem {
         }
         self.drain_backlog(now, sched);
         self.dispatch(idx, now, sched);
+    }
+
+    fn on_fault(
+        &mut self,
+        fault: FaultEvent,
+        now: f64,
+        sched: &mut EventScheduler,
+        _metrics: &mut Collector,
+    ) {
+        if let Some(wake) = self.churn.on_fault(&mut self.instances, fault, now) {
+            sched.at(now, Event::InstanceWake { instance: wake });
+        }
+    }
+
+    fn churn_telemetry(&self) -> Option<ChurnTelemetry> {
+        self.churn.telemetry()
     }
 }
 

@@ -10,10 +10,10 @@
 
 use std::collections::VecDeque;
 
-use super::least_loaded_with_room;
+use super::{least_loaded_with_room, BaselineChurn};
 use crate::config::{Deployment, SystemParams};
 use crate::metrics::Collector;
-use crate::sim::{Event, EventScheduler, SimInstance, System};
+use crate::sim::{ChurnTelemetry, Event, EventScheduler, FaultEvent, Health, SimInstance, System};
 use crate::workload::Request;
 
 const EPS: f64 = 1e-9;
@@ -28,6 +28,8 @@ pub struct VllmSystem {
     /// Max prompts per prefill batch (vLLM's max_num_seqs for the waiting
     /// queue slice).
     pub max_prefill_reqs: usize,
+    /// Native fault handling (crashes lose resident work).
+    pub churn: BaselineChurn,
 }
 
 impl VllmSystem {
@@ -42,6 +44,7 @@ impl VllmSystem {
             params,
             max_prefill_tokens: 8192,
             max_prefill_reqs: 16,
+            churn: BaselineChurn::new(n),
         }
     }
 
@@ -72,7 +75,7 @@ impl VllmSystem {
         let max_tokens = self.max_prefill_tokens;
         let max_reqs = self.max_prefill_reqs;
         let inst = &mut self.instances[idx];
-        if !inst.idle() {
+        if inst.health == Health::Down || !inst.idle() {
             return;
         }
         if !inst.prefill_queue.is_empty() {
@@ -119,6 +122,22 @@ impl System for VllmSystem {
         }
         self.drain_backlog(now, sched);
         self.dispatch(idx, now, sched);
+    }
+
+    fn on_fault(
+        &mut self,
+        fault: FaultEvent,
+        now: f64,
+        sched: &mut EventScheduler,
+        _metrics: &mut Collector,
+    ) {
+        if let Some(wake) = self.churn.on_fault(&mut self.instances, fault, now) {
+            sched.at(now, Event::InstanceWake { instance: wake });
+        }
+    }
+
+    fn churn_telemetry(&self) -> Option<ChurnTelemetry> {
+        self.churn.telemetry()
     }
 }
 

@@ -270,6 +270,12 @@ pub struct SystemParams {
     /// Disable intra-instance window hysteresis (flip to prefill for any
     /// lone arrival).
     pub ablate_no_hysteresis: bool,
+    /// Disable EcoServe's coordinator recovery under injected faults
+    /// ([`crate::sim::faults`]): a crashed instance's work is dropped
+    /// instead of re-routed, lost capacity is not backfilled, and the
+    /// router keeps cycling through dead members. Fault-free behavior is
+    /// unchanged.
+    pub ablate_no_recovery: bool,
 }
 
 impl Default for SystemParams {
@@ -285,6 +291,7 @@ impl Default for SystemParams {
             ablate_no_window_cap: false,
             ablate_no_sticky: false,
             ablate_no_hysteresis: false,
+            ablate_no_recovery: false,
         }
     }
 }

@@ -159,6 +159,37 @@ impl MitosisState {
         Some((instance, ops))
     }
 
+    /// Fault path: remove a *specific* instance (one that just died) from
+    /// whatever macro holds it, applying the same merge rule as
+    /// [`MitosisState::remove_instance`]. Unlike planned contraction the
+    /// controller does not get to pick the victim — the fault did. Returns
+    /// `None` when the instance is not a member (already removed, or was
+    /// never activated).
+    pub fn remove_specific(&mut self, instance: usize) -> Option<Vec<ScaleOp>> {
+        let mi = self.macro_of(instance)?;
+        let pos = self.macros[mi].iter().position(|&x| x == instance)?;
+        self.macros[mi].remove(pos);
+        let mut ops = vec![ScaleOp::Removed { instance, from_macro: mi }];
+        if self.macros[mi].is_empty() {
+            self.macros.remove(mi);
+        }
+        // Same merge check as planned contraction (paper steps 7-8).
+        if self.macros.len() >= 2 {
+            let mut idx: Vec<usize> = (0..self.macros.len()).collect();
+            idx.sort_by_key(|&i| self.macros[i].len());
+            let (a, b) = (idx[0], idx[1]);
+            if self.macros[a].len() + self.macros[b].len() < self.n_upper {
+                let (from, into) = if a > b { (a, b) } else { (b, a) };
+                let moved = self.macros[from].clone();
+                let moved_clone = moved.clone();
+                self.macros[into].extend(moved);
+                self.macros.remove(from);
+                ops.push(ScaleOp::Merged { from, into, moved: moved_clone });
+            }
+        }
+        Some(ops)
+    }
+
     /// Structural invariants (asserted by property tests):
     /// no duplicates, no empty macros, every macro within [1, N_u].
     pub fn check_invariants(&self) -> Result<(), String> {
@@ -256,6 +287,40 @@ mod tests {
         }
         assert_eq!(s.total_instances(), 0);
         assert!(s.remove_instance().is_none());
+    }
+
+    #[test]
+    fn remove_specific_takes_the_named_instance() {
+        let mut s = MitosisState {
+            macros: vec![(0..6).collect(), (6..10).collect()],
+            n_lower: 3,
+            n_upper: 6,
+        };
+        // Kill instance 2 out of the first macro: membership shrinks by
+        // exactly that id, invariants hold, 5 + 4 >= 6 so no merge.
+        let ops = s.remove_specific(2).unwrap();
+        assert_eq!(ops[0], ScaleOp::Removed { instance: 2, from_macro: 0 });
+        assert_eq!(s.macro_of(2), None);
+        assert_eq!(s.total_instances(), 9);
+        s.check_invariants().unwrap();
+        // A non-member is a no-op.
+        assert!(s.remove_specific(2).is_none());
+        assert_eq!(s.total_instances(), 9);
+    }
+
+    #[test]
+    fn remove_specific_merges_when_jointly_small() {
+        let mut s = MitosisState {
+            macros: vec![(0..3).collect(), (3..6).collect()],
+            n_lower: 3,
+            n_upper: 6,
+        };
+        // 2 + 3 < 6 after the removal: the macros must merge.
+        let ops = s.remove_specific(1).unwrap();
+        assert!(ops.iter().any(|o| matches!(o, ScaleOp::Merged { .. })), "{ops:?}");
+        assert_eq!(s.macros.len(), 1);
+        assert_eq!(s.total_instances(), 5);
+        s.check_invariants().unwrap();
     }
 
     #[test]

@@ -22,7 +22,9 @@ use super::mitosis::MitosisState;
 use super::routing::{RouteOutcome, RoutingState};
 use crate::config::{Deployment, SystemParams};
 use crate::metrics::{attainment_fraction, Collector, SloSpec};
-use crate::sim::{Event, EventScheduler, SimInstance, System};
+use crate::sim::{
+    ChurnTelemetry, Event, EventScheduler, FaultEvent, Health, SimInstance, SimReq, System,
+};
 use crate::workload::Request;
 
 const EPS: f64 = 1e-9;
@@ -85,6 +87,10 @@ pub struct EcoServeSystem {
     pub scale_log: Vec<ScaleEvent>,
     /// Force-admissions of TTFT-hopeless backlog (observability).
     pub forced_admissions: u64,
+    /// Fault-injection counters (zero in fault-free runs).
+    pub churn: ChurnTelemetry,
+    /// Crash times whose recovery (backlog drained again) is still open.
+    pending_recovery: Vec<f64>,
 }
 
 impl EcoServeSystem {
@@ -126,6 +132,8 @@ impl EcoServeSystem {
             prev_busy,
             scale_log: Vec::new(),
             forced_admissions: 0,
+            churn: ChurnTelemetry::default(),
+            pending_recovery: Vec::new(),
         }
     }
 
@@ -176,6 +184,7 @@ impl EcoServeSystem {
             sticky: !self.params.ablate_no_sticky,
             window_cap: !self.params.ablate_no_window_cap,
             mean_slack: self.params.ablate_mean_slack,
+            health_gate: !self.params.ablate_no_recovery,
         };
         let n_macros = self.mitosis.macros.len();
         for k in 0..n_macros {
@@ -213,11 +222,15 @@ impl EcoServeSystem {
     /// This is the "rescue" half of rolling activation under pressure.
     fn relaxed_admit(&mut self, req: &Request, now: f64, sched: &mut EventScheduler) -> bool {
         let margin = self.params.admission_margin;
+        let gate = !self.params.ablate_no_recovery;
         let waited = (now - req.arrival).max(0.0);
         let mut best: Option<(f64, usize)> = None;
         for m in &self.mitosis.macros {
             for &idx in m {
                 let inst = &self.instances[idx];
+                if gate && inst.health != Health::Up {
+                    continue;
+                }
                 if !inst.kv_room_for(req.input_len, margin) {
                     continue;
                 }
@@ -259,10 +272,14 @@ impl EcoServeSystem {
     /// shedding it silently would fake better attainment).
     fn force_admit(&mut self, req: &Request, now: f64, sched: &mut EventScheduler) -> bool {
         let margin = self.params.admission_margin;
+        let gate = !self.params.ablate_no_recovery;
         let mut best: Option<(usize, usize)> = None; // (kv_used, idx)
         for m in &self.mitosis.macros {
             for &idx in m {
                 let inst = &self.instances[idx];
+                if gate && inst.health != Health::Up {
+                    continue;
+                }
                 if inst.kv_room_for(req.input_len, margin) {
                     let key = inst.kv_used + inst.prefill_queue.len() * 1000;
                     if best.map(|(b, _)| key < b).unwrap_or(true) {
@@ -302,6 +319,40 @@ impl EcoServeSystem {
                 break; // FIFO: don't starve the head
             }
         }
+        // A crash's recovery closes when the coordinator's backlog next
+        // drains: every displaced (and congestion-displaced) request has
+        // been placed again. Congestion that predates the fault is charged
+        // to the recovery — the coordinator really was that far behind.
+        if self.backlog.is_empty() && !self.pending_recovery.is_empty() {
+            for t0 in self.pending_recovery.drain(..) {
+                self.churn.recovery_s_sum += now - t0;
+                self.churn.recoveries += 1;
+            }
+        }
+    }
+
+    /// Re-route evacuated requests after a fault. Requests that never
+    /// reached their decode phase restart prefill from the backlog (the
+    /// restart is honestly charged to TTFT — the arrival time is kept);
+    /// mid-decode requests died with the KV cache and are lost. The backlog
+    /// is re-sorted by (arrival, id) so displaced requests keep FIFO order
+    /// relative to already-backlogged ones. Returns the re-routed count.
+    fn requeue(&mut self, evacuated: Vec<SimReq>) -> u64 {
+        let mut rerouted = 0u64;
+        for r in evacuated {
+            if r.first_token_at.is_none() {
+                self.backlog.push_back(r.req);
+                rerouted += 1;
+            } else {
+                self.churn.lost += 1;
+            }
+        }
+        if rerouted > 0 {
+            let mut v: Vec<Request> = self.backlog.drain(..).collect();
+            v.sort_by(|a, b| a.arrival.total_cmp(&b.arrival).then(a.id.cmp(&b.id)));
+            self.backlog = v.into();
+        }
+        rerouted
     }
 
     /// Intra-instance scheduling (temporal disaggregation, paper §3.4):
@@ -328,6 +379,9 @@ impl EcoServeSystem {
             .max(1);
         let window_budget = slo_ttft / macro_size as f64;
         let inst = &mut self.instances[idx];
+        if inst.health == Health::Down {
+            return; // dead hardware runs nothing (work waits for restore)
+        }
         if !inst.idle() {
             return;
         }
@@ -394,9 +448,11 @@ impl EcoServeSystem {
     }
 
     fn scale_up(&mut self, now: f64) -> bool {
-        // First free provisioned-but-inactive instance.
+        // First free provisioned-but-inactive instance that is healthy.
         let Some(idx) = (0..self.instances.len())
-            .find(|&i| !self.active[i] && !self.draining[i])
+            .find(|&i| {
+                !self.active[i] && !self.draining[i] && self.instances[i].health == Health::Up
+            })
         else {
             return false;
         };
@@ -469,6 +525,101 @@ impl System for EcoServeSystem {
         self.dispatch(idx, now, sched);
         // Backlog drain may have fed other idle instances; their kick wakes
         // were scheduled by try_route/force_admit.
+    }
+
+    /// Coordinator recovery (the fault-injection tentpole): a dead
+    /// instance's queued work re-routes through the macro backlog (prefill
+    /// restarts elsewhere, charged to TTFT), mid-decode work is lost with
+    /// its KV cache, membership shrinks via [`MitosisState::remove_specific`]
+    /// so rolling activation re-derives over the survivors, and spare
+    /// provisioned capacity backfills immediately. A preemption notice
+    /// drains the victim proactively. With
+    /// [`SystemParams::ablate_no_recovery`] the coordinator never learns:
+    /// crashed work is dropped, the router keeps cycling dead members, and
+    /// work routed to them waits out the outage.
+    fn on_fault(
+        &mut self,
+        fault: FaultEvent,
+        now: f64,
+        sched: &mut EventScheduler,
+        _metrics: &mut Collector,
+    ) {
+        self.churn.faults += 1;
+        let recover = !self.params.ablate_no_recovery;
+        match fault {
+            FaultEvent::InstanceDown { instance } => {
+                self.churn.downs += 1;
+                if instance >= self.instances.len()
+                    || self.instances[instance].health == Health::Down
+                {
+                    return;
+                }
+                let evacuated = self.instances[instance].crash();
+                if recover {
+                    let n = self.requeue(evacuated);
+                    self.churn.rerouted += n;
+                    self.active[instance] = false;
+                    self.draining[instance] = false;
+                    if self.mitosis.remove_specific(instance).is_some() {
+                        debug_assert!(self.mitosis.check_invariants().is_ok());
+                        self.sync_routing();
+                    }
+                    if self.scale_up(now) {
+                        self.churn.backfills += 1; // spare capacity steps in
+                    }
+                    self.pending_recovery.push(now);
+                    self.drain_backlog(now, sched);
+                } else {
+                    self.churn.lost += evacuated.len() as u64;
+                }
+            }
+            FaultEvent::InstanceUp { instance } => {
+                if instance >= self.instances.len()
+                    || self.instances[instance].health != Health::Down
+                {
+                    return;
+                }
+                self.instances[instance].restore();
+                if recover {
+                    if self.mitosis.macro_of(instance).is_none() && !self.draining[instance] {
+                        self.active[instance] = true;
+                        let ops = self.mitosis.add_instance(instance);
+                        debug_assert!(self.mitosis.check_invariants().is_ok(), "{ops:?}");
+                        self.sync_routing();
+                        self.churn.backfills += 1;
+                    }
+                    self.drain_backlog(now, sched);
+                }
+                sched.at(now, Event::InstanceWake { instance });
+            }
+            FaultEvent::PreemptNotice { instance } => {
+                self.churn.notices += 1;
+                if instance >= self.instances.len() {
+                    return;
+                }
+                if recover && self.instances[instance].health == Health::Up {
+                    // Stop placing work here and re-route what hasn't
+                    // started; running decodes finish what they can before
+                    // the reclaim lands.
+                    self.instances[instance].health = Health::Degraded;
+                    let evacuated = self.instances[instance].evacuate_queue();
+                    let n = self.requeue(evacuated);
+                    self.churn.rerouted += n;
+                    self.drain_backlog(now, sched);
+                }
+            }
+            // PaDG never migrates KV between instances: interconnect
+            // degradation is invisible to it (the FuDG baselines pay).
+            FaultEvent::LinkDegrade { .. } | FaultEvent::LinkRestore => {}
+        }
+    }
+
+    fn churn_telemetry(&self) -> Option<ChurnTelemetry> {
+        if self.churn.any() {
+            Some(self.churn.clone())
+        } else {
+            None
+        }
     }
 
     fn on_control_tick(&mut self, now: f64, sched: &mut EventScheduler, metrics: &mut Collector) {
@@ -631,6 +782,81 @@ mod tests {
             sys.mitosis.macro_sizes().iter().sum::<usize>(),
             sys.mitosis.total_instances()
         );
+    }
+
+    #[test]
+    fn fault_recovery_restores_membership_and_conserves_requests() {
+        let d = small_deployment();
+        let mut sys = system(&d);
+        let trace = TraceGenerator::new(Dataset::sharegpt(), 11).poisson(5.0, 60.0);
+        let n = trace.len();
+        let faults = crate::sim::FaultSchedule::new(vec![
+            crate::sim::Fault {
+                at: 15.0,
+                kind: crate::sim::FaultKind::Crash { instance: 1, down_s: 10.0 },
+            },
+            crate::sim::Fault {
+                at: 40.0,
+                kind: crate::sim::FaultKind::Preempt {
+                    instance: 2,
+                    notice_s: 2.0,
+                    down_s: 8.0,
+                },
+            },
+        ])
+        .unwrap();
+        let mut metrics = Collector::new();
+        crate::sim::run_faulted(
+            &mut sys,
+            trace,
+            &faults.events(&d),
+            10_000.0,
+            &mut metrics,
+            false,
+        );
+        assert_eq!(sys.churn.downs, 2);
+        assert_eq!(sys.churn.notices, 1);
+        assert_eq!(sys.mitosis.total_instances(), 4, "both victims rejoined");
+        sys.mitosis.check_invariants().unwrap();
+        // Conservation: every arrival either completed or was honestly
+        // counted lost (mid-decode at a crash); lost requests are exactly
+        // the collector's never-completed entries.
+        assert_eq!(metrics.completed().len() + sys.churn.lost as usize, n);
+        assert_eq!(metrics.in_flight(), sys.churn.lost as usize);
+        for inst in &sys.instances {
+            assert_eq!(inst.health, crate::sim::Health::Up);
+            assert_eq!(inst.kv_used, 0, "instance {} leaked KV across faults", inst.id);
+        }
+        assert!(sys.churn_telemetry().is_some());
+    }
+
+    #[test]
+    fn no_recovery_ablation_drops_crashed_work() {
+        let d = small_deployment();
+        let params = SystemParams { ablate_no_recovery: true, ..SystemParams::default() };
+        let mut sys = EcoServeSystem::new(&d, SloSpec::new(5.0, 0.1), params);
+        let trace = TraceGenerator::new(Dataset::sharegpt(), 11).poisson(5.0, 60.0);
+        let n = trace.len();
+        let faults = crate::sim::FaultSchedule::new(vec![crate::sim::Fault {
+            at: 15.0,
+            kind: crate::sim::FaultKind::Crash { instance: 1, down_s: 10.0 },
+        }])
+        .unwrap();
+        let mut metrics = Collector::new();
+        crate::sim::run_faulted(
+            &mut sys,
+            trace,
+            &faults.events(&d),
+            10_000.0,
+            &mut metrics,
+            false,
+        );
+        // The coordinator never re-routes: whatever the victim held is gone
+        // (queued work included), membership never shrank, nothing rerouted.
+        assert_eq!(sys.churn.rerouted, 0);
+        assert_eq!(sys.churn.backfills, 0);
+        assert_eq!(sys.mitosis.total_instances(), 4);
+        assert_eq!(metrics.completed().len() + sys.churn.lost as usize, n);
     }
 
     #[test]

@@ -68,11 +68,14 @@ pub struct RouteOpts {
     pub window_cap: bool,
     /// true: gate on mean saved-TPOT (paper-literal Algorithm 2).
     pub mean_slack: bool,
+    /// false: route onto dead/degraded members anyway (the no-recovery
+    /// ablation — the coordinator never learns about the fault).
+    pub health_gate: bool,
 }
 
 impl Default for RouteOpts {
     fn default() -> Self {
-        RouteOpts { sticky: true, window_cap: true, mean_slack: false }
+        RouteOpts { sticky: true, window_cap: true, mean_slack: false, health_gate: true }
     }
 }
 
@@ -104,6 +107,9 @@ pub fn route_with(
     for step in 0..n {
         let pos = (start + step) % n;
         let inst = &instances[members[pos]];
+        if opts.health_gate && inst.health != crate::sim::Health::Up {
+            continue; // dead or draining-for-preemption member
+        }
         if super::constraints::check_constraints_opt(
             inst, req, now, slo, admission_margin, window_budget, opts.mean_slack,
         ) == ConstraintVerdict::Satisfied
@@ -192,6 +198,21 @@ mod tests {
         let mut st = RoutingState::default();
         let out = route(&mut st, &[], &insts, &req(1, 100), 0.0, &slo(), 64);
         assert_eq!(out, RouteOutcome::Deferred);
+    }
+
+    #[test]
+    fn health_gate_skips_down_members() {
+        let mut insts = instances(3);
+        insts[1].health = crate::sim::Health::Down;
+        let mut st = RoutingState { last: 1, ..Default::default() };
+        let out = route(&mut st, &[0, 1, 2], &insts, &req(1, 100), 0.0, &slo(), 64);
+        assert_eq!(out, RouteOutcome::Admitted(2), "sticky target is down; cursor advances");
+        // With the gate ablated the dead member is routable again.
+        insts[1].kv_used = 0;
+        let mut st = RoutingState { last: 1, ..Default::default() };
+        let opts = RouteOpts { health_gate: false, ..Default::default() };
+        let out = route_with(&mut st, &[0, 1, 2], &insts, &req(1, 100), 0.0, &slo(), 64, opts);
+        assert_eq!(out, RouteOutcome::Admitted(1));
     }
 
     #[test]

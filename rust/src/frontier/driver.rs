@@ -18,7 +18,7 @@ use crate::config::SystemKind;
 use crate::coordinator::AutoScalePolicy;
 use crate::metrics::{AbandonPolicy, Attainment};
 use crate::scenarios::{
-    run_system_variant, ClassScore, Scenario, ScenarioConfig, VariantSpec,
+    run_system_variant, ClassScore, RunSpec, Scenario, ScenarioConfig, VariantSpec,
 };
 use crate::util::threads::parallel_map;
 
@@ -169,15 +169,18 @@ impl ScenarioFrontier {
     }
 }
 
-/// Search one cell: adaptive rate probes, each a full deterministic
-/// scenario run scored strictly per class.
-pub fn run_cell(
+/// The fully-declarative spec for one probe of one frontier cell:
+/// system × variant × armed SLO monitor × (for churn scenarios run with
+/// a fault seed) the deterministic fault schedule at the probe's
+/// horizon. `probe_cfg` must already carry the probe rate — replay
+/// horizons and fault timelines are rate-dependent.
+pub fn cell_spec(
     scenario: &Scenario,
+    probe_cfg: &ScenarioConfig,
     cfg: &FrontierConfig,
     kind: SystemKind,
     autoscale: bool,
-) -> FrontierCell {
-    let params = cfg.search_params(scenario);
+) -> RunSpec {
     let variant = if autoscale {
         // The controller must chase the same attainment the frontier
         // demands — a P99 sweep with a 0.90-satisfied controller would
@@ -188,15 +191,31 @@ pub fn run_cell(
     } else {
         VariantSpec::default()
     };
+    RunSpec::for_cell(scenario, probe_cfg, kind)
+        .with_variant(variant)
+        .with_abandon(AbandonPolicy {
+            target: cfg.level.fraction(),
+            stop_early: cfg.early_abandon,
+        })
+}
+
+/// Search one cell: adaptive rate probes, each a full deterministic
+/// scenario run scored strictly per class.
+pub fn run_cell(
+    scenario: &Scenario,
+    cfg: &FrontierConfig,
+    kind: SystemKind,
+    autoscale: bool,
+) -> FrontierCell {
+    let params = cfg.search_params(scenario);
     let base = cfg.probe_base();
-    let abandon = AbandonPolicy { target: cfg.level.fraction(), stop_early: cfg.early_abandon };
     let mut perf = CellPerf::default();
     let t0 = Instant::now();
     let outcome = rate_search(&params, |rate| {
         let mut probe_cfg = base.clone();
         probe_cfg.rate = Some(rate);
-        probe_cfg.abandon = Some(abandon);
-        let row = run_system_variant(scenario, &probe_cfg, kind, &variant);
+        let spec = cell_spec(scenario, &probe_cfg, cfg, kind, autoscale);
+        let row = run_system_variant(scenario, &probe_cfg, &spec);
         perf.probes += 1;
         perf.events += row.events;
         perf.sim_wall += row.wall;
@@ -350,6 +369,36 @@ mod tests {
             cell.probes <= params.max_doublings + params.bisections + 2,
             "{}",
             cell.probes
+        );
+    }
+
+    #[test]
+    fn churn_scenario_flows_through_the_frontier() {
+        let s = by_name("steady+churn").unwrap();
+        let mut cfg = quick_frontier_cfg();
+        cfg.base.fault_seed = Some(7);
+        let churned = run_cell(&s, &cfg, SystemKind::EcoServe, false);
+        // Per-probe specs carry the schedule (rate-dependent horizon).
+        let mut probe_cfg = cfg.probe_base();
+        probe_cfg.rate = Some(s.default_rate);
+        let spec = cell_spec(&s, &probe_cfg, &cfg, SystemKind::EcoServe, false);
+        assert!(spec.faults.is_some_and(|f| !f.is_empty()));
+        assert!(spec.abandon.is_some());
+        // Without a fault seed the same cell searches fault-free, and
+        // injected outages never raise the sustainable rate.
+        let clean_cfg = quick_frontier_cfg();
+        let clean = run_cell(&s, &clean_cfg, SystemKind::EcoServe, false);
+        let mut clean_probe = clean_cfg.probe_base();
+        clean_probe.rate = Some(s.default_rate);
+        let clean_spec =
+            cell_spec(&s, &clean_probe, &clean_cfg, SystemKind::EcoServe, false);
+        assert!(clean_spec.faults.is_none());
+        assert!(clean.max_rate > 0.0);
+        assert!(
+            churned.max_rate <= clean.max_rate + 1e-9,
+            "churned {} vs clean {}",
+            churned.max_rate,
+            clean.max_rate
         );
     }
 

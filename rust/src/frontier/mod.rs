@@ -37,7 +37,7 @@ pub mod report;
 pub mod search;
 
 pub use driver::{
-    run_cell, run_frontier, CellPerf, FrontierCell, FrontierConfig, ScenarioFrontier,
+    cell_spec, run_cell, run_frontier, CellPerf, FrontierCell, FrontierConfig, ScenarioFrontier,
 };
 pub use report::{frontier_to_json, render_frontier_table, simperf_to_json};
 pub use search::{rate_search, Probe, SearchOutcome, SearchParams, SearchPoint};

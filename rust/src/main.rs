@@ -1,29 +1,9 @@
 //! EcoServe launcher.
 //!
-//! Subcommands:
-//!   serve      — live serving on PJRT-CPU instances (TinyLM artifacts;
-//!                needs the `pjrt` cargo feature)
-//!   simulate   — one simulated run of a system at a fixed request rate
-//!   goodput    — goodput search (paper §4.1) for one system
-//!   scenarios  — the multi-scenario evaluation suite (--list to browse;
-//!                --replay runs a recorded arrival log instead)
-//!   frontier   — goodput-frontier sweep: max sustainable rate per
-//!                scenario x system at a target attainment level, with an
-//!                optional mitosis-on PaDG variant and a BENCH JSON
-//!                (--replay sweeps a recorded log via time-warping;
-//!                --perf-out emits the BENCH_simperf simulator-cost
-//!                artifact; --no-abandon disables early probe
-//!                abandonment — same answers, more events; --budget-s
-//!                caps each cell's search wall clock)
-//!   plan       — capacity planner: enumerate (GPU x TP/PP x instances x
-//!                link tier x system) candidates, price each, search each
-//!                non-dominated candidate's max sustainable rate, and
-//!                report the $/hr-vs-goodput Pareto frontier, the best
-//!                goodput-per-dollar config, and (--target-rate) the
-//!                cheapest config meeting the target (BENCH_plan.json)
-//!   record     — export a scenario's trace as a replay log (JSONL)
-//!   table2     — print the arithmetic-intensity table
-//!   table3     — print the KV-bandwidth table
+//! Subcommands are declared once in [`ecoserve::util::cli::COMMANDS`] —
+//! the dispatch table below, flag validation, and the per-subcommand
+//! `--help` text are all generated from that registry. Run
+//! `ecoserve <command> --help` for a command's flags.
 //!
 //! Examples:
 //!   ecoserve serve --instances 2 --rate 3 --duration 20
@@ -32,6 +12,8 @@
 //!   ecoserve goodput --system vllm --dataset longbench --level p90
 //!   ecoserve scenarios --list
 //!   ecoserve scenarios --scenario bursty --out report.json
+//!   ecoserve scenarios --scenario steady+churn --fault-seed 7 \
+//!       --churn-out BENCH_churn.json
 //!   ecoserve frontier --scenario bursty --level p90 --out BENCH_goodput.json
 //!   ecoserve frontier --quick --autoscale --gpus 16 --perf-out BENCH_simperf.json
 //!   ecoserve record --scenario bursty --rate 6 --out bursty.jsonl
@@ -45,7 +27,7 @@
 // Same advisory lint posture as lib.rs (see its comment).
 #![allow(clippy::style, clippy::complexity, clippy::perf)]
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Error, Result};
 
 use ecoserve::config::{ClusterSpec, Deployment, ExperimentConfig, SystemKind};
 use ecoserve::frontier;
@@ -53,30 +35,47 @@ use ecoserve::harness;
 use ecoserve::metrics::Attainment;
 use ecoserve::perfmodel::{self, ModelSpec};
 use ecoserve::scenarios;
-use ecoserve::util::cli::Args;
+use ecoserve::util::cli::{self, Args};
 use ecoserve::workload::Dataset;
 
 fn main() -> Result<()> {
     let args = Args::from_env();
-    match args.command() {
-        Some("serve") => cmd_serve(&args),
-        Some("simulate") => cmd_simulate(&args),
-        Some("goodput") => cmd_goodput(&args),
-        Some("scenarios") => cmd_scenarios(&args),
-        Some("frontier") => cmd_frontier(&args),
-        Some("plan") => cmd_plan(&args),
-        Some("record") => cmd_record(&args),
-        Some("table2") => cmd_table2(&args),
-        Some("table3") => cmd_table3(),
-        _ => {
-            eprintln!(
-                "usage: ecoserve <serve|simulate|goodput|scenarios|frontier|plan|\
-                 record|table2|table3> [--flags]"
-            );
-            eprintln!("see rust/src/main.rs docs for examples");
-            Ok(())
-        }
+    let Some(cmd) = args.command() else {
+        print_usage();
+        return Ok(());
+    };
+    let Some(spec) = cli::command_spec(cmd) else {
+        print_usage();
+        bail!("unknown subcommand '{cmd}'");
+    };
+    if args.has("help") {
+        print!("{}", spec.help_text());
+        return Ok(());
     }
+    // One uniform gate for every subcommand: unknown flags error, and a
+    // value-taking flag supplied bare errors before any work starts.
+    args.check(spec).map_err(Error::msg)?;
+    match cmd {
+        "serve" => cmd_serve(&args),
+        "simulate" => cmd_simulate(&args),
+        "goodput" => cmd_goodput(&args),
+        "scenarios" => cmd_scenarios(&args),
+        "frontier" => cmd_frontier(&args),
+        "plan" => cmd_plan(&args),
+        "record" => cmd_record(&args),
+        "table2" => cmd_table2(&args),
+        "table3" => cmd_table3(),
+        _ => unreachable!("command_spec() covers the dispatch table"),
+    }
+}
+
+/// Top-level usage, generated from the subcommand registry.
+fn print_usage() {
+    eprintln!("usage: ecoserve <command> [--flags]\n\ncommands:");
+    for c in cli::COMMANDS {
+        eprintln!("  {:<10} {}", c.name, c.summary);
+    }
+    eprintln!("\nrun `ecoserve <command> --help` for that command's flags");
 }
 
 /// Shared `--model/--cluster/--tp/--pp/--gpus` parsing (simulate,
@@ -87,14 +86,14 @@ fn deployment_from_args(args: &Args) -> Result<Deployment> {
     let cluster = ClusterSpec::by_name(&args.get_or("cluster", "l20"))
         .ok_or_else(|| anyhow::anyhow!("unknown cluster"))?;
     let mut deployment = Deployment::paper_default(model, cluster);
-    if let Some(tp) = args.get("tp") {
-        deployment.tp = tp.parse()?;
+    if let Some(tp) = args.usize_flag("tp").map_err(Error::msg)? {
+        deployment.tp = tp;
     }
-    if let Some(pp) = args.get("pp") {
-        deployment.pp = pp.parse()?;
+    if let Some(pp) = args.usize_flag("pp").map_err(Error::msg)? {
+        deployment.pp = pp;
     }
-    if let Some(g) = args.get("gpus") {
-        deployment.gpus_used = g.parse()?;
+    if let Some(g) = args.usize_flag("gpus").map_err(Error::msg)? {
+        deployment.gpus_used = g;
     }
     // Guard every deployment-consuming subcommand here, not per command:
     // downstream constructors (FuDG splits, mitosis N_l clamp) assume at
@@ -110,31 +109,14 @@ fn deployment_from_args(args: &Args) -> Result<Deployment> {
     Ok(deployment)
 }
 
-/// An optional numeric flag that errors loudly on a typo — or on a
-/// value-less `--flag` (which the parser files as a boolean switch) —
-/// instead of silently falling back to a default: `--loop` without a
-/// horizon must not quietly run the un-tiled replay.
-fn parse_f64_flag(args: &Args, key: &str) -> Result<Option<f64>> {
-    match args.get(key) {
-        Some(v) => v
-            .parse()
-            .map(Some)
-            .map_err(|_| anyhow::anyhow!("--{key} expects a number, got '{v}'")),
-        None if args.has_flag(key) => {
-            Err(anyhow::anyhow!("--{key} needs a numeric value (e.g. --{key}=30)"))
-        }
-        None => Ok(None),
-    }
-}
-
 fn experiment_from_args(args: &Args) -> Result<ExperimentConfig> {
     let dataset = Dataset::by_name(&args.get_or("dataset", "sharegpt"))
         .ok_or_else(|| anyhow::anyhow!("unknown dataset"))?;
     let deployment = deployment_from_args(args)?;
     let mut cfg = ExperimentConfig::new(deployment, dataset);
-    cfg.seed = args.get_u64("seed", 42);
-    cfg.duration = args.get_f64("duration", 240.0);
-    cfg.warmup = args.get_f64("warmup", 30.0);
+    cfg.seed = args.u64_flag("seed").map_err(Error::msg)?.unwrap_or(42);
+    cfg.duration = args.f64_flag("duration").map_err(Error::msg)?.unwrap_or(240.0);
+    cfg.warmup = args.f64_flag("warmup").map_err(Error::msg)?.unwrap_or(30.0);
     Ok(cfg)
 }
 
@@ -142,10 +124,10 @@ fn experiment_from_args(args: &Args) -> Result<ExperimentConfig> {
 fn cmd_serve(args: &Args) -> Result<()> {
     use ecoserve::server::{serve_poisson, ServeConfig};
     let mut cfg = ServeConfig::default();
-    cfg.instances = args.get_usize("instances", 2);
-    cfg.rate = args.get_f64("rate", 3.0);
-    cfg.duration_secs = args.get_f64("duration", 20.0);
-    cfg.seed = args.get_u64("seed", 42);
+    cfg.instances = args.usize_flag("instances").map_err(Error::msg)?.unwrap_or(2);
+    cfg.rate = args.f64_flag("rate").map_err(Error::msg)?.unwrap_or(3.0);
+    cfg.duration_secs = args.f64_flag("duration").map_err(Error::msg)?.unwrap_or(20.0);
+    cfg.seed = args.u64_flag("seed").map_err(Error::msg)?.unwrap_or(42);
     let artifacts = args.get_or("artifacts", "artifacts");
     let report = serve_poisson(std::path::Path::new(&artifacts), &cfg)?;
     print!("{}", report.render());
@@ -168,13 +150,13 @@ fn cmd_serve(_args: &Args) -> Result<()> {
 /// plan): a recorded arrival log (optionally `--loop`-tiled to a longer
 /// horizon), one named scenario, or the whole registry.
 fn select_scenarios(args: &Args) -> Result<Vec<scenarios::Scenario>> {
-    let replay = args.get_path("replay").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let replay = args.get_path("replay").map_err(Error::msg)?;
     if let Some(path) = replay {
         if args.get("scenario").is_some() {
             bail!("--replay and --scenario are mutually exclusive: a replay log IS the scenario");
         }
         let mut trace = ecoserve::workload::ReplayTrace::from_file(&path)?;
-        if let Some(horizon) = parse_f64_flag(args, "loop")? {
+        if let Some(horizon) = args.f64_flag("loop").map_err(Error::msg)? {
             if !horizon.is_finite() || horizon <= 0.0 {
                 bail!("--loop expects a positive finite horizon in seconds, got {horizon}");
             }
@@ -212,15 +194,15 @@ fn cmd_record(args: &Args) -> Result<()> {
     let mut scenario = scenarios::by_name(&name).ok_or_else(|| {
         anyhow::anyhow!("unknown scenario '{name}' (try `ecoserve scenarios --list`)")
     })?;
-    if let Some(d) = parse_f64_flag(args, "duration")? {
+    if let Some(d) = args.f64_flag("duration").map_err(Error::msg)? {
         scenario.duration = d;
         scenario.warmup = scenario.warmup.min(d / 4.0);
     }
-    let seed = args.get_u64("seed", 42);
-    let rate = parse_f64_flag(args, "rate")?.unwrap_or(scenario.default_rate);
+    let seed = args.u64_flag("seed").map_err(Error::msg)?.unwrap_or(42);
+    let rate = args.f64_flag("rate").map_err(Error::msg)?.unwrap_or(scenario.default_rate);
     let log = scenario.record_log(seed, rate);
     let lines = log.lines().count();
-    match args.get_path("out").map_err(|e| anyhow::anyhow!("{e}"))? {
+    match args.get_path("out").map_err(Error::msg)? {
         Some(path) => {
             std::fs::write(&path, &log)
                 .map_err(|e| anyhow::anyhow!("write {}: {e}", path.display()))?;
@@ -248,10 +230,10 @@ fn select_systems(args: &Args) -> Result<Vec<SystemKind>> {
 /// The multi-scenario evaluation suite (`scenarios` subcommand).
 fn cmd_scenarios(args: &Args) -> Result<()> {
     if args.has_flag("list") {
-        println!("{:<12} {:>7} {:>9} {:>8}  summary", "scenario", "rate/s", "horizon", "classes");
+        println!("{:<20} {:>7} {:>9} {:>8}  summary", "scenario", "rate/s", "horizon", "classes");
         for s in scenarios::registry() {
             println!(
-                "{:<12} {:>7.1} {:>8.0}s {:>8}  {}",
+                "{:<20} {:>7.1} {:>8.0}s {:>8}  {}",
                 s.name,
                 s.default_rate,
                 s.duration,
@@ -267,10 +249,10 @@ fn cmd_scenarios(args: &Args) -> Result<()> {
 
     let cfg = scenarios::ScenarioConfig {
         deployment: deployment_from_args(args)?,
-        seed: args.get_u64("seed", 42),
-        rate: parse_f64_flag(args, "rate")?,
-        duration_override: parse_f64_flag(args, "duration")?,
-        abandon: None,
+        seed: args.u64_flag("seed").map_err(Error::msg)?.unwrap_or(42),
+        rate: args.f64_flag("rate").map_err(Error::msg)?,
+        duration_override: args.f64_flag("duration").map_err(Error::msg)?,
+        fault_seed: args.u64_flag("fault-seed").map_err(Error::msg)?,
     };
 
     let d = &cfg.deployment;
@@ -284,6 +266,33 @@ fn cmd_scenarios(args: &Args) -> Result<()> {
         d.cluster.name,
     );
     let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(8);
+
+    // --churn-out runs the clean-vs-faulted pairing instead of the plain
+    // suite: each system runs twice per churn scenario, and the report
+    // scores goodput retained under churn.
+    if let Some(path) = args.get_path("churn-out").map_err(Error::msg)? {
+        let churn: Vec<scenarios::Scenario> =
+            selected.iter().filter(|s| s.churn.is_some()).cloned().collect();
+        if churn.is_empty() {
+            bail!(
+                "--churn-out needs a churn scenario (steady+churn, \
+                 surge+preemption, spot-decode-reclaim); got only fault-free ones"
+            );
+        }
+        let t0 = std::time::Instant::now();
+        let outcomes = scenarios::run_churn_suite(&churn, &cfg, &systems, workers);
+        let wall = t0.elapsed();
+        for outcome in &outcomes {
+            println!();
+            print!("{}", scenarios::render_churn_table(outcome));
+        }
+        let json = scenarios::churn_to_json(&outcomes, &cfg, wall).to_string();
+        std::fs::write(&path, &json)
+            .map_err(|e| anyhow::anyhow!("write {}: {e}", path.display()))?;
+        println!("\nwrote BENCH churn report to {}", path.display());
+        return Ok(());
+    }
+
     let outcomes = scenarios::run_suite(&selected, &cfg, &systems, workers);
     for outcome in &outcomes {
         println!();
@@ -303,7 +312,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let cfg = experiment_from_args(args)?;
     let kind = SystemKind::by_name(&args.get_or("system", "ecoserve"))
         .ok_or_else(|| anyhow::anyhow!("unknown system"))?;
-    let rate = args.get_f64("rate", 4.0);
+    let rate = args.f64_flag("rate").map_err(Error::msg)?.unwrap_or(4.0);
     let r = harness::run_once(kind, &cfg, rate, None);
     let s = &r.summary;
     println!(
@@ -368,8 +377,8 @@ fn cmd_goodput(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Shared `--level p50|p90|p99` parsing (goodput + frontier), erroring
-/// loudly on a typo instead of silently defaulting.
+/// Shared `--level p50|p90|p99` parsing (goodput + frontier + plan),
+/// erroring loudly on a typo instead of silently defaulting.
 fn parse_level(args: &Args) -> Result<Attainment> {
     let raw = args.get_or("level", "p90");
     Attainment::by_name(&raw)
@@ -384,10 +393,10 @@ fn cmd_frontier(args: &Args) -> Result<()> {
 
     let base = scenarios::ScenarioConfig {
         deployment: deployment_from_args(args)?,
-        seed: args.get_u64("seed", 42),
+        seed: args.u64_flag("seed").map_err(Error::msg)?.unwrap_or(42),
         rate: None, // the search owns the rate
-        duration_override: parse_f64_flag(args, "duration")?,
-        abandon: None, // the search arms the monitor per probe
+        duration_override: args.f64_flag("duration").map_err(Error::msg)?,
+        fault_seed: args.u64_flag("fault-seed").map_err(Error::msg)?,
     };
     let mut cfg = frontier::FrontierConfig::new(base, level);
     cfg.autoscale = args.has("autoscale");
@@ -399,7 +408,7 @@ fn cmd_frontier(args: &Args) -> Result<()> {
     cfg.early_abandon = !args.has("no-abandon");
     // Per-cell wall-clock cap: truncated cells report their confirmed
     // rate and are flagged in BENCH_simperf.json.
-    cfg.budget_s = parse_f64_flag(args, "budget-s")?;
+    cfg.budget_s = args.f64_flag("budget-s").map_err(Error::msg)?;
     if cfg.autoscale && !systems.contains(&SystemKind::EcoServe) {
         // Otherwise the BENCH report would claim autoscale_variant=true
         // while containing no mitosis row.
@@ -484,12 +493,13 @@ fn cmd_plan(args: &Args) -> Result<()> {
     };
     cfg.clusters = clusters;
     cfg.level = parse_level(args)?;
-    cfg.seed = args.get_u64("seed", 42);
-    cfg.target_rate = parse_f64_flag(args, "target-rate")?;
-    cfg.budget_s = parse_f64_flag(args, "budget-s")?;
-    cfg.duration_override = parse_f64_flag(args, "duration")?;
-    if let Some(g) = args.get("gpus") {
-        cfg.max_gpus = Some(g.parse()?);
+    cfg.seed = args.u64_flag("seed").map_err(Error::msg)?.unwrap_or(42);
+    cfg.fault_seed = args.u64_flag("fault-seed").map_err(Error::msg)?;
+    cfg.target_rate = args.f64_flag("target-rate").map_err(Error::msg)?;
+    cfg.budget_s = args.f64_flag("budget-s").map_err(Error::msg)?;
+    cfg.duration_override = args.f64_flag("duration").map_err(Error::msg)?;
+    if let Some(g) = args.usize_flag("gpus").map_err(Error::msg)? {
+        cfg.max_gpus = Some(g);
     }
     if let Some(name) = args.get("system") {
         cfg.systems = vec![SystemKind::by_name(name)

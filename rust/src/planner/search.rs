@@ -51,6 +51,9 @@ pub struct PlanConfig {
     pub budget_s: Option<f64>,
     /// Probe horizon override, seconds (tests / quick CLI runs).
     pub duration_override: Option<f64>,
+    /// Fault-schedule seed: churn scenarios plan under their fault
+    /// timeline when set (fault-free otherwise).
+    pub fault_seed: Option<u64>,
 }
 
 impl PlanConfig {
@@ -68,6 +71,7 @@ impl PlanConfig {
             target_rate: None,
             budget_s: None,
             duration_override: None,
+            fault_seed: None,
         }
     }
 
@@ -238,7 +242,7 @@ fn measure(cfg: &PlanConfig, cand: &Candidate) -> PlanCell {
         seed: cfg.seed,
         rate: None, // the search owns the rate
         duration_override: cfg.duration_override,
-        abandon: None, // run_cell arms the monitor per probe
+        fault_seed: cfg.fault_seed,
     };
     let mut fc = FrontierConfig::new(base, cfg.level);
     fc.quick = cfg.quick;

@@ -1,0 +1,276 @@
+//! The churn evaluation: every system runs each churn scenario twice —
+//! once fault-free (the control) and once with the scenario's
+//! deterministic fault schedule injected — and is scored on the goodput
+//! it *retains* under hardware churn. This is the paper's cost story
+//! stress-tested: commodity clusters only stay cheap if the coordinator
+//! survives the churn that comes with them.
+//!
+//! ```text
+//! ecoserve scenarios --scenario steady+churn --fault-seed 7 \
+//!     --churn-out BENCH_churn.json
+//! ```
+//!
+//! The JSON artifact (`BENCH_churn.json`) embeds the full clean and
+//! faulted system rows (the suite-report shape) plus the recovery
+//! telemetry each system's fault handling accumulated, under the shared
+//! [`super::report::SCHEMA_VERSION`].
+
+use std::time::Duration;
+
+use super::driver::{run_system_variant, ScenarioConfig, SystemRow};
+use super::registry::Scenario;
+use super::report::{deployment_to_json, row_to_json, SCHEMA_VERSION};
+use super::spec::RunSpec;
+use crate::config::SystemKind;
+use crate::util::json::Json;
+use crate::util::threads::parallel_map;
+
+/// One system's clean-vs-faulted pairing on one churn scenario.
+#[derive(Debug)]
+pub struct ChurnRow {
+    pub system: SystemKind,
+    /// The fault-free control run (same trace, no fault timeline).
+    pub clean: SystemRow,
+    /// The identical cell with the scenario's fault schedule injected.
+    pub faulted: SystemRow,
+}
+
+impl ChurnRow {
+    /// Goodput retained under churn: faulted / clean delivered goodput
+    /// (1.0 when the control delivered none — nothing was lost).
+    pub fn goodput_retained(&self) -> f64 {
+        if self.clean.goodput_rps <= 0.0 {
+            1.0
+        } else {
+            self.faulted.goodput_rps / self.clean.goodput_rps
+        }
+    }
+}
+
+/// All systems' pairings on one churn scenario.
+#[derive(Debug)]
+pub struct ChurnOutcome {
+    pub scenario: Scenario,
+    pub rate: f64,
+    pub duration: f64,
+    pub warmup: f64,
+    /// The seed the fault schedule was generated from.
+    pub fault_seed: u64,
+    pub rows: Vec<ChurnRow>,
+}
+
+impl ChurnOutcome {
+    /// The row retaining the most goodput (ties: higher faulted goodput).
+    pub fn best(&self) -> Option<&ChurnRow> {
+        self.rows.iter().max_by(|a, b| {
+            (a.goodput_retained(), a.faulted.goodput_rps)
+                .partial_cmp(&(b.goodput_retained(), b.faulted.goodput_rps))
+                .unwrap_or(std::cmp::Ordering::Equal)
+        })
+    }
+}
+
+/// Run the clean-vs-faulted pairing for every (churn scenario × system)
+/// cell as one parallel job pool. Scenarios without a churn profile are
+/// skipped (they have no fault timeline to pair against). When the config
+/// carries no `fault_seed`, the trace seed doubles as the fault seed so
+/// the pairing stays reproducible from the command line alone.
+pub fn run_churn_suite(
+    scenarios: &[Scenario],
+    cfg: &ScenarioConfig,
+    systems: &[SystemKind],
+    workers: usize,
+) -> Vec<ChurnOutcome> {
+    let fault_seed = cfg.fault_seed.unwrap_or(cfg.seed);
+    let mut cfg = cfg.clone();
+    cfg.fault_seed = Some(fault_seed);
+    let list: Vec<&Scenario> = scenarios.iter().filter(|s| s.churn.is_some()).collect();
+
+    // Clean/faulted are independent simulations: schedule them as
+    // separate jobs (pushed adjacently, so they come back paired —
+    // `parallel_map` preserves input order).
+    let mut jobs: Vec<(usize, usize, bool)> = Vec::new();
+    for si in 0..list.len() {
+        for ki in 0..systems.len() {
+            jobs.push((si, ki, false));
+            jobs.push((si, ki, true));
+        }
+    }
+    let rows = parallel_map(jobs, workers.max(1), |(si, ki, faulted)| {
+        let spec = if faulted {
+            RunSpec::for_cell(list[si], &cfg, systems[ki])
+        } else {
+            RunSpec::new(systems[ki])
+        };
+        run_system_variant(list[si], &cfg, &spec)
+    });
+
+    let mut outcomes: Vec<ChurnOutcome> = list
+        .iter()
+        .map(|s| {
+            let (duration, warmup) = cfg.horizon(s);
+            ChurnOutcome {
+                scenario: (*s).clone(),
+                rate: cfg.rate.unwrap_or(s.default_rate),
+                duration,
+                warmup,
+                fault_seed,
+                rows: Vec::new(),
+            }
+        })
+        .collect();
+    let mut rows = rows.into_iter();
+    for outcome in &mut outcomes {
+        for &kind in systems {
+            let clean = rows.next().expect("one clean row per cell");
+            let faulted = rows.next().expect("one faulted row per cell");
+            outcome.rows.push(ChurnRow { system: kind, clean, faulted });
+        }
+    }
+    outcomes
+}
+
+fn outcome_to_json(o: &ChurnOutcome) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(o.scenario.name)),
+        ("summary", Json::str(o.scenario.summary)),
+        ("offered_rate_rps", Json::num(o.rate)),
+        ("duration_s", Json::num(o.duration)),
+        ("warmup_s", Json::num(o.warmup)),
+        ("fault_seed", Json::num(o.fault_seed as f64)),
+        (
+            "best_system",
+            match o.best() {
+                Some(r) => Json::str(r.system.label()),
+                None => Json::Null,
+            },
+        ),
+        (
+            "systems",
+            Json::arr(o.rows.iter().map(|r| {
+                Json::obj(vec![
+                    ("system", Json::str(r.system.label())),
+                    ("goodput_retained", Json::num(r.goodput_retained())),
+                    ("clean", row_to_json(&r.clean)),
+                    ("faulted", row_to_json(&r.faulted)),
+                ])
+            })),
+        ),
+    ])
+}
+
+/// The `BENCH_churn.json` artifact.
+pub fn churn_to_json(outcomes: &[ChurnOutcome], cfg: &ScenarioConfig, wall: Duration) -> Json {
+    Json::obj(vec![
+        ("bench", Json::str("ecoserve-churn")),
+        ("schema_version", Json::num(SCHEMA_VERSION)),
+        ("seed", Json::num(cfg.seed as f64)),
+        (
+            "fault_seed",
+            Json::num(cfg.fault_seed.unwrap_or(cfg.seed) as f64),
+        ),
+        ("deployment", deployment_to_json(&cfg.deployment)),
+        ("wall_s", Json::num(wall.as_secs_f64())),
+        ("scenarios", Json::arr(outcomes.iter().map(outcome_to_json))),
+    ])
+}
+
+/// Human-readable table for one churn outcome.
+pub fn render_churn_table(o: &ChurnOutcome) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "--- churn '{}' @ {:.2} req/s (fault seed {}, window {:.0}..{:.0}s) ---\n",
+        o.scenario.name, o.rate, o.fault_seed, o.warmup, o.duration
+    ));
+    out.push_str(&format!(
+        "{:<10} {:>9} {:>11} {:>10} {:>9} {:>6} {:>9} {:>9}\n",
+        "system", "clean g/s", "faulted g/s", "retained %", "rerouted", "lost", "backfills", "recov s"
+    ));
+    for r in &o.rows {
+        let t = r.faulted.churn.clone().unwrap_or_default();
+        out.push_str(&format!(
+            "{:<10} {:>9.2} {:>11.2} {:>10.1} {:>9} {:>6} {:>9} {:>9.2}\n",
+            r.system.label(),
+            r.clean.goodput_rps,
+            r.faulted.goodput_rps,
+            r.goodput_retained() * 100.0,
+            t.rerouted,
+            t.lost,
+            t.backfills,
+            t.mean_recovery_s(),
+        ));
+    }
+    if let Some(best) = o.best() {
+        out.push_str(&format!("  best under churn: {}\n", best.system.label()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenarios::registry::by_name;
+
+    fn quick_cfg() -> ScenarioConfig {
+        let mut cfg = ScenarioConfig::default_l20();
+        cfg.deployment.gpus_used = 16; // 4 instances — fast tests
+        cfg.duration_override = Some(60.0);
+        cfg.rate = Some(2.0);
+        cfg.fault_seed = Some(7);
+        cfg
+    }
+
+    #[test]
+    fn suite_pairs_clean_and_faulted_runs() {
+        let s = by_name("steady+churn").unwrap();
+        let systems = [SystemKind::EcoServe, SystemKind::Vllm];
+        let outcomes = run_churn_suite(&[s], &quick_cfg(), &systems, 4);
+        assert_eq!(outcomes.len(), 1);
+        let o = &outcomes[0];
+        assert_eq!(o.fault_seed, 7);
+        assert_eq!(o.rows.len(), 2);
+        for (row, kind) in o.rows.iter().zip(systems) {
+            assert_eq!(row.system, kind);
+            assert!(row.clean.churn.is_none(), "control must be fault-free");
+            let t = row.faulted.churn.as_ref().expect("faulted half sees faults");
+            assert!(t.downs >= 1, "{t:?}");
+            let retained = row.goodput_retained();
+            assert!(retained > 0.0 && retained <= 1.0 + 1e-9, "{retained}");
+        }
+    }
+
+    #[test]
+    fn fault_free_scenarios_are_skipped() {
+        let scenarios = vec![by_name("steady").unwrap(), by_name("steady+churn").unwrap()];
+        let outcomes =
+            run_churn_suite(&scenarios, &quick_cfg(), &[SystemKind::EcoServe], 2);
+        assert_eq!(outcomes.len(), 1);
+        assert_eq!(outcomes[0].scenario.name, "steady+churn");
+    }
+
+    #[test]
+    fn churn_json_has_the_contract_fields_and_roundtrips() {
+        let s = by_name("spot-decode-reclaim").unwrap();
+        let cfg = quick_cfg();
+        let outcomes = run_churn_suite(&[s], &cfg, &[SystemKind::EcoServe], 2);
+        let j = churn_to_json(&outcomes, &cfg, Duration::from_secs(1));
+        let text = j.to_string();
+        let back = Json::parse(&text).expect("valid JSON");
+        assert_eq!(back.get("bench").unwrap().as_str(), Some("ecoserve-churn"));
+        assert_eq!(back.get("fault_seed").unwrap().as_i64(), Some(7));
+        for key in ["schema_version", "seed", "deployment", "wall_s", "scenarios"] {
+            assert!(back.get(key).is_some(), "missing {key}");
+        }
+        let sc = &back.get("scenarios").unwrap().as_arr().unwrap()[0];
+        assert_eq!(sc.get("name").unwrap().as_str(), Some("spot-decode-reclaim"));
+        let sys = &sc.get("systems").unwrap().as_arr().unwrap()[0];
+        assert!(sys.get("goodput_retained").unwrap().as_f64().is_some());
+        assert!(sys.path(&["clean", "goodput_rps"]).is_some());
+        assert!(sys.path(&["faulted", "churn", "lost"]).is_some());
+        assert!(sys.path(&["clean", "churn"]).is_none(), "control carries no churn block");
+        // The table renders every system and the telemetry columns.
+        let table = render_churn_table(&outcomes[0]);
+        assert!(table.contains("EcoServe"));
+        assert!(table.contains("retained %"));
+    }
+}

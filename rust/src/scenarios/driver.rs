@@ -7,12 +7,13 @@
 use std::time::Duration;
 
 use super::registry::Scenario;
+use super::spec::RunSpec;
 use crate::config::{ClusterSpec, Deployment, ExperimentConfig, SystemKind};
 use crate::coordinator::{AutoScalePolicy, EcoServeSystem};
 use crate::harness::build_system;
-use crate::metrics::{summarize_from, AbandonPolicy, Collector, SloMonitor, SloSpec, Summary};
+use crate::metrics::{summarize_from, Collector, SloMonitor, SloSpec, Summary};
 use crate::perfmodel::ModelSpec;
-use crate::sim::{run_abandonable, StopReason};
+use crate::sim::{run_abandonable, run_faulted, ChurnTelemetry, StopReason, System};
 use crate::util::threads::parallel_map;
 
 /// How long past the trace end the simulator may drain in-flight requests
@@ -30,9 +31,10 @@ pub struct ScenarioConfig {
     /// Override the scenario horizon (quick CLI runs / tests). The warmup
     /// is clamped to stay inside the shortened horizon.
     pub duration_override: Option<f64>,
-    /// Arm the online SLO monitor at this policy (set per probe by the
-    /// frontier search); `None` runs the legacy full simulation.
-    pub abandon: Option<AbandonPolicy>,
+    /// Seed for expanding a churn scenario's [`crate::sim::ChurnProfile`]
+    /// into a concrete fault timeline (`--fault-seed`). `None` runs even
+    /// churn scenarios fault-free.
+    pub fault_seed: Option<u64>,
 }
 
 impl ScenarioConfig {
@@ -47,7 +49,7 @@ impl ScenarioConfig {
             seed: 42,
             rate: None,
             duration_override: None,
-            abandon: None,
+            fault_seed: None,
         }
     }
 
@@ -143,6 +145,9 @@ pub struct SystemRow {
     pub wall: Duration,
     /// Present on mitosis-on (autoscaled) runs only.
     pub autoscale: Option<AutoscaleTelemetry>,
+    /// Present when the run saw injected faults (churn scenarios run
+    /// with a fault seed): what the system's recovery machinery did.
+    pub churn: Option<ChurnTelemetry>,
 }
 
 impl SystemRow {
@@ -182,20 +187,22 @@ impl ScenarioOutcome {
     }
 }
 
-/// Run one system through one scenario with the fixed-capacity variant.
+/// Run one system through one scenario with the cell's default spec:
+/// fixed capacity, monitor off, and — for churn scenarios under a
+/// `fault_seed` — the scenario's deterministic fault schedule.
 pub fn run_system(scenario: &Scenario, cfg: &ScenarioConfig, kind: SystemKind) -> SystemRow {
-    run_system_variant(scenario, cfg, kind, &VariantSpec::default())
+    run_system_variant(scenario, cfg, &RunSpec::for_cell(scenario, cfg, kind))
 }
 
-/// Run one (system × variant) cell through one scenario. Deterministic:
-/// the trace is a pure function of (scenario, seed, rate) and the
-/// simulator is event-ordered.
+/// Run one fully-specified cell through one scenario. Deterministic: the
+/// trace is a pure function of (scenario, seed, rate), the fault timeline
+/// of (profile, fault seed), and the simulator is event-ordered.
 pub fn run_system_variant(
     scenario: &Scenario,
     cfg: &ScenarioConfig,
-    kind: SystemKind,
-    variant: &VariantSpec,
+    spec: &RunSpec,
 ) -> SystemRow {
+    let kind = spec.system;
     let (duration, warmup) = cfg.horizon(scenario);
     let rate = cfg.rate.unwrap_or(scenario.default_rate);
     let trace = scenario.build_trace_for(cfg.seed, rate, duration);
@@ -221,7 +228,7 @@ pub fn run_system_variant(
     // arrival is watched against its own class's SLO pair, and the run is
     // scored through the monitor's decision snapshot — identically whether
     // or not the simulation is actually cut short at that point.
-    let mut metrics = match cfg.abandon {
+    let mut metrics = match spec.abandon {
         Some(policy) => {
             let mut monitor = SloMonitor::new(policy.target, n_classes);
             for req in &trace {
@@ -241,8 +248,13 @@ pub fn run_system_variant(
         }
         None => Collector::new(),
     };
-    let stop_early = cfg.abandon.is_some_and(|p| p.stop_early);
-    let (stats, autoscale) = match &variant.autoscale {
+    let stop_early = spec.abandon.is_some_and(|p| p.stop_early);
+    // Expanding the schedule against the deployment happens once per run;
+    // `None` keeps the run on the exact fault-free code path (the engine's
+    // sequence numbering is untouched by an absent fault timeline).
+    let fault_events = spec.faults.as_ref().map(|s| s.events(&cfg.deployment));
+    let horizon = duration + DRAIN_SECS;
+    let (stats, autoscale, churn) = match &spec.variant.autoscale {
         Some(policy) if kind == SystemKind::EcoServe => {
             let mut sys = EcoServeSystem::with_autoscale(
                 &exp.deployment,
@@ -251,8 +263,10 @@ pub fn run_system_variant(
                 policy.clone(),
             );
             let initial = sys.active_count();
-            let stats =
-                run_abandonable(&mut sys, trace, duration + DRAIN_SECS, &mut metrics, stop_early);
+            let stats = match &fault_events {
+                Some(ev) => run_faulted(&mut sys, trace, ev, horizon, &mut metrics, stop_early),
+                None => run_abandonable(&mut sys, trace, horizon, &mut metrics, stop_early),
+            };
             debug_assert!(sys.mitosis.check_invariants().is_ok());
             let ups = sys.scale_log.iter().filter(|e| e.kind == "up").count();
             let peak = sys
@@ -269,18 +283,19 @@ pub fn run_system_variant(
                 final_active: sys.active_count(),
                 final_macros: sys.mitosis.macro_sizes(),
             };
-            (stats, Some(telemetry))
+            let churn = sys.churn_telemetry();
+            (stats, Some(telemetry), churn)
         }
         _ => {
             let mut system = build_system(kind, &exp, None);
-            let stats = run_abandonable(
-                system.as_mut(),
-                trace,
-                duration + DRAIN_SECS,
-                &mut metrics,
-                stop_early,
-            );
-            (stats, None)
+            let stats = match &fault_events {
+                Some(ev) => {
+                    run_faulted(system.as_mut(), trace, ev, horizon, &mut metrics, stop_early)
+                }
+                None => run_abandonable(system.as_mut(), trace, horizon, &mut metrics, stop_early),
+            };
+            let churn = system.churn_telemetry();
+            (stats, None, churn)
         }
     };
 
@@ -330,6 +345,7 @@ pub fn run_system_variant(
         abandoned: stats.stop == StopReason::Abandoned,
         wall: stats.wall_time,
         autoscale,
+        churn,
     }
 }
 
@@ -435,18 +451,13 @@ mod tests {
         let mut cfg = quick_cfg();
         cfg.deployment.gpus_used = 32; // 8 instances; autoscale starts at N_l=4
         cfg.rate = Some(6.0);
-        let row = run_system_variant(
-            &s,
-            &cfg,
-            SystemKind::EcoServe,
-            &VariantSpec::autoscaled(),
-        );
+        let row = run_system_variant(&s, &cfg, &RunSpec::new(SystemKind::EcoServe).autoscaled());
         let t = row.autoscale.as_ref().expect("telemetry on autoscaled runs");
         assert!(t.peak_active >= 4 && t.peak_active <= 8, "{t:?}");
         assert!(t.final_active >= 1, "{t:?}");
         assert!(row.arrived > 0);
         // Baselines ignore the variant; fixed PaDG runs carry no telemetry.
-        let vllm = run_system_variant(&s, &cfg, SystemKind::Vllm, &VariantSpec::autoscaled());
+        let vllm = run_system_variant(&s, &cfg, &RunSpec::new(SystemKind::Vllm).autoscaled());
         assert!(vllm.autoscale.is_none());
         assert!(run_system(&s, &cfg, SystemKind::EcoServe).autoscale.is_none());
     }
@@ -509,13 +520,15 @@ mod tests {
     /// cell driven to completion — only the event count shrinks.
     #[test]
     fn abandoned_overload_cell_matches_the_monitored_full_run() {
+        use crate::metrics::AbandonPolicy;
         let s = by_name("mixed-slo").unwrap();
         let mut cfg = quick_cfg();
         cfg.rate = Some(60.0); // far beyond 4 instances' capacity
-        cfg.abandon = Some(AbandonPolicy::stop_at(0.90));
-        let fast = run_system(&s, &cfg, SystemKind::EcoServe);
-        cfg.abandon = Some(AbandonPolicy::monitor_only(0.90));
-        let full = run_system(&s, &cfg, SystemKind::EcoServe);
+        let stop = RunSpec::new(SystemKind::EcoServe).with_abandon(AbandonPolicy::stop_at(0.90));
+        let fast = run_system_variant(&s, &cfg, &stop);
+        let watch =
+            RunSpec::new(SystemKind::EcoServe).with_abandon(AbandonPolicy::monitor_only(0.90));
+        let full = run_system_variant(&s, &cfg, &watch);
         assert!(fast.abandoned, "overload must abandon");
         assert!(!full.abandoned);
         assert!(fast.events_saved > 0);
@@ -539,11 +552,33 @@ mod tests {
         assert_eq!(fast.summary.ttft_p99.to_bits(), full.summary.ttft_p99.to_bits());
         // Both verdicts are "fail" — and so says the legacy full run.
         assert!(fast.min_class_attainment() < 0.90 - 1e-12);
-        cfg.abandon = None;
         let legacy = run_system(&s, &cfg, SystemKind::EcoServe);
         assert!(legacy.min_class_attainment() < 0.90 - 1e-12);
         assert!(!legacy.abandoned);
         assert_eq!(legacy.events_saved, 0);
+    }
+
+    #[test]
+    fn churn_scenario_with_fault_seed_reports_telemetry() {
+        let s = by_name("steady+churn").unwrap();
+        let mut cfg = quick_cfg();
+        // Without a fault seed the cell runs fault-free.
+        let clean = run_system(&s, &cfg, SystemKind::EcoServe);
+        assert!(clean.churn.is_none());
+        cfg.fault_seed = Some(7);
+        let faulted = run_system(&s, &cfg, SystemKind::EcoServe);
+        let t = faulted.churn.as_ref().expect("fault seed => churn telemetry");
+        assert!(t.downs >= 1, "{t:?}");
+        // Faults cost goodput, never create it.
+        assert!(faulted.met <= clean.met, "{} vs {}", faulted.met, clean.met);
+        // Same fault seed, same timeline: rows agree exactly.
+        let again = run_system(&s, &cfg, SystemKind::EcoServe);
+        assert_eq!(faulted.events, again.events);
+        assert_eq!(faulted.met, again.met);
+        assert_eq!(Some(t), again.churn.as_ref());
+        // Baselines see the same faults through their native handling.
+        let vllm = run_system(&s, &cfg, SystemKind::Vllm);
+        assert!(vllm.churn.is_some());
     }
 
     #[test]

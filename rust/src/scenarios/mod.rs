@@ -21,23 +21,34 @@
 //!   [`crate::workload::TraceGenerator`], [`crate::workload::RampTrace`],
 //!   and [`crate::workload::ReplayTrace`] ([`Scenario::from_log`] wraps a
 //!   log; `ecoserve record` exports one).
+//! * [`spec`] — the declarative [`RunSpec`] (system × variant × monitor
+//!   × fault schedule) both this driver and [`crate::frontier`] consume.
 //! * [`driver`] — runs (scenario × system) cells through
 //!   [`crate::harness::build_system`] and the simulator in parallel
 //!   ([`crate::util::threads::parallel_map`]), scoring strict per-class
 //!   attainment and delivered goodput.
+//! * [`churn`] — the clean-vs-faulted pairing behind `ecoserve scenarios
+//!   --churn-out`: goodput retained under churn per system, with the
+//!   recovery telemetry each system's fault handling accumulated.
 //! * [`report`] — the JSON contract (via [`crate::util::json`]) and the
 //!   human table.
 
+pub mod churn;
 pub mod driver;
 pub mod registry;
 pub mod report;
+pub mod spec;
 
+pub use churn::{
+    churn_to_json, render_churn_table, run_churn_suite, ChurnOutcome, ChurnRow,
+};
 pub use driver::{
     run_scenario, run_suite, run_system, run_system_variant, AutoscaleTelemetry,
     ClassScore, ScenarioConfig, ScenarioOutcome, SystemRow, VariantSpec,
 };
 pub use registry::{by_name, registry, LoadShape, Scenario, SweepBounds, TrafficClass};
 pub use report::{
-    class_to_json, deployment_to_json, render_table, replay_to_json, suite_to_json,
-    SCHEMA_VERSION,
+    churn_telemetry_to_json, class_to_json, deployment_to_json, render_table,
+    replay_to_json, row_to_json, suite_to_json, SCHEMA_VERSION,
 };
+pub use spec::RunSpec;

@@ -12,6 +12,7 @@ use std::path::Path;
 
 use anyhow::Result;
 
+use crate::sim::ChurnProfile;
 use crate::workload::replay::{leak, render_log, ReplayClass, ReplayRecord, ReplayTrace};
 use crate::workload::{Dataset, RampTrace, Request, TraceGenerator};
 
@@ -158,6 +159,12 @@ pub struct Scenario {
     pub default_rate: f64,
     /// Frontier-search bracket for this scenario's rate sweep.
     pub sweep: SweepBounds,
+    /// Hardware-churn shape injected alongside the traffic (`None` =
+    /// fault-free). Expanded into a concrete, deterministic
+    /// [`crate::sim::FaultSchedule`] by the driver when a `--fault-seed`
+    /// is supplied, so the same (scenario, fault seed) pair always
+    /// replays the identical outage timeline.
+    pub churn: Option<ChurnProfile>,
 }
 
 impl Scenario {
@@ -302,6 +309,7 @@ impl Scenario {
             warmup,
             default_rate: native_rate,
             sweep: SweepBounds::around(native_rate),
+            churn: None,
         }
     }
 
@@ -350,6 +358,7 @@ pub fn registry() -> Vec<Scenario> {
             warmup: 30.0,
             default_rate: 8.0,
             sweep: SweepBounds::around(8.0),
+            churn: None,
         },
         Scenario {
             name: "bursty",
@@ -361,6 +370,7 @@ pub fn registry() -> Vec<Scenario> {
             warmup: 30.0,
             default_rate: 6.0,
             sweep: SweepBounds::around(6.0),
+            churn: None,
         },
         Scenario {
             name: "diurnal",
@@ -371,6 +381,7 @@ pub fn registry() -> Vec<Scenario> {
             warmup: 30.0,
             default_rate: 7.0,
             sweep: SweepBounds::around(7.0),
+            churn: None,
         },
         Scenario {
             name: "heavy-tail",
@@ -382,6 +393,7 @@ pub fn registry() -> Vec<Scenario> {
             warmup: 30.0,
             default_rate: 2.5,
             sweep: SweepBounds::around(2.5),
+            churn: None,
         },
         Scenario {
             name: "mixed-slo",
@@ -396,6 +408,7 @@ pub fn registry() -> Vec<Scenario> {
             warmup: 30.0,
             default_rate: 6.0,
             sweep: SweepBounds::around(6.0),
+            churn: None,
         },
         Scenario {
             name: "surge",
@@ -407,6 +420,43 @@ pub fn registry() -> Vec<Scenario> {
             warmup: 30.0,
             default_rate: 6.0,
             sweep: SweepBounds::around(6.0),
+            churn: None,
+        },
+        Scenario {
+            name: "steady+churn",
+            summary: "the steady operating point with instance crashes every ~45s \
+                      (20s outages) — goodput retained under hardware churn",
+            classes: single("chat", Dataset::sharegpt()),
+            shape: LoadShape::Steady,
+            duration: 240.0,
+            warmup: 30.0,
+            default_rate: 6.0,
+            sweep: SweepBounds::around(6.0),
+            churn: Some(ChurnProfile::crashes(45.0, 20.0)),
+        },
+        Scenario {
+            name: "surge+preemption",
+            summary: "the Figure-10 ramp while spot capacity is reclaimed every \
+                      ~60s (10s notice, 30s outages) — recovery under rising load",
+            classes: single("chat", Dataset::sharegpt()),
+            shape: LoadShape::Ramp { start_mult: 0.5, end_mult: 1.5, increments: 6 },
+            duration: 300.0,
+            warmup: 30.0,
+            default_rate: 5.0,
+            sweep: SweepBounds::around(5.0),
+            churn: Some(ChurnProfile::preemptions(60.0, 10.0, 30.0)),
+        },
+        Scenario {
+            name: "spot-decode-reclaim",
+            summary: "steady traffic with near-zero-notice spot reclaims every ~50s \
+                      (1s notice, 25s outages) — mid-decode state is on the line",
+            classes: single("chat", Dataset::sharegpt()),
+            shape: LoadShape::Steady,
+            duration: 240.0,
+            warmup: 30.0,
+            default_rate: 6.0,
+            sweep: SweepBounds::around(6.0),
+            churn: Some(ChurnProfile::preemptions(50.0, 1.0, 25.0)),
         },
     ]
 }
@@ -457,6 +507,33 @@ mod tests {
         assert_eq!(b.floor, 0.5);
         assert_eq!(b.start, 2.0);
         assert_eq!(b.ceiling, 64.0);
+    }
+
+    #[test]
+    fn churn_scenarios_carry_profiles_and_fault_free_ones_do_not() {
+        let churned: Vec<&str> = registry()
+            .iter()
+            .filter(|s| s.churn.is_some())
+            .map(|s| s.name)
+            .collect();
+        assert_eq!(
+            churned,
+            vec!["steady+churn", "surge+preemption", "spot-decode-reclaim"]
+        );
+        assert!(by_name("steady").unwrap().churn.is_none());
+        // The profiles must actually produce faults inside the scored
+        // window at the registry horizons.
+        for name in churned {
+            let s = by_name(name).unwrap();
+            let sched = crate::sim::FaultSchedule::generate(
+                s.churn.as_ref().unwrap(),
+                7,
+                s.duration,
+                s.warmup,
+                8,
+            );
+            assert!(!sched.is_empty(), "{name}: empty generated schedule");
+        }
     }
 
     #[test]

@@ -42,7 +42,10 @@ fn pct_obj(p50: f64, p90: f64, p99: f64) -> Json {
     ])
 }
 
-fn row_to_json(row: &SystemRow) -> Json {
+/// The per-system result block; shared with the churn report
+/// ([`super::churn::churn_to_json`] embeds it for the clean and faulted
+/// halves of each pairing).
+pub fn row_to_json(row: &SystemRow) -> Json {
     let s = &row.summary;
     let mut fields = vec![
         ("system", Json::str(row.system.label())),
@@ -75,7 +78,25 @@ fn row_to_json(row: &SystemRow) -> Json {
             ]),
         ));
     }
+    if let Some(c) = &row.churn {
+        fields.push(("churn", churn_telemetry_to_json(c)));
+    }
     Json::obj(fields)
+}
+
+/// The recovery-telemetry block attached to rows of faulted runs (absent
+/// on fault-free runs — additive, like the autoscale block).
+pub fn churn_telemetry_to_json(c: &crate::sim::ChurnTelemetry) -> Json {
+    Json::obj(vec![
+        ("faults", Json::num(c.faults as f64)),
+        ("downs", Json::num(c.downs as f64)),
+        ("preempt_notices", Json::num(c.notices as f64)),
+        ("rerouted", Json::num(c.rerouted as f64)),
+        ("lost", Json::num(c.lost as f64)),
+        ("backfills", Json::num(c.backfills as f64)),
+        ("recoveries", Json::num(c.recoveries as f64)),
+        ("mean_recovery_s", Json::num(c.mean_recovery_s())),
+    ])
 }
 
 /// The replay-provenance block both report schemas embed for scenarios
@@ -245,6 +266,7 @@ mod tests {
             warmup: 10.0,
             default_rate: 2.0,
             sweep: SweepBounds::around(2.0),
+            churn: None,
         };
         let row = SystemRow {
             system: SystemKind::EcoServe,
@@ -276,6 +298,7 @@ mod tests {
             abandoned: false,
             wall: std::time::Duration::from_secs(2),
             autoscale: None,
+            churn: None,
         };
         let outcome = ScenarioOutcome {
             scenario,

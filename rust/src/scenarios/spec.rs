@@ -1,0 +1,139 @@
+//! The declarative run specification: one value that says *how* a
+//! (scenario × system) cell runs — which system, which capacity variant,
+//! whether the online SLO monitor is armed, and which fault timeline (if
+//! any) is injected. Both drivers consume it ([`super::driver`] for suite
+//! rows, [`crate::frontier`] for search probes), so a new run dimension
+//! is one new field here instead of another positional argument on every
+//! call-site in between.
+//!
+//! A spec with `faults: None` runs the exact fault-free code path the
+//! pre-fault driver ran — bit-identical, as pinned by the equivalence
+//! tests — while [`RunSpec::for_cell`] derives the deterministic fault
+//! schedule for churn scenarios from `(scenario.churn, cfg.fault_seed)`.
+
+use crate::config::SystemKind;
+use crate::metrics::AbandonPolicy;
+use crate::sim::FaultSchedule;
+
+use super::driver::{ScenarioConfig, VariantSpec};
+use super::registry::Scenario;
+
+/// Everything that varies between two runs of the same scenario.
+#[derive(Debug, Clone)]
+pub struct RunSpec {
+    /// Which serving system runs the cell.
+    pub system: SystemKind,
+    /// Fixed-capacity (default) vs mitosis-on instantiation.
+    pub variant: VariantSpec,
+    /// Arm the online SLO monitor at this policy (set per probe by the
+    /// frontier search); `None` runs the legacy full simulation.
+    pub abandon: Option<AbandonPolicy>,
+    /// Inject this fault timeline; `None` keeps the run on the exact
+    /// fault-free code path.
+    pub faults: Option<FaultSchedule>,
+}
+
+impl RunSpec {
+    /// A plain fixed-capacity, monitor-off, fault-free run of `system`.
+    pub fn new(system: SystemKind) -> Self {
+        RunSpec {
+            system,
+            variant: VariantSpec::default(),
+            abandon: None,
+            faults: None,
+        }
+    }
+
+    /// Builder: replace the capacity variant.
+    pub fn with_variant(mut self, variant: VariantSpec) -> Self {
+        self.variant = variant;
+        self
+    }
+
+    /// Builder: the mitosis-on variant with the Figure-10 default policy.
+    pub fn autoscaled(self) -> Self {
+        self.with_variant(VariantSpec::autoscaled())
+    }
+
+    /// Builder: arm the online SLO monitor.
+    pub fn with_abandon(mut self, policy: AbandonPolicy) -> Self {
+        self.abandon = Some(policy);
+        self
+    }
+
+    /// Builder: inject a fault timeline.
+    pub fn with_faults(mut self, faults: FaultSchedule) -> Self {
+        self.faults = Some(faults);
+        self
+    }
+
+    /// The spec [`super::driver::run_system`] uses for one cell: plain
+    /// run, plus the scenario's churn profile expanded into a concrete
+    /// schedule when the config carries a fault seed. Deterministic — the
+    /// schedule is a pure function of `(profile, fault_seed, horizon,
+    /// instances)`, and the horizon already reflects the config's rate
+    /// and duration override.
+    pub fn for_cell(scenario: &Scenario, cfg: &ScenarioConfig, system: SystemKind) -> Self {
+        let spec = RunSpec::new(system);
+        match (&scenario.churn, cfg.fault_seed) {
+            (Some(profile), Some(fault_seed)) => {
+                let (duration, warmup) = cfg.horizon(scenario);
+                spec.with_faults(FaultSchedule::generate(
+                    profile,
+                    fault_seed,
+                    duration,
+                    warmup,
+                    cfg.deployment.num_instances(),
+                ))
+            }
+            _ => spec,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenarios::registry::by_name;
+
+    #[test]
+    fn for_cell_attaches_faults_only_with_profile_and_seed() {
+        let mut cfg = ScenarioConfig::default_l20();
+        let churny = by_name("steady+churn").unwrap();
+        let clean = by_name("steady").unwrap();
+
+        // No fault seed: even churn scenarios run fault-free.
+        assert!(RunSpec::for_cell(&churny, &cfg, SystemKind::EcoServe).faults.is_none());
+
+        cfg.fault_seed = Some(7);
+        let spec = RunSpec::for_cell(&churny, &cfg, SystemKind::EcoServe);
+        let sched = spec.faults.expect("churn scenario + fault seed => schedule");
+        assert!(!sched.is_empty());
+        // A fault-free scenario never grows a schedule, seed or not.
+        assert!(RunSpec::for_cell(&clean, &cfg, SystemKind::EcoServe).faults.is_none());
+
+        // Deterministic in the seed, and the seed moves the timeline.
+        let again = RunSpec::for_cell(&churny, &cfg, SystemKind::EcoServe);
+        assert_eq!(Some(&sched), again.faults.as_ref());
+        cfg.fault_seed = Some(8);
+        assert_ne!(
+            Some(&sched),
+            RunSpec::for_cell(&churny, &cfg, SystemKind::EcoServe).faults.as_ref()
+        );
+    }
+
+    #[test]
+    fn builder_composes() {
+        let spec = RunSpec::new(SystemKind::EcoServe)
+            .autoscaled()
+            .with_abandon(AbandonPolicy::stop_at(0.9))
+            .with_faults(FaultSchedule::none());
+        assert_eq!(spec.system, SystemKind::EcoServe);
+        assert!(spec.variant.autoscale.is_some());
+        assert!(spec.abandon.is_some_and(|p| p.stop_early));
+        assert!(spec.faults.is_some());
+        let plain = RunSpec::new(SystemKind::Vllm);
+        assert!(plain.variant.autoscale.is_none());
+        assert!(plain.abandon.is_none() && plain.faults.is_none());
+    }
+}

@@ -15,6 +15,7 @@ use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
 use crate::metrics::Collector;
+use crate::sim::faults::{ChurnTelemetry, FaultEvent};
 use crate::workload::Request;
 
 /// Events a serving system reacts to.
@@ -28,6 +29,9 @@ pub enum Event {
     TransferDone { transfer: u64 },
     /// Periodic controller tick (mitosis scaling, Figure 10).
     ControlTick,
+    /// An injected fault fires (crash, restart, preemption notice, link
+    /// degradation) — see [`crate::sim::faults`].
+    Fault(FaultEvent),
 }
 
 /// Total order wrapper: min-heap on (time, seq).
@@ -132,6 +136,22 @@ pub trait System {
         _metrics: &mut Collector,
     ) {
     }
+    /// React to an injected fault. The default ignores faults entirely —
+    /// a system that opts out simply keeps scheduling onto hardware that
+    /// no longer exists, which is exactly the recovery-off ablation.
+    fn on_fault(
+        &mut self,
+        _fault: FaultEvent,
+        _now: f64,
+        _sched: &mut EventScheduler,
+        _metrics: &mut Collector,
+    ) {
+    }
+    /// Churn bookkeeping accumulated by [`Self::on_fault`]; `None` when
+    /// the run saw no faults (keeps fault-free reports byte-identical).
+    fn churn_telemetry(&self) -> Option<ChurnTelemetry> {
+        None
+    }
 }
 
 /// Why a simulation run ended.
@@ -179,7 +199,24 @@ pub fn run(
 /// dispatched and counts toward `events_saved`, not `events`.
 pub fn run_until(
     system: &mut dyn System,
+    trace: Vec<Request>,
+    horizon: f64,
+    metrics: &mut Collector,
+    stop: impl FnMut(f64, &Collector) -> bool,
+) -> RunStats {
+    run_until_faulted(system, trace, &[], horizon, metrics, stop)
+}
+
+/// [`run_until`] with an injected fault timeline. The `(time, event)`
+/// pairs (see [`crate::sim::faults::FaultSchedule::events`]) are seeded
+/// into the dynamic heap before the first arrival, so faults interleave
+/// deterministically with the trace; with an empty fault list the
+/// scheduler's sequence numbering is untouched and the run is
+/// bit-identical to [`run_until`].
+pub fn run_until_faulted(
+    system: &mut dyn System,
     mut trace: Vec<Request>,
+    faults: &[(f64, FaultEvent)],
     horizon: f64,
     metrics: &mut Collector,
     mut stop: impl FnMut(f64, &Collector) -> bool,
@@ -193,6 +230,9 @@ pub fn run_until(
     }
     let mut arrivals = trace.into_iter().peekable();
     let mut sched = EventScheduler::new();
+    for &(t, fault) in faults {
+        sched.at(t, Event::Fault(fault));
+    }
     let mut now = 0.0;
     let mut dispatched: u64 = 0;
     let mut events_saved: u64 = 0;
@@ -245,6 +285,9 @@ pub fn run_until(
             Event::ControlTick => {
                 system.on_control_tick(now, &mut sched, metrics);
             }
+            Event::Fault(fault) => {
+                system.on_fault(fault, now, &mut sched, metrics);
+            }
         }
     }
     RunStats {
@@ -274,6 +317,24 @@ pub fn run_abandonable(
     }
 }
 
+/// [`run_abandonable`] with an injected fault timeline.
+pub fn run_faulted(
+    system: &mut dyn System,
+    trace: Vec<Request>,
+    faults: &[(f64, FaultEvent)],
+    horizon: f64,
+    metrics: &mut Collector,
+    stop_early: bool,
+) -> RunStats {
+    if stop_early {
+        run_until_faulted(system, trace, faults, horizon, metrics, |_, m: &Collector| {
+            m.decided()
+        })
+    } else {
+        run_until_faulted(system, trace, faults, horizon, metrics, |_, _| false)
+    }
+}
+
 /// The original engine: preloads every trace arrival into the heap, so
 /// heap size starts at the full trace length. Retained purely as a
 /// differential-testing oracle for the cursor engine — tests pin that
@@ -285,10 +346,28 @@ pub fn reference_run(
     horizon: f64,
     metrics: &mut Collector,
 ) -> RunStats {
+    reference_run_faulted(system, trace, &[], horizon, metrics)
+}
+
+/// [`reference_run`] with an injected fault timeline. Arrivals are
+/// preloaded *before* faults so every arrival holds a smaller sequence
+/// number than any fault at the same instant — matching the cursor
+/// engine, where arrivals win ties against the dynamic heap.
+#[doc(hidden)]
+pub fn reference_run_faulted(
+    system: &mut dyn System,
+    trace: Vec<Request>,
+    faults: &[(f64, FaultEvent)],
+    horizon: f64,
+    metrics: &mut Collector,
+) -> RunStats {
     let wall_start = std::time::Instant::now();
     let mut sched = EventScheduler::new();
     for req in trace {
         sched.at(req.arrival, Event::Arrival(req));
+    }
+    for &(t, fault) in faults {
+        sched.at(t, Event::Fault(fault));
     }
     let mut now = 0.0;
     let mut dispatched: u64 = 0;
@@ -315,6 +394,9 @@ pub fn reference_run(
             }
             Event::ControlTick => {
                 system.on_control_tick(now, &mut sched, metrics);
+            }
+            Event::Fault(fault) => {
+                system.on_fault(fault, now, &mut sched, metrics);
             }
         }
     }

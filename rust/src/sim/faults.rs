@@ -1,0 +1,615 @@
+//! Fault injection: deterministic, seedable hardware-churn timelines.
+//!
+//! EcoServe's cost argument lives on commodity clusters where nodes die,
+//! links degrade, and spot GPUs get reclaimed mid-decode. This module
+//! turns that churn into data: a [`FaultSchedule`] is a validated list of
+//! [`Fault`]s (instance crash/restart, whole-node loss, link-tier
+//! degradation, spot preemption with a reclaim notice) that expands —
+//! against a concrete [`Deployment`] — into the [`FaultEvent`] timeline
+//! the engine feeds through its dynamic-event heap
+//! ([`crate::sim::run_faulted`]). Schedules come from two places:
+//!
+//! * [`FaultSchedule::generate`] — derived from a scenario's
+//!   [`ChurnProfile`] and a seed (PCG64), so `steady+churn`-style
+//!   scenarios are reproducible bit-for-bit from `--fault-seed`;
+//! * [`FaultSchedule::parse_named`] — a JSONL description, strict like
+//!   the replay parser: malformed, out-of-order, or overlapping lines
+//!   fail with the offending line number.
+//!
+//! Expansion merges overlapping down-windows per instance (a node loss
+//! that swallows an already-crashed instance extends its outage instead
+//! of double-firing), so every `InstanceDown` is paired with exactly one
+//! `InstanceUp`.
+//!
+//! ## JSONL format
+//!
+//! One fault per line:
+//!
+//! ```text
+//! {"at_s":40,"kind":"crash","instance":2,"down_s":20}
+//! {"at_s":90,"kind":"node-loss","node":0,"down_s":30}
+//! {"at_s":150,"kind":"preempt","instance":1,"notice_s":5,"down_s":60}
+//! {"at_s":200,"kind":"link-degrade","factor":4,"for_s":30}
+//! ```
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::Deployment;
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+
+/// One fault to inject, in schedule (deployment-independent) form.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Fault {
+    /// Absolute simulation time, seconds.
+    pub at: f64,
+    pub kind: FaultKind,
+}
+
+/// The fault taxonomy the simulator understands.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// One instance dies, restarting `down_s` seconds later.
+    Crash { instance: usize, down_s: f64 },
+    /// Every instance on `node` dies, restarting `down_s` later.
+    NodeLoss { node: usize, down_s: f64 },
+    /// Spot reclaim: a notice fires at `at`, the instance dies
+    /// `notice_s` later, and the capacity returns after `down_s`.
+    Preempt { instance: usize, notice_s: f64, down_s: f64 },
+    /// Inter-instance transfers slow down by `factor` for `for_s`
+    /// seconds (FuDG KV migration; PaDG moves no KV and shrugs).
+    LinkDegrade { factor: f64, for_s: f64 },
+}
+
+/// A fault delivered to a running system (deployment-resolved).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultEvent {
+    InstanceDown { instance: usize },
+    InstanceUp { instance: usize },
+    PreemptNotice { instance: usize },
+    LinkDegrade { factor: f64 },
+    LinkRestore,
+}
+
+/// Per-scenario churn shape ([`crate::scenarios::Scenario::churn`]):
+/// mean spacings between faults, expanded into a concrete
+/// [`FaultSchedule`] by [`FaultSchedule::generate`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChurnProfile {
+    /// Mean seconds between instance crashes (`None` = no crashes).
+    pub crash_every_s: Option<f64>,
+    /// Outage length per crash, seconds.
+    pub crash_down_s: f64,
+    /// Mean seconds between spot preemptions (`None` = none).
+    pub preempt_every_s: Option<f64>,
+    /// Reclaim notice before a preempted instance dies, seconds.
+    pub preempt_notice_s: f64,
+    /// Outage length per preemption, seconds.
+    pub preempt_down_s: f64,
+}
+
+impl ChurnProfile {
+    /// Crash-only churn.
+    pub fn crashes(every_s: f64, down_s: f64) -> Self {
+        ChurnProfile {
+            crash_every_s: Some(every_s),
+            crash_down_s: down_s,
+            preempt_every_s: None,
+            preempt_notice_s: 0.0,
+            preempt_down_s: 0.0,
+        }
+    }
+
+    /// Preemption-only churn.
+    pub fn preemptions(every_s: f64, notice_s: f64, down_s: f64) -> Self {
+        ChurnProfile {
+            crash_every_s: None,
+            crash_down_s: 0.0,
+            preempt_every_s: Some(every_s),
+            preempt_notice_s: notice_s,
+            preempt_down_s: down_s,
+        }
+    }
+}
+
+/// Churn bookkeeping a system accumulates in
+/// [`crate::sim::System::on_fault`] and reports through
+/// [`crate::sim::System::churn_telemetry`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ChurnTelemetry {
+    /// Fault events delivered to the system.
+    pub faults: u64,
+    /// Instance-down events observed.
+    pub downs: u64,
+    /// Preemption notices observed.
+    pub notices: u64,
+    /// Evacuated requests re-queued for another instance.
+    pub rerouted: u64,
+    /// Evacuated requests dropped (mid-decode state is unrecoverable).
+    pub lost: u64,
+    /// Instances restored into the serving set after an outage.
+    pub backfills: u64,
+    /// Sum of recovery latencies, seconds (see `recoveries`).
+    pub recovery_s_sum: f64,
+    /// Closed recovery episodes: outage start → evacuated work
+    /// re-admitted (coordinator recovery) or instance restart (native).
+    pub recoveries: u64,
+}
+
+impl ChurnTelemetry {
+    /// Mean recovery latency over the closed episodes, seconds.
+    pub fn mean_recovery_s(&self) -> f64 {
+        if self.recoveries == 0 {
+            0.0
+        } else {
+            self.recovery_s_sum / self.recoveries as f64
+        }
+    }
+
+    /// Did this run see any fault at all?
+    pub fn any(&self) -> bool {
+        self.faults > 0
+    }
+}
+
+/// Same-target overlap key for validation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+enum Target {
+    Instance(usize),
+    Node(usize),
+    Link,
+}
+
+impl Fault {
+    /// Validation window `[start, end)` during which the target is
+    /// affected, plus the target itself.
+    fn window(&self) -> (Target, f64, f64) {
+        match self.kind {
+            FaultKind::Crash { instance, down_s } => {
+                (Target::Instance(instance), self.at, self.at + down_s)
+            }
+            FaultKind::NodeLoss { node, down_s } => {
+                (Target::Node(node), self.at, self.at + down_s)
+            }
+            FaultKind::Preempt { instance, notice_s, down_s } => (
+                Target::Instance(instance),
+                self.at + notice_s,
+                self.at + notice_s + down_s,
+            ),
+            FaultKind::LinkDegrade { factor: _, for_s } => {
+                (Target::Link, self.at, self.at + for_s)
+            }
+        }
+    }
+}
+
+/// A validated fault timeline: times non-decreasing, every fault
+/// well-formed, and no two faults against the *same* target overlapping
+/// (a node loss may still swallow an instance crash — expansion merges
+/// those windows).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultSchedule {
+    faults: Vec<Fault>,
+}
+
+/// Shared validator; `where_` renders the error location ("fault[3]" for
+/// programmatic lists, "faults.jsonl:4" for parsed ones).
+fn validate(faults: &[Fault], where_: impl Fn(usize) -> String) -> Result<()> {
+    let mut last_at = f64::NEG_INFINITY;
+    let mut busy_until: BTreeMap<Target, f64> = BTreeMap::new();
+    for (i, f) in faults.iter().enumerate() {
+        let at = f.at;
+        if !at.is_finite() || at < 0.0 {
+            bail!("{}: fault time must be finite and >= 0, got {at}", where_(i));
+        }
+        if at < last_at {
+            bail!(
+                "{}: fault times must be non-decreasing ({at} after {last_at})",
+                where_(i)
+            );
+        }
+        last_at = at;
+        match f.kind {
+            FaultKind::Crash { down_s, .. } | FaultKind::NodeLoss { down_s, .. } => {
+                if !down_s.is_finite() || down_s <= 0.0 {
+                    bail!("{}: 'down_s' must be positive and finite, got {down_s}", where_(i));
+                }
+            }
+            FaultKind::Preempt { notice_s, down_s, .. } => {
+                if !notice_s.is_finite() || notice_s < 0.0 {
+                    bail!("{}: 'notice_s' must be finite and >= 0, got {notice_s}", where_(i));
+                }
+                if !down_s.is_finite() || down_s <= 0.0 {
+                    bail!("{}: 'down_s' must be positive and finite, got {down_s}", where_(i));
+                }
+            }
+            FaultKind::LinkDegrade { factor, for_s } => {
+                if !factor.is_finite() || factor < 1.0 {
+                    bail!(
+                        "{}: 'factor' must be a slowdown >= 1, got {factor}",
+                        where_(i)
+                    );
+                }
+                if !for_s.is_finite() || for_s <= 0.0 {
+                    bail!("{}: 'for_s' must be positive and finite, got {for_s}", where_(i));
+                }
+            }
+        }
+        let (target, start, end) = f.window();
+        if let Some(&until) = busy_until.get(&target) {
+            if start < until {
+                bail!(
+                    "{}: fault overlaps the previous {} window (starts {start}, \
+                     previous runs to {until})",
+                    where_(i),
+                    match target {
+                        Target::Instance(k) => format!("instance-{k}"),
+                        Target::Node(k) => format!("node-{k}"),
+                        Target::Link => "link-degrade".to_string(),
+                    }
+                );
+            }
+        }
+        let slot = busy_until.entry(target).or_insert(f64::NEG_INFINITY);
+        *slot = slot.max(end);
+    }
+    Ok(())
+}
+
+impl FaultSchedule {
+    /// An empty (fault-free) schedule.
+    pub fn none() -> Self {
+        FaultSchedule::default()
+    }
+
+    /// Validate and wrap an explicit fault list.
+    pub fn new(faults: Vec<Fault>) -> Result<Self> {
+        validate(&faults, |i| format!("fault[{i}]"))?;
+        Ok(FaultSchedule { faults })
+    }
+
+    /// Parse a JSONL fault description. `src` labels errors (file name);
+    /// every malformed, out-of-order, or overlapping line fails with its
+    /// line number, exactly like the replay-log parser.
+    pub fn parse_named(text: &str, src: &str) -> Result<FaultSchedule> {
+        let mut faults = Vec::new();
+        let mut lines = Vec::new();
+        for (idx, line) in text.lines().enumerate() {
+            let n = idx + 1;
+            if line.trim().is_empty() {
+                bail!("{src}:{n}: blank line (faults are one JSON object per line)");
+            }
+            let j = Json::parse(line)
+                .map_err(|e| anyhow::anyhow!("{src}:{n}: {e}"))?;
+            let at = j
+                .get("at_s")
+                .and_then(|v| v.as_f64())
+                .with_context(|| format!("{src}:{n}: 'at_s' must be a number"))?;
+            let kind = j
+                .get("kind")
+                .and_then(|v| v.as_str())
+                .with_context(|| format!("{src}:{n}: 'kind' must be a string"))?;
+            let num = |key: &str| -> Result<f64> {
+                j.get(key)
+                    .and_then(|v| v.as_f64())
+                    .with_context(|| format!("{src}:{n}: '{key}' must be a number"))
+            };
+            let index = |key: &str| -> Result<usize> {
+                let x = num(key)?;
+                if x < 0.0 || x.fract() != 0.0 {
+                    bail!("{src}:{n}: '{key}' must be a non-negative integer, got {x}");
+                }
+                Ok(x as usize)
+            };
+            let kind = match kind {
+                "crash" => FaultKind::Crash { instance: index("instance")?, down_s: num("down_s")? },
+                "node-loss" => FaultKind::NodeLoss { node: index("node")?, down_s: num("down_s")? },
+                "preempt" => FaultKind::Preempt {
+                    instance: index("instance")?,
+                    notice_s: match j.get("notice_s") {
+                        Some(_) => num("notice_s")?,
+                        None => 0.0,
+                    },
+                    down_s: num("down_s")?,
+                },
+                "link-degrade" => {
+                    FaultKind::LinkDegrade { factor: num("factor")?, for_s: num("for_s")? }
+                }
+                other => bail!(
+                    "{src}:{n}: unknown fault kind '{other}' \
+                     (crash, node-loss, preempt, link-degrade)"
+                ),
+            };
+            faults.push(Fault { at, kind });
+            lines.push(n);
+        }
+        validate(&faults, |i| format!("{src}:{}", lines[i]))?;
+        Ok(FaultSchedule { faults })
+    }
+
+    /// Derive a schedule from a churn profile: faults land in
+    /// `[warmup, duration)` with PCG64-jittered spacing and victims, so
+    /// the same `(profile, seed, duration, warmup, instances)` tuple
+    /// always yields the identical timeline.
+    pub fn generate(
+        profile: &ChurnProfile,
+        seed: u64,
+        duration: f64,
+        warmup: f64,
+        instances: usize,
+    ) -> FaultSchedule {
+        let mut faults = Vec::new();
+        if duration <= warmup || instances == 0 {
+            return FaultSchedule { faults };
+        }
+        let mut rng = Pcg64::new(seed, 0xFA17);
+        let mut victim = rng.below(instances as u64) as usize;
+        if let Some(every) = profile.crash_every_s {
+            let mut t = warmup + every * 0.5;
+            while t < duration {
+                faults.push(Fault {
+                    at: t,
+                    kind: FaultKind::Crash {
+                        instance: victim % instances,
+                        down_s: profile.crash_down_s,
+                    },
+                });
+                victim += 1 + rng.below(instances as u64) as usize;
+                t += every * rng.uniform(0.75, 1.25);
+            }
+        }
+        if let Some(every) = profile.preempt_every_s {
+            let mut t = warmup + every * 0.65;
+            while t < duration {
+                faults.push(Fault {
+                    at: t,
+                    kind: FaultKind::Preempt {
+                        instance: victim % instances,
+                        notice_s: profile.preempt_notice_s,
+                        down_s: profile.preempt_down_s,
+                    },
+                });
+                victim += 1 + rng.below(instances as u64) as usize;
+                t += every * rng.uniform(0.75, 1.25);
+            }
+        }
+        faults.sort_by(|a, b| a.at.total_cmp(&b.at));
+        // No validation: generated streams may overlap on an instance;
+        // expansion merges those windows into one longer outage.
+        FaultSchedule { faults }
+    }
+
+    pub fn faults(&self) -> &[Fault] {
+        &self.faults
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.faults.len()
+    }
+
+    /// Expand against a concrete deployment into the engine's event
+    /// timeline, sorted by time (ties keep a deterministic build order).
+    /// Instance indices wrap the deployment size so a schedule written
+    /// for a larger fleet still injects; per-instance down-windows are
+    /// merged so every `InstanceDown` pairs with exactly one
+    /// `InstanceUp`.
+    pub fn events(&self, d: &Deployment) -> Vec<(f64, FaultEvent)> {
+        let n = d.num_instances();
+        if n == 0 || self.faults.is_empty() {
+            return Vec::new();
+        }
+        let mut intervals: Vec<Vec<(f64, f64)>> = vec![Vec::new(); n];
+        let mut notices: Vec<(f64, usize)> = Vec::new();
+        let mut link: Vec<(f64, f64, f64)> = Vec::new();
+        for f in &self.faults {
+            match f.kind {
+                FaultKind::Crash { instance, down_s } => {
+                    intervals[instance % n].push((f.at, f.at + down_s));
+                }
+                FaultKind::NodeLoss { node, down_s } => {
+                    for i in 0..n {
+                        if d.node_of_instance(i) == node {
+                            intervals[i].push((f.at, f.at + down_s));
+                        }
+                    }
+                }
+                FaultKind::Preempt { instance, notice_s, down_s } => {
+                    let i = instance % n;
+                    notices.push((f.at, i));
+                    intervals[i].push((f.at + notice_s, f.at + notice_s + down_s));
+                }
+                FaultKind::LinkDegrade { factor, for_s } => {
+                    link.push((f.at, f.at + for_s, factor));
+                }
+            }
+        }
+        let mut out: Vec<(f64, FaultEvent)> = Vec::new();
+        for (t, i) in notices {
+            out.push((t, FaultEvent::PreemptNotice { instance: i }));
+        }
+        for (i, mut iv) in intervals.into_iter().enumerate() {
+            iv.sort_by(|a, b| a.0.total_cmp(&b.0));
+            let mut merged: Vec<(f64, f64)> = Vec::new();
+            for (s, e) in iv {
+                match merged.last_mut() {
+                    Some(last) if s <= last.1 => last.1 = last.1.max(e),
+                    _ => merged.push((s, e)),
+                }
+            }
+            for (s, e) in merged {
+                out.push((s, FaultEvent::InstanceDown { instance: i }));
+                out.push((e, FaultEvent::InstanceUp { instance: i }));
+            }
+        }
+        for (s, e, factor) in link {
+            out.push((s, FaultEvent::LinkDegrade { factor }));
+            out.push((e, FaultEvent::LinkRestore));
+        }
+        // Stable by time: same-time ties fire in build order (notices
+        // first, then instance windows by index, then link windows).
+        out.sort_by(|a, b| a.0.total_cmp(&b.0));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterSpec;
+    use crate::perfmodel::ModelSpec;
+
+    fn deployment(gpus: usize) -> Deployment {
+        let mut d =
+            Deployment::paper_default(ModelSpec::codellama_34b(), ClusterSpec::l20_cluster());
+        d.gpus_used = gpus;
+        d
+    }
+
+    #[test]
+    fn crash_expands_to_paired_down_up() {
+        let s = FaultSchedule::new(vec![Fault {
+            at: 40.0,
+            kind: FaultKind::Crash { instance: 2, down_s: 20.0 },
+        }])
+        .unwrap();
+        let ev = s.events(&deployment(16));
+        assert_eq!(
+            ev,
+            vec![
+                (40.0, FaultEvent::InstanceDown { instance: 2 }),
+                (60.0, FaultEvent::InstanceUp { instance: 2 }),
+            ]
+        );
+    }
+
+    #[test]
+    fn node_loss_takes_every_instance_on_the_node() {
+        // 16 GPUs, TP=4 -> 4 instances, 2 per 8-GPU node.
+        let d = deployment(16);
+        let s = FaultSchedule::new(vec![Fault {
+            at: 10.0,
+            kind: FaultKind::NodeLoss { node: 0, down_s: 5.0 },
+        }])
+        .unwrap();
+        let ev = s.events(&d);
+        let downs: Vec<usize> = ev
+            .iter()
+            .filter_map(|(_, e)| match e {
+                FaultEvent::InstanceDown { instance } => Some(*instance),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(downs, vec![0, 1]);
+    }
+
+    #[test]
+    fn preempt_notice_precedes_the_outage() {
+        let s = FaultSchedule::new(vec![Fault {
+            at: 100.0,
+            kind: FaultKind::Preempt { instance: 1, notice_s: 5.0, down_s: 60.0 },
+        }])
+        .unwrap();
+        let ev = s.events(&deployment(16));
+        assert_eq!(
+            ev,
+            vec![
+                (100.0, FaultEvent::PreemptNotice { instance: 1 }),
+                (105.0, FaultEvent::InstanceDown { instance: 1 }),
+                (165.0, FaultEvent::InstanceUp { instance: 1 }),
+            ]
+        );
+    }
+
+    #[test]
+    fn overlapping_windows_merge_into_one_outage() {
+        // Crash on instance 0, then a node loss swallowing it mid-outage:
+        // one Down at 10, one Up at the later end (30).
+        let s = FaultSchedule::new(vec![
+            Fault { at: 10.0, kind: FaultKind::Crash { instance: 0, down_s: 10.0 } },
+            Fault { at: 15.0, kind: FaultKind::NodeLoss { node: 0, down_s: 15.0 } },
+        ])
+        .unwrap();
+        let ev = s.events(&deployment(16));
+        let inst0: Vec<(f64, FaultEvent)> = ev
+            .into_iter()
+            .filter(|(_, e)| {
+                matches!(
+                    e,
+                    FaultEvent::InstanceDown { instance: 0 }
+                        | FaultEvent::InstanceUp { instance: 0 }
+                )
+            })
+            .collect();
+        assert_eq!(
+            inst0,
+            vec![
+                (10.0, FaultEvent::InstanceDown { instance: 0 }),
+                (30.0, FaultEvent::InstanceUp { instance: 0 }),
+            ]
+        );
+    }
+
+    #[test]
+    fn out_of_order_schedule_rejected_with_line_number() {
+        let text = "{\"at_s\":50,\"kind\":\"crash\",\"instance\":0,\"down_s\":5}\n\
+                    {\"at_s\":20,\"kind\":\"crash\",\"instance\":1,\"down_s\":5}";
+        let err = FaultSchedule::parse_named(text, "faults.jsonl").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("faults.jsonl:2"), "{msg}");
+        assert!(msg.contains("non-decreasing"), "{msg}");
+    }
+
+    #[test]
+    fn overlapping_same_instance_schedule_rejected_with_line_number() {
+        let text = "{\"at_s\":10,\"kind\":\"crash\",\"instance\":3,\"down_s\":30}\n\
+                    {\"at_s\":25,\"kind\":\"preempt\",\"instance\":3,\"notice_s\":0,\"down_s\":10}";
+        let err = FaultSchedule::parse_named(text, "faults.jsonl").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("faults.jsonl:2"), "{msg}");
+        assert!(msg.contains("overlaps"), "{msg}");
+    }
+
+    #[test]
+    fn malformed_lines_rejected_with_line_number() {
+        for (text, needle) in [
+            ("{\"kind\":\"crash\",\"instance\":0,\"down_s\":5}", "'at_s'"),
+            ("{\"at_s\":1,\"kind\":\"meteor\"}", "unknown fault kind"),
+            ("{\"at_s\":1,\"kind\":\"crash\",\"instance\":0,\"down_s\":0}", "'down_s'"),
+            ("{\"at_s\":1,\"kind\":\"link-degrade\",\"factor\":0.5,\"for_s\":5}", "'factor'"),
+            ("{\"at_s\":1,\"kind\":\"crash\",\"instance\":1.5,\"down_s\":5}", "'instance'"),
+            ("not json", "faults.jsonl:1"),
+        ] {
+            let err = FaultSchedule::parse_named(text, "faults.jsonl").unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains("faults.jsonl:1"), "{text} -> {msg}");
+            assert!(msg.contains(needle), "{text} -> {msg}");
+        }
+    }
+
+    #[test]
+    fn generate_is_deterministic_in_the_seed() {
+        let p = ChurnProfile::crashes(40.0, 20.0);
+        let a = FaultSchedule::generate(&p, 7, 240.0, 30.0, 8);
+        let b = FaultSchedule::generate(&p, 7, 240.0, 30.0, 8);
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+        let c = FaultSchedule::generate(&p, 8, 240.0, 30.0, 8);
+        assert_ne!(a, c, "different seeds should move the timeline");
+        for f in a.faults() {
+            assert!(f.at >= 30.0 && f.at < 240.0, "{f:?} outside [warmup, duration)");
+        }
+    }
+
+    #[test]
+    fn generate_handles_degenerate_spans() {
+        let p = ChurnProfile::preemptions(50.0, 5.0, 30.0);
+        assert!(FaultSchedule::generate(&p, 1, 10.0, 30.0, 8).is_empty());
+        assert!(FaultSchedule::generate(&p, 1, 240.0, 30.0, 0).is_empty());
+    }
+}

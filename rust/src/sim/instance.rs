@@ -50,6 +50,20 @@ impl SimReq {
     }
 }
 
+/// Hardware health of an instance under fault injection
+/// ([`crate::sim::faults`]). Fault-free runs never leave [`Health::Up`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Health {
+    /// Serving normally.
+    #[default]
+    Up,
+    /// Preemption notice received: still running, but draining — the
+    /// coordinator should stop placing new work here.
+    Degraded,
+    /// Dead. Holds no state and can run nothing until restored.
+    Down,
+}
+
 /// What the instance is executing right now.
 #[derive(Debug, Clone, PartialEq)]
 pub enum BatchKind {
@@ -90,6 +104,8 @@ pub struct SimInstance {
     pub busy_time: f64,
     /// Max decode batch size (vLLM-style cap).
     pub max_decode_batch: usize,
+    /// Fault-injection health. Always [`Health::Up`] in fault-free runs.
+    pub health: Health,
     /// Single-prompt latency of the most recent prefill (PP drain cost
     /// when the pipeline switches prefill -> decode).
     last_prefill_single: f64,
@@ -111,8 +127,52 @@ impl SimInstance {
             switches: 0,
             busy_time: 0.0,
             max_decode_batch: 256,
+            health: Health::Up,
             last_prefill_single: 0.0,
         }
+    }
+
+    /// The instance dies: the in-flight batch evaporates, all resident
+    /// state (queued prefills + running decodes) is evacuated to the
+    /// caller, and the KV cache is wiped. The caller decides each
+    /// evacuated request's fate — re-route (prefill restarts elsewhere,
+    /// honestly charged to TTFT) or drop (mid-decode state is gone).
+    pub fn crash(&mut self) -> Vec<SimReq> {
+        self.health = Health::Down;
+        self.in_flight = None;
+        self.last_phase = None;
+        let mut evacuated: Vec<SimReq> = self.prefill_queue.drain(..).collect();
+        evacuated.extend(self.running.drain(..));
+        self.kv_used = 0;
+        evacuated
+    }
+
+    /// The instance comes back empty after an outage (weights reloaded,
+    /// KV cold). [`Self::crash`] already zeroed the resident state.
+    pub fn restore(&mut self) {
+        self.health = Health::Up;
+    }
+
+    /// Proactive drain on a preemption notice: hand back the *queued*
+    /// (not yet prefilled) requests so the coordinator can place them
+    /// elsewhere before the instance dies, releasing their admission
+    /// reservations. Running decodes stay — their KV exists only here.
+    pub fn evacuate_queue(&mut self) -> Vec<SimReq> {
+        // Requests inside the in-flight batch must stay queued:
+        // complete_batch pops exactly those heads when the batch lands.
+        let keep = match &self.in_flight {
+            Some((BatchKind::Prefill { count }, _)) => *count,
+            Some((BatchKind::Hybrid { chunk }, _)) if *chunk > 0 => 1,
+            _ => 0,
+        };
+        let keep = keep.min(self.prefill_queue.len());
+        let evacuated: Vec<SimReq> = self.prefill_queue.split_off(keep).into_iter().collect();
+        for r in &evacuated {
+            // Queued requests hold exactly their admission reservation
+            // (the prompt); chunked-prefill progress reuses it.
+            self.kv_used = self.kv_used.saturating_sub(r.req.input_len);
+        }
+        evacuated
     }
 
     pub fn idle(&self) -> bool {
@@ -607,6 +667,55 @@ mod tests {
     fn empty_instance_has_infinite_slack() {
         let ins = inst();
         assert!(ins.mean_saved_tpot(0.0, 0.1).is_infinite());
+    }
+
+    #[test]
+    fn crash_wipes_state_and_returns_residents() {
+        let mut ins = inst();
+        let mut m = Collector::new();
+        for i in 0..3 {
+            let r = req(i, 100, 10);
+            m.on_arrival(&r);
+            ins.admit(r);
+        }
+        // Prefill one into the running set, leave two queued, then die
+        // mid-decode.
+        let d = ins.start_prefill(1, 0.0);
+        ins.complete_batch(d, &mut m);
+        let d2 = ins.start_decode(d);
+        assert!(!ins.idle());
+        let evacuated = ins.crash();
+        assert_eq!(ins.health, Health::Down);
+        assert_eq!(evacuated.len(), 3);
+        assert_eq!(ins.kv_used, 0);
+        assert!(ins.idle() && !ins.has_work());
+        // The decode-stage request is distinguishable by its progress.
+        assert_eq!(evacuated.iter().filter(|r| r.prefill_done()).count(), 1);
+        // The stale completion wake must now be a no-op for the caller.
+        assert!(ins.in_flight.is_none());
+        let _ = d2;
+        ins.restore();
+        assert_eq!(ins.health, Health::Up);
+    }
+
+    #[test]
+    fn evacuate_queue_spares_the_in_flight_batch() {
+        let mut ins = inst();
+        let mut m = Collector::new();
+        for i in 0..3 {
+            let r = req(i, 100, 10);
+            m.on_arrival(&r);
+            ins.admit(r);
+        }
+        let d = ins.start_prefill(2, 0.0);
+        // Two queued requests belong to the running batch; only the third
+        // may leave, releasing exactly its prompt reservation.
+        let evacuated = ins.evacuate_queue();
+        assert_eq!(evacuated.len(), 1);
+        assert_eq!(evacuated[0].req.id, 2);
+        assert_eq!(ins.kv_used, 200);
+        ins.complete_batch(d, &mut m); // must not panic: batch heads intact
+        assert_eq!(ins.running.len(), 2);
     }
 
     #[test]

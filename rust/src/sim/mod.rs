@@ -14,12 +14,14 @@
 //! [`engine::run`].
 
 pub mod engine;
+pub mod faults;
 pub mod instance;
 pub mod network;
 
 pub use engine::{
-    reference_run, run, run_abandonable, run_until, Event, EventScheduler, RunStats, StopReason,
-    System,
+    reference_run, reference_run_faulted, run, run_abandonable, run_faulted, run_until,
+    run_until_faulted, Event, EventScheduler, RunStats, StopReason, System,
 };
-pub use instance::{BatchKind, SimInstance, SimReq};
+pub use faults::{ChurnProfile, ChurnTelemetry, Fault, FaultEvent, FaultKind, FaultSchedule};
+pub use instance::{BatchKind, Health, SimInstance, SimReq};
 pub use network::{Network, TransferId};

@@ -1,8 +1,11 @@
 //! Tiny CLI argument parser (substrate for `clap`, unavailable offline).
 //!
 //! Supports `--flag value`, `--flag=value`, boolean `--flag`, and trailing
-//! positional arguments. The launcher (`rust/src/main.rs`) and the examples
-//! use it for subcommand-style interfaces.
+//! positional arguments, plus a declarative flag-spec layer: each launcher
+//! subcommand declares its flags once in [`COMMANDS`], and
+//! [`Args::check`] rejects unknown flags and value-less value-taking
+//! flags uniformly, while [`CommandSpec::help_text`] generates the
+//! per-subcommand `--help` text from the same table.
 
 use std::collections::BTreeMap;
 
@@ -102,10 +105,336 @@ impl Args {
         Ok(None)
     }
 
+    /// An optional numeric flag that errors loudly on a typo — or on a
+    /// value-less `--flag` (which the parser files as a boolean switch) —
+    /// instead of silently falling back to a default: `--loop` without a
+    /// horizon must not quietly run the un-tiled replay.
+    pub fn f64_flag(&self, key: &str) -> Result<Option<f64>, String> {
+        match self.get(key) {
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("--{key} expects a number, got '{v}'")),
+            None if self.has_flag(key) => {
+                Err(format!("--{key} needs a numeric value (e.g. --{key}=30)"))
+            }
+            None => Ok(None),
+        }
+    }
+
+    /// [`Args::f64_flag`] for unsigned integers (`--gpus 32`).
+    pub fn usize_flag(&self, key: &str) -> Result<Option<usize>, String> {
+        match self.get(key) {
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("--{key} expects an integer, got '{v}'")),
+            None if self.has_flag(key) => {
+                Err(format!("--{key} needs an integer value (e.g. --{key}=4)"))
+            }
+            None => Ok(None),
+        }
+    }
+
+    /// [`Args::f64_flag`] for u64 values (`--seed 7`).
+    pub fn u64_flag(&self, key: &str) -> Result<Option<u64>, String> {
+        match self.get(key) {
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("--{key} expects an integer, got '{v}'")),
+            None if self.has_flag(key) => {
+                Err(format!("--{key} needs an integer value (e.g. --{key}=7)"))
+            }
+            None => Ok(None),
+        }
+    }
+
+    /// Validate every supplied flag against a subcommand's [`CommandSpec`]:
+    /// unknown flags error (typos must not silently fall back to
+    /// defaults), and a value-taking flag supplied bare (`--rate` followed
+    /// by another `--flag` or the end of the line) errors too —
+    /// generalizing the `--loop`/`--budget-s` fix to every flag in the
+    /// table. `--help` is always accepted.
+    pub fn check(&self, spec: &CommandSpec) -> Result<(), String> {
+        for key in self.options.keys() {
+            if key == "help" {
+                continue;
+            }
+            if spec.flag(key).is_none() {
+                return Err(format!(
+                    "unknown flag --{key} for '{}' (see `ecoserve {} --help`)",
+                    spec.name, spec.name
+                ));
+            }
+        }
+        for name in &self.flags {
+            if name == "help" {
+                continue;
+            }
+            match spec.flag(name) {
+                None => {
+                    return Err(format!(
+                        "unknown flag --{name} for '{}' (see `ecoserve {} --help`)",
+                        spec.name, spec.name
+                    ));
+                }
+                Some(f) => {
+                    if let Some(metavar) = f.value {
+                        return Err(format!(
+                            "--{name} needs a value (e.g. --{name} <{metavar}>)"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// First positional (the subcommand), if any.
     pub fn command(&self) -> Option<&str> {
         self.positional.first().map(|s| s.as_str())
     }
+}
+
+/// One flag a subcommand accepts: a value-taking option (`value` is the
+/// metavar shown in help) or a boolean switch (`value: None`).
+#[derive(Debug, Clone, Copy)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub value: Option<&'static str>,
+    pub help: &'static str,
+}
+
+impl FlagSpec {
+    /// A value-taking flag (`--name <METAVAR>`).
+    pub const fn opt(
+        name: &'static str,
+        value: &'static str,
+        help: &'static str,
+    ) -> FlagSpec {
+        FlagSpec { name, value: Some(value), help }
+    }
+
+    /// A boolean switch (`--name`).
+    pub const fn switch(name: &'static str, help: &'static str) -> FlagSpec {
+        FlagSpec { name, value: None, help }
+    }
+}
+
+/// One launcher subcommand: its summary plus the full flag table the
+/// generated `--help` and [`Args::check`] are driven by.
+#[derive(Debug, Clone, Copy)]
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub summary: &'static str,
+    pub flags: &'static [FlagSpec],
+}
+
+impl CommandSpec {
+    pub fn flag(&self, name: &str) -> Option<&FlagSpec> {
+        self.flags.iter().find(|f| f.name == name)
+    }
+
+    /// Generated per-subcommand help text (locked by a golden test).
+    pub fn help_text(&self) -> String {
+        let mut out = format!(
+            "usage: ecoserve {} [flags]\n\n  {}\n\nflags:\n",
+            self.name, self.summary
+        );
+        for f in self.flags {
+            let left = match f.value {
+                Some(mv) => format!("--{} <{}>", f.name, mv),
+                None => format!("--{}", f.name),
+            };
+            out.push_str(&format!("  {:<22} {}\n", left, f.help));
+        }
+        out.push_str(&format!("  {:<22} {}\n", "--help", "show this help"));
+        out
+    }
+}
+
+// ---- shared flag literals ---------------------------------------------
+
+const MODEL: FlagSpec =
+    FlagSpec::opt("model", "NAME", "model preset (codellama-34b|llama-30b|qwen2-72b)");
+const CLUSTER: FlagSpec = FlagSpec::opt("cluster", "NAME", "cluster preset (l20|a800)");
+const TP: FlagSpec = FlagSpec::opt("tp", "N", "tensor-parallel degree override");
+const PP: FlagSpec = FlagSpec::opt("pp", "N", "pipeline-parallel degree override");
+const GPUS: FlagSpec = FlagSpec::opt("gpus", "N", "total GPUs used (sets instance count)");
+const DATASET: FlagSpec =
+    FlagSpec::opt("dataset", "NAME", "workload dataset (sharegpt|alpaca|longbench)");
+const SEED: FlagSpec = FlagSpec::opt("seed", "N", "trace RNG seed");
+const SYSTEM: FlagSpec =
+    FlagSpec::opt("system", "NAME", "serving system (ecoserve|vllm|sarathi|distserve|mooncake)");
+const LEVEL: FlagSpec = FlagSpec::opt("level", "PCT", "attainment level (p50|p90|p99)");
+const SCENARIO: FlagSpec = FlagSpec::opt("scenario", "NAME", "one named scenario");
+const REPLAY: FlagSpec =
+    FlagSpec::opt("replay", "LOG", "replay a recorded arrival log (JSONL)");
+const LOOP: FlagSpec =
+    FlagSpec::opt("loop", "SECS", "tile the --replay log to at least this horizon");
+const DURATION: FlagSpec = FlagSpec::opt("duration", "SECS", "trace duration override");
+const OUT: FlagSpec = FlagSpec::opt("out", "PATH", "write the JSON report here");
+const BUDGET_S: FlagSpec =
+    FlagSpec::opt("budget-s", "SECS", "wall-clock budget per search cell");
+const FAULT_SEED: FlagSpec = FlagSpec::opt(
+    "fault-seed",
+    "N",
+    "fault-schedule RNG seed for churn scenarios (default: --seed)",
+);
+
+/// Every launcher subcommand, declared once: the dispatch table,
+/// [`Args::check`], and the generated `--help` all read from here.
+pub static COMMANDS: &[CommandSpec] = &[
+    CommandSpec {
+        name: "serve",
+        summary: "live serving on PJRT-CPU instances (needs the `pjrt` feature)",
+        flags: &[
+            FlagSpec::opt("instances", "N", "live instance count"),
+            FlagSpec::opt("rate", "RPS", "Poisson arrival rate"),
+            DURATION,
+            SEED,
+            FlagSpec::opt("artifacts", "DIR", "TinyLM artifact directory"),
+        ],
+    },
+    CommandSpec {
+        name: "simulate",
+        summary: "one simulated run of a system at a fixed request rate",
+        flags: &[
+            SYSTEM,
+            MODEL,
+            CLUSTER,
+            TP,
+            PP,
+            GPUS,
+            DATASET,
+            SEED,
+            FlagSpec::opt("rate", "RPS", "Poisson arrival rate"),
+            DURATION,
+            FlagSpec::opt("warmup", "SECS", "scoring warm-up prefix"),
+        ],
+    },
+    CommandSpec {
+        name: "goodput",
+        summary: "goodput search (paper \u{a7}4.1) for one system",
+        flags: &[
+            SYSTEM,
+            MODEL,
+            CLUSTER,
+            TP,
+            PP,
+            GPUS,
+            DATASET,
+            SEED,
+            LEVEL,
+            DURATION,
+            FlagSpec::opt("warmup", "SECS", "scoring warm-up prefix"),
+            FlagSpec::switch("curve", "print every probed operating point"),
+        ],
+    },
+    CommandSpec {
+        name: "scenarios",
+        summary: "the multi-scenario evaluation suite",
+        flags: &[
+            FlagSpec::switch("list", "list the scenario registry and exit"),
+            SCENARIO,
+            REPLAY,
+            LOOP,
+            SYSTEM,
+            MODEL,
+            CLUSTER,
+            TP,
+            PP,
+            GPUS,
+            SEED,
+            FAULT_SEED,
+            FlagSpec::opt("rate", "RPS", "offered rate override"),
+            DURATION,
+            OUT,
+            FlagSpec::opt(
+                "churn-out",
+                "PATH",
+                "write BENCH_churn.json (clean-vs-faulted pairs) here",
+            ),
+        ],
+    },
+    CommandSpec {
+        name: "frontier",
+        summary: "goodput-frontier sweep per scenario x system",
+        flags: &[
+            SCENARIO,
+            REPLAY,
+            LOOP,
+            SYSTEM,
+            LEVEL,
+            MODEL,
+            CLUSTER,
+            TP,
+            PP,
+            GPUS,
+            SEED,
+            FAULT_SEED,
+            DURATION,
+            FlagSpec::switch("autoscale", "add a mitosis-on PaDG variant"),
+            FlagSpec::switch("quick", "coarse search for CI smoke runs"),
+            FlagSpec::switch("no-abandon", "run doomed probes to completion"),
+            BUDGET_S,
+            OUT,
+            FlagSpec::opt("perf-out", "PATH", "write BENCH_simperf.json here"),
+        ],
+    },
+    CommandSpec {
+        name: "plan",
+        summary: "capacity planner: goodput-per-dollar over deployments",
+        flags: &[
+            SCENARIO,
+            REPLAY,
+            LOOP,
+            MODEL,
+            CLUSTER,
+            GPUS,
+            SYSTEM,
+            LEVEL,
+            SEED,
+            FAULT_SEED,
+            FlagSpec::switch("quick", "coarse search for CI smoke runs"),
+            FlagSpec::opt("target-rate", "RPS", "also report the cheapest config meeting this"),
+            BUDGET_S,
+            DURATION,
+            OUT,
+        ],
+    },
+    CommandSpec {
+        name: "record",
+        summary: "export a scenario's trace as a replay log (JSONL)",
+        flags: &[
+            SCENARIO,
+            DURATION,
+            SEED,
+            FlagSpec::opt("rate", "RPS", "offered rate override"),
+            OUT,
+        ],
+    },
+    CommandSpec {
+        name: "table2",
+        summary: "print the arithmetic-intensity table",
+        flags: &[
+            FlagSpec::opt("batch", "B", "batch size"),
+            FlagSpec::opt("seq", "S", "sequence length"),
+            FlagSpec::opt("hidden", "H", "hidden size"),
+            FlagSpec::opt("heads", "M", "attention heads"),
+        ],
+    },
+    CommandSpec {
+        name: "table3",
+        summary: "print the KV-bandwidth table",
+        flags: &[],
+    },
+];
+
+/// Look up a subcommand's spec by name.
+pub fn command_spec(name: &str) -> Option<&'static CommandSpec> {
+    COMMANDS.iter().find(|c| c.name == name)
 }
 
 #[cfg(test)]
@@ -180,5 +509,84 @@ mod tests {
         let b = parse("frontier --replay --quick");
         let err = b.get_path("replay").unwrap_err();
         assert!(err.contains("--replay"), "{err}");
+    }
+
+    #[test]
+    fn typed_flags_error_on_bare_and_garbage_values() {
+        let a = parse("scenarios --rate fast --seed 7");
+        assert!(a.f64_flag("rate").unwrap_err().contains("--rate"));
+        assert_eq!(a.u64_flag("seed"), Ok(Some(7)));
+        assert_eq!(a.f64_flag("duration"), Ok(None));
+        // A value-less value flag parses as a boolean switch: error.
+        let b = parse("scenarios --rate --out x.json");
+        assert!(b.f64_flag("rate").unwrap_err().contains("numeric"));
+        let c = parse("plan --gpus");
+        assert!(c.usize_flag("gpus").unwrap_err().contains("--gpus"));
+    }
+
+    #[test]
+    fn check_rejects_unknown_flags_and_bare_value_flags() {
+        let spec = command_spec("scenarios").unwrap();
+        assert!(parse("scenarios --scenario bursty --seed 7").check(spec).is_ok());
+        // Unknown option and unknown switch both error, naming the command.
+        let err = parse("scenarios --senario bursty").check(spec).unwrap_err();
+        assert!(err.contains("--senario") && err.contains("scenarios"), "{err}");
+        let err = parse("scenarios --frobnicate").check(spec).unwrap_err();
+        assert!(err.contains("--frobnicate"), "{err}");
+        // A value-taking flag supplied bare errors up front (the PR 5
+        // --loop/--budget-s fix, generalized to the whole table).
+        let err = parse("scenarios --scenario --out x.json").check(spec).unwrap_err();
+        assert!(err.contains("--scenario") && err.contains("value"), "{err}");
+        // --help is always accepted, and switches stay valid bare or =v.
+        assert!(parse("scenarios --list --help").check(spec).is_ok());
+        let fr = command_spec("frontier").unwrap();
+        assert!(parse("frontier --quick --autoscale=1 --no-abandon").check(fr).is_ok());
+        let err = parse("frontier --budget-s").check(fr).unwrap_err();
+        assert!(err.contains("--budget-s"), "{err}");
+    }
+
+    #[test]
+    fn every_subcommand_has_a_spec_with_unique_flags() {
+        for cmd in ["serve", "simulate", "goodput", "scenarios", "frontier",
+                    "plan", "record", "table2", "table3"] {
+            let spec = command_spec(cmd).expect(cmd);
+            let mut names: Vec<&str> = spec.flags.iter().map(|f| f.name).collect();
+            names.sort_unstable();
+            names.dedup();
+            assert_eq!(names.len(), spec.flags.len(), "{cmd}: duplicate flag");
+        }
+        assert!(command_spec("frobnicate").is_none());
+    }
+
+    /// The generated help text is part of the CLI surface: lock it.
+    #[test]
+    fn golden_help_text_for_record() {
+        let spec = command_spec("record").unwrap();
+        let expected = "\
+usage: ecoserve record [flags]
+
+  export a scenario's trace as a replay log (JSONL)
+
+flags:
+  --scenario <NAME>      one named scenario
+  --duration <SECS>      trace duration override
+  --seed <N>             trace RNG seed
+  --rate <RPS>           offered rate override
+  --out <PATH>           write the JSON report here
+  --help                 show this help
+";
+        assert_eq!(spec.help_text(), expected);
+    }
+
+    #[test]
+    fn help_text_lists_every_flag() {
+        for spec in COMMANDS {
+            let help = spec.help_text();
+            assert!(help.starts_with(&format!("usage: ecoserve {} [flags]", spec.name)));
+            for f in spec.flags {
+                assert!(help.contains(&format!("--{}", f.name)), "{}: {}", spec.name, f.name);
+            }
+            assert!(help.contains("--help"));
+        }
     }
 }

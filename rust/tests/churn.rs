@@ -1,0 +1,145 @@
+//! Churn acceptance locks: recovery must *pay* under faults, and fault
+//! injection must be as deterministic as the fault-free simulator.
+//!
+//! Two contracts are pinned here, both on fixed fault seeds:
+//!
+//! 1. **Recovery earns its keep** (`surge+preemption`, 4 instances): the
+//!    recovery-on PaDG coordinator delivers strictly more SLO-meeting
+//!    work than (a) its own `ablate_no_recovery` ablation on the exact
+//!    same trace and fault timeline, and (b) the vLLM baseline's native
+//!    fault handling in the same churn cell.
+//! 2. **Bit-identical churn**: the same fault seed yields the same fault
+//!    timeline, the same per-request records under both engine variants
+//!    (`run_faulted` vs. `reference_run_faulted`), and a byte-identical
+//!    `BENCH_churn.json` across independent suite runs.
+
+use std::time::Duration;
+
+use ecoserve::config::{SystemKind, SystemParams};
+use ecoserve::coordinator::EcoServeSystem;
+use ecoserve::metrics::{Collector, SloSpec};
+use ecoserve::scenarios::{by_name, churn_to_json, run_churn_suite, run_system, ScenarioConfig};
+use ecoserve::sim::{reference_run_faulted, run_faulted, FaultEvent, FaultSchedule};
+
+/// 4 instances (16 L20 GPUs) — small enough for test wall time, large
+/// enough that losing one instance removes a quarter of the fleet.
+fn churn_cfg(duration: f64, rate: f64) -> ScenarioConfig {
+    let mut cfg = ScenarioConfig::default_l20();
+    cfg.deployment.gpus_used = 16;
+    cfg.duration_override = Some(duration);
+    cfg.rate = Some(rate);
+    cfg.fault_seed = Some(7);
+    cfg
+}
+
+/// Expand a scenario's churn profile exactly the way the driver does.
+fn timeline(
+    scenario: &ecoserve::scenarios::Scenario,
+    cfg: &ScenarioConfig,
+) -> Vec<(f64, FaultEvent)> {
+    let (duration, warmup) = cfg.horizon(scenario);
+    let schedule = FaultSchedule::generate(
+        scenario.churn.as_ref().expect("churn scenario"),
+        cfg.fault_seed.unwrap(),
+        duration,
+        warmup,
+        cfg.deployment.num_instances(),
+    );
+    schedule.events(&cfg.deployment)
+}
+
+/// The ISSUE acceptance criterion: under `surge+preemption` at a fixed
+/// rate and fault seed, recovery-on PaDG strictly beats both the vLLM
+/// baseline and its own no-recovery ablation on delivered goodput.
+#[test]
+fn recovery_beats_the_baseline_and_its_own_ablation_under_preemption() {
+    let s = by_name("surge+preemption").unwrap();
+    let cfg = churn_cfg(90.0, 3.5);
+    let (duration, warmup) = cfg.horizon(&s);
+    let trace = s.build_trace_for(cfg.seed, cfg.rate.unwrap(), duration);
+    let events = timeline(&s, &cfg);
+    assert!(
+        events.iter().any(|(_, e)| matches!(e, FaultEvent::InstanceDown { .. })),
+        "the window must contain at least one preemption outage: {events:?}"
+    );
+
+    let sched = s.scheduler_dataset();
+    let slo = SloSpec::new(sched.slo_ttft, sched.slo_tpot);
+    let horizon = duration + 240.0;
+    // Same trace, same fault timeline, one knob: does the coordinator
+    // react to faults (re-route, health-gate, backfill) or not.
+    let met_with = |params: SystemParams| {
+        let mut sys = EcoServeSystem::new(&cfg.deployment, slo, params);
+        let mut metrics = Collector::new();
+        run_faulted(&mut sys, trace.clone(), &events, horizon, &mut metrics, false);
+        metrics.window_records(warmup, duration).filter(|r| r.meets(&slo)).count()
+    };
+    let recovered = met_with(SystemParams::default());
+    let ablated =
+        met_with(SystemParams { ablate_no_recovery: true, ..SystemParams::default() });
+    assert!(
+        recovered > ablated,
+        "recovery must strictly beat the ablation: {recovered} vs {ablated}"
+    );
+
+    // The baseline comparison runs through the public scenario surface —
+    // the same cell a `--fault-seed` CLI run would score.
+    let padg = run_system(&s, &cfg, SystemKind::EcoServe);
+    let vllm = run_system(&s, &cfg, SystemKind::Vllm);
+    assert!(padg.churn.is_some() && vllm.churn.is_some());
+    assert!(
+        padg.goodput_rps > vllm.goodput_rps,
+        "PaDG recovery must strictly beat the baseline under churn: {} vs {}",
+        padg.goodput_rps,
+        vllm.goodput_rps
+    );
+}
+
+/// Identical fault seeds are bit-identical: timeline, per-request
+/// records under both engine variants, and the JSON artifact.
+#[test]
+fn identical_fault_seeds_are_bit_identical_across_runs_and_engines() {
+    let s = by_name("steady+churn").unwrap();
+    let cfg = churn_cfg(60.0, 2.0);
+    let (duration, warmup) = cfg.horizon(&s);
+
+    // The schedule itself is a pure function of (profile, seed).
+    let events = timeline(&s, &cfg);
+    assert_eq!(events, timeline(&s, &cfg));
+    assert!(!events.is_empty());
+    let mut other_seed = cfg.clone();
+    other_seed.fault_seed = Some(8);
+    assert_ne!(events, timeline(&s, &other_seed), "the seed must move the timeline");
+
+    // Production heap engine vs. the reference engine: same faults, same
+    // trace, bitwise-identical request records.
+    let sched = s.scheduler_dataset();
+    let slo = SloSpec::new(sched.slo_ttft, sched.slo_tpot);
+    let trace = s.build_trace_for(cfg.seed, cfg.rate.unwrap(), duration);
+    let horizon = duration + 240.0;
+    let mut heap_sys = EcoServeSystem::new(&cfg.deployment, slo, SystemParams::default());
+    let mut heap_metrics = Collector::new();
+    run_faulted(&mut heap_sys, trace.clone(), &events, horizon, &mut heap_metrics, false);
+    let mut ref_sys = EcoServeSystem::new(&cfg.deployment, slo, SystemParams::default());
+    let mut ref_metrics = Collector::new();
+    reference_run_faulted(&mut ref_sys, trace, &events, horizon, &mut ref_metrics);
+    let heap_rows: Vec<_> = heap_metrics.window_records(warmup, duration).collect();
+    let ref_rows: Vec<_> = ref_metrics.window_records(warmup, duration).collect();
+    assert!(!heap_rows.is_empty());
+    assert_eq!(heap_rows.len(), ref_rows.len());
+    for (a, b) in heap_rows.iter().zip(&ref_rows) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.first_token.to_bits(), b.first_token.to_bits(), "req {}", a.id);
+        assert_eq!(a.completion.to_bits(), b.completion.to_bits(), "req {}", a.id);
+    }
+
+    // Two independent suite runs serialize to the same bytes (wall time
+    // is the caller's input, not measured inside the artifact).
+    let systems = [SystemKind::EcoServe, SystemKind::Vllm];
+    let first = run_churn_suite(&[s.clone()], &cfg, &systems, 4);
+    let second = run_churn_suite(&[s], &cfg, &systems, 4);
+    assert_eq!(
+        churn_to_json(&first, &cfg, Duration::ZERO).to_string(),
+        churn_to_json(&second, &cfg, Duration::ZERO).to_string()
+    );
+}
