@@ -20,7 +20,11 @@
 //!   ecoserve scenarios --replay bursty.jsonl
 //!   ecoserve frontier --replay bursty.jsonl --quick --autoscale
 //!   ecoserve scenarios --replay short.jsonl --loop 600   # tile a short log
+//!   ecoserve scenarios --import trace.csv --format burstgpt   # stream an external log
+//!   ecoserve frontier --import azure.csv --format azure --quick
+//!   ecoserve record --import trace.csv --format azure --out canon.jsonl
 //!   ecoserve plan --quick --scenario bursty --model llama-30b --gpus 32
+//!   ecoserve plan --quick --spot --scenario steady --gpus 16   # price spot twins
 //!   ecoserve plan --scenario steady --target-rate 5 --cluster all \
 //!       --out BENCH_plan.json
 
@@ -146,10 +150,50 @@ fn cmd_serve(_args: &Args) -> Result<()> {
     )
 }
 
-/// Shared `--scenario` / `--replay` selection (scenarios + frontier +
-/// plan): a recorded arrival log (optionally `--loop`-tiled to a longer
-/// horizon), one named scenario, or the whole registry.
+/// Shared `--scenario` / `--replay` / `--import` selection (scenarios +
+/// frontier + plan): an external trace streamed through an import
+/// adapter, a recorded arrival log (optionally `--loop`-tiled to a
+/// longer horizon), one named scenario, or the whole registry.
 fn select_scenarios(args: &Args) -> Result<Vec<scenarios::Scenario>> {
+    if let Some(path) = args.get_path("import").map_err(Error::msg)? {
+        if args.get("scenario").is_some()
+            || args.get_path("replay").map_err(Error::msg)?.is_some()
+        {
+            bail!(
+                "--import is mutually exclusive with --scenario/--replay: \
+                 the imported trace IS the scenario"
+            );
+        }
+        if args.get("loop").is_some() || args.has_flag("loop") {
+            bail!("--loop tiles a recorded --replay log; --import streams the log as-is");
+        }
+        let format = match args.get("format") {
+            Some(name) => ecoserve::workload::TraceFormat::by_name(name)?,
+            None => bail!("--import needs --format burstgpt|azure"),
+        };
+        let window = args
+            .f64_flag("window")
+            .map_err(Error::msg)?
+            .unwrap_or(ecoserve::workload::import::DEFAULT_REORDER_WINDOW_S);
+        let stream = ecoserve::workload::StreamedTrace::open(&path, format, window)?;
+        let scenario = scenarios::Scenario::from_stream(stream);
+        let stream = scenario.stream().expect("from_stream builds a streamed scenario");
+        eprintln!(
+            "streaming {} ({}): {} requests over {:.0}s ({:.2} req/s native, {} class(es))",
+            path.display(),
+            stream.format().label(),
+            stream.len(),
+            stream.duration(),
+            stream.native_rate(),
+            scenario.classes.len(),
+        );
+        return Ok(vec![scenario]);
+    }
+    for flag in ["format", "window"] {
+        if args.get(flag).is_some() || args.has_flag(flag) {
+            bail!("--{flag} applies to --import <file> (see --help)");
+        }
+    }
     let replay = args.get_path("replay").map_err(Error::msg)?;
     if let Some(path) = replay {
         if args.get("scenario").is_some() {
@@ -188,12 +232,31 @@ fn select_scenarios(args: &Args) -> Result<Vec<scenarios::Scenario>> {
 /// Export a scenario's deterministic trace in the replay-log format
 /// (`record` subcommand): the same JSONL `ecoserve scenarios --replay`
 /// and `ecoserve frontier --replay` consume, so any synthetic shape can
-/// round-trip through the wire format.
+/// round-trip through the wire format. `--import`/`--replay` re-record
+/// an external or recorded log instead — the exported header keeps the
+/// original lineage, so record → import → record chains never lose
+/// where the arrivals came from.
 fn cmd_record(args: &Args) -> Result<()> {
-    let name = args.get_or("scenario", "steady");
-    let mut scenario = scenarios::by_name(&name).ok_or_else(|| {
-        anyhow::anyhow!("unknown scenario '{name}' (try `ecoserve scenarios --list`)")
-    })?;
+    let external = args.get_path("import").map_err(Error::msg)?.is_some()
+        || args.get_path("replay").map_err(Error::msg)?.is_some();
+    let mut scenario = if external {
+        // select_scenarios yields exactly one scenario for --import or
+        // --replay, and owns the mutual-exclusion/stray-flag errors.
+        select_scenarios(args)?.remove(0)
+    } else {
+        for flag in ["format", "window"] {
+            if args.get(flag).is_some() || args.has_flag(flag) {
+                bail!("--{flag} applies to --import <file> (see --help)");
+            }
+        }
+        if args.get("loop").is_some() || args.has_flag("loop") {
+            bail!("--loop tiles a recorded log and needs --replay <log>");
+        }
+        let name = args.get_or("scenario", "steady");
+        scenarios::by_name(&name).ok_or_else(|| {
+            anyhow::anyhow!("unknown scenario '{name}' (try `ecoserve scenarios --list`)")
+        })?
+    };
     if let Some(d) = args.f64_flag("duration").map_err(Error::msg)? {
         scenario.duration = d;
         scenario.warmup = scenario.warmup.min(d / 4.0);
@@ -474,8 +537,14 @@ fn cmd_frontier(args: &Args) -> Result<()> {
 /// over the deployment space for one workload.
 fn cmd_plan(args: &Args) -> Result<()> {
     let mut selected = select_scenarios(args)?;
-    if args.get("scenario").is_none() && args.get_path("replay").ok().flatten().is_none() {
-        bail!("plan needs one workload: --scenario <name> or --replay <log>");
+    if args.get("scenario").is_none()
+        && args.get_path("replay").ok().flatten().is_none()
+        && args.get_path("import").ok().flatten().is_none()
+    {
+        bail!(
+            "plan needs one workload: --scenario <name>, --replay <log>, \
+             or --import <file> --format <name>"
+        );
     }
     let scenario = selected.remove(0);
     let model = ModelSpec::by_name(&args.get_or("model", "codellama-34b"))
@@ -498,6 +567,7 @@ fn cmd_plan(args: &Args) -> Result<()> {
     cfg.target_rate = args.f64_flag("target-rate").map_err(Error::msg)?;
     cfg.budget_s = args.f64_flag("budget-s").map_err(Error::msg)?;
     cfg.duration_override = args.f64_flag("duration").map_err(Error::msg)?;
+    cfg.spot = args.has("spot");
     if let Some(g) = args.usize_flag("gpus").map_err(Error::msg)? {
         cfg.max_gpus = Some(g);
     }

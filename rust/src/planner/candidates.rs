@@ -13,7 +13,7 @@ use crate::perfmodel::LinkSpec;
 use crate::scenarios::Scenario;
 use crate::workload::replay::leak;
 
-use super::cost::{CostBreakdown, CostModel};
+use super::cost::{CostBreakdown, CostModel, PriceTier};
 use super::PlanConfig;
 
 /// Safety factor on the roofline ceiling. The bound below is already
@@ -79,6 +79,9 @@ pub struct Candidate {
     pub price: CostBreakdown,
     /// Roofline ceiling on sustainable rate, req/s ([`roofline_rate_ub`]).
     pub roofline_ub: f64,
+    /// GPU procurement tier: spot candidates carry a discounted bill and
+    /// are measured under the spot reclaim churn.
+    pub tier: PriceTier,
 }
 
 impl Candidate {
@@ -88,9 +91,22 @@ impl Candidate {
         cost: &CostModel,
         scenario: &Scenario,
     ) -> Self {
-        let price = cost.breakdown(&deployment);
+        Self::with_tier(system, deployment, cost, scenario, PriceTier::OnDemand)
+    }
+
+    /// A candidate priced at a specific procurement tier. The roofline is
+    /// tier-independent (hardware is hardware); the dominance prune stays
+    /// sound because churn only *lowers* measured goodput below it.
+    pub fn with_tier(
+        system: SystemKind,
+        deployment: Deployment,
+        cost: &CostModel,
+        scenario: &Scenario,
+        tier: PriceTier,
+    ) -> Self {
+        let price = cost.breakdown_tier(&deployment, tier);
         let roofline_ub = roofline_rate_ub(&deployment, scenario);
-        Candidate { system, deployment, price, roofline_ub }
+        Candidate { system, deployment, price, roofline_ub, tier }
     }
 
     /// Compact shape label: `tp4x1 x8` = TP4, PP1, 8 instances.
@@ -115,6 +131,15 @@ pub fn enumerate_candidates(cfg: &PlanConfig) -> Vec<Candidate> {
             for d in enumerate_deployments(&cfg.model, &tier, &tp, &pp, &instances, cap) {
                 for &system in &cfg.systems {
                     out.push(Candidate::new(system, d.clone(), &cost, &cfg.scenario));
+                    if cfg.spot {
+                        out.push(Candidate::with_tier(
+                            system,
+                            d.clone(),
+                            &cost,
+                            &cfg.scenario,
+                            PriceTier::Spot,
+                        ));
+                    }
                 }
             }
         }
@@ -189,8 +214,34 @@ mod tests {
         let cost = CostModel::default();
         let c = Candidate::new(SystemKind::EcoServe, deployment(4, 1, 32), &cost, &s);
         assert_eq!(c.shape(), "tp4x1 x8");
+        assert_eq!(c.tier, PriceTier::OnDemand);
         assert!(c.roofline_ub > 0.0);
         assert!((c.price.total - cost.price_per_hour(&c.deployment)).abs() < 1e-12);
         assert!(c.price.total > 30.0, "32 L20s cost real money: {:?}", c.price);
+    }
+
+    #[test]
+    fn spot_enumeration_emits_discounted_twins() {
+        let mut cfg = PlanConfig::quick(by_name("steady").unwrap(), ModelSpec::llama_30b());
+        cfg.max_gpus = Some(16);
+        let on_demand = enumerate_candidates(&cfg);
+        assert!(on_demand.iter().all(|c| c.tier == PriceTier::OnDemand));
+        cfg.spot = true;
+        let both = enumerate_candidates(&cfg);
+        assert_eq!(both.len(), 2 * on_demand.len());
+        let spots: Vec<&Candidate> =
+            both.iter().filter(|c| c.tier == PriceTier::Spot).collect();
+        assert_eq!(spots.len(), on_demand.len());
+        // Each spot twin shares its sibling's hardware and ceiling but
+        // bills strictly less (the GPU discount), never more.
+        for (od, spot) in both.chunks(2).map(|w| (&w[0], &w[1])) {
+            assert_eq!(od.tier, PriceTier::OnDemand);
+            assert_eq!(spot.tier, PriceTier::Spot);
+            assert_eq!(od.deployment.gpus_used, spot.deployment.gpus_used);
+            assert_eq!(od.roofline_ub, spot.roofline_ub);
+            assert!(spot.price.total < od.price.total);
+            assert!(spot.price.gpu < od.price.gpu);
+            assert_eq!(spot.price.nodes, od.price.nodes);
+        }
     }
 }

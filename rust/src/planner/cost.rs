@@ -11,6 +11,71 @@
 //! goodput per dollar on commodity clusters vs. FuDG hyper-clusters.
 
 use crate::config::Deployment;
+use crate::sim::ChurnProfile;
+
+/// Spot GPUs rent at this fraction of the on-demand rate (a typical
+/// cloud spot discount of ~60%). Only the GPU component is discounted:
+/// the fabric share and host overhead bill the same either way.
+pub const SPOT_GPU_PRICE_MULT: f64 = 0.4;
+
+/// Expected spot-market reclaim cadence priced into spot candidates:
+/// mean seconds between preemptions, the reclaim notice, and the outage
+/// until a replacement instance joins. These feed
+/// [`PriceTier::churn_profile`], which the planner expands into a
+/// deterministic fault timeline per probe.
+pub const SPOT_PREEMPT_EVERY_S: f64 = 45.0;
+pub const SPOT_PREEMPT_NOTICE_S: f64 = 5.0;
+pub const SPOT_PREEMPT_DOWN_S: f64 = 25.0;
+
+/// How a candidate's GPUs are procured. On-demand is the catalog rate;
+/// spot trades a deep GPU discount for preemption churn, and the planner
+/// prices *both* sides of that trade: the discount in the bill, the
+/// churn in the measured goodput.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PriceTier {
+    #[default]
+    OnDemand,
+    Spot,
+}
+
+impl PriceTier {
+    pub fn label(&self) -> &'static str {
+        match self {
+            PriceTier::OnDemand => "on-demand",
+            PriceTier::Spot => "spot",
+        }
+    }
+
+    /// Multiplier on the GPU price component.
+    pub fn gpu_price_mult(&self) -> f64 {
+        match self {
+            PriceTier::OnDemand => 1.0,
+            PriceTier::Spot => SPOT_GPU_PRICE_MULT,
+        }
+    }
+
+    /// The churn this tier's probes must run under, layered on top of the
+    /// scenario's own profile (spot reclaim replaces any milder
+    /// preemption cadence the scenario carries; crashes pass through).
+    pub fn churn_profile(&self, base: Option<&ChurnProfile>) -> Option<ChurnProfile> {
+        match self {
+            PriceTier::OnDemand => base.cloned(),
+            PriceTier::Spot => {
+                let mut p = base.cloned().unwrap_or(ChurnProfile {
+                    crash_every_s: None,
+                    crash_down_s: 0.0,
+                    preempt_every_s: None,
+                    preempt_notice_s: 0.0,
+                    preempt_down_s: 0.0,
+                });
+                p.preempt_every_s = Some(SPOT_PREEMPT_EVERY_S);
+                p.preempt_notice_s = SPOT_PREEMPT_NOTICE_S;
+                p.preempt_down_s = SPOT_PREEMPT_DOWN_S;
+                Some(p)
+            }
+        }
+    }
+}
 
 /// One deployment's hourly price, split by component. `total` is the sum
 /// of the parts; keep them additive so reports can show the bill.
@@ -43,8 +108,14 @@ impl Default for CostModel {
 impl CostModel {
     /// Hourly bill for `d`, component by component.
     pub fn breakdown(&self, d: &Deployment) -> CostBreakdown {
+        self.breakdown_tier(d, PriceTier::OnDemand)
+    }
+
+    /// Hourly bill for `d` under a procurement tier: spot discounts the
+    /// GPU component only.
+    pub fn breakdown_tier(&self, d: &Deployment, tier: PriceTier) -> CostBreakdown {
         let gpus = d.gpus_used as f64;
-        let gpu = gpus * d.cluster.gpu.price_per_hour * self.markup;
+        let gpu = gpus * d.cluster.gpu.price_per_hour * self.markup * tier.gpu_price_mult();
         let interconnect = gpus
             * (d.cluster.intra_link.price_per_gpu_hour
                 + d.cluster.inter_link.price_per_gpu_hour)
@@ -113,6 +184,46 @@ mod tests {
         );
         a800.gpus_used = 16;
         assert!(cost.price_per_hour(&a800) > 2.0 * cost.price_per_hour(&l20));
+    }
+
+    #[test]
+    fn spot_tier_discounts_gpus_only() {
+        let cost = CostModel::default();
+        let d = l20_deployment(32);
+        let od = cost.breakdown(&d);
+        let spot = cost.breakdown_tier(&d, PriceTier::Spot);
+        assert!((spot.gpu - od.gpu * SPOT_GPU_PRICE_MULT).abs() < 1e-9);
+        assert_eq!(spot.interconnect, od.interconnect);
+        assert_eq!(spot.nodes, od.nodes);
+        assert!((spot.total - (spot.gpu + spot.interconnect + spot.nodes)).abs() < 1e-12);
+        assert!(spot.total < od.total);
+        // On-demand via the tier API matches the plain breakdown exactly.
+        assert_eq!(cost.breakdown_tier(&d, PriceTier::OnDemand), od);
+    }
+
+    #[test]
+    fn spot_churn_layers_preemptions_over_the_base_profile() {
+        use crate::sim::ChurnProfile;
+        // No base churn: pure reclaim cadence.
+        let p = PriceTier::Spot.churn_profile(None).unwrap();
+        assert_eq!(p.preempt_every_s, Some(SPOT_PREEMPT_EVERY_S));
+        assert_eq!(p.crash_every_s, None);
+        // Base crashes survive; base preemptions are replaced by the
+        // market cadence.
+        let base = ChurnProfile {
+            crash_every_s: Some(120.0),
+            crash_down_s: 15.0,
+            preempt_every_s: Some(600.0),
+            preempt_notice_s: 30.0,
+            preempt_down_s: 10.0,
+        };
+        let p = PriceTier::Spot.churn_profile(Some(&base)).unwrap();
+        assert_eq!(p.crash_every_s, Some(120.0));
+        assert_eq!(p.preempt_every_s, Some(SPOT_PREEMPT_EVERY_S));
+        assert_eq!(p.preempt_notice_s, SPOT_PREEMPT_NOTICE_S);
+        // On-demand passes the base through untouched.
+        assert_eq!(PriceTier::OnDemand.churn_profile(Some(&base)), Some(base));
+        assert_eq!(PriceTier::OnDemand.churn_profile(None), None);
     }
 
     #[test]

@@ -40,7 +40,7 @@ pub mod report;
 pub mod search;
 
 pub use candidates::{enumerate_candidates, link_tiers, roofline_rate_ub, Candidate};
-pub use cost::{CostBreakdown, CostModel};
+pub use cost::{CostBreakdown, CostModel, PriceTier};
 pub use report::{plan_to_json, render_plan_table};
 pub use search::{
     dominated_by, pareto_indices, run_plan, run_plan_on, PlanCell, PlanConfig, PlanOutcome,

@@ -25,6 +25,7 @@ fn cell_to_json(cell: &PlanCell) -> Json {
         ("gpus", Json::num(d.gpus_used as f64)),
         ("nodes", Json::num(d.nodes_used() as f64)),
         ("price_per_hour", Json::num(cand.price.total)),
+        ("price_tier", Json::str(cand.tier.label())),
         (
             "price",
             Json::obj(vec![
@@ -113,6 +114,9 @@ pub fn render_plan_table(outcome: &PlanOutcome) -> String {
         }
         if outcome.cheapest_meeting_target == Some(i) {
             note.push_str("target ");
+        }
+        if cell.candidate.tier == crate::planner::PriceTier::Spot {
+            note.push_str("spot ");
         }
         if cell.saturated {
             note.push('+');
@@ -265,11 +269,12 @@ mod tests {
         for c in cands {
             for key in [
                 "system", "gpu", "cluster", "intra_link", "inter_link", "tp", "pp",
-                "instances", "gpus", "nodes", "price_per_hour", "price",
+                "instances", "gpus", "nodes", "price_per_hour", "price_tier", "price",
                 "roofline_ub_rps", "pruned", "pruned_by",
             ] {
                 assert!(c.get(key).is_some(), "missing {key}");
             }
+            assert_eq!(c.get("price_tier").unwrap().as_str(), Some("on-demand"));
             let b = c.get("price").unwrap();
             let total = c.get("price_per_hour").unwrap().as_f64().unwrap();
             let sum = b.get("gpu").unwrap().as_f64().unwrap()

@@ -25,6 +25,7 @@ use crate::scenarios::{Scenario, ScenarioConfig, SweepBounds};
 use crate::util::threads::parallel_map;
 
 use super::candidates::{enumerate_candidates, Candidate};
+use super::cost::PriceTier;
 
 /// Candidates simulated concurrently per wave. Fixed (not core-count
 /// derived) so pruning sees an identical measured set on every machine.
@@ -54,6 +55,9 @@ pub struct PlanConfig {
     /// Fault-schedule seed: churn scenarios plan under their fault
     /// timeline when set (fault-free otherwise).
     pub fault_seed: Option<u64>,
+    /// Also enumerate a spot-priced twin of every candidate: GPU bill
+    /// discounted, goodput measured under the spot reclaim churn.
+    pub spot: bool,
 }
 
 impl PlanConfig {
@@ -72,6 +76,7 @@ impl PlanConfig {
             budget_s: None,
             duration_override: None,
             fault_seed: None,
+            spot: false,
         }
     }
 
@@ -237,12 +242,22 @@ fn measure(cfg: &PlanConfig, cand: &Candidate) -> PlanCell {
     // low last-resort probe instead of a spurious max_rate of 0.
     sweep.floor = 0.05;
     scenario.sweep = sweep;
+    // Spot candidates are probed under the spot reclaim churn: the tier
+    // maps to a ChurnProfile layered over the scenario's own, expanded
+    // through the same fault-seed plumbing churn scenarios already use.
+    // The plan's seed stands in when no --fault-seed was given, so spot
+    // twins are never accidentally measured fault-free.
+    let mut fault_seed = cfg.fault_seed;
+    if cand.tier == PriceTier::Spot {
+        scenario.churn = cand.tier.churn_profile(scenario.churn.as_ref());
+        fault_seed = Some(fault_seed.unwrap_or(cfg.seed));
+    }
     let base = ScenarioConfig {
         deployment: cand.deployment.clone(),
         seed: cfg.seed,
         rate: None, // the search owns the rate
         duration_override: cfg.duration_override,
-        fault_seed: cfg.fault_seed,
+        fault_seed,
     };
     let mut fc = FrontierConfig::new(base, cfg.level);
     fc.quick = cfg.quick;
@@ -282,6 +297,7 @@ pub fn run_plan_on(cfg: &PlanConfig, mut candidates: Vec<Candidate>) -> PlanOutc
                         c.deployment.tp,
                         c.deployment.pp,
                         c.deployment.gpus_used,
+                        c.tier.label(),
                     )
                 };
                 key(a).cmp(&key(b))

@@ -13,7 +13,9 @@ use crate::coordinator::{AutoScalePolicy, EcoServeSystem};
 use crate::harness::build_system;
 use crate::metrics::{summarize_from, Collector, SloMonitor, SloSpec, Summary};
 use crate::perfmodel::ModelSpec;
-use crate::sim::{run_abandonable, run_faulted, ChurnTelemetry, StopReason, System};
+use crate::sim::{
+    run_abandonable, run_faulted, run_source_faulted, ChurnTelemetry, StopReason, System,
+};
 use crate::util::threads::parallel_map;
 
 /// How long past the trace end the simulator may drain in-flight requests
@@ -205,13 +207,57 @@ pub fn run_system_variant(
     let kind = spec.system;
     let (duration, warmup) = cfg.horizon(scenario);
     let rate = cfg.rate.unwrap_or(scenario.default_rate);
-    let trace = scenario.build_trace_for(cfg.seed, rate, duration);
+    // Streamed scenarios never materialize the log: scoring prep walks
+    // the arrival stream once, then the engine consumes a fresh stream.
+    // Everything downstream — windowed per-class scoring, the SLO
+    // monitor, fault injection, drain — is byte-identical between the
+    // two feeds (the integration tests pin this per system).
+    let streamed = scenario.stream();
+    let trace: Vec<crate::workload::Request> = match streamed {
+        Some(_) => Vec::new(),
+        None => scenario.build_trace_for(cfg.seed, rate, duration),
+    };
 
+    // Scoring prep in one arrival-ordered pass: per-class arrived counts
+    // over the measurement window and — when a frontier probe arms the
+    // online SLO monitor — a watch on every window arrival against its
+    // own class's SLO pair. The run is later scored through the monitor's
+    // decision snapshot, identically whether or not the simulation is
+    // actually cut short at that point.
     let n_classes = scenario.classes.len();
     let mut arrived_per_class = vec![0usize; n_classes];
-    for req in &trace {
-        if req.arrival >= warmup && req.arrival < duration {
-            arrived_per_class[scenario.class_of(req.id)] += 1;
+    let mut monitor = spec.abandon.map(|policy| SloMonitor::new(policy.target, n_classes));
+    {
+        let mut prep = |req: &crate::workload::Request| {
+            if req.arrival >= warmup && req.arrival < duration {
+                let k = scenario.class_of(req.id);
+                arrived_per_class[k] += 1;
+                if let Some(mon) = monitor.as_mut() {
+                    let d = &scenario.classes[k].dataset;
+                    mon.track(
+                        req.id,
+                        req.arrival,
+                        SloSpec::new(d.slo_ttft, d.slo_tpot),
+                        k,
+                        req.output_len,
+                    );
+                }
+            }
+        };
+        match streamed {
+            Some(stream) => {
+                let arr = stream.arrivals_at(rate, duration).unwrap_or_else(|e| {
+                    panic!("streamed trace '{}' unreadable: {e:#}", stream.source())
+                });
+                for req in arr {
+                    prep(&req);
+                }
+            }
+            None => {
+                for req in &trace {
+                    prep(req);
+                }
+            }
         }
     }
 
@@ -224,28 +270,8 @@ pub fn run_system_variant(
     exp.duration = duration;
     exp.warmup = warmup;
 
-    // Frontier probes arm the online SLO monitor: every measurement-window
-    // arrival is watched against its own class's SLO pair, and the run is
-    // scored through the monitor's decision snapshot — identically whether
-    // or not the simulation is actually cut short at that point.
-    let mut metrics = match spec.abandon {
-        Some(policy) => {
-            let mut monitor = SloMonitor::new(policy.target, n_classes);
-            for req in &trace {
-                if req.arrival >= warmup && req.arrival < duration {
-                    let k = scenario.class_of(req.id);
-                    let d = &scenario.classes[k].dataset;
-                    monitor.track(
-                        req.id,
-                        req.arrival,
-                        SloSpec::new(d.slo_ttft, d.slo_tpot),
-                        k,
-                        req.output_len,
-                    );
-                }
-            }
-            Collector::with_monitor(monitor)
-        }
+    let mut metrics = match monitor {
+        Some(m) => Collector::with_monitor(m),
         None => Collector::new(),
     };
     let stop_early = spec.abandon.is_some_and(|p| p.stop_early);
@@ -254,6 +280,16 @@ pub fn run_system_variant(
     // sequence numbering is untouched by an absent fault timeline).
     let fault_events = spec.faults.as_ref().map(|s| s.events(&cfg.deployment));
     let horizon = duration + DRAIN_SECS;
+    // Pass B: a fresh stream for the engine. The arrival cutoff matches
+    // the materialized path's clip at `duration`; the engine still runs
+    // to `horizon` so in-flight work drains. With an empty fault slice
+    // `run_source_faulted` is bit-identical to `run_abandonable` on the
+    // same arrivals, so one call site covers all four combinations.
+    let mut source = streamed.map(|stream| {
+        stream.arrivals_at(rate, duration).unwrap_or_else(|e| {
+            panic!("streamed trace '{}' unreadable: {e:#}", stream.source())
+        })
+    });
     let (stats, autoscale, churn) = match &spec.variant.autoscale {
         Some(policy) if kind == SystemKind::EcoServe => {
             let mut sys = EcoServeSystem::with_autoscale(
@@ -263,9 +299,21 @@ pub fn run_system_variant(
                 policy.clone(),
             );
             let initial = sys.active_count();
-            let stats = match &fault_events {
-                Some(ev) => run_faulted(&mut sys, trace, ev, horizon, &mut metrics, stop_early),
-                None => run_abandonable(&mut sys, trace, horizon, &mut metrics, stop_early),
+            let stats = match source.as_mut() {
+                Some(arr) => run_source_faulted(
+                    &mut sys,
+                    arr,
+                    fault_events.as_deref().unwrap_or(&[]),
+                    horizon,
+                    &mut metrics,
+                    stop_early,
+                ),
+                None => match &fault_events {
+                    Some(ev) => {
+                        run_faulted(&mut sys, trace, ev, horizon, &mut metrics, stop_early)
+                    }
+                    None => run_abandonable(&mut sys, trace, horizon, &mut metrics, stop_early),
+                },
             };
             debug_assert!(sys.mitosis.check_invariants().is_ok());
             let ups = sys.scale_log.iter().filter(|e| e.kind == "up").count();
@@ -288,11 +336,23 @@ pub fn run_system_variant(
         }
         _ => {
             let mut system = build_system(kind, &exp, None);
-            let stats = match &fault_events {
-                Some(ev) => {
-                    run_faulted(system.as_mut(), trace, ev, horizon, &mut metrics, stop_early)
-                }
-                None => run_abandonable(system.as_mut(), trace, horizon, &mut metrics, stop_early),
+            let stats = match source.as_mut() {
+                Some(arr) => run_source_faulted(
+                    system.as_mut(),
+                    arr,
+                    fault_events.as_deref().unwrap_or(&[]),
+                    horizon,
+                    &mut metrics,
+                    stop_early,
+                ),
+                None => match &fault_events {
+                    Some(ev) => {
+                        run_faulted(system.as_mut(), trace, ev, horizon, &mut metrics, stop_early)
+                    }
+                    None => {
+                        run_abandonable(system.as_mut(), trace, horizon, &mut metrics, stop_early)
+                    }
+                },
             };
             let churn = system.churn_telemetry();
             (stats, None, churn)

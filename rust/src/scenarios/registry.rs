@@ -13,6 +13,7 @@ use std::path::Path;
 use anyhow::Result;
 
 use crate::sim::ChurnProfile;
+use crate::workload::import::StreamedTrace;
 use crate::workload::replay::{leak, render_log, ReplayClass, ReplayRecord, ReplayTrace};
 use crate::workload::{Dataset, RampTrace, Request, TraceGenerator};
 
@@ -39,6 +40,10 @@ pub enum LoadShape {
     /// Half-sine day curve from `trough_mult` up to `peak_mult` and back,
     /// discretized into `segments` constant-rate steps.
     Diurnal { trough_mult: f64, peak_mult: f64, segments: usize },
+    /// `cycles` back-to-back [`LoadShape::Diurnal`] day curves — the
+    /// multi-day shape whose repeated day/night swing the mitosis
+    /// autoscaler must track up *and* down.
+    MultiDay { cycles: usize, trough_mult: f64, peak_mult: f64, segments: usize },
     /// Monotone escalation from `start_mult × rate` to `end_mult × rate`
     /// in `increments` equal steps (the Figure-10 [`RampTrace`] shape).
     Ramp { start_mult: f64, end_mult: f64, increments: usize },
@@ -47,6 +52,13 @@ pub enum LoadShape {
     /// `rate` (see [`ReplayTrace::requests_at`]). The log — not a PRNG —
     /// is the randomness, so `seed` is unused on this path.
     Replay(ReplayTrace),
+    /// Replay of an imported external trace consumed lazily from disk
+    /// ([`StreamedTrace`]): same time-warp semantics as
+    /// [`LoadShape::Replay`], but the driver feeds the engine a bounded-
+    /// memory arrival iterator instead of a materialized vector, so
+    /// multi-day multi-million-request logs replay in O(active requests)
+    /// memory.
+    Streamed(StreamedTrace),
 }
 
 impl LoadShape {
@@ -59,7 +71,9 @@ impl LoadShape {
         // The arrival sampler needs strictly positive rates.
         const MIN_RATE: f64 = 0.05;
         match self {
-            LoadShape::Steady | LoadShape::Replay(_) => vec![(rate.max(MIN_RATE), duration)],
+            LoadShape::Steady | LoadShape::Replay(_) | LoadShape::Streamed(_) => {
+                vec![(rate.max(MIN_RATE), duration)]
+            }
             &LoadShape::OnOff { period, duty, peak_to_mean } => {
                 let duty = duty.clamp(0.05, 0.95);
                 let peak = rate * peak_to_mean;
@@ -94,6 +108,18 @@ impl LoadShape {
                 raw.into_iter()
                     .map(|m| ((rate * m / mean).max(MIN_RATE), duration / n as f64))
                     .collect()
+            }
+            &LoadShape::MultiDay { cycles, trough_mult, peak_mult, segments } => {
+                let cycles = cycles.max(1);
+                let day = LoadShape::Diurnal { trough_mult, peak_mult, segments };
+                // Each cycle is one mean-normalized day curve, so the
+                // multi-day mean equals `rate` too.
+                let day_steps = day.steps(rate, duration / cycles as f64);
+                let mut out = Vec::with_capacity(day_steps.len() * cycles);
+                for _ in 0..cycles {
+                    out.extend(day_steps.iter().copied());
+                }
+                out
             }
             &LoadShape::Ramp { start_mult, end_mult, increments } => {
                 let n = increments.max(2);
@@ -194,19 +220,29 @@ impl Scenario {
     pub fn class_of(&self, id: u64) -> usize {
         match &self.shape {
             LoadShape::Replay(trace) => trace.class_of(id),
+            LoadShape::Streamed(stream) => stream.class_of(id),
             _ => (id % self.classes.len() as u64) as usize,
         }
     }
 
-    /// True when this scenario replays a recorded log.
+    /// True when this scenario replays a recorded log (materialized or
+    /// streamed) — i.e. the arrivals come from a capture, not a PRNG.
     pub fn is_replay(&self) -> bool {
-        matches!(self.shape, LoadShape::Replay(_))
+        matches!(self.shape, LoadShape::Replay(_) | LoadShape::Streamed(_))
     }
 
-    /// The recorded log behind a replay scenario.
+    /// The recorded log behind a materialized replay scenario.
     pub fn replay(&self) -> Option<&ReplayTrace> {
         match &self.shape {
             LoadShape::Replay(trace) => Some(trace),
+            _ => None,
+        }
+    }
+
+    /// The lazily-consumed trace behind a streamed replay scenario.
+    pub fn stream(&self) -> Option<&StreamedTrace> {
+        match &self.shape {
+            LoadShape::Streamed(stream) => Some(stream),
             _ => None,
         }
     }
@@ -219,14 +255,14 @@ impl Scenario {
     /// probe rate (a longer window would trail a dead, rate-diluting
     /// tail; see [`ReplayTrace::requests_at`]).
     pub fn horizon_at(&self, rate: f64) -> (f64, f64) {
-        match &self.shape {
-            LoadShape::Replay(trace) => {
-                let warp = trace.native_rate() / rate.max(1e-12);
-                let duration = self.duration * warp.min(1.0);
-                (duration, self.warmup.min(duration / 4.0))
-            }
-            _ => (self.duration, self.warmup),
-        }
+        let native = match &self.shape {
+            LoadShape::Replay(trace) => trace.native_rate(),
+            LoadShape::Streamed(stream) => stream.native_rate(),
+            _ => return (self.duration, self.warmup),
+        };
+        let warp = native / rate.max(1e-12);
+        let duration = self.duration * warp.min(1.0);
+        (duration, self.warmup.min(duration / 4.0))
     }
 
     /// Deterministically generate the merged multi-class trace at
@@ -245,8 +281,20 @@ impl Scenario {
     /// whole recorded log by value, and the frontier probes each cell
     /// many times.
     pub fn build_trace_for(&self, seed: u64, rate: f64, horizon: f64) -> Vec<Request> {
-        if let LoadShape::Replay(trace) = &self.shape {
-            return trace.requests_at(rate, horizon);
+        match &self.shape {
+            LoadShape::Replay(trace) => return trace.requests_at(rate, horizon),
+            // Materializing a streamed trace defeats its purpose for huge
+            // logs, but keeps every build_trace caller (record, tests)
+            // working; the driver streams instead of calling this.
+            LoadShape::Streamed(stream) => {
+                return stream
+                    .arrivals_at(rate, horizon)
+                    .unwrap_or_else(|e| {
+                        panic!("streamed trace '{}' unreadable: {e:#}", stream.source())
+                    })
+                    .collect();
+            }
+            _ => {}
         }
         let n_classes = self.classes.len() as u64;
         let mut merged: Vec<Request> = Vec::new();
@@ -320,6 +368,48 @@ impl Scenario {
         Ok(Scenario::from_replay(ReplayTrace::from_file(path)?))
     }
 
+    /// Wrap a streamed external trace as a scenario (`--import <file>
+    /// --format <fmt>`): the [`Scenario::from_replay`] contract — classes,
+    /// horizon, warm-up, native nominal rate, sweep around it — with the
+    /// arrivals left on disk until the engine consumes them.
+    pub fn from_stream(stream: StreamedTrace) -> Scenario {
+        let native_rate = stream.native_rate();
+        let duration = stream.duration();
+        let warmup = stream.warmup();
+        let counts = stream.class_counts();
+        let total = stream.len().max(1) as f64;
+        let classes = stream
+            .classes()
+            .iter()
+            .zip(&counts)
+            .map(|(c, &n)| TrafficClass {
+                name: c.name,
+                dataset: c.dataset.clone(),
+                share: n as f64 / total,
+            })
+            .collect();
+        let name = leak(format!("replay:{}", stream.source()));
+        let summary = leak(format!(
+            "streamed {} trace '{}': {} requests over {:.0}s ({:.2} req/s native)",
+            stream.format().label(),
+            stream.source(),
+            stream.len(),
+            duration,
+            native_rate,
+        ));
+        Scenario {
+            name,
+            summary,
+            classes,
+            shape: LoadShape::Streamed(stream),
+            duration,
+            warmup,
+            default_rate: native_rate,
+            sweep: SweepBounds::around(native_rate),
+            churn: None,
+        }
+    }
+
     /// Export this scenario's trace at (seed, rate) in the recorded-log
     /// format (`ecoserve record`). Parsing the result back with
     /// [`Scenario::from_log`] reproduces the trace bit-for-bit modulo id
@@ -330,7 +420,23 @@ impl Scenario {
             .iter()
             .map(|c| ReplayClass { name: c.name, dataset: c.dataset.clone() })
             .collect();
-        let source = format!("scenario '{}' seed {} @ {} req/s", self.name, seed, rate);
+        // Full provenance for the header `source` field. Re-recording a
+        // replayed trace keeps the *original* lineage instead of stamping
+        // a new one, so record → import → record chains never lose where
+        // the arrivals actually came from.
+        let source = match &self.shape {
+            LoadShape::Replay(trace) if trace.lineage().is_some() => {
+                trace.lineage().unwrap_or_default().to_string()
+            }
+            LoadShape::Streamed(stream) => stream.lineage().to_string(),
+            _ => format!(
+                "scenario '{}' seed {} @ {} req/s (ecoserve v{})",
+                self.name,
+                seed,
+                rate,
+                env!("CARGO_PKG_VERSION")
+            ),
+        };
         let records = self.build_trace(seed, rate).into_iter().map(|req| ReplayRecord {
             arrival: req.arrival,
             input_len: req.input_len,
@@ -381,6 +487,23 @@ pub fn registry() -> Vec<Scenario> {
             warmup: 30.0,
             default_rate: 7.0,
             sweep: SweepBounds::around(7.0),
+            churn: None,
+        },
+        Scenario {
+            name: "multiday",
+            summary: "three compressed day/night cycles (0.3x..2.0x the mean rate) — \
+                      the multi-day replay shape mitosis must track up and down",
+            classes: single("chat", Dataset::sharegpt()),
+            shape: LoadShape::MultiDay {
+                cycles: 3,
+                trough_mult: 0.3,
+                peak_mult: 2.0,
+                segments: 10,
+            },
+            duration: 540.0,
+            warmup: 30.0,
+            default_rate: 6.0,
+            sweep: SweepBounds::around(6.0),
             churn: None,
         },
         Scenario {
@@ -566,6 +689,44 @@ mod tests {
                 assert!(r > 0.0 && d > 0.0);
             }
         }
+    }
+
+    #[test]
+    fn multiday_repeats_the_normalized_day_curve() {
+        let s = by_name("multiday").unwrap();
+        let steps = s.shape.steps(6.0, s.duration);
+        assert_eq!(steps.len(), 30, "3 cycles x 10 segments");
+        // Every cycle is the first one repeated — the day/night swing the
+        // autoscaler must ride multiple times.
+        for k in 1..3 {
+            for i in 0..10 {
+                assert_eq!(steps[k * 10 + i], steps[i], "cycle {k} step {i}");
+            }
+        }
+        let peak = steps.iter().map(|s| s.0).fold(f64::MIN, f64::max);
+        let trough = steps.iter().map(|s| s.0).fold(f64::MAX, f64::min);
+        assert!(trough < 3.0, "trough {trough} should sit well below the 6 req/s mean");
+        assert!(peak > 8.0, "peak {peak} should sit well above the 6 req/s mean");
+    }
+
+    #[test]
+    fn record_log_stamps_generator_provenance_and_preserves_lineage() {
+        let s = by_name("bursty").unwrap();
+        let log = s.record_log(7, 6.0);
+        let header = log.lines().next().unwrap();
+        assert!(
+            header.contains("scenario 'bursty' seed 7 @ 6 req/s (ecoserve v"),
+            "{header}"
+        );
+        let t = ReplayTrace::parse_named(&log, "rec.jsonl").unwrap();
+        assert!(t.lineage().unwrap().contains("ecoserve v"));
+        // Re-recording the replayed scenario must keep the original
+        // provenance, not stamp a new "scenario 'replay:...'" line — the
+        // record → import → record lineage chain.
+        let s2 = Scenario::from_replay(t.clone());
+        let log2 = s2.record_log(0, s2.default_rate);
+        let t2 = ReplayTrace::parse_named(&log2, "rec2.jsonl").unwrap();
+        assert_eq!(t2.lineage(), t.lineage());
     }
 
     #[test]

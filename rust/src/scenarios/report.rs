@@ -102,14 +102,30 @@ pub fn churn_telemetry_to_json(c: &crate::sim::ChurnTelemetry) -> Json {
 /// The replay-provenance block both report schemas embed for scenarios
 /// backed by a recorded log (absent on synthetic scenarios — additive).
 pub fn replay_to_json(scenario: &crate::scenarios::Scenario) -> Option<(&'static str, Json)> {
-    scenario.replay().map(|trace| {
+    if let Some(trace) = scenario.replay() {
+        let mut fields = vec![
+            ("source", Json::str(trace.source())),
+            ("requests", Json::num(trace.len() as f64)),
+            ("native_rate_rps", Json::num(trace.native_rate())),
+            ("recorded_duration_s", Json::num(trace.duration())),
+            ("streamed", Json::Bool(false)),
+        ];
+        if let Some(lineage) = trace.lineage() {
+            fields.push(("lineage", Json::str(lineage)));
+        }
+        return Some(("replay", Json::obj(fields)));
+    }
+    scenario.stream().map(|stream| {
         (
             "replay",
             Json::obj(vec![
-                ("source", Json::str(trace.source())),
-                ("requests", Json::num(trace.len() as f64)),
-                ("native_rate_rps", Json::num(trace.native_rate())),
-                ("recorded_duration_s", Json::num(trace.duration())),
+                ("source", Json::str(stream.source())),
+                ("requests", Json::num(stream.len() as f64)),
+                ("native_rate_rps", Json::num(stream.native_rate())),
+                ("recorded_duration_s", Json::num(stream.duration())),
+                ("streamed", Json::Bool(true)),
+                ("format", Json::str(stream.format().label())),
+                ("lineage", Json::str(stream.lineage())),
             ]),
         )
     })

@@ -219,16 +219,36 @@ pub fn run_until_faulted(
     faults: &[(f64, FaultEvent)],
     horizon: f64,
     metrics: &mut Collector,
-    mut stop: impl FnMut(f64, &Collector) -> bool,
+    stop: impl FnMut(f64, &Collector) -> bool,
 ) -> RunStats {
-    let wall_start = std::time::Instant::now();
     // The cursor merge needs a time-sorted trace. Generators emit sorted
     // traces; an unsorted one is stable-sorted, which reproduces exactly
     // the (time, insertion seq) order the preload heap used to impose.
     if !trace.windows(2).all(|w| w[0].arrival <= w[1].arrival) {
         trace.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
     }
-    let mut arrivals = trace.into_iter().peekable();
+    run_source_until_faulted(system, trace.into_iter(), faults, horizon, metrics, stop)
+}
+
+/// The merge loop itself, generic over the arrival source: everything
+/// [`run_until_faulted`] does after its sort check, for any time-ordered
+/// iterator of requests. This is the streaming entry point — a
+/// multi-day recorded log can be fed through
+/// [`crate::workload::StreamedArrivals`] without ever materializing a
+/// `Vec` of the whole trace; the engine's memory stays O(active events).
+/// The iterator MUST yield requests in nondecreasing arrival order (the
+/// Vec wrapper guarantees it by sorting; streaming sources enforce it
+/// with a bounded reorder window).
+pub fn run_source_until_faulted(
+    system: &mut dyn System,
+    arrivals: impl Iterator<Item = Request>,
+    faults: &[(f64, FaultEvent)],
+    horizon: f64,
+    metrics: &mut Collector,
+    mut stop: impl FnMut(f64, &Collector) -> bool,
+) -> RunStats {
+    let wall_start = std::time::Instant::now();
+    let mut arrivals = arrivals.peekable();
     let mut sched = EventScheduler::new();
     for &(t, fault) in faults {
         sched.at(t, Event::Fault(fault));
@@ -332,6 +352,26 @@ pub fn run_faulted(
         })
     } else {
         run_until_faulted(system, trace, faults, horizon, metrics, |_, _| false)
+    }
+}
+
+/// [`run_faulted`] over a streaming arrival source ([`run_abandonable`]'s
+/// chooser semantics, [`run_source_until_faulted`]'s memory profile).
+/// The iterator must be time-ordered; see [`run_source_until_faulted`].
+pub fn run_source_faulted(
+    system: &mut dyn System,
+    arrivals: impl Iterator<Item = Request>,
+    faults: &[(f64, FaultEvent)],
+    horizon: f64,
+    metrics: &mut Collector,
+    stop_early: bool,
+) -> RunStats {
+    if stop_early {
+        run_source_until_faulted(system, arrivals, faults, horizon, metrics, |_, m: &Collector| {
+            m.decided()
+        })
+    } else {
+        run_source_until_faulted(system, arrivals, faults, horizon, metrics, |_, _| false)
     }
 }
 
@@ -570,6 +610,29 @@ mod tests {
         assert!(stats.events < 200, "{stats:?}");
         // The run stopped around t=2.0: roughly 20 of 100 arrivals seen.
         assert!(metrics.completed().len() < 30);
+    }
+
+    /// Feeding the same sorted trace through the iterator entry point
+    /// must be indistinguishable from the Vec wrapper, bit for bit —
+    /// this is the contract the streaming replay path leans on.
+    #[test]
+    fn source_engine_matches_vec_engine_bit_for_bit() {
+        let golden: Vec<Request> =
+            (0..300).map(|i| req(i, (i / 3) as f64 * 0.2)).collect();
+        let mut sys_a = Echo { service: 0.3, pending: vec![] };
+        let mut sys_b = Echo { service: 0.3, pending: vec![] };
+        let mut m_a = Collector::new();
+        let mut m_b = Collector::new();
+        let a = run_source_faulted(&mut sys_a, golden.clone().into_iter(), &[], 1_000.0, &mut m_a, false);
+        let b = run(&mut sys_b, golden, 1_000.0, &mut m_b);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.sim_time.to_bits(), b.sim_time.to_bits());
+        assert_eq!(m_a.completed().len(), m_b.completed().len());
+        for (ra, rb) in m_a.completed().iter().zip(m_b.completed()) {
+            assert_eq!(ra, rb, "records diverged");
+            assert_eq!(ra.first_token.to_bits(), rb.first_token.to_bits());
+            assert_eq!(ra.completion.to_bits(), rb.completion.to_bits());
+        }
     }
 
     #[test]

@@ -273,6 +273,18 @@ const REPLAY: FlagSpec =
     FlagSpec::opt("replay", "LOG", "replay a recorded arrival log (JSONL)");
 const LOOP: FlagSpec =
     FlagSpec::opt("loop", "SECS", "tile the --replay log to at least this horizon");
+const IMPORT: FlagSpec = FlagSpec::opt(
+    "import",
+    "FILE",
+    "stream-replay an external trace (CSV; see --format)",
+);
+const FORMAT: FlagSpec =
+    FlagSpec::opt("format", "NAME", "external trace format for --import (burstgpt|azure)");
+const WINDOW: FlagSpec = FlagSpec::opt(
+    "window",
+    "SECS",
+    "reorder tolerance for --import timestamps (default 5)",
+);
 const DURATION: FlagSpec = FlagSpec::opt("duration", "SECS", "trace duration override");
 const OUT: FlagSpec = FlagSpec::opt("out", "PATH", "write the JSON report here");
 const BUDGET_S: FlagSpec =
@@ -340,6 +352,9 @@ pub static COMMANDS: &[CommandSpec] = &[
             SCENARIO,
             REPLAY,
             LOOP,
+            IMPORT,
+            FORMAT,
+            WINDOW,
             SYSTEM,
             MODEL,
             CLUSTER,
@@ -365,6 +380,9 @@ pub static COMMANDS: &[CommandSpec] = &[
             SCENARIO,
             REPLAY,
             LOOP,
+            IMPORT,
+            FORMAT,
+            WINDOW,
             SYSTEM,
             LEVEL,
             MODEL,
@@ -390,6 +408,9 @@ pub static COMMANDS: &[CommandSpec] = &[
             SCENARIO,
             REPLAY,
             LOOP,
+            IMPORT,
+            FORMAT,
+            WINDOW,
             MODEL,
             CLUSTER,
             GPUS,
@@ -398,6 +419,7 @@ pub static COMMANDS: &[CommandSpec] = &[
             SEED,
             FAULT_SEED,
             FlagSpec::switch("quick", "coarse search for CI smoke runs"),
+            FlagSpec::switch("spot", "also price spot-GPU twins (discount + reclaim churn)"),
             FlagSpec::opt("target-rate", "RPS", "also report the cheapest config meeting this"),
             BUDGET_S,
             DURATION,
@@ -409,6 +431,11 @@ pub static COMMANDS: &[CommandSpec] = &[
         summary: "export a scenario's trace as a replay log (JSONL)",
         flags: &[
             SCENARIO,
+            REPLAY,
+            LOOP,
+            IMPORT,
+            FORMAT,
+            WINDOW,
             DURATION,
             SEED,
             FlagSpec::opt("rate", "RPS", "offered rate override"),
@@ -569,6 +596,11 @@ usage: ecoserve record [flags]
 
 flags:
   --scenario <NAME>      one named scenario
+  --replay <LOG>         replay a recorded arrival log (JSONL)
+  --loop <SECS>          tile the --replay log to at least this horizon
+  --import <FILE>        stream-replay an external trace (CSV; see --format)
+  --format <NAME>        external trace format for --import (burstgpt|azure)
+  --window <SECS>        reorder tolerance for --import timestamps (default 5)
   --duration <SECS>      trace duration override
   --seed <N>             trace RNG seed
   --rate <RPS>           offered rate override

@@ -1,0 +1,130 @@
+//! Azure LLM-inference-style CSV adapter (the AzurePublicDataset trace
+//! published with Splitwise, arXiv:2311.18677).
+//!
+//! ```text
+//! TIMESTAMP,ContextTokens,GeneratedTokens
+//! 2023-11-16 18:13:01.50,473,64
+//! 127.25,1002,14
+//! ```
+//!
+//! `TIMESTAMP` is either a datetime (`YYYY-MM-DD HH:MM:SS[.frac]`, as in
+//! the published code trace) or plain float seconds (as in rebased
+//! slices). The trace carries no class signal, so every request maps to
+//! one "azure-llm" class scored against ShareGPT SLOs.
+
+use anyhow::{bail, Result};
+
+use super::{tokens_field, RawRecord};
+
+pub(crate) const HEADER: &str = "TIMESTAMP,ContextTokens,GeneratedTokens";
+
+pub(crate) fn check_header(line: &str, src: &str) -> Result<()> {
+    if line.trim() != HEADER {
+        bail!(
+            "{src}:1: not an Azure LLM inference CSV — expected header '{HEADER}', \
+             got '{}'",
+            line.trim()
+        );
+    }
+    Ok(())
+}
+
+pub(crate) fn parse_row(line: &str, src: &str, n: usize) -> Result<RawRecord> {
+    let fields: Vec<&str> = line.split(',').collect();
+    if fields.len() != 3 {
+        bail!(
+            "{src}:{n}: expected 3 comma-separated fields \
+             (TIMESTAMP,ContextTokens,GeneratedTokens), got {}",
+            fields.len()
+        );
+    }
+    let t = parse_timestamp(fields[0].trim(), src, n)?;
+    let input_len = tokens_field(fields[1], "ContextTokens", src, n)?;
+    let output_len = tokens_field(fields[2], "GeneratedTokens", src, n)?;
+    Ok(RawRecord { t, input_len, output_len, class: 0 })
+}
+
+/// Seconds (absolute; origin is arbitrary since the importer rebases to
+/// the first arrival) from either timestamp form.
+fn parse_timestamp(field: &str, src: &str, n: usize) -> Result<f64> {
+    if let Ok(t) = field.parse::<f64>() {
+        if !t.is_finite() || t < 0.0 {
+            bail!("{src}:{n}: 'TIMESTAMP' must be non-negative and finite, got {t}");
+        }
+        return Ok(t);
+    }
+    let err = || {
+        anyhow::anyhow!(
+            "{src}:{n}: 'TIMESTAMP' must be seconds or 'YYYY-MM-DD HH:MM:SS[.frac]', \
+             got '{field}'"
+        )
+    };
+    let (date, time) = field.split_once(' ').ok_or_else(err)?;
+    let mut dp = date.split('-');
+    let year: i64 = dp.next().and_then(|s| s.parse().ok()).ok_or_else(err)?;
+    let month: i64 = dp.next().and_then(|s| s.parse().ok()).ok_or_else(err)?;
+    let day: i64 = dp.next().and_then(|s| s.parse().ok()).ok_or_else(err)?;
+    if dp.next().is_some() || !(1..=12).contains(&month) || !(1..=31).contains(&day) {
+        return Err(err());
+    }
+    let mut tp = time.split(':');
+    let hour: i64 = tp.next().and_then(|s| s.parse().ok()).ok_or_else(err)?;
+    let minute: i64 = tp.next().and_then(|s| s.parse().ok()).ok_or_else(err)?;
+    let second: f64 = tp.next().and_then(|s| s.parse().ok()).ok_or_else(err)?;
+    if tp.next().is_some()
+        || !(0..24).contains(&hour)
+        || !(0..60).contains(&minute)
+        || !second.is_finite()
+        || !(0.0..60.0).contains(&second)
+    {
+        return Err(err());
+    }
+    let days = days_from_civil(year, month, day);
+    Ok(days as f64 * 86_400.0 + hour as f64 * 3600.0 + minute as f64 * 60.0 + second)
+}
+
+/// Days from 1970-01-01 for a proleptic-Gregorian civil date (Howard
+/// Hinnant's `days_from_civil` algorithm) — enough calendar to subtract
+/// two trace timestamps without a chrono dependency.
+fn days_from_civil(y: i64, m: i64, d: i64) -> i64 {
+    let y = if m <= 2 { y - 1 } else { y };
+    let era = if y >= 0 { y } else { y - 399 } / 400;
+    let yoe = y - era * 400; // [0, 399]
+    let doy = (153 * (if m > 2 { m - 3 } else { m + 9 }) + 2) / 5 + d - 1; // [0, 365]
+    let doe = yoe * 365 + yoe / 4 - yoe / 100 + doy; // [0, 146096]
+    era * 146_097 + doe - 719_468
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn civil_calendar_matches_known_epochs() {
+        assert_eq!(days_from_civil(1970, 1, 1), 0);
+        assert_eq!(days_from_civil(1970, 1, 2), 1);
+        assert_eq!(days_from_civil(2000, 3, 1), 11017);
+        // Leap-year boundary: 2024-02-29 exists, one day before 03-01.
+        assert_eq!(days_from_civil(2024, 3, 1) - days_from_civil(2024, 2, 29), 1);
+    }
+
+    #[test]
+    fn datetime_and_float_timestamps_agree_on_differences() {
+        let a = parse_timestamp("2023-11-16 18:13:01.50", "t", 1).unwrap();
+        let b = parse_timestamp("2023-11-16 18:14:03", "t", 1).unwrap();
+        assert_eq!(b - a, 61.5);
+        // Midnight rollover.
+        let c = parse_timestamp("2023-11-16 23:59:59", "t", 1).unwrap();
+        let d = parse_timestamp("2023-11-17 00:00:01", "t", 1).unwrap();
+        assert_eq!(d - c, 2.0);
+        assert_eq!(parse_timestamp("12.75", "t", 1).unwrap(), 12.75);
+    }
+
+    #[test]
+    fn bad_timestamps_are_rejected() {
+        for bad in ["2023-11-16", "2023-13-01 00:00:00", "2023-01-01 24:00:00",
+                    "2023-01-01 00:61:00", "2023-01-01 00:00:60", "-5.0", "inf", "abc"] {
+            assert!(parse_timestamp(bad, "t", 3).is_err(), "{bad} should fail");
+        }
+    }
+}

@@ -1,0 +1,67 @@
+//! BurstGPT-style CSV adapter (arXiv:2401.17644 release format).
+//!
+//! ```text
+//! Timestamp,Model,Request tokens,Response tokens,Total tokens,Log Type
+//! 9,ChatGPT,472,50,522,Conversation log
+//! 10,GPT-4,317,7,324,API log
+//! ```
+//!
+//! `Timestamp` is seconds from the capture start (integer-granularity in
+//! the public release). `Log Type` is the class signal: conversation
+//! traffic is interactive (ShareGPT SLOs), API traffic is
+//! programmatic/short (Alpaca SLOs). `Total tokens` is validated as a
+//! number but not cross-checked against the sum — public dumps disagree
+//! by the EoS token.
+
+use anyhow::{bail, Result};
+
+use super::{tokens_field, RawRecord};
+
+pub(crate) const HEADER: &str =
+    "Timestamp,Model,Request tokens,Response tokens,Total tokens,Log Type";
+
+pub(crate) fn check_header(line: &str, src: &str) -> Result<()> {
+    if line.trim() != HEADER {
+        bail!(
+            "{src}:1: not a BurstGPT CSV — expected header '{HEADER}', got '{}'",
+            line.trim()
+        );
+    }
+    Ok(())
+}
+
+pub(crate) fn parse_row(line: &str, src: &str, n: usize) -> Result<RawRecord> {
+    let fields: Vec<&str> = line.split(',').collect();
+    if fields.len() != 6 {
+        bail!(
+            "{src}:{n}: expected 6 comma-separated fields (Timestamp,Model,Request \
+             tokens,Response tokens,Total tokens,Log Type), got {}",
+            fields.len()
+        );
+    }
+    let ts = fields[0].trim();
+    let t: f64 = ts
+        .parse()
+        .map_err(|_| anyhow::anyhow!("{src}:{n}: 'Timestamp' must be a number, got '{ts}'"))?;
+    if !t.is_finite() || t < 0.0 {
+        bail!("{src}:{n}: 'Timestamp' must be non-negative and finite, got {t}");
+    }
+    if fields[1].trim().is_empty() {
+        bail!("{src}:{n}: empty 'Model' field");
+    }
+    let input_len = tokens_field(fields[2], "Request tokens", src, n)?;
+    let output_len = tokens_field(fields[3], "Response tokens", src, n)?;
+    let total = fields[4].trim();
+    if total.parse::<u64>().is_err() {
+        bail!("{src}:{n}: 'Total tokens' must be a non-negative integer, got '{total}'");
+    }
+    let class = match fields[5].trim() {
+        "Conversation log" => 0,
+        "API log" => 1,
+        other => bail!(
+            "{src}:{n}: unknown 'Log Type' '{other}' (expected 'Conversation log' or \
+             'API log')"
+        ),
+    };
+    Ok(RawRecord { t, input_len, output_len, class })
+}

@@ -1,0 +1,404 @@
+//! Trace zoo: import adapters for public production traces.
+//!
+//! The scenario suite's synthetic shapes and the repo's own JSONL replay
+//! format cover "traffic you can imagine" and "traffic this repo
+//! recorded". Real evaluations (DistServe arXiv:2401.09670, BurstGPT
+//! arXiv:2401.17644, Azure's LLM inference dataset from Splitwise
+//! arXiv:2311.18677) replay *public production* traces; this module
+//! converts those external formats into the same canonical workload
+//! model every scenario uses, with two consumption paths:
+//!
+//! - **Materialized** ([`import_trace`]): parse the whole file into a
+//!   [`ReplayTrace`], exactly like the native JSONL path. Fine up to a
+//!   few million records.
+//! - **Streaming** ([`StreamedTrace`]): pre-scan the file once for
+//!   metadata (span, request count, class mix), then replay it through
+//!   [`StreamedTrace::arrivals_at`] — a bounded-memory iterator the
+//!   cursor engine consumes directly
+//!   ([`crate::sim::run_source_faulted`]), so a multi-day multi-million
+//!   request log never lives in memory at once. Peak buffering is the
+//!   reorder window ([`StreamedArrivals::peak_buffered`]), not the log
+//!   length.
+//!
+//! Both paths share one line scanner, so they accept and reject exactly
+//! the same inputs and emit records in exactly the same order — the
+//! streaming replay is locked bit-identical to the materialized one.
+//!
+//! ## Formats and class/SLO mapping
+//!
+//! | format     | shape                                                        | classes → SLO dataset |
+//! |------------|--------------------------------------------------------------|-----------------------|
+//! | `burstgpt` | CSV `Timestamp,Model,Request tokens,Response tokens,Total tokens,Log Type` | `Conversation log` → "conversation" (ShareGPT SLOs), `API log` → "api" (Alpaca SLOs) |
+//! | `azure`    | CSV `TIMESTAMP,ContextTokens,GeneratedTokens`                | single "azure-llm" class (ShareGPT SLOs) |
+//!
+//! Timestamps are absolute (seconds, or a datetime for Azure); the
+//! importer rebases them to trace-relative seconds. Classes the file
+//! never uses are dropped from the table (an all-API BurstGPT slice
+//! reports one class, not a phantom zero-arrival one).
+//!
+//! ## Ordering: the bounded reorder window
+//!
+//! Production exports are *almost* sorted — coarse timestamps and
+//! multi-frontend capture reorder neighbors. Both paths tolerate
+//! records up to `window` seconds behind the newest timestamp seen
+//! (re-sorted by `(timestamp, line order)`, the same tie-break the
+//! synthetic merge uses) and reject anything older with the offending
+//! line number: silently re-sorting an arbitrarily-shuffled log would
+//! need the whole file in memory, which is exactly what streaming
+//! exists to avoid.
+
+mod azure;
+mod burstgpt;
+mod stream;
+
+pub use stream::{StreamedArrivals, StreamedTrace};
+
+use std::io::Cursor;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::datasets::Dataset;
+use super::replay::{ReplayClass, ReplayRecord, ReplayTrace};
+
+/// Default reorder tolerance, seconds. Public traces with 1 s timestamp
+/// granularity reorder neighbors freely; seconds-apart swaps are capture
+/// artifacts, minutes-apart ones are corruption.
+pub const DEFAULT_REORDER_WINDOW_S: f64 = 5.0;
+
+/// A supported external trace format.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceFormat {
+    /// BurstGPT-style CSV (arXiv:2401.17644 release format).
+    BurstGpt,
+    /// Azure LLM-inference-style CSV (Splitwise / AzurePublicDataset).
+    Azure,
+}
+
+impl TraceFormat {
+    /// Resolve a `--format` name (case-insensitive).
+    pub fn by_name(name: &str) -> Result<TraceFormat> {
+        match name.to_ascii_lowercase().as_str() {
+            "burstgpt" => Ok(TraceFormat::BurstGpt),
+            "azure" => Ok(TraceFormat::Azure),
+            other => bail!("unknown trace format '{other}' (expected burstgpt|azure)"),
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            TraceFormat::BurstGpt => "burstgpt",
+            TraceFormat::Azure => "azure",
+        }
+    }
+
+    /// The full class table this adapter may assign into (before
+    /// unused-class compaction). Index order is the `class` field in
+    /// [`RawRecord`].
+    pub fn classes(self) -> Vec<ReplayClass> {
+        match self {
+            TraceFormat::BurstGpt => vec![
+                ReplayClass { name: "conversation", dataset: Dataset::sharegpt() },
+                ReplayClass { name: "api", dataset: Dataset::alpaca() },
+            ],
+            TraceFormat::Azure => {
+                vec![ReplayClass { name: "azure-llm", dataset: Dataset::sharegpt() }]
+            }
+        }
+    }
+
+    /// Validate the file's header row (line 1).
+    pub(crate) fn check_header(self, line: &str, src: &str) -> Result<()> {
+        match self {
+            TraceFormat::BurstGpt => burstgpt::check_header(line, src),
+            TraceFormat::Azure => azure::check_header(line, src),
+        }
+    }
+
+    /// Parse one data row (1-based line number `n` for error messages).
+    pub(crate) fn parse_row(self, line: &str, src: &str, n: usize) -> Result<RawRecord> {
+        match self {
+            TraceFormat::BurstGpt => burstgpt::parse_row(line, src, n),
+            TraceFormat::Azure => azure::parse_row(line, src, n),
+        }
+    }
+}
+
+/// One parsed external record in absolute time (the format's native
+/// origin; only differences matter — [`assemble`] rebases to the first
+/// arrival).
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) struct RawRecord {
+    /// Absolute timestamp, seconds.
+    pub t: f64,
+    /// Prompt tokens.
+    pub input_len: usize,
+    /// Generation tokens.
+    pub output_len: usize,
+    /// Index into [`TraceFormat::classes`] (pre-compaction).
+    pub class: usize,
+}
+
+/// A CSV token-count field: positive integer (zero-token requests are
+/// corrupt — they would divide by zero in TPOT scoring). The `1e12` cap
+/// mirrors the JSONL parser's.
+pub(crate) fn tokens_field(field: &str, key: &str, src: &str, n: usize) -> Result<usize> {
+    let field = field.trim();
+    let v: u64 = field.parse().map_err(|_| {
+        anyhow::anyhow!("{src}:{n}: '{key}' must be a non-negative integer, got '{field}'")
+    })?;
+    if v == 0 {
+        bail!("{src}:{n}: zero-token request ('{key}' is 0)");
+    }
+    if v > 1_000_000_000_000 {
+        bail!("{src}:{n}: '{key}' {v} is implausibly large");
+    }
+    Ok(v as usize)
+}
+
+/// Provenance string stamped into the imported trace's lineage (and the
+/// header `source` field when the trace is re-recorded), so a replay
+/// report can always answer "which file, which format, how many
+/// requests".
+pub(crate) fn lineage_for(format: TraceFormat, src: &str, requests: usize) -> String {
+    format!("{} import of '{}' ({} requests)", format.label(), src, requests)
+}
+
+/// Drop classes the trace never uses and return `(table, remap)` where
+/// `remap[old] = new` for every used index. Keeping phantom classes
+/// would report zero-arrival rows and let the scheduler pick an SLO from
+/// traffic that does not exist.
+pub(crate) fn compact_classes(
+    all: Vec<ReplayClass>,
+    used: &[bool],
+) -> (Vec<ReplayClass>, Vec<usize>) {
+    let mut remap = vec![usize::MAX; used.len()];
+    let mut out = Vec::new();
+    for (k, class) in all.into_iter().enumerate() {
+        if used[k] {
+            remap[k] = out.len();
+            out.push(class);
+        }
+    }
+    (out, remap)
+}
+
+/// Finish a materialized import: rebase timestamps to the first arrival,
+/// compact the class table, derive the warm-up prefix, and stamp
+/// provenance. `raws` must already be in `(timestamp, line)` order (the
+/// scanner's emission order), so the constructed trace round-trips
+/// bit-for-bit against the streaming path.
+fn assemble(raws: Vec<RawRecord>, format: TraceFormat, src: &str) -> Result<ReplayTrace> {
+    if raws.is_empty() {
+        bail!("{src}: empty trace — no records to replay");
+    }
+    let t0 = raws[0].t;
+    let duration = raws[raws.len() - 1].t - t0;
+    if duration <= 0.0 {
+        bail!("{src}: trace spans zero seconds — need at least two distinct timestamps");
+    }
+    let all = format.classes();
+    let mut used = vec![false; all.len()];
+    for r in &raws {
+        used[r.class] = true;
+    }
+    let (classes, remap) = compact_classes(all, &used);
+    let records: Vec<ReplayRecord> = raws
+        .iter()
+        .map(|r| ReplayRecord {
+            arrival: r.t - t0,
+            input_len: r.input_len,
+            output_len: r.output_len,
+            class: remap[r.class],
+        })
+        .collect();
+    let warmup = (duration / 8.0).min(30.0); // the headerless-JSONL rule
+    let lineage = lineage_for(format, src, records.len());
+    ReplayTrace::from_parts(records, classes, duration, warmup, src.to_string(), Some(lineage))
+}
+
+/// Import external trace text under a source label (tests, inline use).
+pub fn import_named(
+    text: &str,
+    format: TraceFormat,
+    window: f64,
+    src: &str,
+) -> Result<ReplayTrace> {
+    let mut scan =
+        stream::Scanner::new(Cursor::new(text.as_bytes()), format, window, src.to_string());
+    let mut raws = Vec::new();
+    while let Some(rec) = scan.next_emit()? {
+        raws.push(rec);
+    }
+    assemble(raws, format, src)
+}
+
+/// Import an external trace file into a fully-materialized
+/// [`ReplayTrace`]. For logs too large to materialize, use
+/// [`StreamedTrace::open`] instead — the two paths are bit-identical on
+/// any input both can hold.
+pub fn import_trace(path: &Path, format: TraceFormat, window: f64) -> Result<ReplayTrace> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read trace {}", path.display()))?;
+    let label = path
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_else(|| path.display().to_string());
+    import_named(&text, format, window, &label)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) const BURSTGPT_HEADER: &str =
+        "Timestamp,Model,Request tokens,Response tokens,Total tokens,Log Type";
+    pub(crate) const AZURE_HEADER: &str = "TIMESTAMP,ContextTokens,GeneratedTokens";
+
+    fn burst(rows: &[&str]) -> String {
+        let mut s = String::from(BURSTGPT_HEADER);
+        for r in rows {
+            s.push('\n');
+            s.push_str(r);
+        }
+        s
+    }
+
+    #[test]
+    fn burstgpt_rows_map_log_types_to_classes() {
+        let text = burst(&[
+            "10,ChatGPT,100,50,150,Conversation log",
+            "12,GPT-4,30,7,37,API log",
+            "15,ChatGPT,200,80,280,Conversation log",
+        ]);
+        let t = import_named(&text, TraceFormat::BurstGpt, 5.0, "b.csv").unwrap();
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.duration(), 5.0); // 15 - 10, rebased
+        assert_eq!(t.classes().len(), 2);
+        assert_eq!(t.classes()[0].name, "conversation");
+        assert_eq!(t.classes()[1].name, "api");
+        assert_eq!(t.classes()[1].dataset.name, "Alpaca-gpt4");
+        assert_eq!(t.class_counts(), vec![2, 1]);
+        let rec = &t.records()[1];
+        assert_eq!((rec.arrival, rec.input_len, rec.output_len, rec.class), (2.0, 30, 7, 1));
+        assert_eq!(t.source(), "b.csv");
+        assert_eq!(t.lineage(), Some("burstgpt import of 'b.csv' (3 requests)"));
+    }
+
+    #[test]
+    fn unused_classes_are_compacted_away() {
+        // An all-API slice: the conversation class must not survive as a
+        // phantom zero-arrival row.
+        let text = burst(&["10,GPT-4,30,7,37,API log", "12,GPT-4,31,8,39,API log"]);
+        let t = import_named(&text, TraceFormat::BurstGpt, 5.0, "api.csv").unwrap();
+        assert_eq!(t.classes().len(), 1);
+        assert_eq!(t.classes()[0].name, "api");
+        assert_eq!(t.class_counts(), vec![2]);
+        assert_eq!(t.records()[0].class, 0);
+    }
+
+    #[test]
+    fn azure_rows_parse_both_timestamp_forms() {
+        let text = format!(
+            "{AZURE_HEADER}\n\
+             2023-11-16 18:13:01.50,100,40\n\
+             2023-11-16 18:13:03,200,60\n\
+             2023-11-16 18:14:00,50,10"
+        );
+        let t = import_named(&text, TraceFormat::Azure, 5.0, "a.csv").unwrap();
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.classes().len(), 1);
+        assert_eq!(t.classes()[0].name, "azure-llm");
+        assert_eq!(t.records()[0].arrival, 0.0);
+        assert_eq!(t.records()[1].arrival, 1.5);
+        assert_eq!(t.duration(), 58.5);
+
+        // Plain float-seconds timestamps work too.
+        let text = format!("{AZURE_HEADER}\n0.5,100,40\n2.25,200,60");
+        let t = import_named(&text, TraceFormat::Azure, 5.0, "a.csv").unwrap();
+        assert_eq!(t.records()[1].arrival, 1.75);
+    }
+
+    #[test]
+    fn malformed_rows_error_with_line_numbers() {
+        // Wrong header.
+        let e = fmt_err(import_named("nope,nope\n", TraceFormat::BurstGpt, 5.0, "x.csv"));
+        assert!(e.contains("x.csv:1") && e.contains("header"), "{e}");
+        // Wrong column count.
+        let e = fmt_err(import_named(
+            &burst(&["10,ChatGPT,100,50,150"]),
+            TraceFormat::BurstGpt,
+            5.0,
+            "x.csv",
+        ));
+        assert!(e.contains("x.csv:2") && e.contains("6"), "{e}");
+        // Zero-token rows.
+        let e = fmt_err(import_named(
+            &burst(&["10,ChatGPT,0,50,50,API log"]),
+            TraceFormat::BurstGpt,
+            5.0,
+            "x.csv",
+        ));
+        assert!(e.contains("x.csv:2") && e.contains("zero-token"), "{e}");
+        // Unknown log type.
+        let e = fmt_err(import_named(
+            &burst(&["10,ChatGPT,1,1,2,Batch log"]),
+            TraceFormat::BurstGpt,
+            5.0,
+            "x.csv",
+        ));
+        assert!(e.contains("x.csv:2") && e.contains("Log Type"), "{e}");
+        // Azure: bad timestamp.
+        let e = fmt_err(import_named(
+            &format!("{AZURE_HEADER}\n2023-13-40 99:99:99,1,1"),
+            TraceFormat::Azure,
+            5.0,
+            "a.csv",
+        ));
+        assert!(e.contains("a.csv:2") && e.contains("TIMESTAMP"), "{e}");
+        // Empty data section.
+        let e = fmt_err(import_named(BURSTGPT_HEADER, TraceFormat::BurstGpt, 5.0, "x.csv"));
+        assert!(e.contains("empty trace"), "{e}");
+    }
+
+    #[test]
+    fn reorder_inside_the_window_sorts_beyond_it_errors() {
+        // 12 arrives before 10: 2 s behind max-seen, inside a 5 s window.
+        let ok = burst(&[
+            "12,ChatGPT,1,1,2,API log",
+            "10,ChatGPT,2,2,4,API log",
+            "13,ChatGPT,3,3,6,API log",
+        ]);
+        let t = import_named(&ok, TraceFormat::BurstGpt, 5.0, "ok.csv").unwrap();
+        let inputs: Vec<usize> = t.records().iter().map(|r| r.input_len).collect();
+        assert_eq!(inputs, vec![2, 1, 3]);
+        assert_eq!(t.records()[0].arrival, 0.0);
+
+        // 10 is 50 s behind 60: beyond the window, strict line-numbered error.
+        let bad = burst(&["60,ChatGPT,1,1,2,API log", "10,ChatGPT,2,2,4,API log"]);
+        let e = fmt_err(import_named(&bad, TraceFormat::BurstGpt, 5.0, "bad.csv"));
+        assert!(e.contains("bad.csv:3") && e.contains("reorder window"), "{e}");
+
+        // Equal timestamps keep line order (the stable tie-break).
+        let ties = burst(&[
+            "10,ChatGPT,1,1,2,API log",
+            "10,ChatGPT,2,2,4,API log",
+            "11,ChatGPT,3,3,6,API log",
+        ]);
+        let t = import_named(&ties, TraceFormat::BurstGpt, 0.0, "t.csv").unwrap();
+        let inputs: Vec<usize> = t.records().iter().map(|r| r.input_len).collect();
+        assert_eq!(inputs, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn format_names_resolve_case_insensitively() {
+        assert_eq!(TraceFormat::by_name("BurstGPT").unwrap(), TraceFormat::BurstGpt);
+        assert_eq!(TraceFormat::by_name("azure").unwrap(), TraceFormat::Azure);
+        let e = format!("{:#}", TraceFormat::by_name("mooncake").unwrap_err());
+        assert!(e.contains("burstgpt|azure"), "{e}");
+    }
+
+    fn fmt_err<T>(r: Result<T>) -> String {
+        format!("{:#}", r.unwrap_err())
+    }
+}

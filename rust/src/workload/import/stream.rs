@@ -1,0 +1,511 @@
+//! Streaming replay: bounded-memory arrival sources over external trace
+//! files.
+//!
+//! [`Scanner`] is the single line-level reader both import paths share:
+//! it parses rows through the format adapter, tolerates reordering up
+//! to the configured window via a small `(timestamp, line)`-ordered
+//! heap, and rejects anything older with the offending line number.
+//! Because the heap pops the minimum `(timestamp, line)` key and a
+//! record may only be released once nothing earlier can still arrive
+//! (every unread record is `≥ max_seen − window`, and ties land on
+//! later lines), the emission order equals a global stable sort by
+//! timestamp — which is exactly what the materialized path produces.
+//! One scanner, two consumers, bit-identical replays.
+//!
+//! [`StreamedTrace`] is the scenario-facing handle: a pre-scan pass
+//! ([`StreamedTrace::open`]) validates the whole file and collects the
+//! metadata a scenario needs up front (span, request count, per-request
+//! class table, class mix); [`StreamedTrace::arrivals_at`] then re-reads
+//! the file lazily as a time-warped [`Request`] iterator the cursor
+//! engine ([`crate::sim::run_source_faulted`]) consumes directly. Peak
+//! memory is the reorder-window buffer plus the engine's active set —
+//! never the log length.
+
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
+use std::fmt;
+use std::fs::File;
+use std::io::{BufRead, BufReader};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::{compact_classes, import_trace, lineage_for, RawRecord, TraceFormat};
+use crate::workload::replay::{ReplayClass, ReplayTrace};
+use crate::workload::Request;
+
+/// One record held in the reorder buffer, ordered by `(t, line)` — the
+/// same stable tie-break the materialized sort applies.
+struct Buffered {
+    t: f64,
+    line: u64,
+    rec: RawRecord,
+}
+
+impl Ord for Buffered {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.t.total_cmp(&other.t).then(self.line.cmp(&other.line))
+    }
+}
+impl PartialOrd for Buffered {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl PartialEq for Buffered {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for Buffered {}
+
+/// Line-level trace reader shared by the materialized and streaming
+/// import paths: header check, per-row parsing, and the bounded reorder
+/// window. Emits records in global `(timestamp, line)` order or fails
+/// with a line-numbered error.
+pub(crate) struct Scanner<R: BufRead> {
+    lines: std::io::Lines<R>,
+    format: TraceFormat,
+    window: f64,
+    src: String,
+    lineno: u64,
+    header_done: bool,
+    /// Newest timestamp read so far; records older than
+    /// `max_seen - window` are rejected, so everything still unread is
+    /// provably no earlier than any record the buffer releases.
+    max_seen: f64,
+    buf: BinaryHeap<Reverse<Buffered>>,
+    eof: bool,
+    peak_buffered: usize,
+}
+
+impl<R: BufRead> Scanner<R> {
+    pub(crate) fn new(reader: R, format: TraceFormat, window: f64, src: String) -> Scanner<R> {
+        Scanner {
+            lines: reader.lines(),
+            format,
+            window,
+            src,
+            lineno: 0,
+            header_done: false,
+            max_seen: f64::NEG_INFINITY,
+            buf: BinaryHeap::new(),
+            eof: false,
+            peak_buffered: 0,
+        }
+    }
+
+    /// High-water mark of the reorder buffer — the streaming path's
+    /// whole memory footprint beyond the engine's active set.
+    pub(crate) fn peak_buffered(&self) -> usize {
+        self.peak_buffered
+    }
+
+    /// The next record in emission order, `Ok(None)` at end of input.
+    pub(crate) fn next_emit(&mut self) -> Result<Option<RawRecord>> {
+        loop {
+            // Release the buffer's minimum once no unread record can
+            // precede it (or unconditionally after EOF).
+            if let Some(Reverse(top)) = self.buf.peek() {
+                if self.eof || top.t <= self.max_seen - self.window {
+                    let Reverse(b) = self.buf.pop().expect("peeked non-empty heap");
+                    return Ok(Some(b.rec));
+                }
+            } else if self.eof {
+                return Ok(None);
+            }
+            match self.lines.next() {
+                None => self.eof = true,
+                Some(line) => {
+                    let line = line.with_context(|| format!("read {}", self.src))?;
+                    self.lineno += 1;
+                    let n = self.lineno as usize;
+                    let line = line.strip_suffix('\r').unwrap_or(&line);
+                    if !self.header_done {
+                        self.format.check_header(line, &self.src)?;
+                        self.header_done = true;
+                        continue;
+                    }
+                    if line.trim().is_empty() {
+                        bail!("{}:{n}: blank line (one record per line)", self.src);
+                    }
+                    let rec = self.format.parse_row(line, &self.src, n)?;
+                    if rec.t < self.max_seen - self.window {
+                        bail!(
+                            "{}:{n}: timestamp {} is {:.3}s behind the newest seen \
+                             ({}) — beyond the {}s reorder window; sort the trace \
+                             or raise the window",
+                            self.src,
+                            rec.t,
+                            self.max_seen - rec.t,
+                            self.max_seen,
+                            self.window
+                        );
+                    }
+                    if rec.t > self.max_seen {
+                        self.max_seen = rec.t;
+                    }
+                    self.buf.push(Reverse(Buffered { t: rec.t, line: self.lineno, rec }));
+                    self.peak_buffered = self.peak_buffered.max(self.buf.len());
+                }
+            }
+        }
+    }
+}
+
+fn open_reader(path: &Path) -> Result<BufReader<File>> {
+    Ok(BufReader::new(
+        File::open(path).with_context(|| format!("open trace {}", path.display()))?,
+    ))
+}
+
+fn file_label(path: &Path) -> String {
+    path.file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_else(|| path.display().to_string())
+}
+
+/// A validated external trace consumed lazily from disk: all the
+/// metadata of a [`ReplayTrace`] (span, rate, classes, per-request class
+/// attribution) without the record vector. Cheap to clone — the heavy
+/// part is the shared class table, one byte per request.
+#[derive(Clone)]
+pub struct StreamedTrace {
+    path: PathBuf,
+    format: TraceFormat,
+    window: f64,
+    /// Display label (file name), like [`ReplayTrace::source`].
+    source: String,
+    /// Full provenance ([`lineage_for`]), like [`ReplayTrace::lineage`].
+    lineage: String,
+    /// Compacted class table (unused format classes dropped).
+    classes: Vec<ReplayClass>,
+    /// Compacted class index per request, in emission order — the
+    /// `class_of` side table (ids are the emission index).
+    class_table: Arc<Vec<u8>>,
+    /// First (minimum) timestamp; arrivals are rebased against it.
+    t0: f64,
+    /// Recorded span, seconds.
+    duration: f64,
+    /// Scoring warm-up prefix, seconds (native time).
+    warmup: f64,
+}
+
+impl fmt::Debug for StreamedTrace {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("StreamedTrace")
+            .field("source", &self.source)
+            .field("format", &self.format.label())
+            .field("requests", &self.len())
+            .field("classes", &self.classes.len())
+            .field("duration_s", &self.duration)
+            .field("native_rate", &self.native_rate())
+            .finish()
+    }
+}
+
+impl StreamedTrace {
+    /// Pre-scan `path` once: validate every line (strict, line-numbered
+    /// errors — a corrupt row must fail at open, not hours into a
+    /// replay), and collect span + class metadata. The record stream
+    /// itself is not retained; [`StreamedTrace::arrivals_at`] re-reads
+    /// the file on demand.
+    pub fn open(path: &Path, format: TraceFormat, window: f64) -> Result<StreamedTrace> {
+        if !window.is_finite() || window < 0.0 {
+            bail!("reorder window must be non-negative and finite, got {window}");
+        }
+        let label = file_label(path);
+        let mut scan = Scanner::new(open_reader(path)?, format, window, label.clone());
+        let n_format_classes = format.classes().len();
+        assert!(n_format_classes <= u8::MAX as usize + 1);
+        let mut t0 = f64::NAN;
+        let mut last = f64::NAN;
+        let mut table: Vec<u8> = Vec::new();
+        while let Some(rec) = scan.next_emit()? {
+            if table.is_empty() {
+                t0 = rec.t;
+            }
+            last = rec.t;
+            table.push(rec.class as u8);
+        }
+        if table.is_empty() {
+            bail!("{label}: empty trace — no records to replay");
+        }
+        let duration = last - t0;
+        if duration <= 0.0 {
+            bail!("{label}: trace spans zero seconds — need at least two distinct timestamps");
+        }
+        let mut used = vec![false; n_format_classes];
+        for &c in &table {
+            used[c as usize] = true;
+        }
+        let (classes, remap) = compact_classes(format.classes(), &used);
+        for c in table.iter_mut() {
+            *c = remap[*c as usize] as u8;
+        }
+        let lineage = lineage_for(format, &label, table.len());
+        let warmup = (duration / 8.0).min(30.0); // assemble()'s rule
+        Ok(StreamedTrace {
+            path: path.to_path_buf(),
+            format,
+            window,
+            source: label,
+            lineage,
+            classes,
+            class_table: Arc::new(table),
+            t0,
+            duration,
+            warmup,
+        })
+    }
+
+    // ---- accessors (mirroring ReplayTrace) ------------------------------
+
+    pub fn len(&self) -> usize {
+        self.class_table.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.class_table.is_empty()
+    }
+
+    pub fn classes(&self) -> &[ReplayClass] {
+        &self.classes
+    }
+
+    pub fn duration(&self) -> f64 {
+        self.duration
+    }
+
+    pub fn warmup(&self) -> f64 {
+        self.warmup
+    }
+
+    pub fn source(&self) -> &str {
+        &self.source
+    }
+
+    /// Full provenance string (format, file, request count).
+    pub fn lineage(&self) -> &str {
+        &self.lineage
+    }
+
+    pub fn format(&self) -> TraceFormat {
+        self.format
+    }
+
+    pub fn window(&self) -> f64 {
+        self.window
+    }
+
+    /// Time-averaged offered rate of the recorded log, req/s.
+    pub fn native_rate(&self) -> f64 {
+        self.class_table.len() as f64 / self.duration
+    }
+
+    /// Class of replayed request `id` (ids are the emission index).
+    pub fn class_of(&self, id: u64) -> usize {
+        self.class_table[id as usize] as usize
+    }
+
+    /// Requests per class, whole log.
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.classes.len().max(1)];
+        for &c in self.class_table.iter() {
+            counts[c as usize] += 1;
+        }
+        counts
+    }
+
+    /// Lazy time-warped replay: the streaming equivalent of
+    /// [`ReplayTrace::requests_at`], identical float-for-float (same
+    /// rebase, same warp expression, same horizon clip, same ids), but
+    /// reading the file as the engine consumes it. Fails only on I/O —
+    /// the pre-scan already validated content.
+    pub fn arrivals_at(&self, rate: f64, horizon: f64) -> Result<StreamedArrivals> {
+        let scan =
+            Scanner::new(open_reader(&self.path)?, self.format, self.window, self.source.clone());
+        // Same degenerate-rate clamp as ReplayTrace::requests_at.
+        let warp = self.native_rate() / rate.max(1e-9);
+        Ok(StreamedArrivals { scan, t0: self.t0, warp, horizon, next_id: 0, done: false })
+    }
+
+    /// Materialize through [`import_trace`] — by construction the exact
+    /// trace the one-shot path builds, for differential tests and small
+    /// logs.
+    pub fn materialize(&self) -> Result<ReplayTrace> {
+        import_trace(&self.path, self.format, self.window)
+    }
+}
+
+/// Bounded-memory [`Request`] iterator over a [`StreamedTrace`]: feed it
+/// to [`crate::sim::run_source_faulted`] via `&mut` so
+/// [`StreamedArrivals::peak_buffered`] stays readable after the run.
+/// Mid-iteration errors panic: the pre-scan validated the file, so they
+/// mean it changed (or vanished) between open and replay, and silently
+/// truncating the workload would corrupt the measurement.
+pub struct StreamedArrivals {
+    scan: Scanner<BufReader<File>>,
+    t0: f64,
+    warp: f64,
+    horizon: f64,
+    next_id: u64,
+    done: bool,
+}
+
+impl StreamedArrivals {
+    /// High-water mark of the reorder buffer during this replay.
+    pub fn peak_buffered(&self) -> usize {
+        self.scan.peak_buffered()
+    }
+}
+
+impl Iterator for StreamedArrivals {
+    type Item = Request;
+
+    fn next(&mut self) -> Option<Request> {
+        if self.done {
+            return None;
+        }
+        let rec = match self.scan.next_emit() {
+            Ok(Some(rec)) => rec,
+            Ok(None) => {
+                self.done = true;
+                return None;
+            }
+            Err(e) => panic!("streamed replay failed mid-run (trace changed since open?): {e:#}"),
+        };
+        let arrival = (rec.t - self.t0) * self.warp;
+        if arrival > self.horizon {
+            // Sorted emission: every later record is beyond the horizon
+            // too, so stop reading the file entirely.
+            self.done = true;
+            return None;
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        Some(Request { id, arrival, input_len: rec.input_len, output_len: rec.output_len })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_temp(name: &str, text: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("ecoserve-import-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name);
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(text.as_bytes()).unwrap();
+        path
+    }
+
+    fn burst_text(n: usize) -> String {
+        let mut s = String::from(
+            "Timestamp,Model,Request tokens,Response tokens,Total tokens,Log Type",
+        );
+        for i in 0..n {
+            let class = if i % 3 == 0 { "API log" } else { "Conversation log" };
+            s.push_str(&format!(
+                "\n{},ChatGPT,{},{},{},{class}",
+                i / 2, // two requests per second
+                100 + i,
+                10 + i % 7,
+                110 + i + i % 7,
+            ));
+        }
+        s
+    }
+
+    #[test]
+    fn streamed_open_collects_the_same_metadata_as_materialize() {
+        let path = write_temp("meta.csv", &burst_text(40));
+        let st = StreamedTrace::open(&path, TraceFormat::BurstGpt, 5.0).unwrap();
+        let mat = st.materialize().unwrap();
+        assert_eq!(st.len(), mat.len());
+        assert_eq!(st.duration().to_bits(), mat.duration().to_bits());
+        assert_eq!(st.warmup().to_bits(), mat.warmup().to_bits());
+        assert_eq!(st.native_rate().to_bits(), mat.native_rate().to_bits());
+        assert_eq!(st.source(), mat.source());
+        assert_eq!(Some(st.lineage()), mat.lineage());
+        assert_eq!(st.classes().len(), mat.classes().len());
+        assert_eq!(st.class_counts(), mat.class_counts());
+        for id in 0..st.len() as u64 {
+            assert_eq!(st.class_of(id), mat.class_of(id));
+        }
+    }
+
+    #[test]
+    fn streamed_arrivals_match_materialized_requests_bit_for_bit() {
+        let path = write_temp("bits.csv", &burst_text(60));
+        let st = StreamedTrace::open(&path, TraceFormat::BurstGpt, 5.0).unwrap();
+        let mat = st.materialize().unwrap();
+        for rate in [st.native_rate(), 3.0, 11.5] {
+            let horizon = st.duration() * st.native_rate() / rate;
+            let want = mat.requests_at(rate, horizon);
+            let mut arr = st.arrivals_at(rate, horizon).unwrap();
+            let got: Vec<Request> = (&mut arr).collect();
+            assert_eq!(got.len(), want.len(), "rate {rate}");
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.id, w.id);
+                assert_eq!(g.arrival.to_bits(), w.arrival.to_bits());
+                assert_eq!(g.input_len, w.input_len);
+                assert_eq!(g.output_len, w.output_len);
+            }
+            assert!(arr.peak_buffered() >= 1);
+        }
+    }
+
+    #[test]
+    fn peak_buffering_is_bounded_by_the_reorder_window_not_log_length() {
+        // 2 req/s with a 5 s window: at most ~2*5 + ties can ever sit in
+        // the buffer, however long the log runs.
+        let path = write_temp("bound.csv", &burst_text(2000));
+        let st = StreamedTrace::open(&path, TraceFormat::BurstGpt, 5.0).unwrap();
+        let mut arr = st.arrivals_at(st.native_rate(), f64::INFINITY).unwrap();
+        assert_eq!((&mut arr).count(), 2000);
+        let peak = arr.peak_buffered();
+        assert!(peak >= 1 && peak <= 32, "peak {peak} should be window-sized, not 2000");
+    }
+
+    #[test]
+    fn horizon_clip_stops_reading_early() {
+        let path = write_temp("clip.csv", &burst_text(100));
+        let st = StreamedTrace::open(&path, TraceFormat::BurstGpt, 5.0).unwrap();
+        let mut arr = st.arrivals_at(st.native_rate(), 10.0).unwrap();
+        let got: Vec<Request> = (&mut arr).collect();
+        // Arrivals at 0,0,0.5,… ≤ 10 s: i/2 ≤ 10 → i ≤ 21 (i/2 is integer
+        // seconds here: rows 0..=21 land at ≤ 10 s after the rebase).
+        assert!(!got.is_empty() && got.len() < 100);
+        assert!(got.iter().all(|r| r.arrival <= 10.0));
+        // Exhausted iterators stay exhausted.
+        assert_eq!(arr.next(), None);
+    }
+
+    #[test]
+    fn open_rejects_what_the_materialized_path_rejects() {
+        let bad = "Timestamp,Model,Request tokens,Response tokens,Total tokens,Log Type\n\
+                   60,ChatGPT,1,1,2,API log\n\
+                   10,ChatGPT,2,2,4,API log";
+        let path = write_temp("bad.csv", bad);
+        let e = format!(
+            "{:#}",
+            StreamedTrace::open(&path, TraceFormat::BurstGpt, 5.0).unwrap_err()
+        );
+        assert!(e.contains("bad.csv:3") && e.contains("reorder window"), "{e}");
+        let e = format!(
+            "{:#}",
+            StreamedTrace::open(Path::new("/no/such/file.csv"), TraceFormat::Azure, 5.0)
+                .unwrap_err()
+        );
+        assert!(e.contains("file.csv"), "{e}");
+        let e = format!(
+            "{:#}",
+            StreamedTrace::open(&path, TraceFormat::BurstGpt, f64::NAN).unwrap_err()
+        );
+        assert!(e.contains("reorder window"), "{e}");
+    }
+}

@@ -6,10 +6,12 @@
 //! a fitted generator preserves scheduling behaviour (DESIGN.md §2).
 
 pub mod datasets;
+pub mod import;
 pub mod replay;
 pub mod trace;
 
 pub use datasets::{Dataset, LengthModel};
+pub use import::{StreamedArrivals, StreamedTrace, TraceFormat};
 pub use replay::{render_log, ReplayClass, ReplayRecord, ReplayTrace};
 pub use trace::{RampTrace, TraceGenerator};
 

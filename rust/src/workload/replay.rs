@@ -105,6 +105,13 @@ pub struct ReplayTrace {
     warmup: f64,
     /// Short label for reports ("inline", a file name, ...).
     source: String,
+    /// Full provenance string from the log header's `source` field
+    /// (scenario/seed/rate for recorded logs, upstream trace identity for
+    /// imported ones). Distinct from the display label above so a replay
+    /// report can say "replay_mixed.jsonl" while the wire format carries
+    /// the whole lineage; `render` writes this back, so record → import →
+    /// record round-trips preserve it.
+    lineage: Option<String>,
 }
 
 impl fmt::Debug for ReplayTrace {
@@ -124,6 +131,7 @@ struct Header {
     duration: Option<f64>,
     warmup: Option<f64>,
     classes: Option<Vec<ReplayClass>>,
+    lineage: Option<String>,
 }
 
 fn parse_header(j: &Json, src: &str) -> Result<Header> {
@@ -186,7 +194,15 @@ fn parse_header(j: &Json, src: &str) -> Result<Header> {
         }
         None => None,
     };
-    Ok(Header { duration, warmup, classes })
+    let lineage = match j.get("source") {
+        Some(v) => Some(
+            v.as_str()
+                .with_context(|| format!("{src}:1: 'source' must be a string"))?
+                .to_string(),
+        ),
+        None => None,
+    };
+    Ok(Header { duration, warmup, classes, lineage })
 }
 
 /// A record field that must be a non-negative integer.
@@ -279,7 +295,8 @@ impl ReplayTrace {
                 .unwrap_or(std::cmp::Ordering::Equal)
         });
 
-        let header = header.unwrap_or(Header { duration: None, warmup: None, classes: None });
+        let header = header
+            .unwrap_or(Header { duration: None, warmup: None, classes: None, lineage: None });
         let last_arrival = records.last().map(|r| r.arrival).unwrap_or(0.0);
         let duration = header.duration.unwrap_or(last_arrival);
         if duration <= 0.0 {
@@ -310,7 +327,55 @@ impl ReplayTrace {
             duration,
             warmup,
             source: src.to_string(),
+            lineage: header.lineage,
         })
+    }
+
+    /// Build a trace directly from parsed parts — the import adapters'
+    /// materialized path ([`crate::workload::import`]). Invariants mirror
+    /// [`ReplayTrace::parse_named`]: non-empty records and classes, class
+    /// indices in range, positive finite duration, warmup below it, and
+    /// records stable-sorted by arrival (a pre-sorted input is left
+    /// untouched, preserving the caller's tie-break order bit-for-bit).
+    pub fn from_parts(
+        mut records: Vec<ReplayRecord>,
+        classes: Vec<ReplayClass>,
+        duration: f64,
+        warmup: f64,
+        source: String,
+        lineage: Option<String>,
+    ) -> Result<ReplayTrace> {
+        if records.is_empty() {
+            bail!("{source}: empty trace — no records to replay");
+        }
+        if classes.is_empty() {
+            bail!("{source}: class table must not be empty");
+        }
+        if !duration.is_finite() || duration <= 0.0 {
+            bail!("{source}: duration must be positive and finite, got {duration}");
+        }
+        if !warmup.is_finite() || warmup < 0.0 || warmup >= duration {
+            bail!("{source}: warmup {warmup} must sit inside the {duration}s horizon");
+        }
+        for r in &records {
+            if r.class >= classes.len() {
+                bail!(
+                    "{source}: class {} out of range ({} classes declared)",
+                    r.class,
+                    classes.len()
+                );
+            }
+            if !r.arrival.is_finite() || r.arrival < 0.0 || r.arrival > duration {
+                bail!("{source}: arrival {} outside [0, {duration}]", r.arrival);
+            }
+            if r.input_len == 0 || r.output_len == 0 {
+                bail!("{source}: zero-token request at arrival {}", r.arrival);
+            }
+        }
+        if !records.windows(2).all(|w| w[0].arrival <= w[1].arrival) {
+            records.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+        }
+        Ok(ReplayTrace { records, classes, duration, warmup, source, lineage })
     }
 
     /// Parse log text (source label "inline").
@@ -360,6 +425,13 @@ impl ReplayTrace {
 
     pub fn source(&self) -> &str {
         &self.source
+    }
+
+    /// Full provenance from the log header's `source` field, when the
+    /// header declared one (recorded logs stamp scenario/seed/rate here;
+    /// imported traces stamp the upstream format and file).
+    pub fn lineage(&self) -> Option<&str> {
+        self.lineage.as_deref()
     }
 
     /// Time-averaged offered rate of the recorded log, req/s.
@@ -448,6 +520,7 @@ impl ReplayTrace {
             duration: total,
             warmup: self.warmup,
             source: format!("{} x{repeats}", self.source),
+            lineage: self.lineage.clone(),
         }
     }
 
@@ -463,12 +536,15 @@ impl ReplayTrace {
     }
 
     /// Serialize back to the wire format (header + one record per line).
+    /// The header's `source` field carries the full lineage when one was
+    /// parsed, so round-trips through the wire format never lose
+    /// provenance.
     pub fn render(&self) -> String {
         render_log(
             &self.classes,
             self.duration,
             self.warmup,
-            &self.source,
+            self.lineage.as_deref().unwrap_or(&self.source),
             self.records.iter().cloned(),
         )
     }
@@ -707,6 +783,72 @@ mod tests {
         for (a, b) in back.records().iter().zip(tiled.records()) {
             assert_eq!(a.arrival.to_bits(), b.arrival.to_bits());
         }
+    }
+
+    /// The header `source` field is lineage, not the display label: a log
+    /// loaded under a file-name label keeps reporting that label while the
+    /// full provenance survives every render → parse round-trip.
+    #[test]
+    fn header_source_is_lineage_and_survives_round_trips() {
+        let text = "{\"ecoserve_trace\":1,\"duration_s\":10,\
+                    \"source\":\"scenario 'bursty' seed 7 @ 6 req/s\"}\n\
+                    {\"arrival_s\":0.5,\"input_len\":100,\"output_len\":50}\n";
+        let t = ReplayTrace::parse_named(text, "trace.jsonl").unwrap();
+        assert_eq!(t.source(), "trace.jsonl");
+        assert_eq!(t.lineage(), Some("scenario 'bursty' seed 7 @ 6 req/s"));
+        // Render under a different label: the lineage wins in the header.
+        let back = ReplayTrace::parse_named(&t.render(), "copy.jsonl").unwrap();
+        assert_eq!(back.source(), "copy.jsonl");
+        assert_eq!(back.lineage(), t.lineage());
+        // Tiling keeps the lineage too.
+        assert_eq!(t.tiled(3).lineage(), t.lineage());
+        // Headerless logs have no lineage; render stamps the label.
+        let bare = ReplayTrace::parse_named(
+            "{\"arrival_s\":1.0,\"input_len\":2,\"output_len\":3}",
+            "bare.jsonl",
+        )
+        .unwrap();
+        assert_eq!(bare.lineage(), None);
+        assert!(bare.render().contains("\"source\":\"bare.jsonl\""));
+    }
+
+    #[test]
+    fn from_parts_validates_and_preserves_order() {
+        let classes = vec![ReplayClass { name: "chat", dataset: Dataset::sharegpt() }];
+        let recs = vec![
+            ReplayRecord { arrival: 0.25, input_len: 10, output_len: 5, class: 0 },
+            ReplayRecord { arrival: 0.25, input_len: 20, output_len: 5, class: 0 },
+            ReplayRecord { arrival: 1.5, input_len: 30, output_len: 5, class: 0 },
+        ];
+        let t = ReplayTrace::from_parts(
+            recs.clone(),
+            classes.clone(),
+            4.0,
+            0.5,
+            "parts".into(),
+            Some("upstream.csv".into()),
+        )
+        .unwrap();
+        // Pre-sorted ties keep their order (no re-sort churn).
+        assert_eq!(t.records(), &recs[..]);
+        assert_eq!(t.lineage(), Some("upstream.csv"));
+        assert_eq!(t.source(), "parts");
+        // Invariant violations are loud.
+        let e = |r| {
+            format!(
+                "{:#}",
+                ReplayTrace::from_parts(r, classes.clone(), 4.0, 0.5, "p".into(), None)
+                    .unwrap_err()
+            )
+        };
+        assert!(e(vec![]).contains("empty"));
+        let bad_class =
+            vec![ReplayRecord { arrival: 0.1, input_len: 1, output_len: 1, class: 7 }];
+        assert!(e(bad_class).contains("out of range"));
+        let zero = vec![ReplayRecord { arrival: 0.1, input_len: 0, output_len: 1, class: 0 }];
+        assert!(e(zero).contains("zero-token"));
+        let late = vec![ReplayRecord { arrival: 9.0, input_len: 1, output_len: 1, class: 0 }];
+        assert!(e(late).contains("outside"));
     }
 
     #[test]

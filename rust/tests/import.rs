@@ -1,0 +1,158 @@
+//! Integration tests over the trace zoo's committed fixtures: both
+//! import formats parse from disk with the documented class/SLO mapping
+//! and provenance, the streamed handle mirrors the materialized trace,
+//! an imported log plugs into the scenario machinery end to end, and
+//! re-recording an import preserves its lineage.
+
+use std::path::{Path, PathBuf};
+
+use ecoserve::scenarios::Scenario;
+use ecoserve::workload::import::import_trace;
+use ecoserve::workload::{ReplayTrace, StreamedTrace, TraceFormat};
+
+fn fixture(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name)
+}
+
+#[test]
+fn burstgpt_fixture_imports_with_class_mapping_and_provenance() {
+    let t = import_trace(&fixture("burstgpt_small.csv"), TraceFormat::BurstGpt, 5.0).unwrap();
+    assert_eq!(t.len(), 24);
+    assert_eq!(t.duration(), 60.0);
+    assert_eq!(t.source(), "burstgpt_small.csv");
+    assert_eq!(t.lineage(), Some("burstgpt import of 'burstgpt_small.csv' (24 requests)"));
+    // Log types map to classes with the documented SLO datasets.
+    let names: Vec<&str> = t.classes().iter().map(|c| c.name).collect();
+    assert_eq!(names, vec!["conversation", "api"]);
+    assert_eq!(t.classes()[0].dataset.name, "ShareGPT");
+    assert_eq!(t.classes()[1].dataset.name, "Alpaca-gpt4");
+    assert_eq!(t.class_counts(), vec![16, 8]);
+    // The fixture's deliberate near-miss ordering (4.2 logged after 5.1,
+    // inside the 5 s window) lands sorted in the materialized records.
+    let arrivals: Vec<f64> = t.records().iter().map(|r| r.arrival).collect();
+    for w in arrivals.windows(2) {
+        assert!(w[0] <= w[1], "{arrivals:?}");
+    }
+    assert_eq!(t.records()[2].arrival, 4.2);
+    assert_eq!(t.records()[2].input_len, 60);
+    assert_eq!(t.records()[3].arrival, 5.1);
+    assert_eq!(t.records()[3].class, 1, "the 5.1s row is an API log line");
+}
+
+#[test]
+fn azure_fixture_imports_single_class_with_datetime_timestamps() {
+    let t = import_trace(&fixture("azure_small.csv"), TraceFormat::Azure, 5.0).unwrap();
+    assert_eq!(t.len(), 16);
+    assert!((t.duration() - 45.0).abs() < 1e-6, "{}", t.duration());
+    let names: Vec<&str> = t.classes().iter().map(|c| c.name).collect();
+    assert_eq!(names, vec!["azure-llm"]);
+    assert_eq!(t.classes()[0].dataset.name, "ShareGPT");
+    assert_eq!(t.class_counts(), vec![16]);
+    assert_eq!(t.lineage(), Some("azure import of 'azure_small.csv' (16 requests)"));
+    // 18:13:04.10 was logged after 18:13:05 — inside the window, so it
+    // sorts back into place after rebasing.
+    let arrivals: Vec<f64> = t.records().iter().map(|r| r.arrival).collect();
+    for w in arrivals.windows(2) {
+        assert!(w[0] <= w[1], "{arrivals:?}");
+    }
+    assert!((t.records()[2].arrival - 4.1).abs() < 1e-4, "{}", t.records()[2].arrival);
+    assert_eq!(t.records()[2].input_len, 1002);
+    assert_eq!(t.records()[2].output_len, 14);
+}
+
+#[test]
+fn streamed_fixture_handles_mirror_the_materialized_traces() {
+    for (name, format) in [
+        ("burstgpt_small.csv", TraceFormat::BurstGpt),
+        ("azure_small.csv", TraceFormat::Azure),
+    ] {
+        let st = StreamedTrace::open(&fixture(name), format, 5.0).unwrap();
+        let mat = st.materialize().unwrap();
+        assert_eq!(st.len(), mat.len(), "{name}");
+        assert_eq!(st.duration().to_bits(), mat.duration().to_bits(), "{name}");
+        assert_eq!(st.warmup().to_bits(), mat.warmup().to_bits(), "{name}");
+        assert_eq!(st.native_rate().to_bits(), mat.native_rate().to_bits(), "{name}");
+        assert_eq!(st.source(), mat.source(), "{name}");
+        assert_eq!(Some(st.lineage()), mat.lineage(), "{name}");
+        assert_eq!(st.class_counts(), mat.class_counts(), "{name}");
+        for id in 0..st.len() as u64 {
+            assert_eq!(st.class_of(id), mat.class_of(id), "{name} id {id}");
+        }
+    }
+}
+
+#[test]
+fn imported_stream_becomes_a_replay_scenario() {
+    let st = StreamedTrace::open(&fixture("burstgpt_small.csv"), TraceFormat::BurstGpt, 5.0)
+        .unwrap();
+    let s = Scenario::from_stream(st);
+    assert_eq!(s.name, "replay:burstgpt_small.csv");
+    assert!(s.is_replay());
+    assert!(s.stream().is_some() && s.replay().is_none());
+    assert_eq!(s.classes.len(), 2);
+    assert!((s.classes[0].share - 16.0 / 24.0).abs() < 1e-12);
+    assert!((s.classes[1].share - 8.0 / 24.0).abs() < 1e-12);
+    // The API class's tighter Alpaca TTFT drives the scheduler.
+    assert_eq!(s.scheduler_dataset().name, "Alpaca-gpt4");
+    assert!((s.default_rate - 0.4).abs() < 1e-12);
+    // Native-rate horizon: the recorded span with the /8-capped warmup.
+    assert_eq!(s.horizon_at(s.default_rate), (60.0, 7.5));
+    // build_trace materializes the same arrivals the stream yields —
+    // seeds don't matter, the log is the randomness.
+    let a = s.build_trace(1, s.default_rate);
+    let b = s.build_trace(99, s.default_rate);
+    assert_eq!(a, b);
+    assert_eq!(a.len(), 24);
+    for w in a.windows(2) {
+        assert!(w[0].arrival <= w[1].arrival && w[0].id < w[1].id);
+    }
+}
+
+#[test]
+fn rerecording_an_imported_stream_preserves_its_lineage() {
+    let st = StreamedTrace::open(&fixture("azure_small.csv"), TraceFormat::Azure, 5.0).unwrap();
+    let lineage = st.lineage().to_string();
+    let s = Scenario::from_stream(st);
+    // `ecoserve record` on the imported scenario stamps the import
+    // provenance, not a fresh "scenario ..." line.
+    let log = s.record_log(0, s.default_rate);
+    let header = log.lines().next().unwrap();
+    assert!(header.contains("azure import of 'azure_small.csv' (16 requests)"), "{header}");
+    // record → import → record: the chain never loses where the arrivals
+    // actually came from.
+    let t = ReplayTrace::parse_named(&log, "rerecorded.jsonl").unwrap();
+    assert_eq!(t.lineage(), Some(lineage.as_str()));
+    assert_eq!(t.len(), 16);
+    let s2 = Scenario::from_replay(t);
+    let log2 = s2.record_log(7, s2.default_rate);
+    let t2 = ReplayTrace::parse_named(&log2, "again.jsonl").unwrap();
+    assert_eq!(t2.lineage(), Some(lineage.as_str()));
+}
+
+#[test]
+fn corrupt_files_fail_with_file_and_line() {
+    let dir = std::env::temp_dir().join("ecoserve-import-integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("truncated.csv");
+    std::fs::write(
+        &path,
+        "Timestamp,Model,Request tokens,Response tokens,Total tokens,Log Type\n\
+         1.0,ChatGPT,100,50,150,Conversation log\n\
+         2.0,ChatGPT,oops,50,150,Conversation log\n",
+    )
+    .unwrap();
+    // Both consumption paths reject the same row with the same location.
+    let e = format!("{:#}", import_trace(&path, TraceFormat::BurstGpt, 5.0).unwrap_err());
+    assert!(e.contains("truncated.csv:3"), "{e}");
+    let e = format!(
+        "{:#}",
+        StreamedTrace::open(&path, TraceFormat::BurstGpt, 5.0).unwrap_err()
+    );
+    assert!(e.contains("truncated.csv:3"), "{e}");
+    // A format mismatch fails on line 1, before any rows are consumed.
+    let e = format!(
+        "{:#}",
+        import_trace(&fixture("burstgpt_small.csv"), TraceFormat::Azure, 5.0).unwrap_err()
+    );
+    assert!(e.contains("burstgpt_small.csv:1"), "{e}");
+}

@@ -11,7 +11,7 @@ use std::time::Duration;
 use ecoserve::config::SystemKind;
 use ecoserve::perfmodel::ModelSpec;
 use ecoserve::planner::{
-    enumerate_candidates, plan_to_json, run_plan_on, Candidate, CostModel, PlanConfig,
+    enumerate_candidates, plan_to_json, run_plan_on, Candidate, CostModel, PlanConfig, PriceTier,
 };
 use ecoserve::scenarios::by_name;
 use ecoserve::util::json::Json;
@@ -190,6 +190,82 @@ fn pruned_configs_never_beat_the_winner_when_simulated() {
     // no more expensive, and its measured goodput covers the ceiling the
     // prune was justified by.
     assert!(dom.goodput_rps >= pruned.candidate.roofline_ub - 1e-9);
+}
+
+/// The spot tier prices both sides of its trade. A single-instance spot
+/// box is the cheapest $/hr in the list — the GPU discount is real — but
+/// its probes run under the spot reclaim churn (the lone instance is
+/// preempted for 25s inside the measured window, with nowhere to reroute,
+/// so ~1/4 of window arrivals blow the 5s TTFT SLO at any rate), and an
+/// on-demand cell keeps the goodput-per-dollar crown.
+#[test]
+fn cheapest_spot_config_loses_the_crown_once_preemption_is_priced() {
+    let mut cfg = PlanConfig::quick(by_name("steady").unwrap(), ModelSpec::llama_30b());
+    cfg.duration_override = Some(60.0);
+    let cost = CostModel::default();
+    let deployment = |gpus: usize| {
+        let mut d = ecoserve::config::Deployment::paper_default(
+            ModelSpec::llama_30b(),
+            ecoserve::config::ClusterSpec::l20_cluster(),
+        );
+        d.gpus_used = gpus;
+        d
+    };
+    let candidates = vec![
+        Candidate::with_tier(
+            SystemKind::EcoServe,
+            deployment(4),
+            &cost,
+            &cfg.scenario,
+            PriceTier::Spot,
+        ),
+        Candidate::new(SystemKind::EcoServe, deployment(4), &cost, &cfg.scenario),
+        Candidate::new(SystemKind::EcoServe, deployment(8), &cost, &cfg.scenario),
+    ];
+    let spot_total = candidates[0].price.total;
+    assert!(
+        candidates.iter().skip(1).all(|c| c.price.total > spot_total),
+        "the spot twin must be the on-paper-cheapest config"
+    );
+    let outcome = run_plan_on(&cfg, candidates);
+    assert_eq!(outcome.cells.len(), 3);
+    assert!(outcome.cells.iter().all(|c| !c.pruned()), "one wave: nothing pruned");
+    // Price-sorted, so the spot twin leads the table.
+    let spot = &outcome.cells[0];
+    assert_eq!(spot.candidate.tier, PriceTier::Spot);
+    // The discount is real: same hardware, strictly smaller bill than its
+    // on-demand twin.
+    let od_twin = outcome
+        .cells
+        .iter()
+        .find(|c| c.candidate.tier == PriceTier::OnDemand && c.candidate.deployment.gpus_used == 4)
+        .expect("the on-demand twin is in the plan");
+    assert!(spot.candidate.price.total < od_twin.candidate.price.total);
+    assert_eq!(spot.candidate.roofline_ub, od_twin.candidate.roofline_ub);
+    // But once the reclaim churn is priced into the measurement, the
+    // crown goes to an on-demand cell.
+    let winner = &outcome.cells[outcome.best_value.expect("a measured winner exists")];
+    assert_eq!(
+        winner.candidate.tier,
+        PriceTier::OnDemand,
+        "spot won goodput-per-dollar despite churn: spot value {} vs cells {:?}",
+        spot.value(),
+        outcome
+            .cells
+            .iter()
+            .map(|c| (c.candidate.tier.label(), c.candidate.shape(), c.value()))
+            .collect::<Vec<_>>()
+    );
+    assert!(spot.value() < winner.value());
+
+    // The tier is stamped into BENCH_plan.json per candidate.
+    let wire = plan_to_json(&outcome, &cfg, Duration::from_secs(1)).to_string();
+    let parsed = Json::parse(&wire).expect("BENCH_plan must be valid JSON");
+    let cands = parsed.get("candidates").unwrap().as_arr().unwrap();
+    assert_eq!(cands[0].get("price_tier").unwrap().as_str(), Some("spot"));
+    assert!(cands[1..]
+        .iter()
+        .all(|c| c.get("price_tier").unwrap().as_str() == Some("on-demand")));
 }
 
 /// More budget never yields lower best goodput: a zero per-cell budget

@@ -1,0 +1,257 @@
+//! Production-scale streaming replay: the trace zoo's acceptance gates.
+//!
+//! * A million-request multi-day log replays through the streaming path
+//!   with buffering bounded by the reorder window, never the log length.
+//! * The streamed and materialized import paths produce bit-identical
+//!   per-request records and scores for all five systems on the
+//!   committed fixtures.
+//! * A streamed multi-day diurnal log drives the mitosis autoscaler up
+//!   at the day peaks and back down through the night troughs.
+//! * The goodput frontier consumes a streamed scenario and stamps the
+//!   full import provenance into its BENCH JSON.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use ecoserve::config::{ExperimentConfig, SystemKind};
+use ecoserve::frontier::{frontier_to_json, run_frontier, FrontierConfig};
+use ecoserve::harness::build_system;
+use ecoserve::metrics::{Attainment, Collector};
+use ecoserve::scenarios::{run_system_variant, RunSpec, Scenario, ScenarioConfig};
+use ecoserve::sim::{run_abandonable, run_source_faulted};
+use ecoserve::util::json::Json;
+use ecoserve::workload::{StreamedTrace, TraceFormat};
+
+fn fixture(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name)
+}
+
+fn temp_path(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("ecoserve-stream-tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+const BURSTGPT_HEADER: &str =
+    "Timestamp,Model,Request tokens,Response tokens,Total tokens,Log Type";
+
+/// The headline scale gate: a 10^6-request log spanning ~2 days streams
+/// end to end while the reorder buffer stays window-sized. Materializing
+/// this log would hold a million `Request`s; the streaming path may only
+/// ever hold the records inside the reorder window.
+#[test]
+fn million_request_multiday_log_replays_with_window_bounded_buffering() {
+    const MILLION: usize = 1_000_000;
+    const CHUNK: usize = 8; // written locally reversed to exercise the window
+    const DT: f64 = 0.1728; // 10^6 arrivals span just under 48 hours
+
+    let path = temp_path("multiday_million.csv");
+    {
+        let f = std::fs::File::create(&path).unwrap();
+        let mut w = std::io::BufWriter::new(f);
+        writeln!(w, "{BURSTGPT_HEADER}").unwrap();
+        for chunk in 0..(MILLION / CHUNK) {
+            for j in (0..CHUNK).rev() {
+                let i = chunk * CHUNK + j;
+                let (inp, out) = (60 + i % 37, 8 + i % 11);
+                let kind = if i % 3 == 0 { "API log" } else { "Conversation log" };
+                writeln!(w, "{:.4},ChatGPT,{inp},{out},{},{kind}", i as f64 * DT, inp + out)
+                    .unwrap();
+            }
+        }
+        w.flush().unwrap();
+    }
+
+    let st = StreamedTrace::open(&path, TraceFormat::BurstGpt, 5.0).unwrap();
+    assert_eq!(st.len(), MILLION);
+    assert!(st.duration() > 170_000.0, "spans {}s, wanted ~2 days", st.duration());
+    assert_eq!(st.classes().len(), 2);
+
+    // Drain the exact iterator the engine consumes, at native rate over
+    // the full span.
+    let mut arr = st.arrivals_at(st.native_rate(), st.duration()).unwrap();
+    let mut n = 0usize;
+    let mut last = f64::NEG_INFINITY;
+    for req in &mut arr {
+        assert!(req.arrival >= last, "request {} left the stream out of order", req.id);
+        last = req.arrival;
+        n += 1;
+    }
+    assert_eq!(n, MILLION, "every record must replay");
+    let peak = arr.peak_buffered();
+    // ~window x rate + one reversed chunk; a leaky implementation that
+    // buffers the log shows up as 10^6 here.
+    assert!(
+        peak >= CHUNK && peak <= 64,
+        "peak buffered {peak}: must track the reorder window, not the {MILLION}-record log"
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+/// Streamed vs materialized, full stack: identical scores for all five
+/// systems on the committed fixture, at the native rate and under a 4x
+/// time-warp compression.
+#[test]
+fn streamed_and_materialized_replay_score_identically_for_every_system() {
+    let st = StreamedTrace::open(&fixture("burstgpt_small.csv"), TraceFormat::BurstGpt, 5.0)
+        .unwrap();
+    let mat_scenario = Scenario::from_replay(st.materialize().unwrap());
+    let str_scenario = Scenario::from_stream(st);
+
+    for rate in [None, Some(1.6)] {
+        let mut cfg = ScenarioConfig::default_l20();
+        cfg.deployment.gpus_used = 16;
+        cfg.rate = rate;
+        for kind in SystemKind::all() {
+            let spec = RunSpec::new(kind);
+            let a = run_system_variant(&mat_scenario, &cfg, &spec);
+            let b = run_system_variant(&str_scenario, &cfg, &spec);
+            let tag = format!("{kind:?} at rate {rate:?}");
+            assert_eq!(a.arrived, b.arrived, "{tag}: arrived");
+            assert_eq!(a.completed, b.completed, "{tag}: completed");
+            assert_eq!(a.met, b.met, "{tag}: met");
+            assert_eq!(a.attainment.to_bits(), b.attainment.to_bits(), "{tag}: attainment");
+            assert_eq!(a.goodput_rps.to_bits(), b.goodput_rps.to_bits(), "{tag}: goodput");
+            assert_eq!(a.events, b.events, "{tag}: events");
+            assert_eq!(a.events_saved, b.events_saved, "{tag}: events_saved");
+            assert_eq!(a.abandoned, b.abandoned, "{tag}: abandoned");
+            assert_eq!(a.classes.len(), b.classes.len(), "{tag}: class count");
+            for (ca, cb) in a.classes.iter().zip(&b.classes) {
+                assert_eq!(ca.class, cb.class, "{tag}");
+                assert_eq!(ca.arrived, cb.arrived, "{tag}: class '{}' arrived", ca.class);
+                assert_eq!(ca.met, cb.met, "{tag}: class '{}' met", ca.class);
+                assert_eq!(
+                    ca.attainment.to_bits(),
+                    cb.attainment.to_bits(),
+                    "{tag}: class '{}' attainment",
+                    ca.class
+                );
+            }
+        }
+    }
+}
+
+/// Streamed vs materialized, engine level: the per-request completion
+/// records — ids, lengths, first-token and completion times — are equal
+/// float-for-float for every system on the Azure fixture.
+#[test]
+fn streamed_and_materialized_replay_produce_identical_request_records() {
+    let st = StreamedTrace::open(&fixture("azure_small.csv"), TraceFormat::Azure, 5.0).unwrap();
+    let scenario = Scenario::from_stream(st.clone());
+    let mat = st.materialize().unwrap();
+    let rate = scenario.default_rate;
+    let (duration, warmup) = scenario.horizon_at(rate);
+    let horizon = duration + 240.0;
+
+    let mut cfg = ScenarioConfig::default_l20();
+    cfg.deployment.gpus_used = 16;
+    for kind in SystemKind::all() {
+        let mut exp = ExperimentConfig::new(cfg.deployment.clone(), scenario.scheduler_dataset());
+        exp.seed = cfg.seed;
+        exp.duration = duration;
+        exp.warmup = warmup;
+
+        let mut sys_a = build_system(kind, &exp, None);
+        let mut m_a = Collector::new();
+        run_abandonable(sys_a.as_mut(), mat.requests_at(rate, duration), horizon, &mut m_a, false);
+
+        let mut sys_b = build_system(kind, &exp, None);
+        let mut m_b = Collector::new();
+        let mut arr = st.arrivals_at(rate, duration).unwrap();
+        run_source_faulted(sys_b.as_mut(), &mut arr, &[], horizon, &mut m_b, false);
+
+        assert_eq!(
+            m_a.completed().len(),
+            m_b.completed().len(),
+            "{kind:?}: completion counts diverged"
+        );
+        for (ra, rb) in m_a.completed().iter().zip(m_b.completed()) {
+            assert_eq!(ra, rb, "{kind:?}: per-request record diverged");
+        }
+        assert!(!m_b.completed().is_empty(), "{kind:?}: nothing completed");
+    }
+}
+
+/// A streamed two-day diurnal log (arrival gaps modulated 0.1x..2.0x
+/// around the mean) replayed compressed with mitosis on: the day peaks
+/// force scale-ups past the N_l start and the night troughs idle the
+/// fleet back down.
+#[test]
+fn streamed_multiday_diurnal_log_drives_mitosis_up_and_down() {
+    let path = temp_path("diurnal_2day.csv");
+    {
+        let f = std::fs::File::create(&path).unwrap();
+        let mut w = std::io::BufWriter::new(f);
+        writeln!(w, "{BURSTGPT_HEADER}").unwrap();
+        let day = 86_400.0;
+        let mut t = 0.0f64;
+        let mut i = 0usize;
+        while t < 2.0 * day {
+            // Rate multiplier swings 0.1..2.0 over each day (trough at
+            // the day boundaries, peak at midday), mean ~1.05.
+            let mult = 1.05 - 0.95 * (2.0 * std::f64::consts::PI * t / day).cos();
+            let (inp, out) = (80 + i % 61, 10 + i % 17);
+            writeln!(w, "{t:.3},ChatGPT,{inp},{out},{},Conversation log", inp + out).unwrap();
+            t += 120.0 / mult; // ~1 request per 2 minutes at the mean
+            i += 1;
+        }
+        w.flush().unwrap();
+    }
+
+    let st = StreamedTrace::open(&path, TraceFormat::BurstGpt, 5.0).unwrap();
+    assert!(st.len() > 1000, "generated only {} requests", st.len());
+    let scenario = Scenario::from_stream(st);
+
+    let mut cfg = ScenarioConfig::default_l20();
+    cfg.deployment.gpus_used = 16; // 4 instances at TP=4; mitosis starts below that
+    cfg.rate = Some(2.5); // compress ~2 days into ~10 min of sim time
+    let row = run_system_variant(
+        &scenario,
+        &cfg,
+        &RunSpec::new(SystemKind::EcoServe).autoscaled(),
+    );
+    assert!(row.arrived > 1000, "scored window saw only {} arrivals", row.arrived);
+    let auto = row.autoscale.expect("autoscaled run reports telemetry");
+    assert!(auto.scale_ups >= 1, "day peaks never scaled up: {auto:?}");
+    assert!(auto.scale_downs >= 1, "night troughs never scaled down: {auto:?}");
+    assert!(
+        auto.peak_active >= 3 && auto.peak_active <= 4,
+        "peak active outside [3, 4]: {auto:?}"
+    );
+    assert!(auto.final_active >= 1, "{auto:?}");
+    std::fs::remove_file(&path).ok();
+}
+
+/// The frontier consumes a streamed scenario like any other and its
+/// BENCH JSON carries the import provenance: source, format, lineage,
+/// and the streamed flag.
+#[test]
+fn frontier_on_streamed_import_reports_full_provenance() {
+    let st = StreamedTrace::open(&fixture("burstgpt_small.csv"), TraceFormat::BurstGpt, 5.0)
+        .unwrap();
+    let scenario = Scenario::from_stream(st);
+    let mut base = ScenarioConfig::default_l20();
+    base.deployment.gpus_used = 16;
+    let mut cfg = FrontierConfig::new(base, Attainment::P90);
+    cfg.quick = true;
+    let fronts = run_frontier(&[scenario], &cfg, &[SystemKind::EcoServe], 2);
+    assert_eq!(fronts.len(), 1);
+    assert_eq!(fronts[0].rows.len(), 1);
+    assert!(fronts[0].rows[0].probes >= 2);
+
+    let wire = frontier_to_json(&fronts, &cfg, Duration::from_secs(1)).to_string();
+    let parsed = Json::parse(&wire).expect("valid BENCH JSON");
+    let sc = parsed.get("scenarios").unwrap().idx(0).unwrap();
+    assert_eq!(sc.get("name").unwrap().as_str(), Some("replay:burstgpt_small.csv"));
+    let replay = sc.get("replay").expect("replay provenance block");
+    assert_eq!(replay.get("source").unwrap().as_str(), Some("burstgpt_small.csv"));
+    assert_eq!(replay.get("streamed").unwrap().as_bool(), Some(true));
+    assert_eq!(replay.get("format").unwrap().as_str(), Some("burstgpt"));
+    assert_eq!(
+        replay.get("lineage").unwrap().as_str(),
+        Some("burstgpt import of 'burstgpt_small.csv' (24 requests)")
+    );
+    assert_eq!(replay.get("requests").unwrap().as_f64(), Some(24.0));
+    assert_eq!(replay.get("recorded_duration_s").unwrap().as_f64(), Some(60.0));
+}
