@@ -11,9 +11,13 @@
 //! fleet (DynaServe arXiv:2504.09285 motivates putting elastic
 //! configurations on the same frontier as static ones).
 
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
-use super::search::{rate_search, Probe, SearchOutcome, SearchParams, SearchPoint};
+use super::search::{
+    rate_search, rate_search_speculative, Probe, SearchOutcome, SearchParams,
+    SearchPoint, SPECULATION_WIDTH,
+};
 use crate::config::SystemKind;
 use crate::coordinator::AutoScalePolicy;
 use crate::metrics::{AbandonPolicy, Attainment};
@@ -42,6 +46,12 @@ pub struct FrontierConfig {
     /// A truncated cell reports its confirmed-so-far max rate and is
     /// flagged in `BENCH_simperf.json` (`budget_truncated`).
     pub budget_s: Option<f64>,
+    /// Launch the rate search's predictable next probes concurrently
+    /// (default; `--no-speculate` turns it off). Answers are
+    /// bit-identical either way — speculation only trades extra
+    /// (discarded) probe work for wall-clock; the executed-probe count
+    /// in `BENCH_simperf.json` is the only observable difference.
+    pub speculate: bool,
 }
 
 /// Horizon used by `--quick` when the caller gave no explicit override.
@@ -56,6 +66,7 @@ impl FrontierConfig {
             quick: false,
             early_abandon: true,
             budget_s: None,
+            speculate: true,
         }
     }
 
@@ -92,7 +103,10 @@ impl FrontierConfig {
 /// differ between early-abandon on and off.
 #[derive(Debug, Clone, Default)]
 pub struct CellPerf {
-    /// Rate probes run for this cell.
+    /// Rate probes *executed* for this cell. Equal to the cell's
+    /// consumed-probe count with speculation off; with speculation on it
+    /// also counts mispredicted (discarded) lookahead probes, so it can
+    /// exceed `FrontierCell::probes`.
     pub probes: usize,
     /// Events simulated across all probes.
     pub events: u64,
@@ -103,6 +117,12 @@ pub struct CellPerf {
     pub events_saved: u64,
     /// Probes the SLO monitor cut short.
     pub abandoned_probes: usize,
+    /// Heap allocations inside probe run loops, summed
+    /// ([`crate::sim::RunStats::allocs`]). The engine's own structures
+    /// are pooled and allocation-free when warm; what remains — and what
+    /// this trajectory exists to drive down — is allocation by the
+    /// simulated systems' handlers.
+    pub allocs: u64,
     /// Simulation wall time summed over probes (excludes search overhead).
     pub sim_wall: Duration,
 }
@@ -209,28 +229,42 @@ pub fn run_cell(
 ) -> FrontierCell {
     let params = cfg.search_params(scenario);
     let base = cfg.probe_base();
-    let mut perf = CellPerf::default();
+    // Speculative lookahead runs probes concurrently, so the cost
+    // counters accumulate through a mutex. Every update is a commutative
+    // sum over a deterministic probe set, so the totals stay
+    // deterministic even though completion order is not.
+    let perf = Mutex::new(CellPerf::default());
     let t0 = Instant::now();
-    let outcome = rate_search(&params, |rate| {
+    let probe_fn = |rate: f64| {
         let mut probe_cfg = base.clone();
         probe_cfg.rate = Some(rate);
         let spec = cell_spec(scenario, &probe_cfg, cfg, kind, autoscale);
         let row = run_system_variant(scenario, &probe_cfg, &spec);
-        perf.probes += 1;
-        perf.events += row.events;
-        perf.sim_wall += row.wall;
-        if row.abandoned {
-            perf.abandoned_probes += 1;
-            perf.abandoned_events += row.events;
-            perf.events_saved += row.events_saved;
+        {
+            let mut p = perf.lock().unwrap();
+            p.probes += 1;
+            p.events += row.events;
+            p.allocs += row.allocs;
+            p.sim_wall += row.wall;
+            if row.abandoned {
+                p.abandoned_probes += 1;
+                p.abandoned_events += row.events;
+                p.events_saved += row.events_saved;
+            }
         }
         Probe {
             attainment: row.min_class_attainment(),
             goodput_rps: row.goodput_rps,
             result: row,
         }
-    });
+    };
+    let outcome = if cfg.speculate {
+        rate_search_speculative(&params, probe_fn, SPECULATION_WIDTH)
+    } else {
+        rate_search(&params, probe_fn)
+    };
     let wall = t0.elapsed();
+    let perf = perf.into_inner().unwrap();
     let SearchOutcome { max_rate, best, curve, probes, saturated, truncated } = outcome;
     let (goodput_rps, attainment, classes) = match best {
         Some(row) => (row.goodput_rps, row.min_class_attainment(), row.classes),
@@ -323,9 +357,11 @@ mod tests {
     #[test]
     fn cell_perf_counters_track_abandoned_probes() {
         let s = by_name("steady").unwrap();
-        let cfg = quick_frontier_cfg();
+        let mut cfg = quick_frontier_cfg();
+        cfg.speculate = false;
         assert!(cfg.early_abandon, "abandonment is the default");
         let cell = run_cell(&s, &cfg, SystemKind::EcoServe, false);
+        // Speculation off: executed probes == consumed probes, exactly.
         assert_eq!(cell.perf.probes, cell.probes);
         assert!(cell.perf.events > 0);
         assert!(cell.perf.abandoned_probes > 0, "{:?}", cell.perf);
@@ -333,6 +369,32 @@ mod tests {
         assert!(cell.perf.abandoned_events > 0);
         assert!(cell.perf.events_saved > 0, "{:?}", cell.perf);
         assert!(cell.perf.abandoned_events <= cell.perf.events);
+    }
+
+    /// Speculation is on by default and must change cost counters only:
+    /// same answer (rate, curve, classes), possibly more *executed*
+    /// probes than the serial search *consumed*.
+    #[test]
+    fn speculative_cell_matches_serial_cell_bit_for_bit() {
+        let s = by_name("steady").unwrap();
+        let spec_cfg = quick_frontier_cfg();
+        assert!(spec_cfg.speculate, "speculation is the default");
+        let mut serial_cfg = quick_frontier_cfg();
+        serial_cfg.speculate = false;
+        let spec = run_cell(&s, &spec_cfg, SystemKind::EcoServe, false);
+        let serial = run_cell(&s, &serial_cfg, SystemKind::EcoServe, false);
+        assert_eq!(spec.max_rate.to_bits(), serial.max_rate.to_bits());
+        assert_eq!(spec.goodput_rps.to_bits(), serial.goodput_rps.to_bits());
+        assert_eq!(spec.attainment.to_bits(), serial.attainment.to_bits());
+        assert_eq!(spec.probes, serial.probes, "consumed probes must match");
+        assert_eq!(spec.curve.len(), serial.curve.len());
+        for (a, b) in spec.curve.iter().zip(&serial.curve) {
+            assert_eq!(a.rate.to_bits(), b.rate.to_bits());
+            assert_eq!(a.attainment.to_bits(), b.attainment.to_bits());
+            assert_eq!(a.goodput_rps.to_bits(), b.goodput_rps.to_bits());
+        }
+        assert!(spec.perf.probes >= spec.probes, "{:?}", spec.perf);
+        assert!(spec.perf.probes >= serial.perf.probes);
     }
 
     /// `--budget-s 0`: the mandatory first probe still runs, the cell is

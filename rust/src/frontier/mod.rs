@@ -40,4 +40,7 @@ pub use driver::{
     cell_spec, run_cell, run_frontier, CellPerf, FrontierCell, FrontierConfig, ScenarioFrontier,
 };
 pub use report::{frontier_to_json, render_frontier_table, simperf_to_json};
-pub use search::{rate_search, Probe, SearchOutcome, SearchParams, SearchPoint};
+pub use search::{
+    rate_search, rate_search_speculative, Probe, SearchOutcome, SearchParams,
+    SearchPoint, SPECULATION_WIDTH,
+};

@@ -93,6 +93,7 @@ fn perf_fields(p: &CellPerf) -> Vec<(&'static str, Json)> {
         ("abandoned_probes", Json::num(p.abandoned_probes as f64)),
         ("abandoned_events", Json::num(p.abandoned_events as f64)),
         ("events_saved", Json::num(p.events_saved as f64)),
+        ("allocs", Json::num(p.allocs as f64)),
         ("sim_wall_s", Json::num(secs)),
         (
             "events_per_sec",
@@ -122,6 +123,7 @@ pub fn simperf_to_json(
             totals.abandoned_probes += p.abandoned_probes;
             totals.abandoned_events += p.abandoned_events;
             totals.events_saved += p.events_saved;
+            totals.allocs += p.allocs;
             totals.sim_wall += p.sim_wall;
             let mut fields = vec![
                 ("scenario", Json::str(f.scenario.name)),
@@ -141,6 +143,7 @@ pub fn simperf_to_json(
         ("quick", Json::Bool(cfg.quick)),
         ("seed", Json::num(cfg.base.seed as f64)),
         ("early_abandon", Json::Bool(cfg.early_abandon)),
+        ("speculate", Json::Bool(cfg.speculate)),
         ("budget_s", Json::opt_num(cfg.budget_s)),
         ("deployment", deployment_to_json(&cfg.base.deployment)),
         ("wall_s", Json::num(wall.as_secs_f64())),
@@ -234,6 +237,7 @@ mod tests {
                 abandoned_events: 1000,
                 events_saved: 4000,
                 abandoned_probes: 1,
+                allocs: 500,
                 sim_wall: Duration::from_millis(1200),
             },
         };
@@ -305,6 +309,7 @@ mod tests {
         );
         assert_eq!(back.get("level").unwrap().as_str(), Some("P90"));
         assert_eq!(back.get("early_abandon").unwrap().as_bool(), Some(true));
+        assert_eq!(back.get("speculate").unwrap().as_bool(), Some(true));
         assert_eq!(back.get("budget_s"), Some(&Json::Null), "no budget set");
         assert!(back.path(&["deployment", "instances"]).is_some());
         // Totals aggregate the three synthetic cells.
@@ -317,13 +322,17 @@ mod tests {
             back.path(&["totals", "events_saved"]).unwrap().as_i64(),
             Some(12_000)
         );
+        assert_eq!(
+            back.path(&["totals", "allocs"]).unwrap().as_i64(),
+            Some(1_500)
+        );
         let cells = back.get("cells").unwrap().as_arr().unwrap();
         assert_eq!(cells.len(), 3);
         for cell in cells {
             for key in [
                 "scenario", "system", "variant", "max_rate_rps", "budget_truncated",
                 "probes", "events", "abandoned_probes", "abandoned_events",
-                "events_saved", "sim_wall_s", "events_per_sec",
+                "events_saved", "allocs", "sim_wall_s", "events_per_sec",
             ] {
                 assert!(cell.get(key).is_some(), "missing {key}");
             }

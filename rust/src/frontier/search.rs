@@ -210,6 +210,205 @@ pub fn rate_search<R>(
     finish(lo, lo_probe.map(|p| p.result), curve, false, truncated)
 }
 
+/// How many probes a speculative search launches per batch: the rate the
+/// serial search asked for plus up to two lookahead candidates.
+pub const SPECULATION_WIDTH: usize = 3;
+
+/// [`rate_search`] with speculative probe execution: identical control
+/// flow (it *wraps* the serial search — there is still exactly one
+/// rate-search implementation), but each time the search asks for an
+/// unseen rate, the next 1–2 candidate rates it could ask for — known in
+/// advance because bracket/crumb/bisection steps are predictable from
+/// the probe verdicts so far — are launched concurrently on the
+/// [`crate::util::threads::parallel_map`] pool and cached. When the
+/// serial search then asks for one of them, the cached result is
+/// consumed instead of re-probing; mispredicted candidates are simply
+/// discarded.
+///
+/// The outcome is **bit-identical to the serial search by construction**
+/// (same `max_rate`, same curve, same flags; locked by tests here and by
+/// `tests/speculative_equivalence.rs`): the serial search never sees the
+/// speculation, it just gets its deterministic probe results faster. The
+/// only caveat is `params.budget_s` — wall-clock truncation points
+/// depend on timing in both modes, so exact equivalence is only
+/// guaranteed for budget-free searches. Requires a deterministic,
+/// thread-safe probe; `workers <= 1` degenerates to the serial search.
+pub fn rate_search_speculative<R: Send>(
+    params: &SearchParams,
+    probe: impl Fn(f64) -> Probe<R> + Sync,
+    workers: usize,
+) -> SearchOutcome<R> {
+    use std::collections::HashMap;
+
+    if workers <= 1 {
+        return rate_search(params, &probe);
+    }
+    // Keyed by bit pattern: speculated rates must match the serial
+    // search's future requests *exactly*, not within an epsilon.
+    let mut cache: HashMap<u64, Probe<R>> = HashMap::new();
+    let mut shadow = Shadow::new(params);
+    rate_search(params, |rate| {
+        let p = match cache.remove(&rate.to_bits()) {
+            Some(hit) => hit,
+            None => {
+                let mut batch = vec![rate];
+                for c in shadow.lookahead(rate).into_iter().flatten() {
+                    if batch.len() >= workers {
+                        break;
+                    }
+                    if c.is_finite()
+                        && c > 0.0
+                        && !cache.contains_key(&c.to_bits())
+                        && !batch.contains(&c)
+                    {
+                        batch.push(c);
+                    }
+                }
+                if batch.len() == 1 {
+                    probe(rate)
+                } else {
+                    let rates = batch.clone();
+                    let mut results =
+                        crate::util::threads::parallel_map(batch, workers, &probe);
+                    let wanted = results.remove(0);
+                    for (r, speculated) in rates[1..].iter().zip(results) {
+                        cache.insert(r.to_bits(), speculated);
+                    }
+                    wanted
+                }
+            }
+        };
+        shadow.observe(rate, p.attainment);
+        p
+    })
+}
+
+/// Which step of [`rate_search`] the [`Shadow`] believes is next.
+enum ShadowPhase {
+    Bracket,
+    Crumb,
+    Bisect,
+    Done,
+}
+
+/// A shadow of [`rate_search`]'s control flow, advanced probe by probe,
+/// so [`rate_search_speculative`] can guess the serial search's next
+/// rate(s) before the current probe's verdict is known. Pure lookahead:
+/// a wrong guess wastes one discarded probe and can never change the
+/// search outcome, so this does not need to model budget truncation or
+/// degenerate-interval exits — only the rate arithmetic, which mirrors
+/// the serial implementation line for line.
+struct Shadow {
+    target: f64,
+    floor: f64,
+    ceiling: f64,
+    max_doublings: usize,
+    bisections_left: usize,
+    lo: f64,
+    hi: f64,
+    guard: usize,
+    phase: ShadowPhase,
+}
+
+impl Shadow {
+    fn new(params: &SearchParams) -> Shadow {
+        Shadow {
+            target: params.target,
+            floor: params.floor,
+            ceiling: params.ceiling,
+            max_doublings: params.max_doublings,
+            bisections_left: params.bisections,
+            lo: 0.0,
+            hi: params.start.max(params.floor).min(params.ceiling),
+            guard: 0,
+            phase: ShadowPhase::Bracket,
+        }
+    }
+
+    /// Rates the serial search may ask for right after probing `rate`,
+    /// best guess first (at most 2; [`rate_search_speculative`] caps the
+    /// batch at its worker count).
+    fn lookahead(&self, rate: f64) -> [Option<f64>; 2] {
+        match self.phase {
+            ShadowPhase::Bracket => {
+                // Sustained → the bracket doubles (unless capped)…
+                let up = if rate < self.ceiling && self.guard < self.max_doublings {
+                    Some((rate * 2.0).min(self.ceiling))
+                } else {
+                    None
+                };
+                // …failed → the crumb probe, or the first bisection mid.
+                let down = if self.lo == 0.0 && self.floor < rate {
+                    Some(self.floor)
+                } else if self.bisections_left > 0 {
+                    Some(0.5 * (self.lo + rate))
+                } else {
+                    None
+                };
+                [up, down]
+            }
+            ShadowPhase::Crumb => {
+                // Crumb sustained → bisect [floor, hi]; failed → [0, hi].
+                if self.bisections_left > 0 {
+                    [Some(0.5 * (self.floor + self.hi)), Some(0.5 * self.hi)]
+                } else {
+                    [None, None]
+                }
+            }
+            ShadowPhase::Bisect => {
+                // `rate` is the current mid: the next mid is the midpoint
+                // of whichever half-interval the verdict selects.
+                if self.bisections_left > 1 {
+                    [Some(0.5 * (rate + self.hi)), Some(0.5 * (self.lo + rate))]
+                } else {
+                    [None, None]
+                }
+            }
+            ShadowPhase::Done => [None, None],
+        }
+    }
+
+    /// Advance the shadow past a probe the serial search consumed.
+    fn observe(&mut self, rate: f64, attainment: f64) {
+        let meets = attainment >= self.target - 1e-12;
+        match self.phase {
+            ShadowPhase::Bracket => {
+                if meets {
+                    if rate >= self.ceiling || self.guard >= self.max_doublings {
+                        self.phase = ShadowPhase::Done;
+                    } else {
+                        self.lo = rate;
+                        self.hi = (rate * 2.0).min(self.ceiling);
+                        self.guard += 1;
+                    }
+                } else {
+                    self.hi = rate;
+                    if self.lo == 0.0 && self.floor < rate {
+                        self.phase = ShadowPhase::Crumb;
+                    } else {
+                        self.phase = ShadowPhase::Bisect;
+                    }
+                }
+            }
+            ShadowPhase::Crumb => {
+                if meets {
+                    self.lo = self.floor;
+                }
+                self.phase = ShadowPhase::Bisect;
+            }
+            ShadowPhase::Bisect => {
+                if meets {
+                    self.lo = rate;
+                } else {
+                    self.hi = rate;
+                }
+                self.bisections_left = self.bisections_left.saturating_sub(1);
+            }
+            ShadowPhase::Done => {}
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -361,5 +560,101 @@ mod tests {
         let loose = rate_search(&SearchParams::paper_default(0.50), probe);
         assert!(strict.max_rate < loose.max_rate);
         assert!(strict.max_rate <= 0.1 + 1e-9 || strict.max_rate < 1.0);
+    }
+
+    fn assert_outcomes_bit_identical(a: &SearchOutcome<f64>, b: &SearchOutcome<f64>) {
+        assert_eq!(a.max_rate.to_bits(), b.max_rate.to_bits());
+        assert_eq!(a.best.map(f64::to_bits), b.best.map(f64::to_bits));
+        assert_eq!(a.probes, b.probes);
+        assert_eq!(a.saturated, b.saturated);
+        assert_eq!(a.truncated, b.truncated);
+        assert_eq!(a.curve.len(), b.curve.len());
+        for (pa, pb) in a.curve.iter().zip(&b.curve) {
+            assert_eq!(pa.rate.to_bits(), pb.rate.to_bits());
+            assert_eq!(pa.attainment.to_bits(), pb.attainment.to_bits());
+            assert_eq!(pa.goodput_rps.to_bits(), pb.goodput_rps.to_bits());
+        }
+    }
+
+    /// Speculation must be invisible in the outcome: same max rate, same
+    /// curve, same flags, same *consumed* probe count — across cliffs
+    /// that exercise every phase (hopeless/crumb/normal/saturated).
+    #[test]
+    fn speculative_search_is_bit_identical_to_serial() {
+        for cap in [0.0, 0.05, 0.2, 7.3, 100.0, 1e9] {
+            let params = SearchParams::paper_default(0.9);
+            let probe = move |rate: f64| Probe {
+                result: rate,
+                attainment: if rate <= cap { 1.0 } else { 0.0 },
+                goodput_rps: rate.min(cap),
+            };
+            let serial = rate_search(&params, probe);
+            let spec = rate_search_speculative(&params, probe, SPECULATION_WIDTH);
+            assert_outcomes_bit_identical(&serial, &spec);
+        }
+    }
+
+    /// Same, for a gradual (non-cliff) attainment slope and a target
+    /// landing mid-slope — bisection verdicts flip both ways.
+    #[test]
+    fn speculative_search_matches_serial_on_gradual_slopes() {
+        for target in [0.5, 0.9, 0.99] {
+            let params = SearchParams::paper_default(target);
+            let probe = |rate: f64| Probe {
+                result: rate,
+                attainment: (1.0 - rate / 10.0).max(0.0),
+                goodput_rps: rate,
+            };
+            let serial = rate_search(&params, probe);
+            let spec = rate_search_speculative(&params, probe, SPECULATION_WIDTH);
+            assert_outcomes_bit_identical(&serial, &spec);
+        }
+    }
+
+    /// The lookahead must actually hit: the speculative search executes
+    /// more probes than it consumes (losers are discarded), but far
+    /// fewer batches than consumed probes — i.e. the cache serves real
+    /// requests, this isn't serial execution with extra steps.
+    #[test]
+    fn speculation_serves_probes_from_the_cache() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let params = SearchParams::paper_default(0.9);
+        let executed = AtomicUsize::new(0);
+        let probe = |rate: f64| {
+            executed.fetch_add(1, Ordering::Relaxed);
+            Probe {
+                result: rate,
+                attainment: if rate <= 7.3 { 1.0 } else { 0.0 },
+                goodput_rps: rate.min(7.3),
+            }
+        };
+        let out = rate_search_speculative(&params, &probe, SPECULATION_WIDTH);
+        let executed = executed.load(Ordering::Relaxed);
+        let serial = rate_search(&params, &probe);
+        assert_eq!(out.probes, serial.probes, "consumed probes must match serial");
+        // Every serial probe ran (directly or speculatively), plus some
+        // discarded losers — but a correct predictor converts most steps
+        // into cache hits, so executed probes stay well under the
+        // no-cache worst case of one full batch per consumed probe.
+        assert!(executed >= out.probes, "{executed} < {}", out.probes);
+        assert!(
+            executed < out.probes * SPECULATION_WIDTH,
+            "{executed} executed for {} consumed: cache never hit",
+            out.probes
+        );
+    }
+
+    /// `workers <= 1` must degenerate to the serial search exactly.
+    #[test]
+    fn single_worker_speculation_is_serial() {
+        let params = SearchParams::paper_default(0.9).quick();
+        let probe = |rate: f64| Probe {
+            result: rate,
+            attainment: if rate <= 3.7 { 1.0 } else { 0.0 },
+            goodput_rps: rate.min(3.7),
+        };
+        let serial = rate_search(&params, probe);
+        let spec = rate_search_speculative(&params, probe, 1);
+        assert_outcomes_bit_identical(&serial, &spec);
     }
 }

@@ -107,18 +107,18 @@ pub fn run_probe(
         .filter(|r| r.arrival >= window.0 && r.arrival < window.1)
         .count();
     let mut system = build_system(kind, cfg, fudg_prefill);
-    let mut metrics = match abandon {
-        Some(policy) => {
-            let mut monitor = SloMonitor::new(policy.target, 1);
-            for req in &trace {
-                if req.arrival >= window.0 && req.arrival < window.1 {
-                    monitor.track(req.id, req.arrival, slo, 0, req.output_len);
-                }
+    let monitor = abandon.map(|policy| {
+        let mut monitor = SloMonitor::new(policy.target, 1);
+        for req in &trace {
+            if req.arrival >= window.0 && req.arrival < window.1 {
+                monitor.track(req.id, req.arrival, slo, 0, req.output_len);
             }
-            Collector::with_monitor(monitor)
         }
-        None => Collector::new(),
-    };
+        monitor
+    });
+    // Pooled: rate searches fire many probes per worker thread, and the
+    // collector's maps/vecs are the largest per-probe allocations.
+    let mut metrics = Collector::pooled(monitor);
     let horizon = cfg.duration + DRAIN_SECS;
     let stop_early = abandon.is_some_and(|p| p.stop_early);
     let stats = run_abandonable(system.as_mut(), trace, horizon, &mut metrics, stop_early);
@@ -127,7 +127,7 @@ pub fn run_probe(
         .filter(|r| r.meets(&slo))
         .count();
     let attainment = if arrived == 0 { 1.0 } else { met as f64 / arrived as f64 };
-    RunResult {
+    let result = RunResult {
         summary: summarize_from(
             metrics.window_records(window.0, window.1),
             &slo,
@@ -140,7 +140,9 @@ pub fn run_probe(
         events_saved: stats.events_saved,
         abandoned: stats.stop == StopReason::Abandoned,
         wall: stats.wall_time,
-    }
+    };
+    metrics.release();
+    result
 }
 
 /// Pick the best FuDG prefill:decode split at a calibration rate — the

@@ -34,6 +34,13 @@
 // `clippy -- -D warnings` (both feature edges; see .github/workflows).
 #![allow(clippy::style, clippy::complexity, clippy::perf)]
 
+/// Count heap allocations per thread so the simulator's zero-alloc
+/// hot-loop contract is measurable (see [`util::alloc`] and
+/// [`sim::RunStats::allocs`]): one global allocator for the library,
+/// the CLI, and every integration test.
+#[global_allocator]
+static GLOBAL_ALLOC: util::alloc::CountingAlloc = util::alloc::CountingAlloc;
+
 pub mod baselines;
 pub mod config;
 pub mod coordinator;

@@ -469,6 +469,11 @@ fn cmd_frontier(args: &Args) -> Result<()> {
     // flag only changes simulator cost, and exists for exactly that
     // comparison).
     cfg.early_abandon = !args.has("no-abandon");
+    // Bisection probes speculate ahead on the worker pool by default;
+    // --no-speculate probes one rate at a time (answers are bit-identical
+    // either way — the flag exists to measure the speedup and to debug
+    // with a single-threaded probe stream).
+    cfg.speculate = !args.has("no-speculate");
     // Per-cell wall-clock cap: truncated cells report their confirmed
     // rate and are flagged in BENCH_simperf.json.
     cfg.budget_s = args.f64_flag("budget-s").map_err(Error::msg)?;

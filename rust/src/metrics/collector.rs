@@ -15,20 +15,110 @@ use super::monitor::SloMonitor;
 use super::{RequestRecord, SloSpec};
 use crate::workload::Request;
 
-/// In-flight bookkeeping for one request.
-#[derive(Debug, Clone)]
-struct Open {
-    arrival: f64,
-    input_len: usize,
-    first_token: Option<f64>,
-    last_token: f64,
-    tokens: usize,
+/// In-flight bookkeeping, struct-of-arrays: one *slot* per open request,
+/// its fields split across parallel columns, with freed slots recycled
+/// through a free list. Two properties matter on the engine hot path:
+/// * columns and the id index retain capacity across [`clear`], so a
+///   recycled collector's per-request bookkeeping allocates nothing once
+///   the columns have grown to a run's steady-state open-request count;
+/// * slot values stay readable after [`remove`] detaches the id (until
+///   the slot is reused), which lets completion read its columns without
+///   copying the whole row out first.
+///
+/// [`clear`]: OpenTable::clear
+/// [`remove`]: OpenTable::remove
+#[derive(Debug, Default)]
+struct OpenTable {
+    /// Request id → slot.
+    index: HashMap<u64, u32>,
+    /// Slots freed by [`OpenTable::remove`], ready for reuse.
+    free: Vec<u32>,
+    arrival: Vec<f64>,
+    input_len: Vec<usize>,
+    first_token: Vec<f64>,
+    /// Whether `first_token[slot]` has been recorded (split from the
+    /// value column: an `Option<f64>` per slot would defeat the flat
+    /// f64 column layout).
+    has_first: Vec<bool>,
+    last_token: Vec<f64>,
+    tokens: Vec<usize>,
+}
+
+impl OpenTable {
+    /// Open a slot for `id` (no-op if `id` is already open).
+    fn insert(&mut self, id: u64, arrival: f64, input_len: usize) {
+        use std::collections::hash_map::Entry;
+        let slot = match self.index.entry(id) {
+            Entry::Occupied(_) => return,
+            Entry::Vacant(v) => {
+                let slot = match self.free.pop() {
+                    Some(s) => s,
+                    None => {
+                        let s = self.arrival.len() as u32;
+                        self.arrival.push(0.0);
+                        self.input_len.push(0);
+                        self.first_token.push(0.0);
+                        self.has_first.push(false);
+                        self.last_token.push(0.0);
+                        self.tokens.push(0);
+                        s
+                    }
+                };
+                *v.insert(slot)
+            }
+        };
+        let i = slot as usize;
+        self.arrival[i] = arrival;
+        self.input_len[i] = input_len;
+        self.first_token[i] = 0.0;
+        self.has_first[i] = false;
+        self.last_token[i] = arrival;
+        self.tokens[i] = 0;
+    }
+
+    /// The slot currently holding `id`, if open.
+    fn slot(&self, id: u64) -> Option<usize> {
+        self.index.get(&id).map(|&s| s as usize)
+    }
+
+    /// Close `id`'s slot and queue it for reuse. The returned slot's
+    /// columns remain readable until the next [`OpenTable::insert`].
+    fn remove(&mut self, id: u64) -> Option<usize> {
+        let slot = self.index.remove(&id)?;
+        self.free.push(slot);
+        Some(slot as usize)
+    }
+
+    fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    /// Drop all state, keeping every column's capacity.
+    fn clear(&mut self) {
+        self.index.clear();
+        self.free.clear();
+        self.arrival.clear();
+        self.input_len.clear();
+        self.first_token.clear();
+        self.has_first.clear();
+        self.last_token.clear();
+        self.tokens.clear();
+    }
+}
+
+thread_local! {
+    /// One spare collector per thread, mirroring the engine's scheduler
+    /// pool: probe searches build a collector per run, and reusing the
+    /// previous run's grown columns/log is what keeps warm runs
+    /// allocation-free. `Cell`, not `RefCell`: take/put can't panic.
+    static SPARE: std::cell::Cell<Option<Collector>> =
+        const { std::cell::Cell::new(None) };
 }
 
 /// Collects token events and produces completed [`RequestRecord`]s.
 #[derive(Debug, Default)]
 pub struct Collector {
-    open: HashMap<u64, Open>,
+    open: OpenTable,
     done: Vec<RequestRecord>,
     /// Count of requests rejected at admission (capacity overflow).
     pub rejected: usize,
@@ -49,6 +139,38 @@ impl Collector {
     /// online and the scoring snapshot latched at decision time.
     pub fn with_monitor(monitor: SloMonitor) -> Self {
         Collector { monitor: Some(monitor), ..Default::default() }
+    }
+
+    /// Reset for reuse, retaining every buffer's capacity (the id index,
+    /// the slot columns, and the completed-record log). Observable state
+    /// is indistinguishable from a fresh [`Collector::new`] /
+    /// [`Collector::with_monitor`] — only capacity survives, which is
+    /// what makes every run after the first allocation-free in the
+    /// engine's hot loop (see [`crate::sim::RunStats::allocs`]).
+    pub fn recycle(&mut self, monitor: Option<SloMonitor>) {
+        self.open.clear();
+        self.done.clear();
+        self.rejected = 0;
+        self.monitor = monitor;
+        self.decision_cut = None;
+        self.clock = 0.0;
+    }
+
+    /// A recycled collector from this thread's spare slot (fresh if the
+    /// slot is empty): behaviorally identical to
+    /// `monitor.map_or_else(Collector::new, Collector::with_monitor)`,
+    /// but capacity-warm. Pair with [`Collector::release`] when the
+    /// probe is scored so the next run on this thread reuses it.
+    pub fn pooled(monitor: Option<SloMonitor>) -> Collector {
+        let mut c = SPARE.with(std::cell::Cell::take).unwrap_or_default();
+        c.recycle(monitor);
+        c
+    }
+
+    /// Park this collector in the thread's spare slot for reuse by the
+    /// next [`Collector::pooled`] call.
+    pub fn release(self) {
+        SPARE.with(|s| s.set(Some(self)));
     }
 
     fn latch_decision(&mut self) {
@@ -79,22 +201,17 @@ impl Collector {
 
     /// Register arrival (idempotent per id).
     pub fn on_arrival(&mut self, req: &Request) {
-        self.open.entry(req.id).or_insert(Open {
-            arrival: req.arrival,
-            input_len: req.input_len,
-            first_token: None,
-            last_token: req.arrival,
-            tokens: 0,
-        });
+        self.open.insert(req.id, req.arrival, req.input_len);
     }
 
     /// Record the first output token (end of prefill).
     pub fn on_first_token(&mut self, id: u64, now: f64) {
-        if let Some(o) = self.open.get_mut(&id) {
-            debug_assert!(o.first_token.is_none(), "duplicate first token for {id}");
-            o.first_token = Some(now);
-            o.last_token = now;
-            o.tokens = 1;
+        if let Some(i) = self.open.slot(id) {
+            debug_assert!(!self.open.has_first[i], "duplicate first token for {id}");
+            self.open.first_token[i] = now;
+            self.open.has_first[i] = true;
+            self.open.last_token[i] = now;
+            self.open.tokens[i] = 1;
         }
         if let Some(m) = self.monitor.as_mut() {
             m.on_first_token(id, now);
@@ -104,23 +221,25 @@ impl Collector {
 
     /// Record a subsequent decode token.
     pub fn on_token(&mut self, id: u64, now: f64) {
-        if let Some(o) = self.open.get_mut(&id) {
-            o.last_token = now;
-            o.tokens += 1;
+        if let Some(i) = self.open.slot(id) {
+            self.open.last_token[i] = now;
+            self.open.tokens[i] += 1;
         }
     }
 
     /// Finish a request; moves it to the completed set.
     pub fn on_complete(&mut self, id: u64, now: f64) {
-        if let Some(o) = self.open.remove(&id) {
-            let first = o.first_token.unwrap_or(now);
+        if let Some(i) = self.open.remove(id) {
+            // The freed slot's columns stay valid until its next reuse.
+            let first =
+                if self.open.has_first[i] { self.open.first_token[i] } else { now };
             let rec = RequestRecord {
                 id,
-                arrival: o.arrival,
+                arrival: self.open.arrival[i],
                 first_token: first,
                 completion: now.max(first),
-                input_len: o.input_len,
-                output_len: o.tokens.max(1),
+                input_len: self.open.input_len[i],
+                output_len: self.open.tokens[i].max(1),
             };
             if let Some(m) = self.monitor.as_mut() {
                 m.on_complete(&rec, now);
@@ -133,10 +252,10 @@ impl Collector {
     /// Request rejected at admission — tracked separately so overloaded
     /// systems can't improve their attainment by shedding load invisibly.
     pub fn on_reject(&mut self, id: u64) {
-        if let Some(o) = self.open.remove(&id) {
+        if let Some(i) = self.open.remove(id) {
             // Rejections happen while dispatching an event, so the engine
             // clock (never behind the arrival) is the rejection time.
-            let now = self.clock.max(o.arrival);
+            let now = self.clock.max(self.open.arrival[i]);
             if let Some(m) = self.monitor.as_mut() {
                 m.on_reject(id, now);
             }
@@ -298,6 +417,86 @@ mod tests {
         assert_eq!(c.scoring_cut(), 0, "post-decision completions excluded");
         assert_eq!(c.window_records(0.0, 10.0).count(), 0);
         assert_eq!(c.monitor().unwrap().violations(), 2);
+    }
+
+    #[test]
+    fn double_arrival_is_idempotent() {
+        let mut c = Collector::new();
+        c.on_arrival(&req(1, 0.0));
+        c.on_first_token(1, 0.2);
+        // A duplicate arrival (different payload) must not reset the slot.
+        c.on_arrival(&Request { id: 1, arrival: 5.0, input_len: 99, output_len: 1 });
+        c.on_complete(1, 0.5);
+        let r = &c.completed()[0];
+        assert_eq!(r.arrival, 0.0);
+        assert_eq!(r.input_len, 10);
+        assert!((r.first_token - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slot_reuse_does_not_leak_state_between_requests() {
+        let mut c = Collector::new();
+        c.on_arrival(&req(1, 0.0));
+        c.on_first_token(1, 0.4);
+        for i in 1..4 {
+            c.on_token(1, 0.4 + i as f64 * 0.05);
+        }
+        c.on_complete(1, 0.6);
+        // id 2 reuses id 1's freed slot: it must start with no first
+        // token and zero decode tokens, not id 1's leftovers.
+        c.on_arrival(&req(2, 1.0));
+        c.on_complete(2, 1.5); // completed without ever emitting a token
+        let r2 = &c.completed()[1];
+        assert_eq!(r2.id, 2);
+        assert_eq!(r2.arrival, 1.0);
+        assert_eq!(r2.first_token, 1.5, "first_token must fall back to `now`");
+        assert_eq!(r2.output_len, 1, "tokens.max(1), not the old slot's count");
+    }
+
+    #[test]
+    fn recycle_resets_state_and_reruns_identically() {
+        let run = |c: &mut Collector| {
+            c.on_arrival(&req(1, 0.0));
+            c.on_first_token(1, 0.4);
+            c.on_token(1, 0.45);
+            c.on_complete(1, 0.6);
+            c.on_arrival(&req(2, 0.1));
+            c.on_reject(2);
+            c.completed().to_vec()
+        };
+        let mut c = Collector::new();
+        let first = run(&mut c);
+        assert_eq!(c.rejected, 1);
+        c.recycle(None);
+        assert_eq!(c.in_flight(), 0);
+        assert_eq!(c.rejected, 0);
+        assert!(c.completed().is_empty());
+        assert!(!c.decided());
+        let second = run(&mut c);
+        assert_eq!(first, second, "a recycled collector must replay identically");
+    }
+
+    #[test]
+    fn pooled_collector_round_trips_through_the_spare_slot() {
+        let mut c = Collector::pooled(None);
+        c.on_arrival(&req(1, 0.0));
+        c.on_first_token(1, 0.1);
+        c.on_complete(1, 0.2);
+        assert_eq!(c.completed().len(), 1);
+        c.release();
+        // The next pooled() on this thread reuses it, fully reset.
+        let c2 = Collector::pooled(None);
+        assert!(c2.completed().is_empty());
+        assert_eq!(c2.in_flight(), 0);
+        assert_eq!(c2.rejected, 0);
+        c2.release();
+        // Arming a monitor through pooled() behaves like with_monitor.
+        let mut m = SloMonitor::new(0.9, 1);
+        m.track(1, 0.0, SloSpec::new(1.0, 0.1), 0, 5);
+        let mut c3 = Collector::pooled(Some(m));
+        c3.on_arrival(&req(1, 0.0));
+        c3.observe_time(5.0); // TTFT deadline blown → verdict decided
+        assert!(c3.decided());
     }
 
     #[test]

@@ -143,6 +143,10 @@ pub struct SystemRow {
     /// True when the run was cut short because the attainment target
     /// became mathematically unreachable for some traffic class.
     pub abandoned: bool,
+    /// Heap allocations on the simulation thread during the run (engine
+    /// structures are pooled, so warm reruns spend these only in the
+    /// simulated systems' own handlers).
+    pub allocs: u64,
     /// Simulation wall time for this run.
     pub wall: Duration,
     /// Present on mitosis-on (autoscaled) runs only.
@@ -270,10 +274,9 @@ pub fn run_system_variant(
     exp.duration = duration;
     exp.warmup = warmup;
 
-    let mut metrics = match monitor {
-        Some(m) => Collector::with_monitor(m),
-        None => Collector::new(),
-    };
+    // Pooled: suite runs execute many cells per worker thread, and the
+    // collector's maps/vecs are the largest per-run allocations.
+    let mut metrics = Collector::pooled(monitor);
     let stop_early = spec.abandon.is_some_and(|p| p.stop_early);
     // Expanding the schedule against the deployment happens once per run;
     // `None` keeps the run on the exact fault-free code path (the engine's
@@ -391,7 +394,7 @@ pub fn run_system_variant(
         })
         .collect();
 
-    SystemRow {
+    let row = SystemRow {
         system: kind,
         arrived,
         completed,
@@ -403,10 +406,13 @@ pub fn run_system_variant(
         events: stats.events,
         events_saved: stats.events_saved,
         abandoned: stats.stop == StopReason::Abandoned,
+        allocs: stats.allocs,
         wall: stats.wall_time,
         autoscale,
         churn,
-    }
+    };
+    metrics.release();
+    row
 }
 
 /// Run one scenario across `systems`, in parallel.

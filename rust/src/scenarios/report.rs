@@ -58,6 +58,7 @@ pub fn row_to_json(row: &SystemRow) -> Json {
         ("ttft_s", pct_obj(s.ttft_p50, s.ttft_p90, s.ttft_p99)),
         ("tpot_s", pct_obj(s.tpot_p50, s.tpot_p90, s.tpot_p99)),
         ("classes", Json::arr(row.classes.iter().map(class_to_json))),
+        ("sim_allocs", Json::num(row.allocs as f64)),
         ("sim_events", Json::num(row.events as f64)),
         ("sim_events_saved", Json::num(row.events_saved as f64)),
         ("abandoned", Json::Bool(row.abandoned)),
@@ -312,6 +313,7 @@ mod tests {
             events: 4242,
             events_saved: 0,
             abandoned: false,
+            allocs: 77,
             wall: std::time::Duration::from_secs(2),
             autoscale: None,
             churn: None,
@@ -334,8 +336,9 @@ mod tests {
 \"offered_rate_rps\":2,\"summary\":\"synthetic fixture\",\"systems\":\
 [{\"abandoned\":false,\"arrived\":100,\"attainment\":0.95,\"classes\":\
 [{\"arrived\":100,\"attainment\":0.95,\"class\":\"chat\",\"met_slo\":95}],\
-\"completed\":98,\"goodput_rps\":1.25,\"met_slo\":95,\"sim_events\":4242,\
-\"sim_events_saved\":0,\"system\":\"EcoServe\",\"token_throughput\":250,\
+\"completed\":98,\"goodput_rps\":1.25,\"met_slo\":95,\"sim_allocs\":77,\
+\"sim_events\":4242,\"sim_events_saved\":0,\"system\":\"EcoServe\",\
+\"token_throughput\":250,\
 \"tpot_s\":{\"p50\":0.05,\"p90\":0.075,\"p99\":0.125},\
 \"ttft_s\":{\"p50\":0.5,\"p90\":1.5,\"p99\":2.5},\"wall_s\":2}],\
 \"warmup_s\":10}],\

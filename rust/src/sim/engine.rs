@@ -11,6 +11,7 @@
 //! [`crate::metrics::SloMonitor`]); [`reference_run`] keeps the original
 //! preload-everything engine as a differential-testing oracle.
 
+use std::cell::Cell;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
@@ -103,6 +104,42 @@ impl EventScheduler {
     pub fn len(&self) -> usize {
         self.heap.len()
     }
+
+    /// Reset for reuse, retaining the heap's capacity. Both halves of
+    /// the reset are load-bearing for pooled reuse:
+    /// * the heap is cleared, so entries left queued by a previous run
+    ///   (an abandoned probe always leaves some) can never resurface;
+    /// * the sequence counter restarts at 0, so tie-breaking in the next
+    ///   run is bit-identical to a freshly constructed scheduler — stale
+    ///   sequence numbers must not leak across runs.
+    pub fn recycle(&mut self) {
+        self.heap.clear();
+        self.seq = 0;
+    }
+}
+
+thread_local! {
+    /// One spare scheduler per thread: the rate search runs thousands of
+    /// probes back to back on the same worker thread, and reusing the
+    /// heap's allocation across runs is what makes the merge loop
+    /// allocation-free after the first (warmup) run. A `Cell<Option<_>>`
+    /// (not `RefCell`) so take/put can never panic on re-entrancy.
+    static SCHED_POOL: std::cell::Cell<Option<EventScheduler>> =
+        const { std::cell::Cell::new(None) };
+}
+
+/// This thread's pooled scheduler (fresh if the pool is empty), recycled
+/// to the exact observable state of `EventScheduler::new()` — only heap
+/// capacity survives from previous runs.
+fn pooled_scheduler() -> EventScheduler {
+    let mut sched = SCHED_POOL.with(Cell::take).unwrap_or_default();
+    sched.recycle();
+    sched
+}
+
+/// Return a scheduler to this thread's pool for the next run.
+fn repool_scheduler(sched: EventScheduler) {
+    SCHED_POOL.with(|p| p.set(Some(sched)));
 }
 
 /// A serving system under simulation: the five schedulers implement this.
@@ -178,6 +215,12 @@ pub struct RunStats {
     /// `stop == StopReason::Abandoned`.
     pub events_saved: u64,
     pub stop: StopReason,
+    /// Heap allocations performed by this thread during the run (counted
+    /// by [`crate::util::alloc`]). Exactly 0 for a warm run — pooled
+    /// scheduler, recycled collector, capacity-retaining system — which
+    /// is the zero-alloc hot-loop contract asserted in tests and
+    /// tracked per frontier cell in `BENCH_simperf.json`.
+    pub allocs: u64,
     pub wall_time: std::time::Duration,
 }
 
@@ -248,8 +291,12 @@ pub fn run_source_until_faulted(
     mut stop: impl FnMut(f64, &Collector) -> bool,
 ) -> RunStats {
     let wall_start = std::time::Instant::now();
+    let allocs_start = crate::util::alloc::thread_allocs();
     let mut arrivals = arrivals.peekable();
-    let mut sched = EventScheduler::new();
+    // Pooled: same observable state as `EventScheduler::new()`, but the
+    // heap allocation is reused across the thousands of runs a rate
+    // search performs on this thread.
+    let mut sched = pooled_scheduler();
     for &(t, fault) in faults {
         sched.at(t, Event::Fault(fault));
     }
@@ -310,11 +357,14 @@ pub fn run_source_until_faulted(
             }
         }
     }
+    let allocs = crate::util::alloc::thread_allocs() - allocs_start;
+    repool_scheduler(sched);
     RunStats {
         sim_time: now,
         events: dispatched,
         events_saved,
         stop: reason,
+        allocs,
         wall_time: wall_start.elapsed(),
     }
 }
@@ -402,6 +452,9 @@ pub fn reference_run_faulted(
     metrics: &mut Collector,
 ) -> RunStats {
     let wall_start = std::time::Instant::now();
+    let allocs_start = crate::util::alloc::thread_allocs();
+    // Deliberately unpooled: the oracle must stay the naive engine the
+    // cursor engine is differentially tested against.
     let mut sched = EventScheduler::new();
     for req in trace {
         sched.at(req.arrival, Event::Arrival(req));
@@ -445,6 +498,7 @@ pub fn reference_run_faulted(
         events: dispatched,
         events_saved: 0,
         stop: reason,
+        allocs: crate::util::alloc::thread_allocs() - allocs_start,
         wall_time: wall_start.elapsed(),
     }
 }
@@ -672,5 +726,129 @@ mod tests {
         run(&mut probe, trace, 2_000.0, &mut metrics);
         assert_eq!(metrics.completed().len(), 10_000);
         assert!(probe.max_heap < 64, "heap grew to {}", probe.max_heap);
+    }
+
+    /// Pool-reuse hazard #1, unit level: recycling must drop queued
+    /// entries *and* restart the sequence counter, so a refilled
+    /// scheduler breaks ties by the new insertion order — never by stale
+    /// sequence numbers from the previous run.
+    #[test]
+    fn recycling_resets_sequence_numbers_and_drops_stale_entries() {
+        let mut sched = EventScheduler::new();
+        sched.at(1.0, Event::InstanceWake { instance: 1 });
+        sched.at(1.0, Event::InstanceWake { instance: 2 });
+        assert!(sched.pop().is_some());
+        // Drain abandoned midway: one stale entry still queued.
+        assert!(!sched.is_empty());
+        sched.recycle();
+        assert!(sched.is_empty(), "stale entries must not survive recycling");
+        assert_eq!(sched.seq, 0, "sequence numbers must restart at 0");
+        // Refill: ties fire in the *new* insertion order, exactly as on
+        // a freshly constructed scheduler.
+        sched.at(2.0, Event::InstanceWake { instance: 7 });
+        sched.at(2.0, Event::InstanceWake { instance: 8 });
+        match (sched.pop().unwrap().1, sched.pop().unwrap().1) {
+            (Event::InstanceWake { instance: a }, Event::InstanceWake { instance: b }) => {
+                assert_eq!((a, b), (7, 8));
+            }
+            _ => panic!("wrong events"),
+        }
+        assert!(sched.is_empty());
+    }
+
+    /// Pool-reuse hazard #1, engine level: an abandoned run repools its
+    /// scheduler with events still queued; the next run on this thread
+    /// takes that scheduler from the pool and must be bit-identical to
+    /// the never-pooled reference engine — same tie order (the golden
+    /// trace ties every third arrival), no resurrected entries.
+    #[test]
+    fn pooled_run_after_abandoned_run_matches_reference_bit_for_bit() {
+        let golden: Vec<Request> =
+            (0..200).map(|i| req(i, (i / 3) as f64 * 0.25)).collect();
+        let mut warm_sys = Echo { service: 0.25, pending: vec![] };
+        let mut warm_m = Collector::new();
+        let w = run_until(&mut warm_sys, golden.clone(), 1_000.0, &mut warm_m, |now, _| {
+            now >= 4.0
+        });
+        assert_eq!(w.stop, StopReason::Abandoned);
+        assert!(w.events_saved > 0, "abandoned run must leave queued events");
+        let mut sys_a = Echo { service: 0.25, pending: vec![] };
+        let mut sys_b = Echo { service: 0.25, pending: vec![] };
+        let mut m_a = Collector::new();
+        let mut m_b = Collector::new();
+        let a = run(&mut sys_a, golden.clone(), 1_000.0, &mut m_a);
+        let b = reference_run(&mut sys_b, golden, 1_000.0, &mut m_b);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.sim_time.to_bits(), b.sim_time.to_bits());
+        assert_eq!(m_a.completed().len(), m_b.completed().len());
+        for (ra, rb) in m_a.completed().iter().zip(m_b.completed()) {
+            assert_eq!(ra, rb, "records diverged after pool reuse");
+            assert_eq!(ra.first_token.to_bits(), rb.first_token.to_bits());
+            assert_eq!(ra.completion.to_bits(), rb.completion.to_bits());
+        }
+    }
+
+    /// Echo variant whose own handlers never allocate (completions via
+    /// `swap_remove`, not a collected Vec) — the probe for the
+    /// zero-alloc hot-loop contract.
+    struct LeanEcho {
+        service: f64,
+        pending: Vec<(u64, f64)>, // (id, done_at)
+    }
+
+    impl System for LeanEcho {
+        fn on_arrival(
+            &mut self,
+            req: Request,
+            now: f64,
+            sched: &mut EventScheduler,
+            metrics: &mut Collector,
+        ) {
+            metrics.on_first_token(req.id, now + self.service);
+            self.pending.push((req.id, now + self.service));
+            sched.at(now + self.service, Event::InstanceWake { instance: 0 });
+        }
+
+        fn on_instance_wake(
+            &mut self,
+            _i: usize,
+            now: f64,
+            _s: &mut EventScheduler,
+            metrics: &mut Collector,
+        ) {
+            let mut i = 0;
+            while i < self.pending.len() {
+                if self.pending[i].1 <= now + 1e-12 {
+                    let (id, _) = self.pending.swap_remove(i);
+                    metrics.on_complete(id, now);
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+
+    /// The tentpole contract: after a warmup run has grown the pooled
+    /// scheduler heap, the collector's request columns, the completed
+    /// record log, and the system's own buffers to steady-state
+    /// capacity, an identical second run performs exactly zero heap
+    /// allocations in the merge loop.
+    #[test]
+    fn hot_loop_is_allocation_free_after_warmup() {
+        let trace: Vec<Request> = (0..2_000).map(|i| req(i, i as f64 * 0.01)).collect();
+        let mut sys = LeanEcho { service: 0.005, pending: Vec::new() };
+        let mut metrics = Collector::new();
+        // Warmup: grows every buffer (and seeds this thread's pool).
+        let warm = run(&mut sys, trace.clone(), 1_000.0, &mut metrics);
+        assert_eq!(metrics.completed().len(), 2_000);
+        assert!(warm.allocs > 0, "cold run must have allocated");
+        // Warm run: recycled collector, pooled scheduler, retained
+        // system capacity — the loop itself must allocate nothing.
+        metrics.recycle(None);
+        sys.pending.clear();
+        let stats = run(&mut sys, trace, 1_000.0, &mut metrics);
+        assert_eq!(metrics.completed().len(), 2_000);
+        assert_eq!(stats.events, warm.events);
+        assert_eq!(stats.allocs, 0, "hot loop allocated after warmup: {stats:?}");
     }
 }

@@ -1,0 +1,117 @@
+//! Thread-local heap-allocation accounting.
+//!
+//! The simulator's headline contract (ISSUE 8 / ROADMAP "raw simulator
+//! speed") is that the engine's event hot loop performs **zero heap
+//! allocations after warmup**: the scheduler heap, the collector's
+//! request columns, and the completed-record log are all pooled and
+//! recycled between runs. Contracts that aren't measured rot, so the
+//! crate installs [`CountingAlloc`] as the global allocator and the
+//! engine reports per-run allocation counts in
+//! [`RunStats::allocs`](crate::sim::RunStats) — asserted to be exactly
+//! zero for a warm run in `sim::engine` tests and surfaced per frontier
+//! cell in `BENCH_simperf.json`.
+//!
+//! The counter is **thread-local**, not a global atomic: a simulation
+//! run executes on one thread, and frontier cells (plus speculative
+//! probes) run concurrently on sibling threads whose allocations must
+//! not pollute each other's deltas. Counting is a single thread-local
+//! increment per allocation, cheap enough to leave on unconditionally.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+thread_local! {
+    /// Allocations performed by this thread since it started.
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Number of heap allocations this thread has performed so far.
+/// Monotonic per thread; take a delta around a region to count its
+/// allocations (frees are not counted — the contract is about *new*
+/// heap traffic, and a free implies an earlier counted allocation).
+pub fn thread_allocs() -> u64 {
+    // `try_with`: during thread teardown the TLS slot may already be
+    // destroyed while destructors still allocate/deallocate; report 0
+    // rather than aborting the process from inside the allocator.
+    ALLOCS.try_with(|c| c.get()).unwrap_or(0)
+}
+
+fn bump() {
+    let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+}
+
+/// A [`System`] allocator wrapper that counts allocations per thread.
+/// Installed once as `#[global_allocator]` in `lib.rs`, so binaries,
+/// integration tests, and benches all get the same accounting.
+pub struct CountingAlloc;
+
+// SAFETY: delegates every operation unchanged to `System`; the only
+// addition is a thread-local counter bump, which does not allocate.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump();
+        unsafe { System.alloc(layout) }
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        unsafe { System.dealloc(ptr, layout) }
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump();
+        unsafe { System.alloc_zeroed(layout) }
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        bump();
+        unsafe { System.realloc(ptr, layout, new_size) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_increments_on_allocation() {
+        let before = thread_allocs();
+        let v: Vec<u64> = Vec::with_capacity(32);
+        let after = thread_allocs();
+        assert!(after > before, "Vec::with_capacity must count as an allocation");
+        drop(v);
+        // Frees are not counted.
+        assert_eq!(thread_allocs(), after);
+    }
+
+    #[test]
+    fn pure_stack_work_is_free() {
+        // Pre-touch TLS, then a stack-only region must count zero.
+        let _ = thread_allocs();
+        let before = thread_allocs();
+        let mut acc = 0u64;
+        for i in 0..1000u64 {
+            acc = acc.wrapping_add(i * i);
+        }
+        assert!(acc > 0);
+        assert_eq!(thread_allocs(), before);
+    }
+
+    #[test]
+    fn counts_are_per_thread() {
+        let before = thread_allocs();
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                // Allocate heavily on a sibling thread.
+                let mut v = Vec::new();
+                for i in 0..100u64 {
+                    v.push(vec![i; 16]);
+                }
+            });
+        });
+        // Joining the scope allocates nothing on *this* thread beyond
+        // the spawn bookkeeping that happened before the region — the
+        // sibling's 100+ allocations must not leak into our counter.
+        let delta = thread_allocs() - before;
+        assert!(delta < 50, "sibling-thread allocations leaked: {delta}");
+    }
+}

@@ -396,6 +396,7 @@ pub static COMMANDS: &[CommandSpec] = &[
             FlagSpec::switch("autoscale", "add a mitosis-on PaDG variant"),
             FlagSpec::switch("quick", "coarse search for CI smoke runs"),
             FlagSpec::switch("no-abandon", "run doomed probes to completion"),
+            FlagSpec::switch("no-speculate", "probe bisection rates serially"),
             BUDGET_S,
             OUT,
             FlagSpec::opt("perf-out", "PATH", "write BENCH_simperf.json here"),

@@ -3,6 +3,7 @@
 //! with the distribution samplers the workload generator needs, a JSON
 //! parser/serializer, a CLI flag parser, and small thread/channel helpers.
 
+pub mod alloc;
 pub mod cli;
 pub mod json;
 pub mod rng;

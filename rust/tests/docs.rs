@@ -1,0 +1,83 @@
+//! Docs-freshness gate: the committed documentation must match the code
+//! it documents. `docs/CLI.md` embeds each subcommand's generated
+//! `--help` verbatim, so this test re-renders every help text from the
+//! live `COMMANDS` table and fails on any drift — adding a flag without
+//! documenting it, or editing help text without regenerating the docs.
+//! CI runs this as its docs step.
+
+use ecoserve::scenarios::SCHEMA_VERSION;
+use ecoserve::util::cli::COMMANDS;
+
+fn read_doc(rel: &str) -> String {
+    let path = format!("{}/../{rel}", env!("CARGO_MANIFEST_DIR"));
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("{rel} unreadable: {e}"))
+}
+
+#[test]
+fn cli_reference_contains_every_generated_help_text_verbatim() {
+    let md = read_doc("docs/CLI.md");
+    for spec in COMMANDS {
+        let help = spec.help_text();
+        assert!(
+            md.contains(&help),
+            "docs/CLI.md is stale for '{}': it must contain the generated \
+             --help output verbatim. Expected block:\n{}",
+            spec.name,
+            help
+        );
+    }
+}
+
+#[test]
+fn cli_reference_lists_every_registered_flag() {
+    let md = read_doc("docs/CLI.md");
+    for spec in COMMANDS {
+        assert!(
+            md.contains(&format!("## {}", spec.name)),
+            "docs/CLI.md lost the '{}' section",
+            spec.name
+        );
+        for f in spec.flags {
+            assert!(
+                md.contains(&format!("--{}", f.name)),
+                "docs/CLI.md does not list --{} ({})",
+                f.name,
+                spec.name
+            );
+        }
+    }
+}
+
+#[test]
+fn bench_doc_covers_every_artifact_and_the_schema_version() {
+    let md = read_doc("docs/BENCH.md");
+    for bench in [
+        "ecoserve-scenarios",
+        "ecoserve-goodput-frontier",
+        "ecoserve-simperf",
+        "ecoserve-plan",
+        "ecoserve-churn",
+    ] {
+        assert!(md.contains(bench), "docs/BENCH.md lost artifact {bench}");
+    }
+    // The version the docs quote must be the one the code emits.
+    assert!(
+        md.contains(&format!("`{SCHEMA_VERSION}`")),
+        "docs/BENCH.md quotes a stale schema_version (code says {SCHEMA_VERSION})"
+    );
+    // The regression-gate baseline the docs point at must exist.
+    assert!(md.contains("rust/ci/simperf_baseline.json"));
+    let baseline = read_doc("rust/ci/simperf_baseline.json");
+    assert!(
+        baseline.contains("events_per_sec") && baseline.contains("tolerance"),
+        "simperf baseline lost its gate fields"
+    );
+}
+
+#[test]
+fn readme_points_at_the_docs() {
+    let md = read_doc("README.md");
+    for doc in ["docs/ARCHITECTURE.md", "docs/CLI.md", "docs/BENCH.md"] {
+        assert!(md.contains(doc), "README.md does not link {doc}");
+    }
+}

@@ -1,0 +1,106 @@
+//! Speculative-bisection equivalence, end to end: running the goodput
+//! frontier with parallel probe speculation ON (the default) must produce
+//! bit-for-bit the same answers as the serial search — identical max
+//! rates, identical verdict at every consumed probe, identical per-class
+//! scores, identical `BENCH_goodput.json` (up to wall-clock fields). Only
+//! the *executed* probe count may grow: speculation trades discarded
+//! probe work for wall time, never for answers.
+
+use std::time::Duration;
+
+use ecoserve::config::SystemKind;
+use ecoserve::frontier::{frontier_to_json, run_frontier, FrontierConfig, ScenarioFrontier};
+use ecoserve::metrics::Attainment;
+use ecoserve::scenarios::{by_name, ScenarioConfig};
+use ecoserve::util::json::Json;
+
+fn quick_cfg(speculate: bool) -> FrontierConfig {
+    let mut base = ScenarioConfig::default_l20();
+    base.deployment.gpus_used = 16; // 4 instances — fast tests
+    let mut cfg = FrontierConfig::new(base, Attainment::P90);
+    cfg.quick = true;
+    cfg.speculate = speculate;
+    cfg
+}
+
+/// Strip every wall-clock field (the only legitimately nondeterministic
+/// part of the BENCH report) so the rest can be compared as strings.
+fn strip_walls(j: &mut Json) {
+    match j {
+        Json::Obj(m) => {
+            m.remove("wall_s");
+            for v in m.values_mut() {
+                strip_walls(v);
+            }
+        }
+        Json::Arr(v) => {
+            for item in v.iter_mut() {
+                strip_walls(item);
+            }
+        }
+        _ => {}
+    }
+}
+
+#[test]
+fn frontier_answers_are_bit_identical_with_speculation_on_and_off() {
+    let scenarios = vec![by_name("steady").unwrap(), by_name("bursty").unwrap()];
+    let systems = [SystemKind::EcoServe, SystemKind::Vllm];
+    let spec_cfg = quick_cfg(true);
+    let serial_cfg = quick_cfg(false);
+    let spec: Vec<ScenarioFrontier> = run_frontier(&scenarios, &spec_cfg, &systems, 4);
+    let serial: Vec<ScenarioFrontier> = run_frontier(&scenarios, &serial_cfg, &systems, 4);
+    assert_eq!(spec.len(), 2);
+    assert_eq!(serial.len(), 2);
+
+    for (fa, fb) in spec.iter().zip(&serial) {
+        assert_eq!(fa.scenario.name, fb.scenario.name);
+        assert_eq!(fa.rows.len(), fb.rows.len());
+        for (a, b) in fa.rows.iter().zip(&fb.rows) {
+            let tag = format!("{} / {}", fa.scenario.name, a.system.label());
+            assert_eq!(a.system, b.system, "{tag}");
+            // The answers: max rate, saturation, probe-by-probe curve.
+            assert_eq!(a.max_rate.to_bits(), b.max_rate.to_bits(), "{tag}");
+            assert_eq!(a.saturated, b.saturated, "{tag}");
+            assert_eq!(a.truncated, b.truncated, "{tag}");
+            // Consumed probes (the search trajectory) are identical; only
+            // executed probes (perf) may differ.
+            assert_eq!(a.probes, b.probes, "{tag}");
+            assert_eq!(a.goodput_rps.to_bits(), b.goodput_rps.to_bits(), "{tag}");
+            assert_eq!(a.attainment.to_bits(), b.attainment.to_bits(), "{tag}");
+            assert_eq!(a.curve.len(), b.curve.len(), "{tag}");
+            for (pa, pb) in a.curve.iter().zip(&b.curve) {
+                assert_eq!(pa.rate.to_bits(), pb.rate.to_bits(), "{tag}");
+                assert_eq!(pa.attainment.to_bits(), pb.attainment.to_bits(), "{tag}");
+                assert_eq!(pa.goodput_rps.to_bits(), pb.goodput_rps.to_bits(), "{tag}");
+                // Same verdict at every consumed rate.
+                assert_eq!(
+                    pa.attainment >= 0.90 - 1e-12,
+                    pb.attainment >= 0.90 - 1e-12,
+                    "{tag} verdict flipped at {} req/s",
+                    pa.rate
+                );
+            }
+            assert_eq!(a.classes.len(), b.classes.len(), "{tag}");
+            for (ca, cb) in a.classes.iter().zip(&b.classes) {
+                assert_eq!(ca.class, cb.class, "{tag}");
+                assert_eq!(ca.arrived, cb.arrived, "{tag}");
+                assert_eq!(ca.met, cb.met, "{tag}");
+                assert_eq!(ca.attainment.to_bits(), cb.attainment.to_bits(), "{tag}");
+            }
+            // The cost: speculation only ever *adds* discarded probe work.
+            assert_eq!(b.perf.probes, b.probes, "{tag}: serial executes = consumes");
+            assert!(a.perf.probes >= a.probes, "{tag}");
+            assert!(a.perf.probes >= b.perf.probes, "{tag}");
+            assert!(a.perf.events >= b.perf.events, "{tag}");
+        }
+    }
+
+    // BENCH_goodput.json, the shipped artifact, is identical up to wall
+    // clocks (it reports consumed probes, not executed ones).
+    let mut ja = frontier_to_json(&spec, &spec_cfg, Duration::from_secs(1));
+    let mut jb = frontier_to_json(&serial, &serial_cfg, Duration::from_secs(1));
+    strip_walls(&mut ja);
+    strip_walls(&mut jb);
+    assert_eq!(ja.to_string(), jb.to_string());
+}
