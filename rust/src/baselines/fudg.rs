@@ -19,12 +19,12 @@
 
 use std::collections::{HashMap, VecDeque};
 
-use super::BaselineChurn;
+use super::{BaselineChurn, QueueGuard};
 use crate::config::{Deployment, SystemParams};
 use crate::metrics::Collector;
 use crate::sim::{
-    ChurnTelemetry, Event, EventScheduler, FaultEvent, Health, Network, SimInstance, SimReq,
-    System,
+    ChurnTelemetry, DefenseTelemetry, Event, EventScheduler, FaultEvent, Health, Network,
+    SimInstance, SimReq, System,
 };
 use crate::workload::Request;
 
@@ -72,6 +72,8 @@ pub struct FudgSystem {
     scratch: Collector,
     /// Native fault handling (crashes lose resident work).
     pub churn: BaselineChurn,
+    /// Native overload handling (bounded prompt queue).
+    pub guard: QueueGuard,
     /// Interconnect slowdown under an active link-degrade fault (1.0 =
     /// healthy). FuDG pays this on every KV migration; the co-located
     /// systems do not — the fragility the churn scenarios expose.
@@ -126,6 +128,7 @@ impl FudgSystem {
         let nic_links: Vec<usize> = (0..nodes)
             .map(|_| network.add_link(deployment.cluster.inter_link.clone()))
             .collect();
+        let guard = QueueGuard::new(&params);
         FudgSystem {
             mode,
             instances,
@@ -143,6 +146,7 @@ impl FudgSystem {
             cross_node_transfers: 0,
             scratch: Collector::new(),
             churn: BaselineChurn::new(n),
+            guard,
             link_factor: 1.0,
         }
     }
@@ -271,8 +275,12 @@ impl System for FudgSystem {
         req: Request,
         now: f64,
         sched: &mut EventScheduler,
-        _metrics: &mut Collector,
+        metrics: &mut Collector,
     ) {
+        if self.guard.reject(self.prefill_backlog.len()) {
+            metrics.on_reject(req.id);
+            return;
+        }
         self.prefill_backlog.push_back(req);
         self.kick_prefill_fleet(now, sched);
     }
@@ -365,6 +373,10 @@ impl System for FudgSystem {
 
     fn churn_telemetry(&self) -> Option<ChurnTelemetry> {
         self.churn.telemetry()
+    }
+
+    fn defense_telemetry(&self) -> Option<DefenseTelemetry> {
+        self.guard.telemetry()
     }
 
     fn on_transfer_done(&mut self, transfer: u64, now: f64, sched: &mut EventScheduler,

@@ -19,7 +19,8 @@ pub use fudg::{FudgMode, FudgSystem};
 pub use sarathi::SarathiSystem;
 pub use vllm::VllmSystem;
 
-use crate::sim::{ChurnTelemetry, FaultEvent, Health, SimInstance};
+use crate::config::SystemParams;
+use crate::sim::{ChurnTelemetry, DefenseTelemetry, FaultEvent, Health, SimInstance};
 use crate::workload::Request;
 
 /// Least-outstanding-load routing used by both NoDG baselines: pick the
@@ -39,6 +40,49 @@ pub fn least_loaded_with_room(
             i.kv_used + i.prefill_queue.iter().map(|r| r.req.input_len).sum::<usize>()
         })
         .map(|i| i.id)
+}
+
+/// Native overload handling shared by the baselines: a bounded waiting
+/// queue, nothing more. When a run enables coordinator defenses
+/// ([`SystemParams::defense`]), each baseline bounces new arrivals once
+/// its global backlog reaches the configured cap — the serving-stack
+/// equivalent of an HTTP 503 from a full admission queue. No deadline
+/// awareness, no priority classes, no brownout: that is the (weaker)
+/// native handling real NoDG/FuDG stacks ship with, so overload
+/// scenarios stay a fair fight the same way [`BaselineChurn`] keeps
+/// churn scenarios fair.
+#[derive(Debug, Default)]
+pub struct QueueGuard {
+    cap: Option<usize>,
+    pub stats: DefenseTelemetry,
+}
+
+impl QueueGuard {
+    pub fn new(params: &SystemParams) -> Self {
+        let cap = if params.ablate_no_shedding {
+            None
+        } else {
+            params.defense.map(|d| d.backlog_cap)
+        };
+        QueueGuard { cap, stats: DefenseTelemetry::default() }
+    }
+
+    /// True when the arrival must be bounced (backlog at or past the cap).
+    pub fn reject(&mut self, backlog_len: usize) -> bool {
+        match self.cap {
+            Some(cap) if backlog_len >= cap => {
+                self.stats.queue_full_rejects += 1;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// `Some` whenever a cap was configured, so defended-but-quiet runs
+    /// still report a zeroed block (mirrors PaDG's defense telemetry).
+    pub fn telemetry(&self) -> Option<DefenseTelemetry> {
+        self.cap.map(|_| self.stats)
+    }
 }
 
 /// Native fault handling shared by the baselines: no coordinator-level
@@ -153,6 +197,29 @@ mod tests {
         let mut insts = instances(2);
         insts[0].health = Health::Down;
         assert_eq!(least_loaded_with_room(&insts, &req(64), 0), Some(1));
+    }
+
+    #[test]
+    fn queue_guard_is_inert_until_defenses_are_configured() {
+        use crate::config::DefenseConfig;
+        let mut off = QueueGuard::new(&SystemParams::default());
+        assert!(!off.reject(usize::MAX / 2), "no cap configured: never rejects");
+        assert!(off.telemetry().is_none());
+
+        let defended = SystemParams {
+            defense: Some(DefenseConfig { backlog_cap: 2, ..DefenseConfig::default() }),
+            ..SystemParams::default()
+        };
+        let mut on = QueueGuard::new(&defended);
+        assert!(!on.reject(1));
+        assert!(on.reject(2), "at cap: bounce");
+        assert!(on.reject(3));
+        assert_eq!(on.telemetry().unwrap().queue_full_rejects, 2);
+
+        let ablated = SystemParams { ablate_no_shedding: true, ..defended };
+        let mut ab = QueueGuard::new(&ablated);
+        assert!(!ab.reject(100), "ablation switches the native cap off too");
+        assert!(ab.telemetry().is_none());
     }
 
     #[test]

@@ -9,10 +9,13 @@
 
 use std::collections::VecDeque;
 
-use super::{least_loaded_with_room, BaselineChurn};
+use super::{least_loaded_with_room, BaselineChurn, QueueGuard};
 use crate::config::{Deployment, SystemParams};
 use crate::metrics::Collector;
-use crate::sim::{ChurnTelemetry, Event, EventScheduler, FaultEvent, Health, SimInstance, System};
+use crate::sim::{
+    ChurnTelemetry, DefenseTelemetry, Event, EventScheduler, FaultEvent, Health, SimInstance,
+    System,
+};
 use crate::workload::Request;
 
 const EPS: f64 = 1e-9;
@@ -24,6 +27,8 @@ pub struct SarathiSystem {
     pub params: SystemParams,
     /// Native fault handling (crashes lose resident work).
     pub churn: BaselineChurn,
+    /// Native overload handling (bounded waiting queue).
+    pub guard: QueueGuard,
 }
 
 impl SarathiSystem {
@@ -32,11 +37,13 @@ impl SarathiSystem {
         let instances = (0..n)
             .map(|i| SimInstance::new(i, deployment.timer(), deployment.kv_reserve_frac))
             .collect();
+        let guard = QueueGuard::new(&params);
         SarathiSystem {
             instances,
             backlog: VecDeque::new(),
             params,
             churn: BaselineChurn::new(n),
+            guard,
         }
     }
 
@@ -80,8 +87,12 @@ impl System for SarathiSystem {
         req: Request,
         now: f64,
         sched: &mut EventScheduler,
-        _metrics: &mut Collector,
+        metrics: &mut Collector,
     ) {
+        if self.guard.reject(self.backlog.len()) {
+            metrics.on_reject(req.id);
+            return;
+        }
         if !self.backlog.is_empty() || !self.try_admit(&req, now, sched) {
             self.backlog.push_back(req);
         }
@@ -113,6 +124,10 @@ impl System for SarathiSystem {
 
     fn churn_telemetry(&self) -> Option<ChurnTelemetry> {
         self.churn.telemetry()
+    }
+
+    fn defense_telemetry(&self) -> Option<DefenseTelemetry> {
+        self.guard.telemetry()
     }
 }
 

@@ -10,10 +10,13 @@
 
 use std::collections::VecDeque;
 
-use super::{least_loaded_with_room, BaselineChurn};
+use super::{least_loaded_with_room, BaselineChurn, QueueGuard};
 use crate::config::{Deployment, SystemParams};
 use crate::metrics::Collector;
-use crate::sim::{ChurnTelemetry, Event, EventScheduler, FaultEvent, Health, SimInstance, System};
+use crate::sim::{
+    ChurnTelemetry, DefenseTelemetry, Event, EventScheduler, FaultEvent, Health, SimInstance,
+    System,
+};
 use crate::workload::Request;
 
 const EPS: f64 = 1e-9;
@@ -30,6 +33,8 @@ pub struct VllmSystem {
     pub max_prefill_reqs: usize,
     /// Native fault handling (crashes lose resident work).
     pub churn: BaselineChurn,
+    /// Native overload handling (bounded waiting queue).
+    pub guard: QueueGuard,
 }
 
 impl VllmSystem {
@@ -38,6 +43,7 @@ impl VllmSystem {
         let instances = (0..n)
             .map(|i| SimInstance::new(i, deployment.timer(), deployment.kv_reserve_frac))
             .collect();
+        let guard = QueueGuard::new(&params);
         VllmSystem {
             instances,
             backlog: VecDeque::new(),
@@ -45,6 +51,7 @@ impl VllmSystem {
             max_prefill_tokens: 8192,
             max_prefill_reqs: 16,
             churn: BaselineChurn::new(n),
+            guard,
         }
     }
 
@@ -105,8 +112,12 @@ impl System for VllmSystem {
         req: Request,
         now: f64,
         sched: &mut EventScheduler,
-        _metrics: &mut Collector,
+        metrics: &mut Collector,
     ) {
+        if self.guard.reject(self.backlog.len()) {
+            metrics.on_reject(req.id);
+            return;
+        }
         if !self.backlog.is_empty() || !self.try_admit(&req, now, sched) {
             self.backlog.push_back(req);
         }
@@ -138,6 +149,10 @@ impl System for VllmSystem {
 
     fn churn_telemetry(&self) -> Option<ChurnTelemetry> {
         self.churn.telemetry()
+    }
+
+    fn defense_telemetry(&self) -> Option<DefenseTelemetry> {
+        self.guard.telemetry()
     }
 }
 

@@ -242,6 +242,48 @@ impl SystemKind {
     }
 }
 
+/// Coordinator-side overload defenses (PR 9). Carried inside
+/// [`SystemParams`] so it reaches every system constructor through the
+/// existing `build_system` path; `None` (the default) means no defenses
+/// and leaves every system bit-identical to its pre-defense behavior.
+///
+/// PaDG consumes the full set (deadline-aware admission, per-class
+/// priority shedding, decode brownout); the NoDG/FuDG baselines get only
+/// the native weak form — a hard backlog cap — mirroring what their real
+/// counterparts ship.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DefenseConfig {
+    /// Deadline-aware admission: reject a new arrival when the backlog's
+    /// oldest entry has already waited longer than this multiple of the
+    /// tightest TTFT SLO — the queue-implied TTFT for a newcomer is
+    /// provably blown, so failing fast beats queueing it to die.
+    pub admission_slack: f64,
+    /// Backlog length beyond which low-priority classes are shed at
+    /// arrival (PaDG) or all arrivals are rejected (baselines' native
+    /// cap). Priority classes ride until `2 ×` this cap.
+    pub backlog_cap: usize,
+    /// Mean decode-occupancy fraction across active instances above which
+    /// brownout engages (decode lengths are capped)…
+    pub brownout_hi: f64,
+    /// …and below which it disengages (hysteresis so the mode doesn't
+    /// flap on every batch boundary).
+    pub brownout_lo: f64,
+    /// Decode-length cap applied to admissions while browned out.
+    pub brownout_decode_cap: usize,
+}
+
+impl Default for DefenseConfig {
+    fn default() -> Self {
+        DefenseConfig {
+            admission_slack: 1.0,
+            backlog_cap: 64,
+            brownout_hi: 0.90,
+            brownout_lo: 0.75,
+            brownout_decode_cap: 64,
+        }
+    }
+}
+
 /// Knobs for the individual systems (paper-faithful defaults).
 #[derive(Debug, Clone)]
 pub struct SystemParams {
@@ -276,6 +318,14 @@ pub struct SystemParams {
     /// router keeps cycling through dead members. Fault-free behavior is
     /// unchanged.
     pub ablate_no_recovery: bool,
+    /// Disable EcoServe's overload defenses even when [`Self::defense`]
+    /// is set: PaDG falls back to force-admitting hopeless requests while
+    /// baselines keep their native backlog cap — isolating how much of
+    /// the graceful-degradation story the shedding layer buys.
+    pub ablate_no_shedding: bool,
+    /// Overload defenses; `None` (the default) disables them everywhere
+    /// and keeps every system bit-identical to the defense-free build.
+    pub defense: Option<DefenseConfig>,
 }
 
 impl Default for SystemParams {
@@ -292,6 +342,8 @@ impl Default for SystemParams {
             ablate_no_sticky: false,
             ablate_no_hysteresis: false,
             ablate_no_recovery: false,
+            ablate_no_shedding: false,
+            defense: None,
         }
     }
 }

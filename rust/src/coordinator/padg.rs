@@ -20,10 +20,11 @@ use std::collections::VecDeque;
 
 use super::mitosis::MitosisState;
 use super::routing::{RouteOutcome, RoutingState};
-use crate::config::{Deployment, SystemParams};
+use crate::config::{DefenseConfig, Deployment, SystemParams};
 use crate::metrics::{attainment_fraction, Collector, SloSpec};
 use crate::sim::{
-    ChurnTelemetry, Event, EventScheduler, FaultEvent, Health, SimInstance, SimReq, System,
+    ChurnTelemetry, ClassRanker, DefenseTelemetry, Event, EventScheduler, FaultEvent, Health,
+    SimInstance, SimReq, System,
 };
 use crate::workload::Request;
 
@@ -91,6 +92,17 @@ pub struct EcoServeSystem {
     pub churn: ChurnTelemetry,
     /// Crash times whose recovery (backlog drained again) is still open.
     pending_recovery: Vec<f64>,
+    /// Overload defenses: `Some` when [`SystemParams::defense`] is set
+    /// and `ablate_no_shedding` is off. `None` leaves every path below
+    /// bit-identical to the defense-free coordinator.
+    defense: Option<DefenseConfig>,
+    /// What the defenses did (all-zero until they act).
+    defense_stats: DefenseTelemetry,
+    /// Request id → priority rank for per-class shedding (0 sheds last);
+    /// installed by the scenario driver from the scenario's class map.
+    class_ranker: Option<ClassRanker>,
+    /// Brownout engagement time; re-stamped as brownout seconds accrue.
+    brownout_since: Option<f64>,
 }
 
 impl EcoServeSystem {
@@ -117,6 +129,7 @@ impl EcoServeSystem {
         for a in active.iter_mut().take(initial) {
             *a = true;
         }
+        let defense = if params.ablate_no_shedding { None } else { params.defense };
         EcoServeSystem {
             instances,
             active,
@@ -134,6 +147,10 @@ impl EcoServeSystem {
             forced_admissions: 0,
             churn: ChurnTelemetry::default(),
             pending_recovery: Vec::new(),
+            defense,
+            defense_stats: DefenseTelemetry::default(),
+            class_ranker: None,
+            brownout_since: None,
         }
     }
 
@@ -300,10 +317,78 @@ impl EcoServeSystem {
         }
     }
 
-    fn drain_backlog(&mut self, now: f64, sched: &mut EventScheduler) {
+    /// Arrival-time triage (defenses on): deadline-aware admission
+    /// control plus per-class priority shedding. Returns true when the
+    /// request should be rejected instead of queued — the caller records
+    /// the rejection, which both counts as a guaranteed SLO violation
+    /// (sheds can't fake attainment) and gives closed-loop clients fast
+    /// feedback to back off on.
+    fn shed_at_arrival(&mut self, req: &Request, now: f64, d: &DefenseConfig) -> bool {
+        // Deadline-aware admission: the backlog is FIFO, so a newcomer
+        // waits at least as long as the head already has. Head wait past
+        // `admission_slack x TTFT` means the queue-implied TTFT for this
+        // arrival is provably blown — fail fast.
+        if let Some(head) = self.backlog.front() {
+            if now - head.arrival > d.admission_slack * self.slo.ttft {
+                self.defense_stats.deadline_rejects += 1;
+                return true;
+            }
+        }
+        // Priority triage under backlog pressure: low-priority classes
+        // (rank > 0 — retries rank last, see the driver's ranker) shed
+        // once the backlog passes the cap; even priority traffic sheds
+        // past twice the cap.
+        let rank = self.class_ranker.as_ref().map(|r| r(req.id)).unwrap_or(0);
+        let len = self.backlog.len();
+        if (len > d.backlog_cap && rank > 0) || len > 2 * d.backlog_cap {
+            self.defense_stats.priority_sheds += 1;
+            return true;
+        }
+        false
+    }
+
+    /// Track decode-occupancy brownout (defenses on): engage when mean
+    /// KV occupancy across healthy active instances crosses the high
+    /// watermark, disengage below the low one (hysteresis). Brownout
+    /// seconds accrue incrementally so telemetry is current even if the
+    /// run ends browned out.
+    fn update_brownout(&mut self, now: f64, d: &DefenseConfig) {
+        let (mut used, mut cap) = (0usize, 0usize);
+        for (i, inst) in self.instances.iter().enumerate() {
+            if self.active[i] && inst.health == Health::Up {
+                used += inst.kv_used;
+                cap += inst.kv_capacity;
+            }
+        }
+        let occ = if cap == 0 { 1.0 } else { used as f64 / cap as f64 };
+        match self.brownout_since {
+            None if occ >= d.brownout_hi => self.brownout_since = Some(now),
+            Some(t0) if occ <= d.brownout_lo => {
+                self.defense_stats.brownout_s += now - t0;
+                self.brownout_since = None;
+            }
+            Some(t0) => {
+                self.defense_stats.brownout_s += now - t0;
+                self.brownout_since = Some(now);
+            }
+            None => {}
+        }
+    }
+
+    fn drain_backlog(&mut self, now: f64, sched: &mut EventScheduler, metrics: &mut Collector) {
         while let Some(req) = self.backlog.front().cloned() {
             let waited = now - req.arrival;
             let admitted = if waited > self.slo.ttft {
+                if self.defense.is_some() {
+                    // Defenses on: a TTFT-hopeless request is shed (an
+                    // honest, monitored rejection) instead of being
+                    // force-admitted to die on an instance — the freed
+                    // capacity serves requests that can still meet SLO.
+                    self.backlog.pop_front();
+                    self.defense_stats.hopeless_sheds += 1;
+                    metrics.on_reject(req.id);
+                    continue;
+                }
                 // Already doomed: serve late rather than shed.
                 self.force_admit(&req, now, sched)
             } else if waited > 0.35 * self.slo.ttft {
@@ -492,16 +577,30 @@ impl EcoServeSystem {
 impl System for EcoServeSystem {
     fn on_arrival(
         &mut self,
-        req: Request,
+        mut req: Request,
         now: f64,
         sched: &mut EventScheduler,
-        _metrics: &mut Collector,
+        metrics: &mut Collector,
     ) {
         // Seed the controller tick lazily on the first arrival.
         if self.autoscale.is_some() && self.last_scale_at == f64::NEG_INFINITY {
             self.last_scale_at = now;
             let interval = self.autoscale.as_ref().unwrap().interval;
             sched.at(now + interval, Event::ControlTick);
+        }
+        if let Some(d) = self.defense {
+            if self.shed_at_arrival(&req, now, &d) {
+                metrics.on_reject(req.id);
+                return;
+            }
+            // Brownout: when decode occupancy saturates, cap this
+            // admission's generation length (models a reduced max_tokens
+            // under graceful degradation).
+            self.update_brownout(now, &d);
+            if self.brownout_since.is_some() && req.output_len > d.brownout_decode_cap {
+                req.output_len = d.brownout_decode_cap;
+                self.defense_stats.brownout_truncations += 1;
+            }
         }
         if !self.backlog.is_empty() || !self.try_route(&req, now, sched) {
             self.backlog.push_back(req);
@@ -521,7 +620,10 @@ impl System for EcoServeSystem {
             }
             self.instances[idx].complete_batch(now, metrics);
         }
-        self.drain_backlog(now, sched);
+        if let Some(d) = self.defense {
+            self.update_brownout(now, &d);
+        }
+        self.drain_backlog(now, sched, metrics);
         self.dispatch(idx, now, sched);
         // Backlog drain may have fed other idle instances; their kick wakes
         // were scheduled by try_route/force_admit.
@@ -542,7 +644,7 @@ impl System for EcoServeSystem {
         fault: FaultEvent,
         now: f64,
         sched: &mut EventScheduler,
-        _metrics: &mut Collector,
+        metrics: &mut Collector,
     ) {
         self.churn.faults += 1;
         let recover = !self.params.ablate_no_recovery;
@@ -568,7 +670,7 @@ impl System for EcoServeSystem {
                         self.churn.backfills += 1; // spare capacity steps in
                     }
                     self.pending_recovery.push(now);
-                    self.drain_backlog(now, sched);
+                    self.drain_backlog(now, sched, metrics);
                 } else {
                     self.churn.lost += evacuated.len() as u64;
                 }
@@ -588,7 +690,7 @@ impl System for EcoServeSystem {
                         self.sync_routing();
                         self.churn.backfills += 1;
                     }
-                    self.drain_backlog(now, sched);
+                    self.drain_backlog(now, sched, metrics);
                 }
                 sched.at(now, Event::InstanceWake { instance });
             }
@@ -605,7 +707,7 @@ impl System for EcoServeSystem {
                     let evacuated = self.instances[instance].evacuate_queue();
                     let n = self.requeue(evacuated);
                     self.churn.rerouted += n;
-                    self.drain_backlog(now, sched);
+                    self.drain_backlog(now, sched, metrics);
                 }
             }
             // PaDG never migrates KV between instances: interconnect
@@ -620,6 +722,14 @@ impl System for EcoServeSystem {
         } else {
             None
         }
+    }
+
+    fn defense_telemetry(&self) -> Option<DefenseTelemetry> {
+        self.defense.map(|_| self.defense_stats)
+    }
+
+    fn set_class_ranker(&mut self, ranker: ClassRanker) {
+        self.class_ranker = Some(ranker);
     }
 
     fn on_control_tick(&mut self, now: f64, sched: &mut EventScheduler, metrics: &mut Collector) {
@@ -857,6 +967,55 @@ mod tests {
         assert_eq!(sys.churn.backfills, 0);
         assert_eq!(sys.mitosis.total_instances(), 4);
         assert_eq!(metrics.completed().len() + sys.churn.lost as usize, n);
+    }
+
+    #[test]
+    fn defenses_shed_under_deep_overload() {
+        let d = small_deployment();
+        let params = SystemParams {
+            defense: Some(DefenseConfig::default()),
+            ..SystemParams::default()
+        };
+        let mut sys = EcoServeSystem::new(&d, SloSpec::new(5.0, 0.1), params);
+        // Far beyond capacity: the defended coordinator must shed rather
+        // than let the backlog grow without bound.
+        let trace = TraceGenerator::new(Dataset::sharegpt(), 4).poisson(60.0, 30.0);
+        let mut metrics = Collector::new();
+        run(&mut sys, trace, 600.0, &mut metrics);
+        let t = sys.defense_telemetry().expect("defenses were configured");
+        assert!(t.sheds() > 0, "deep overload must shed: {t:?}");
+        assert_eq!(metrics.rejected as u64, t.sheds(), "every shed is a monitored reject");
+        assert_eq!(
+            sys.forced_admissions, 0,
+            "defended PaDG sheds hopeless requests instead of force-admitting"
+        );
+        // The backlog stays bounded near the configured cap.
+        assert!(sys.backlog.len() <= 2 * DefenseConfig::default().backlog_cap + 1);
+    }
+
+    #[test]
+    fn ablate_no_shedding_reproduces_the_undefended_run_bit_for_bit() {
+        let d = small_deployment();
+        let trace = TraceGenerator::new(Dataset::sharegpt(), 4).poisson(60.0, 30.0);
+        let run_with = |params: SystemParams| {
+            let mut sys = EcoServeSystem::new(&d, SloSpec::new(5.0, 0.1), params);
+            let mut metrics = Collector::new();
+            run(&mut sys, trace.clone(), 600.0, &mut metrics);
+            (metrics.completed().to_vec(), sys.defense_telemetry().is_some())
+        };
+        let (base, base_t) = run_with(SystemParams::default());
+        let (ablated, ablated_t) = run_with(SystemParams {
+            defense: Some(DefenseConfig::default()),
+            ablate_no_shedding: true,
+            ..SystemParams::default()
+        });
+        assert!(!base_t && !ablated_t, "ablation must silence defense telemetry");
+        assert_eq!(base.len(), ablated.len());
+        for (a, b) in base.iter().zip(&ablated) {
+            assert_eq!(a, b, "ablated run diverged from the undefended baseline");
+            assert_eq!(a.first_token.to_bits(), b.first_token.to_bits());
+            assert_eq!(a.completion.to_bits(), b.completion.to_bits());
+        }
     }
 
     #[test]

@@ -14,6 +14,7 @@
 //!   ecoserve scenarios --scenario bursty --out report.json
 //!   ecoserve scenarios --scenario steady+churn --fault-seed 7 \
 //!       --churn-out BENCH_churn.json
+//!   ecoserve scenarios --scenario retry-storm --overload-out BENCH_overload.json
 //!   ecoserve frontier --scenario bursty --level p90 --out BENCH_goodput.json
 //!   ecoserve frontier --quick --autoscale --gpus 16 --perf-out BENCH_simperf.json
 //!   ecoserve record --scenario bursty --rate 6 --out bursty.jsonl
@@ -353,6 +354,33 @@ fn cmd_scenarios(args: &Args) -> Result<()> {
         std::fs::write(&path, &json)
             .map_err(|e| anyhow::anyhow!("write {}: {e}", path.display()))?;
         println!("\nwrote BENCH churn report to {}", path.display());
+        return Ok(());
+    }
+
+    // --overload-out runs the undefended-vs-defended load sweep instead:
+    // closed-loop clients (timeouts, retries, backoff) push each system
+    // past saturation at every load point, once with defenses off and
+    // once with them armed, and the report scores the goodput curve.
+    if let Some(path) = args.get_path("overload-out").map_err(Error::msg)? {
+        let overload: Vec<scenarios::Scenario> =
+            selected.iter().filter(|s| s.overload.is_some()).cloned().collect();
+        if overload.is_empty() {
+            bail!(
+                "--overload-out needs an overload scenario (overload-sustained, \
+                 retry-storm, slow-drain); got only open-loop ones"
+            );
+        }
+        let t0 = std::time::Instant::now();
+        let outcomes = scenarios::run_overload_suite(&overload, &cfg, &systems, workers);
+        let wall = t0.elapsed();
+        for outcome in &outcomes {
+            println!();
+            print!("{}", scenarios::render_overload_table(outcome));
+        }
+        let json = scenarios::overload_to_json(&outcomes, &cfg, wall).to_string();
+        std::fs::write(&path, &json)
+            .map_err(|e| anyhow::anyhow!("write {}: {e}", path.display()))?;
+        println!("\nwrote BENCH overload report to {}", path.display());
         return Ok(());
     }
 

@@ -128,6 +128,12 @@ pub struct Collector {
     /// Latest simulation time observed through [`Collector::observe_time`]
     /// (the engine advances it once per event).
     clock: f64,
+    /// When set (client-in-the-loop runs), rejected ids are queued in
+    /// [`Collector::pending_rejects`] for the engine to hand to the
+    /// client loop as fast error feedback. Off by default so open-loop
+    /// runs stay bit-identical.
+    track_rejects: bool,
+    pending_rejects: Vec<u64>,
 }
 
 impl Collector {
@@ -154,6 +160,8 @@ impl Collector {
         self.monitor = monitor;
         self.decision_cut = None;
         self.clock = 0.0;
+        self.track_rejects = false;
+        self.pending_rejects.clear();
     }
 
     /// A recycled collector from this thread's spare slot (fresh if the
@@ -260,8 +268,37 @@ impl Collector {
                 m.on_reject(id, now);
             }
             self.latch_decision();
+            if self.track_rejects {
+                self.pending_rejects.push(id);
+            }
         }
         self.rejected += 1;
+    }
+
+    /// Arm client feedback: rejected ids queue up for
+    /// [`Collector::pop_client_reject`]. Called by the engine's
+    /// client-in-the-loop entry points only, so open-loop runs never pay
+    /// for (or observe) the queue.
+    pub fn enable_reject_tracking(&mut self) {
+        self.track_rejects = true;
+    }
+
+    /// Drain one queued rejection (FIFO) for client retry scheduling.
+    pub fn pop_client_reject(&mut self) -> Option<u64> {
+        if self.pending_rejects.is_empty() {
+            None
+        } else {
+            Some(self.pending_rejects.remove(0))
+        }
+    }
+
+    /// Is `id` still open and waiting for its first token? `Some(true)`
+    /// means the prefill hasn't been served yet (a client timeout firing
+    /// now is a real timeout), `Some(false)` means the first token
+    /// arrived while the request is still decoding, `None` means the
+    /// request is no longer open (completed or rejected).
+    pub fn first_token_pending(&self, id: u64) -> Option<bool> {
+        self.open.slot(id).map(|i| !self.open.has_first[i])
     }
 
     pub fn completed(&self) -> &[RequestRecord] {

@@ -14,9 +14,11 @@ use crate::harness::build_system;
 use crate::metrics::{summarize_from, Collector, SloMonitor, SloSpec, Summary};
 use crate::perfmodel::ModelSpec;
 use crate::sim::{
-    run_abandonable, run_faulted, run_source_faulted, ChurnTelemetry, StopReason, System,
+    run_abandonable, run_faulted_client, run_source_faulted_client, ChurnTelemetry,
+    ClassRanker, DefenseTelemetry, StopReason, System,
 };
 use crate::util::threads::parallel_map;
+use crate::workload::{ClientLoop, ClientTelemetry, RETRY_ID_BASE};
 
 /// How long past the trace end the simulator may drain in-flight requests
 /// (mirrors the goodput harness).
@@ -119,6 +121,19 @@ pub struct AutoscaleTelemetry {
     pub final_macros: Vec<usize>,
 }
 
+/// What the closed loop and the coordinator defenses did during an
+/// overload cell — assembled from the client's counters and the system's
+/// [`DefenseTelemetry`] after the run.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct OverloadTelemetry {
+    /// Client-side counters (timeouts, rejections observed, retries,
+    /// give-ups, confirmed first tokens).
+    pub client: ClientTelemetry,
+    /// Coordinator-side defense counters; `None` when the system ran
+    /// undefended (or the ablation nulled its defense set).
+    pub defense: Option<DefenseTelemetry>,
+}
+
 /// One system's outcome on one scenario.
 #[derive(Debug)]
 pub struct SystemRow {
@@ -154,6 +169,9 @@ pub struct SystemRow {
     /// Present when the run saw injected faults (churn scenarios run
     /// with a fault seed): what the system's recovery machinery did.
     pub churn: Option<ChurnTelemetry>,
+    /// Present when the spec attached a closed-loop client or armed the
+    /// coordinator defenses: what the loop and the defenses did.
+    pub overload: Option<OverloadTelemetry>,
 }
 
 impl SystemRow {
@@ -273,6 +291,48 @@ pub fn run_system_variant(
     exp.seed = cfg.seed;
     exp.duration = duration;
     exp.warmup = warmup;
+    // Coordinator-side defenses ride the system params: PaDG builds its
+    // full defense set from them, the baselines their native queue cap,
+    // and the ablation nulls both without touching anything else.
+    exp.params.defense = spec.defense;
+    exp.params.ablate_no_shedding = spec.ablate_no_shedding;
+
+    // The closed-loop client. Its timeout is clamped to the loosest
+    // class TTFT SLO so every timed-out attempt is an SLO violation too
+    // — scoring stays anchored on first attempts either way, but the
+    // clamp keeps "timed out" and "missed SLO" from ever disagreeing.
+    let mut client = spec.client.map(|mut policy| {
+        let loosest = scenario
+            .classes
+            .iter()
+            .map(|c| c.dataset.slo_ttft)
+            .fold(0.0_f64, f64::max);
+        policy.timeout_s = policy.timeout_s.max(loosest);
+        ClientLoop::new(policy)
+    });
+
+    // Priority ranking for the defended coordinator's triage: tighter
+    // TTFT classes rank higher (0 sheds last), retry attempts rank
+    // strictly worst so the storm is shed before first-attempt traffic.
+    // Synthetic traces tag classes as the id residue; replayed logs
+    // carry a side table instead, but replay cells are single-class in
+    // practice and a rank-0 miss only makes shedding less aggressive.
+    let ranker: Option<ClassRanker> = spec.defense.map(|_| {
+        let ttfts: Vec<f64> = scenario.classes.iter().map(|c| c.dataset.slo_ttft).collect();
+        let rank_of_class: Vec<usize> = ttfts
+            .iter()
+            .map(|t| ttfts.iter().filter(|u| **u < *t).count())
+            .collect();
+        let worst = rank_of_class.len();
+        let n = rank_of_class.len() as u64;
+        std::sync::Arc::new(move |id: u64| {
+            if id >= RETRY_ID_BASE {
+                worst
+            } else {
+                rank_of_class[(id % n) as usize]
+            }
+        }) as ClassRanker
+    });
 
     // Pooled: suite runs execute many cells per worker thread, and the
     // collector's maps/vecs are the largest per-run allocations.
@@ -293,7 +353,7 @@ pub fn run_system_variant(
             panic!("streamed trace '{}' unreadable: {e:#}", stream.source())
         })
     });
-    let (stats, autoscale, churn) = match &spec.variant.autoscale {
+    let (stats, autoscale, churn, defense_t) = match &spec.variant.autoscale {
         Some(policy) if kind == SystemKind::EcoServe => {
             let mut sys = EcoServeSystem::with_autoscale(
                 &exp.deployment,
@@ -301,20 +361,39 @@ pub fn run_system_variant(
                 exp.params.clone(),
                 policy.clone(),
             );
+            if let Some(r) = ranker {
+                sys.set_class_ranker(r);
+            }
             let initial = sys.active_count();
             let stats = match source.as_mut() {
-                Some(arr) => run_source_faulted(
+                Some(arr) => run_source_faulted_client(
                     &mut sys,
                     arr,
                     fault_events.as_deref().unwrap_or(&[]),
+                    client.as_mut(),
                     horizon,
                     &mut metrics,
                     stop_early,
                 ),
                 None => match &fault_events {
-                    Some(ev) => {
-                        run_faulted(&mut sys, trace, ev, horizon, &mut metrics, stop_early)
-                    }
+                    Some(ev) => run_faulted_client(
+                        &mut sys,
+                        trace,
+                        ev,
+                        client.as_mut(),
+                        horizon,
+                        &mut metrics,
+                        stop_early,
+                    ),
+                    None if client.is_some() => run_faulted_client(
+                        &mut sys,
+                        trace,
+                        &[],
+                        client.as_mut(),
+                        horizon,
+                        &mut metrics,
+                        stop_early,
+                    ),
                     None => run_abandonable(&mut sys, trace, horizon, &mut metrics, stop_early),
                 },
             };
@@ -335,38 +414,67 @@ pub fn run_system_variant(
                 final_macros: sys.mitosis.macro_sizes(),
             };
             let churn = sys.churn_telemetry();
-            (stats, Some(telemetry), churn)
+            let defense_t = sys.defense_telemetry();
+            (stats, Some(telemetry), churn, defense_t)
         }
         _ => {
             let mut system = build_system(kind, &exp, None);
+            if let Some(r) = ranker {
+                system.set_class_ranker(r);
+            }
             let stats = match source.as_mut() {
-                Some(arr) => run_source_faulted(
+                Some(arr) => run_source_faulted_client(
                     system.as_mut(),
                     arr,
                     fault_events.as_deref().unwrap_or(&[]),
+                    client.as_mut(),
                     horizon,
                     &mut metrics,
                     stop_early,
                 ),
                 None => match &fault_events {
-                    Some(ev) => {
-                        run_faulted(system.as_mut(), trace, ev, horizon, &mut metrics, stop_early)
-                    }
+                    Some(ev) => run_faulted_client(
+                        system.as_mut(),
+                        trace,
+                        ev,
+                        client.as_mut(),
+                        horizon,
+                        &mut metrics,
+                        stop_early,
+                    ),
+                    None if client.is_some() => run_faulted_client(
+                        system.as_mut(),
+                        trace,
+                        &[],
+                        client.as_mut(),
+                        horizon,
+                        &mut metrics,
+                        stop_early,
+                    ),
                     None => {
                         run_abandonable(system.as_mut(), trace, horizon, &mut metrics, stop_early)
                     }
                 },
             };
             let churn = system.churn_telemetry();
-            (stats, None, churn)
+            let defense_t = system.defense_telemetry();
+            (stats, None, churn, defense_t)
         }
     };
 
     // Borrow-based windowed scoring: the collector's view respects the
     // monitor's decision snapshot and never clones the record log.
+    // Goodput is anchored on FIRST attempts: retry re-arrivals carry
+    // fresh ids past `RETRY_ID_BASE` and are excluded from scoring — a
+    // retried request that eventually finishes was still a failure at
+    // its original deadline, and counting retry completions would let a
+    // collapsing system fake a flat goodput curve.
     let mut met_per_class = vec![0usize; n_classes];
     let mut completed = 0usize;
     for rec in metrics.window_records(warmup, duration) {
+        if rec.id >= RETRY_ID_BASE {
+            continue;
+        }
         completed += 1;
         let k = scenario.class_of(rec.id);
         let d = &scenario.classes[k].dataset;
@@ -401,7 +509,13 @@ pub fn run_system_variant(
         met,
         attainment: if arrived == 0 { 1.0 } else { met as f64 / arrived as f64 },
         goodput_rps: met as f64 / window,
-        summary: summarize_from(metrics.window_records(warmup, duration), &sched_slo, window),
+        summary: summarize_from(
+            metrics
+                .window_records(warmup, duration)
+                .filter(|r| r.id < RETRY_ID_BASE),
+            &sched_slo,
+            window,
+        ),
         classes,
         events: stats.events,
         events_saved: stats.events_saved,
@@ -410,6 +524,10 @@ pub fn run_system_variant(
         wall: stats.wall_time,
         autoscale,
         churn,
+        overload: (client.is_some() || defense_t.is_some()).then(|| OverloadTelemetry {
+            client: client.as_ref().map(|c| c.telemetry()).unwrap_or_default(),
+            defense: defense_t,
+        }),
     };
     metrics.release();
     row
@@ -622,6 +740,51 @@ mod tests {
         assert!(legacy.min_class_attainment() < 0.90 - 1e-12);
         assert!(!legacy.abandoned);
         assert_eq!(legacy.events_saved, 0);
+    }
+
+    #[test]
+    fn overload_cell_reports_client_and_defense_telemetry() {
+        use crate::config::DefenseConfig;
+        let s = by_name("retry-storm").unwrap();
+        let mut cfg = quick_cfg();
+        cfg.rate = Some(12.0); // far past 4 instances' capacity
+        let profile = s.overload.expect("retry-storm carries a profile");
+
+        // Plain cell: no overload block — the pre-overload surface.
+        let plain = run_system(&s, &cfg, SystemKind::EcoServe);
+        assert!(plain.overload.is_none());
+
+        // Client-on undefended: the loop must observe timeouts and retry.
+        let spec = RunSpec::new(SystemKind::EcoServe).with_client(profile.client);
+        let row = run_system_variant(&s, &cfg, &spec);
+        let t = row.overload.expect("client => overload telemetry");
+        assert!(t.defense.is_none(), "undefended run has no defense block");
+        assert!(t.client.timeouts > 0, "deep overload must time clients out: {:?}", t.client);
+        assert!(t.client.retries > 0, "{:?}", t.client);
+        // First-attempt anchoring: the scored population never exceeds
+        // the open-loop arrivals even though retries re-enter the system.
+        assert_eq!(row.arrived, plain.arrived);
+
+        // Defended PaDG: sheds show up in the defense block.
+        let spec = RunSpec::new(SystemKind::EcoServe)
+            .with_client(profile.client)
+            .with_defense(DefenseConfig::default());
+        let defended = run_system_variant(&s, &cfg, &spec);
+        let d = defended
+            .overload
+            .and_then(|t| t.defense)
+            .expect("defended run carries defense counters");
+        assert!(d.sheds() > 0, "{d:?}");
+
+        // The ablation nulls the defense block but keeps the client loop.
+        let spec = RunSpec::new(SystemKind::EcoServe)
+            .with_client(profile.client)
+            .with_defense(DefenseConfig::default())
+            .without_shedding();
+        let ablated = run_system_variant(&s, &cfg, &spec);
+        let t = ablated.overload.expect("client still attached");
+        assert!(t.defense.is_none(), "ablation must silence the defense block");
+        assert!(t.client.retries > 0);
     }
 
     #[test]

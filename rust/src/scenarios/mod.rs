@@ -30,11 +30,16 @@
 //! * [`churn`] — the clean-vs-faulted pairing behind `ecoserve scenarios
 //!   --churn-out`: goodput retained under churn per system, with the
 //!   recovery telemetry each system's fault handling accumulated.
+//! * [`overload`] — the undefended-vs-defended load sweep behind
+//!   `ecoserve scenarios --overload-out`: closed-loop clients push each
+//!   system past saturation and the goodput-vs-offered-load curve shows
+//!   retry-amplified collapse vs the defended plateau.
 //! * [`report`] — the JSON contract (via [`crate::util::json`]) and the
 //!   human table.
 
 pub mod churn;
 pub mod driver;
+pub mod overload;
 pub mod registry;
 pub mod report;
 pub mod spec;
@@ -44,11 +49,17 @@ pub use churn::{
 };
 pub use driver::{
     run_scenario, run_suite, run_system, run_system_variant, AutoscaleTelemetry,
-    ClassScore, ScenarioConfig, ScenarioOutcome, SystemRow, VariantSpec,
+    ClassScore, OverloadTelemetry, ScenarioConfig, ScenarioOutcome, SystemRow, VariantSpec,
 };
-pub use registry::{by_name, registry, LoadShape, Scenario, SweepBounds, TrafficClass};
+pub use overload::{
+    overload_to_json, render_overload_table, run_overload_suite, OverloadCell,
+    OverloadOutcome, OverloadRow,
+};
+pub use registry::{
+    by_name, registry, LoadShape, OverloadProfile, Scenario, SweepBounds, TrafficClass,
+};
 pub use report::{
-    churn_telemetry_to_json, class_to_json, deployment_to_json, render_table,
-    replay_to_json, row_to_json, suite_to_json, SCHEMA_VERSION,
+    churn_telemetry_to_json, class_to_json, deployment_to_json, overload_telemetry_to_json,
+    render_table, replay_to_json, row_to_json, suite_to_json, SCHEMA_VERSION,
 };
 pub use spec::RunSpec;

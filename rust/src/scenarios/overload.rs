@@ -1,0 +1,367 @@
+//! The overload evaluation: each overload scenario sweeps its load
+//! points with closed-loop clients attached (timeouts, bounded retries,
+//! jittered backoff), and every system runs each point twice — once
+//! undefended (the system's pre-defense behaviour, so timed-out work is
+//! still served and retries amplify the offered load) and once defended
+//! (PaDG's full shed/brownout set; the baselines' native bounded queue).
+//!
+//! ```text
+//! ecoserve scenarios --scenario retry-storm --overload-out BENCH_overload.json
+//! ```
+//!
+//! The headline metric is the goodput-vs-offered-load curve past
+//! saturation: an undefended system collapses (goodput *falls* as load
+//! rises — servers burn capacity on attempts whose clients already gave
+//! up), while a defended coordinator sheds early and plateaus. The JSON
+//! artifact (`BENCH_overload.json`) embeds the full per-cell system rows
+//! (the suite-report shape, including client and defense telemetry)
+//! under the shared [`super::report::SCHEMA_VERSION`].
+
+use std::time::Duration;
+
+use super::driver::{run_system_variant, ScenarioConfig, SystemRow};
+use super::registry::Scenario;
+use super::report::{deployment_to_json, row_to_json, SCHEMA_VERSION};
+use super::spec::RunSpec;
+use crate::config::{DefenseConfig, SystemKind};
+use crate::util::json::Json;
+use crate::util::threads::parallel_map;
+
+/// One (system × load point) pairing: the same closed-loop cell run
+/// undefended and defended.
+#[derive(Debug)]
+pub struct OverloadCell {
+    /// Offered-load multiplier (× the swept base rate).
+    pub load_mult: f64,
+    /// Offered rate actually driven, req/s.
+    pub rate: f64,
+    /// Client-on, defenses off — native pre-defense handling.
+    pub undefended: SystemRow,
+    /// Client-on, defenses armed (PaDG full set; baselines queue cap).
+    pub defended: SystemRow,
+}
+
+/// One system's goodput curve across a scenario's load points.
+#[derive(Debug)]
+pub struct OverloadRow {
+    pub system: SystemKind,
+    /// One cell per load point, ascending with the profile's multipliers.
+    pub cells: Vec<OverloadCell>,
+}
+
+impl OverloadRow {
+    /// Undefended goodput at each load point (the collapse curve).
+    pub fn undefended_goodputs(&self) -> Vec<f64> {
+        self.cells.iter().map(|c| c.undefended.goodput_rps).collect()
+    }
+
+    /// Defended goodput at each load point (the plateau curve).
+    pub fn defended_goodputs(&self) -> Vec<f64> {
+        self.cells.iter().map(|c| c.defended.goodput_rps).collect()
+    }
+
+    /// Goodput at the heaviest load point relative to the first — below
+    /// 1.0 means offering *more* load delivered *less* goodput.
+    fn retained_at_peak(curve: &[f64]) -> f64 {
+        match (curve.first(), curve.last()) {
+            (Some(&first), Some(&last)) if first > 0.0 => last / first,
+            _ => 1.0,
+        }
+    }
+
+    pub fn undefended_retained_at_peak(&self) -> f64 {
+        Self::retained_at_peak(&self.undefended_goodputs())
+    }
+
+    pub fn defended_retained_at_peak(&self) -> f64 {
+        Self::retained_at_peak(&self.defended_goodputs())
+    }
+
+    /// Defended / undefended goodput at the heaviest load point — the
+    /// value the defenses buy exactly where it matters.
+    pub fn defended_gain_at_peak(&self) -> f64 {
+        match self.cells.last() {
+            Some(c) if c.undefended.goodput_rps > 0.0 => {
+                c.defended.goodput_rps / c.undefended.goodput_rps
+            }
+            _ => 1.0,
+        }
+    }
+}
+
+/// All systems' curves on one overload scenario.
+#[derive(Debug)]
+pub struct OverloadOutcome {
+    pub scenario: Scenario,
+    /// Rate the multipliers scale (CLI `--rate` or the scenario default).
+    pub base_rate: f64,
+    pub load_points: Vec<f64>,
+    pub rows: Vec<OverloadRow>,
+}
+
+impl OverloadOutcome {
+    /// The row with the highest defended goodput at the heaviest point.
+    pub fn best(&self) -> Option<&OverloadRow> {
+        self.rows.iter().max_by(|a, b| {
+            let g = |r: &OverloadRow| {
+                r.cells.last().map(|c| c.defended.goodput_rps).unwrap_or(0.0)
+            };
+            g(a).partial_cmp(&g(b)).unwrap_or(std::cmp::Ordering::Equal)
+        })
+    }
+}
+
+/// Run the undefended-vs-defended pairing for every (overload scenario ×
+/// system × load point) as one parallel job pool. Scenarios without an
+/// overload profile are skipped (they define no load sweep or client).
+pub fn run_overload_suite(
+    scenarios: &[Scenario],
+    cfg: &ScenarioConfig,
+    systems: &[SystemKind],
+    workers: usize,
+) -> Vec<OverloadOutcome> {
+    let list: Vec<&Scenario> = scenarios.iter().filter(|s| s.overload.is_some()).collect();
+
+    // Every half-cell is an independent simulation; push the pairs
+    // adjacently so `parallel_map`'s order-preservation hands them back
+    // paired, mirroring the churn suite.
+    let mut jobs: Vec<(usize, usize, usize, bool)> = Vec::new();
+    for si in 0..list.len() {
+        let profile = list[si].overload.expect("filtered on overload profiles");
+        for ki in 0..systems.len() {
+            for pi in 0..profile.load_points.len() {
+                jobs.push((si, ki, pi, false));
+                jobs.push((si, ki, pi, true));
+            }
+        }
+    }
+    let rows = parallel_map(jobs, workers.max(1), |(si, ki, pi, defended)| {
+        let s = list[si];
+        let profile = s.overload.expect("filtered on overload profiles");
+        let base = cfg.rate.unwrap_or(s.default_rate);
+        let mut cell_cfg = cfg.clone();
+        cell_cfg.rate = Some(base * profile.load_points[pi]);
+        let mut spec = RunSpec::new(systems[ki]).with_client(profile.client);
+        if defended {
+            spec = spec.with_defense(DefenseConfig::default());
+        }
+        run_system_variant(s, &cell_cfg, &spec)
+    });
+
+    let mut outcomes: Vec<OverloadOutcome> = list
+        .iter()
+        .map(|s| {
+            let profile = s.overload.expect("filtered on overload profiles");
+            OverloadOutcome {
+                scenario: (*s).clone(),
+                base_rate: cfg.rate.unwrap_or(s.default_rate),
+                load_points: profile.load_points.to_vec(),
+                rows: Vec::new(),
+            }
+        })
+        .collect();
+    let mut rows = rows.into_iter();
+    for outcome in &mut outcomes {
+        for &kind in systems {
+            let mut cells = Vec::with_capacity(outcome.load_points.len());
+            for &mult in &outcome.load_points {
+                let undefended = rows.next().expect("one undefended half per point");
+                let defended = rows.next().expect("one defended half per point");
+                cells.push(OverloadCell {
+                    load_mult: mult,
+                    rate: outcome.base_rate * mult,
+                    undefended,
+                    defended,
+                });
+            }
+            outcome.rows.push(OverloadRow { system: kind, cells });
+        }
+    }
+    outcomes
+}
+
+fn row_json(r: &OverloadRow) -> Json {
+    Json::obj(vec![
+        ("system", Json::str(r.system.label())),
+        (
+            "undefended_goodput_rps",
+            Json::arr(r.undefended_goodputs().into_iter().map(Json::num)),
+        ),
+        (
+            "defended_goodput_rps",
+            Json::arr(r.defended_goodputs().into_iter().map(Json::num)),
+        ),
+        ("undefended_retained_at_peak", Json::num(r.undefended_retained_at_peak())),
+        ("defended_retained_at_peak", Json::num(r.defended_retained_at_peak())),
+        ("defended_gain_at_peak", Json::num(r.defended_gain_at_peak())),
+        (
+            "cells",
+            Json::arr(r.cells.iter().map(|c| {
+                Json::obj(vec![
+                    ("load_mult", Json::num(c.load_mult)),
+                    ("offered_rate_rps", Json::num(c.rate)),
+                    ("undefended", row_to_json(&c.undefended)),
+                    ("defended", row_to_json(&c.defended)),
+                ])
+            })),
+        ),
+    ])
+}
+
+fn outcome_to_json(o: &OverloadOutcome) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(o.scenario.name)),
+        ("summary", Json::str(o.scenario.summary)),
+        ("base_rate_rps", Json::num(o.base_rate)),
+        ("load_points", Json::arr(o.load_points.iter().copied().map(Json::num))),
+        (
+            "best_system",
+            match o.best() {
+                Some(r) => Json::str(r.system.label()),
+                None => Json::Null,
+            },
+        ),
+        ("systems", Json::arr(o.rows.iter().map(row_json))),
+    ])
+}
+
+/// The `BENCH_overload.json` artifact.
+pub fn overload_to_json(
+    outcomes: &[OverloadOutcome],
+    cfg: &ScenarioConfig,
+    wall: Duration,
+) -> Json {
+    Json::obj(vec![
+        ("bench", Json::str("ecoserve-overload")),
+        ("schema_version", Json::num(SCHEMA_VERSION)),
+        ("seed", Json::num(cfg.seed as f64)),
+        ("deployment", deployment_to_json(&cfg.deployment)),
+        ("wall_s", Json::num(wall.as_secs_f64())),
+        ("scenarios", Json::arr(outcomes.iter().map(outcome_to_json))),
+    ])
+}
+
+/// Human-readable table for one overload outcome.
+pub fn render_overload_table(o: &OverloadOutcome) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "--- overload '{}' base {:.2} req/s, load points {:?} ---\n",
+        o.scenario.name, o.base_rate, o.load_points
+    ));
+    out.push_str(&format!(
+        "{:<10} {:>5} {:>11} {:>11} {:>8} {:>8} {:>7} {:>7}\n",
+        "system", "load", "undef g/s", "defend g/s", "timeouts", "retries", "sheds", "brown s"
+    ));
+    for r in &o.rows {
+        for c in &r.cells {
+            let ct = c.undefended.overload.map(|t| t.client).unwrap_or_default();
+            let dt = c.defended.overload.and_then(|t| t.defense).unwrap_or_default();
+            out.push_str(&format!(
+                "{:<10} {:>4.2}x {:>11.2} {:>11.2} {:>8} {:>8} {:>7} {:>7.1}\n",
+                r.system.label(),
+                c.load_mult,
+                c.undefended.goodput_rps,
+                c.defended.goodput_rps,
+                ct.timeouts,
+                ct.retries,
+                dt.sheds(),
+                dt.brownout_s,
+            ));
+        }
+    }
+    if let Some(best) = o.best() {
+        out.push_str(&format!("  best past saturation: {}\n", best.system.label()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenarios::registry::by_name;
+
+    fn quick_cfg() -> ScenarioConfig {
+        let mut cfg = ScenarioConfig::default_l20();
+        cfg.deployment.gpus_used = 16; // 4 instances — fast tests
+        cfg.duration_override = Some(60.0);
+        cfg.rate = Some(3.0); // near the 4-instance knee; points sweep past it
+        cfg
+    }
+
+    #[test]
+    fn suite_pairs_undefended_and_defended_cells_per_load_point() {
+        let s = by_name("retry-storm").unwrap();
+        let points = s.overload.unwrap().load_points.len();
+        let systems = [SystemKind::EcoServe, SystemKind::Vllm];
+        let outcomes = run_overload_suite(&[s], &quick_cfg(), &systems, 4);
+        assert_eq!(outcomes.len(), 1);
+        let o = &outcomes[0];
+        assert_eq!(o.rows.len(), 2);
+        for (row, kind) in o.rows.iter().zip(systems) {
+            assert_eq!(row.system, kind);
+            assert_eq!(row.cells.len(), points);
+            for c in &row.cells {
+                assert!((c.rate - o.base_rate * c.load_mult).abs() < 1e-12);
+                let u = c.undefended.overload.expect("client half carries telemetry");
+                assert!(u.defense.is_none(), "undefended half has no defense block");
+                let d = c.defended.overload.expect("defended half carries telemetry");
+                assert!(d.defense.is_some(), "defended half reports its defenses");
+            }
+            // Past saturation the closed loop must actually fire.
+            let top = row.cells.last().unwrap();
+            let ct = top.undefended.overload.unwrap().client;
+            assert!(ct.timeouts > 0, "{:?}", ct);
+            assert!(ct.retries > 0, "{:?}", ct);
+        }
+    }
+
+    #[test]
+    fn scenarios_without_profiles_are_skipped() {
+        let scenarios = vec![by_name("steady").unwrap(), by_name("retry-storm").unwrap()];
+        let outcomes =
+            run_overload_suite(&scenarios, &quick_cfg(), &[SystemKind::EcoServe], 2);
+        assert_eq!(outcomes.len(), 1);
+        assert_eq!(outcomes[0].scenario.name, "retry-storm");
+    }
+
+    #[test]
+    fn overload_json_has_the_contract_fields_and_roundtrips() {
+        let s = by_name("retry-storm").unwrap();
+        let cfg = quick_cfg();
+        let outcomes = run_overload_suite(&[s], &cfg, &[SystemKind::EcoServe], 2);
+        let j = overload_to_json(&outcomes, &cfg, Duration::from_secs(1));
+        let text = j.to_string();
+        let back = Json::parse(&text).expect("valid JSON");
+        assert_eq!(back.get("bench").unwrap().as_str(), Some("ecoserve-overload"));
+        for key in ["schema_version", "seed", "deployment", "wall_s", "scenarios"] {
+            assert!(back.get(key).is_some(), "missing {key}");
+        }
+        let sc = &back.get("scenarios").unwrap().as_arr().unwrap()[0];
+        assert_eq!(sc.get("name").unwrap().as_str(), Some("retry-storm"));
+        assert!(sc.get("load_points").unwrap().as_arr().unwrap().len() >= 2);
+        let sys = &sc.get("systems").unwrap().as_arr().unwrap()[0];
+        for key in [
+            "undefended_goodput_rps",
+            "defended_goodput_rps",
+            "undefended_retained_at_peak",
+            "defended_retained_at_peak",
+            "defended_gain_at_peak",
+        ] {
+            assert!(sys.get(key).is_some(), "missing {key}");
+        }
+        let cell = &sys.get("cells").unwrap().as_arr().unwrap()[0];
+        assert!(cell.path(&["undefended", "overload", "client", "retries"]).is_some());
+        assert!(
+            cell.path(&["defended", "overload", "defense", "sheds"]).is_some(),
+            "defended half must serialize its defense block"
+        );
+        assert!(
+            cell.path(&["undefended", "overload", "defense"]).is_none(),
+            "undefended half carries no defense block"
+        );
+        // The table renders the curve columns.
+        let table = render_overload_table(&outcomes[0]);
+        assert!(table.contains("undef g/s"));
+        assert!(table.contains("EcoServe"));
+    }
+}

@@ -15,7 +15,7 @@ use anyhow::Result;
 use crate::sim::ChurnProfile;
 use crate::workload::import::StreamedTrace;
 use crate::workload::replay::{leak, render_log, ReplayClass, ReplayRecord, ReplayTrace};
-use crate::workload::{Dataset, RampTrace, Request, TraceGenerator};
+use crate::workload::{ClientPolicy, Dataset, RampTrace, Request, TraceGenerator};
 
 /// One class of traffic inside a scenario. `share` is this class's
 /// fraction of the scenario's total offered rate; shares sum to 1.
@@ -169,6 +169,21 @@ impl SweepBounds {
     }
 }
 
+/// Closed-loop overload probe attached to a scenario: which offered-load
+/// multipliers the overload suite sweeps and how the clients behave
+/// (TTFT timeout, bounded retries, jittered backoff) while sweeping
+/// them. The suite reads the goodput-vs-offered-load curve across
+/// `load_points`: past saturation an undefended system collapses —
+/// timed-out work is still served and retries amplify the offered load —
+/// while a defended coordinator sheds early and plateaus.
+#[derive(Debug, Clone, Copy)]
+pub struct OverloadProfile {
+    /// Offered-load multipliers (× the probed base rate), ascending.
+    pub load_points: &'static [f64],
+    /// Closed-loop client behaviour at every load point.
+    pub client: ClientPolicy,
+}
+
 /// A named workload scenario.
 #[derive(Debug, Clone)]
 pub struct Scenario {
@@ -191,6 +206,10 @@ pub struct Scenario {
     /// is supplied, so the same (scenario, fault seed) pair always
     /// replays the identical outage timeline.
     pub churn: Option<ChurnProfile>,
+    /// Closed-loop overload probe (`None` = open loop only). The
+    /// overload suite (`--overload-out`) runs each load point
+    /// undefended-vs-defended with this profile's client model.
+    pub overload: Option<OverloadProfile>,
 }
 
 impl Scenario {
@@ -358,6 +377,7 @@ impl Scenario {
             default_rate: native_rate,
             sweep: SweepBounds::around(native_rate),
             churn: None,
+            overload: None,
         }
     }
 
@@ -407,6 +427,7 @@ impl Scenario {
             default_rate: native_rate,
             sweep: SweepBounds::around(native_rate),
             churn: None,
+            overload: None,
         }
     }
 
@@ -465,6 +486,7 @@ pub fn registry() -> Vec<Scenario> {
             default_rate: 8.0,
             sweep: SweepBounds::around(8.0),
             churn: None,
+            overload: None,
         },
         Scenario {
             name: "bursty",
@@ -477,6 +499,7 @@ pub fn registry() -> Vec<Scenario> {
             default_rate: 6.0,
             sweep: SweepBounds::around(6.0),
             churn: None,
+            overload: None,
         },
         Scenario {
             name: "diurnal",
@@ -488,6 +511,7 @@ pub fn registry() -> Vec<Scenario> {
             default_rate: 7.0,
             sweep: SweepBounds::around(7.0),
             churn: None,
+            overload: None,
         },
         Scenario {
             name: "multiday",
@@ -505,6 +529,7 @@ pub fn registry() -> Vec<Scenario> {
             default_rate: 6.0,
             sweep: SweepBounds::around(6.0),
             churn: None,
+            overload: None,
         },
         Scenario {
             name: "heavy-tail",
@@ -517,6 +542,7 @@ pub fn registry() -> Vec<Scenario> {
             default_rate: 2.5,
             sweep: SweepBounds::around(2.5),
             churn: None,
+            overload: None,
         },
         Scenario {
             name: "mixed-slo",
@@ -532,6 +558,7 @@ pub fn registry() -> Vec<Scenario> {
             default_rate: 6.0,
             sweep: SweepBounds::around(6.0),
             churn: None,
+            overload: None,
         },
         Scenario {
             name: "surge",
@@ -544,6 +571,7 @@ pub fn registry() -> Vec<Scenario> {
             default_rate: 6.0,
             sweep: SweepBounds::around(6.0),
             churn: None,
+            overload: None,
         },
         Scenario {
             name: "steady+churn",
@@ -556,6 +584,7 @@ pub fn registry() -> Vec<Scenario> {
             default_rate: 6.0,
             sweep: SweepBounds::around(6.0),
             churn: Some(ChurnProfile::crashes(45.0, 20.0)),
+            overload: None,
         },
         Scenario {
             name: "surge+preemption",
@@ -568,6 +597,7 @@ pub fn registry() -> Vec<Scenario> {
             default_rate: 5.0,
             sweep: SweepBounds::around(5.0),
             churn: Some(ChurnProfile::preemptions(60.0, 10.0, 30.0)),
+            overload: None,
         },
         Scenario {
             name: "spot-decode-reclaim",
@@ -580,6 +610,58 @@ pub fn registry() -> Vec<Scenario> {
             default_rate: 6.0,
             sweep: SweepBounds::around(6.0),
             churn: Some(ChurnProfile::preemptions(50.0, 1.0, 25.0)),
+            overload: None,
+        },
+        Scenario {
+            name: "overload-sustained",
+            summary: "sustained 1x..3x saturation on ShareGPT with closed-loop \
+                      clients (patient timeout/retry) — the goodput-vs-offered-load \
+                      curve past the knee",
+            classes: single("chat", Dataset::sharegpt()),
+            shape: LoadShape::Steady,
+            duration: 240.0,
+            warmup: 30.0,
+            default_rate: 8.0,
+            sweep: SweepBounds::around(8.0),
+            churn: None,
+            overload: Some(OverloadProfile {
+                load_points: &[1.0, 1.5, 2.25, 3.0],
+                client: ClientPolicy::standard(),
+            }),
+        },
+        Scenario {
+            name: "retry-storm",
+            summary: "flash crowd with impatient clients (short timeout, 4 retries, \
+                      short backoff) — rejected and timed-out attempts re-arrive and \
+                      amplify the spike they are stuck behind",
+            classes: single("chat", Dataset::sharegpt()),
+            shape: LoadShape::OnOff { period: 120.0, duty: 0.4, peak_to_mean: 2.2 },
+            duration: 240.0,
+            warmup: 30.0,
+            default_rate: 7.0,
+            sweep: SweepBounds::around(7.0),
+            churn: None,
+            overload: Some(OverloadProfile {
+                load_points: &[1.0, 2.0],
+                client: ClientPolicy::aggressive(),
+            }),
+        },
+        Scenario {
+            name: "slow-drain",
+            summary: "one 2.5x burst then a long half-rate tail — does goodput \
+                      recover once the storm passes, or does the retry backlog keep \
+                      the fleet pinned",
+            classes: single("chat", Dataset::sharegpt()),
+            shape: LoadShape::OnOff { period: 300.0, duty: 0.25, peak_to_mean: 2.5 },
+            duration: 300.0,
+            warmup: 30.0,
+            default_rate: 6.0,
+            sweep: SweepBounds::around(6.0),
+            churn: None,
+            overload: Some(OverloadProfile {
+                load_points: &[1.0, 1.75],
+                client: ClientPolicy::standard(),
+            }),
         },
     ]
 }
@@ -656,6 +738,30 @@ mod tests {
                 8,
             );
             assert!(!sched.is_empty(), "{name}: empty generated schedule");
+        }
+    }
+
+    #[test]
+    fn overload_scenarios_carry_profiles_with_ascending_load_points() {
+        let names: Vec<&str> = registry()
+            .iter()
+            .filter(|s| s.overload.is_some())
+            .map(|s| s.name)
+            .collect();
+        assert_eq!(names, vec!["overload-sustained", "retry-storm", "slow-drain"]);
+        for s in registry() {
+            let Some(p) = s.overload else { continue };
+            assert!(p.load_points.len() >= 2, "{}: need a curve, not a point", s.name);
+            for w in p.load_points.windows(2) {
+                assert!(w[0] < w[1], "{}: load points must ascend", s.name);
+            }
+            assert!(
+                p.load_points[0] >= 1.0 - 1e-9,
+                "{}: the sweep starts at the nominal operating point",
+                s.name
+            );
+            assert!(p.client.max_retries > 0 && p.client.timeout_s > 0.0, "{}", s.name);
+            assert!(s.churn.is_none(), "{}: overload scenarios run fault-free", s.name);
         }
     }
 

@@ -82,6 +82,42 @@ pub fn row_to_json(row: &SystemRow) -> Json {
     if let Some(c) = &row.churn {
         fields.push(("churn", churn_telemetry_to_json(c)));
     }
+    if let Some(o) = &row.overload {
+        fields.push(("overload", overload_telemetry_to_json(o)));
+    }
+    Json::obj(fields)
+}
+
+/// The closed-loop/defense block attached to rows of overload cells
+/// (absent on open-loop runs — additive, like the churn block). The
+/// `defense` sub-object is itself absent when the system ran undefended
+/// or the ablation nulled its defense set.
+pub fn overload_telemetry_to_json(o: &super::driver::OverloadTelemetry) -> Json {
+    let c = &o.client;
+    let mut fields = vec![(
+        "client",
+        Json::obj(vec![
+            ("timeouts", Json::num(c.timeouts as f64)),
+            ("rejected", Json::num(c.rejected as f64)),
+            ("retries", Json::num(c.retries as f64)),
+            ("gave_up", Json::num(c.gave_up as f64)),
+            ("succeeded", Json::num(c.succeeded as f64)),
+        ]),
+    )];
+    if let Some(d) = &o.defense {
+        fields.push((
+            "defense",
+            Json::obj(vec![
+                ("deadline_rejects", Json::num(d.deadline_rejects as f64)),
+                ("priority_sheds", Json::num(d.priority_sheds as f64)),
+                ("hopeless_sheds", Json::num(d.hopeless_sheds as f64)),
+                ("queue_full_rejects", Json::num(d.queue_full_rejects as f64)),
+                ("sheds", Json::num(d.sheds() as f64)),
+                ("brownout_s", Json::num(d.brownout_s)),
+                ("brownout_truncations", Json::num(d.brownout_truncations as f64)),
+            ]),
+        ));
+    }
     Json::obj(fields)
 }
 
@@ -284,6 +320,7 @@ mod tests {
             default_rate: 2.0,
             sweep: SweepBounds::around(2.0),
             churn: None,
+            overload: None,
         };
         let row = SystemRow {
             system: SystemKind::EcoServe,
@@ -317,6 +354,7 @@ mod tests {
             wall: std::time::Duration::from_secs(2),
             autoscale: None,
             churn: None,
+            overload: None,
         };
         let outcome = ScenarioOutcome {
             scenario,

@@ -11,9 +11,10 @@
 //! tests — while [`RunSpec::for_cell`] derives the deterministic fault
 //! schedule for churn scenarios from `(scenario.churn, cfg.fault_seed)`.
 
-use crate::config::SystemKind;
+use crate::config::{DefenseConfig, SystemKind};
 use crate::metrics::AbandonPolicy;
 use crate::sim::FaultSchedule;
+use crate::workload::ClientPolicy;
 
 use super::driver::{ScenarioConfig, VariantSpec};
 use super::registry::Scenario;
@@ -31,6 +32,19 @@ pub struct RunSpec {
     /// Inject this fault timeline; `None` keeps the run on the exact
     /// fault-free code path.
     pub faults: Option<FaultSchedule>,
+    /// Closed-loop client model (per-request TTFT timeout, bounded
+    /// retries, jittered backoff) driving the cell; `None` keeps the
+    /// open-loop arrivals the pre-overload driver ran — bit-identical.
+    pub client: Option<ClientPolicy>,
+    /// Coordinator-side overload defenses for this cell. PaDG gets the
+    /// full set (deadline-aware admission, priority shedding, brownout);
+    /// baselines get only their native bounded waiting queue. `None`
+    /// keeps every system on its pre-defense behaviour.
+    pub defense: Option<DefenseConfig>,
+    /// Ablation switch mirroring the autoscale ablations: keep `defense`
+    /// configured but null the shedding machinery, so defended PaDG can
+    /// be scored against its own defenseless twin on the same trace.
+    pub ablate_no_shedding: bool,
 }
 
 impl RunSpec {
@@ -41,6 +55,9 @@ impl RunSpec {
             variant: VariantSpec::default(),
             abandon: None,
             faults: None,
+            client: None,
+            defense: None,
+            ablate_no_shedding: false,
         }
     }
 
@@ -64,6 +81,24 @@ impl RunSpec {
     /// Builder: inject a fault timeline.
     pub fn with_faults(mut self, faults: FaultSchedule) -> Self {
         self.faults = Some(faults);
+        self
+    }
+
+    /// Builder: attach the closed-loop client model.
+    pub fn with_client(mut self, policy: ClientPolicy) -> Self {
+        self.client = Some(policy);
+        self
+    }
+
+    /// Builder: arm the coordinator-side overload defenses.
+    pub fn with_defense(mut self, defense: DefenseConfig) -> Self {
+        self.defense = Some(defense);
+        self
+    }
+
+    /// Builder: keep the defenses configured but switch shedding off.
+    pub fn without_shedding(mut self) -> Self {
+        self.ablate_no_shedding = true;
         self
     }
 
@@ -124,16 +159,26 @@ mod tests {
 
     #[test]
     fn builder_composes() {
+        use crate::config::DefenseConfig;
+        use crate::workload::ClientPolicy;
         let spec = RunSpec::new(SystemKind::EcoServe)
             .autoscaled()
             .with_abandon(AbandonPolicy::stop_at(0.9))
-            .with_faults(FaultSchedule::none());
+            .with_faults(FaultSchedule::none())
+            .with_client(ClientPolicy::standard())
+            .with_defense(DefenseConfig::default())
+            .without_shedding();
         assert_eq!(spec.system, SystemKind::EcoServe);
         assert!(spec.variant.autoscale.is_some());
         assert!(spec.abandon.is_some_and(|p| p.stop_early));
         assert!(spec.faults.is_some());
+        assert!(spec.client.is_some());
+        assert!(spec.defense.is_some());
+        assert!(spec.ablate_no_shedding);
         let plain = RunSpec::new(SystemKind::Vllm);
         assert!(plain.variant.autoscale.is_none());
         assert!(plain.abandon.is_none() && plain.faults.is_none());
+        assert!(plain.client.is_none() && plain.defense.is_none());
+        assert!(!plain.ablate_no_shedding);
     }
 }

@@ -17,6 +17,7 @@ use std::collections::BinaryHeap;
 
 use crate::metrics::Collector;
 use crate::sim::faults::{ChurnTelemetry, FaultEvent};
+use crate::workload::client::ClientLoop;
 use crate::workload::Request;
 
 /// Events a serving system reacts to.
@@ -33,6 +34,10 @@ pub enum Event {
     /// An injected fault fires (crash, restart, preemption notice, link
     /// degradation) — see [`crate::sim::faults`].
     Fault(FaultEvent),
+    /// A closed-loop client's TTFT timer fires ([`crate::workload::client`]).
+    /// Engine-internal: never dispatched to a [`System`], and never
+    /// scheduled unless a client loop is attached to the run.
+    ClientCheck { id: u64 },
 }
 
 /// Total order wrapper: min-heap on (time, seq).
@@ -189,6 +194,48 @@ pub trait System {
     fn churn_telemetry(&self) -> Option<ChurnTelemetry> {
         None
     }
+    /// Overload-defense bookkeeping (sheds, brownout time); `None` when
+    /// the system ran without defenses, so defense-free reports stay
+    /// byte-identical.
+    fn defense_telemetry(&self) -> Option<DefenseTelemetry> {
+        None
+    }
+    /// Install the per-class priority ranker (request id → priority rank,
+    /// 0 = most latency-critical) used by priority shedding. Systems
+    /// without class-aware defenses ignore it.
+    fn set_class_ranker(&mut self, _ranker: ClassRanker) {}
+}
+
+/// Request id → priority rank for per-class shedding (0 sheds last).
+/// Built by the scenario driver from the scenario's class map.
+pub type ClassRanker = std::sync::Arc<dyn Fn(u64) -> usize + Send + Sync>;
+
+/// What a system's overload defenses did during a run; assembled into the
+/// report's `overload` block next to client telemetry.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct DefenseTelemetry {
+    /// Arrivals rejected because the queue-implied TTFT already blew the
+    /// SLO (deadline-aware admission control).
+    pub deadline_rejects: u64,
+    /// Arrivals shed because their class rank lost the priority triage.
+    pub priority_sheds: u64,
+    /// Backlogged requests shed after their own TTFT deadline passed
+    /// (instead of being force-admitted to die on an instance).
+    pub hopeless_sheds: u64,
+    /// Arrivals bounced by a plain bounded waiting queue — the only
+    /// defense the baseline stacks have natively.
+    pub queue_full_rejects: u64,
+    /// Simulated seconds spent in decode brownout.
+    pub brownout_s: f64,
+    /// Admissions whose decode length was capped by brownout.
+    pub brownout_truncations: u64,
+}
+
+impl DefenseTelemetry {
+    /// Total requests turned away by any defense.
+    pub fn sheds(&self) -> u64 {
+        self.deadline_rejects + self.priority_sheds + self.hopeless_sheds + self.queue_full_rejects
+    }
 }
 
 /// Why a simulation run ended.
@@ -288,9 +335,32 @@ pub fn run_source_until_faulted(
     faults: &[(f64, FaultEvent)],
     horizon: f64,
     metrics: &mut Collector,
+    stop: impl FnMut(f64, &Collector) -> bool,
+) -> RunStats {
+    run_core(system, arrivals, faults, None, horizon, metrics, stop)
+}
+
+/// The merge loop with an optional closed-loop client
+/// ([`crate::workload::client::ClientLoop`]) attached. With `client ==
+/// None` this *is* [`run_source_until_faulted`] — no extra events are
+/// scheduled, no reject tracking is armed, and the run is bit-identical
+/// to the clientless engine. With a client, every arrival arms a TTFT
+/// timer ([`Event::ClientCheck`]), timeouts and admission rejections
+/// feed retry re-arrivals back through the dynamic heap, and the
+/// client's telemetry accumulates in place.
+fn run_core(
+    system: &mut dyn System,
+    arrivals: impl Iterator<Item = Request>,
+    faults: &[(f64, FaultEvent)],
+    mut client: Option<&mut ClientLoop>,
+    horizon: f64,
+    metrics: &mut Collector,
     mut stop: impl FnMut(f64, &Collector) -> bool,
 ) -> RunStats {
     let wall_start = std::time::Instant::now();
+    if client.is_some() {
+        metrics.enable_reject_tracking();
+    }
     let allocs_start = crate::util::alloc::thread_allocs();
     let mut arrivals = arrivals.peekable();
     // Pooled: same observable state as `EventScheduler::new()`, but the
@@ -341,6 +411,9 @@ pub fn run_source_until_faulted(
         match event {
             Event::Arrival(req) => {
                 metrics.on_arrival(&req);
+                if let Some(c) = client.as_deref_mut() {
+                    c.on_arrival(&req, &mut sched);
+                }
                 system.on_arrival(req, now, &mut sched, metrics);
             }
             Event::InstanceWake { instance } => {
@@ -354,6 +427,19 @@ pub fn run_source_until_faulted(
             }
             Event::Fault(fault) => {
                 system.on_fault(fault, now, &mut sched, metrics);
+            }
+            Event::ClientCheck { id } => {
+                if let Some(c) = client.as_deref_mut() {
+                    c.on_check(id, now, &mut sched, metrics);
+                }
+            }
+        }
+        // Fast rejection feedback: hand freshly rejected ids to the
+        // client so it can back off and retry. Clientless runs never arm
+        // the queue, so this drains nothing there.
+        if let Some(c) = client.as_deref_mut() {
+            while let Some(id) = metrics.pop_client_reject() {
+                c.on_reject(id, now, &mut sched);
             }
         }
     }
@@ -425,6 +511,45 @@ pub fn run_source_faulted(
     }
 }
 
+/// [`run_source_faulted`] with a closed-loop client attached: the
+/// overload suite's engine entry point. `client = None` degrades to the
+/// clientless engine bit-for-bit.
+pub fn run_source_faulted_client(
+    system: &mut dyn System,
+    arrivals: impl Iterator<Item = Request>,
+    faults: &[(f64, FaultEvent)],
+    client: Option<&mut ClientLoop>,
+    horizon: f64,
+    metrics: &mut Collector,
+    stop_early: bool,
+) -> RunStats {
+    if stop_early {
+        run_core(system, arrivals, faults, client, horizon, metrics, |_, m: &Collector| {
+            m.decided()
+        })
+    } else {
+        run_core(system, arrivals, faults, client, horizon, metrics, |_, _| false)
+    }
+}
+
+/// [`run_faulted`] with a closed-loop client attached (Vec-trace
+/// convenience over [`run_source_faulted_client`], with the same
+/// sort-check as [`run_until_faulted`]).
+pub fn run_faulted_client(
+    system: &mut dyn System,
+    mut trace: Vec<Request>,
+    faults: &[(f64, FaultEvent)],
+    client: Option<&mut ClientLoop>,
+    horizon: f64,
+    metrics: &mut Collector,
+    stop_early: bool,
+) -> RunStats {
+    if !trace.windows(2).all(|w| w[0].arrival <= w[1].arrival) {
+        trace.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+    }
+    run_source_faulted_client(system, trace.into_iter(), faults, client, horizon, metrics, stop_early)
+}
+
 /// The original engine: preloads every trace arrival into the heap, so
 /// heap size starts at the full trace length. Retained purely as a
 /// differential-testing oracle for the cursor engine — tests pin that
@@ -451,8 +576,27 @@ pub fn reference_run_faulted(
     horizon: f64,
     metrics: &mut Collector,
 ) -> RunStats {
+    reference_run_faulted_client(system, trace, faults, None, horizon, metrics)
+}
+
+/// [`reference_run_faulted`] with an optional closed-loop client — the
+/// differential oracle for the cursor engine's client path. Arrivals
+/// preloaded before faults keeps arrival-wins-ties intact; client timers
+/// and retries join the heap dynamically exactly as in the cursor engine.
+#[doc(hidden)]
+pub fn reference_run_faulted_client(
+    system: &mut dyn System,
+    trace: Vec<Request>,
+    faults: &[(f64, FaultEvent)],
+    mut client: Option<&mut ClientLoop>,
+    horizon: f64,
+    metrics: &mut Collector,
+) -> RunStats {
     let wall_start = std::time::Instant::now();
     let allocs_start = crate::util::alloc::thread_allocs();
+    if client.is_some() {
+        metrics.enable_reject_tracking();
+    }
     // Deliberately unpooled: the oracle must stay the naive engine the
     // cursor engine is differentially tested against.
     let mut sched = EventScheduler::new();
@@ -477,6 +621,9 @@ pub fn reference_run_faulted(
         match event {
             Event::Arrival(req) => {
                 metrics.on_arrival(&req);
+                if let Some(c) = client.as_deref_mut() {
+                    c.on_arrival(&req, &mut sched);
+                }
                 system.on_arrival(req, now, &mut sched, metrics);
             }
             Event::InstanceWake { instance } => {
@@ -490,6 +637,16 @@ pub fn reference_run_faulted(
             }
             Event::Fault(fault) => {
                 system.on_fault(fault, now, &mut sched, metrics);
+            }
+            Event::ClientCheck { id } => {
+                if let Some(c) = client.as_deref_mut() {
+                    c.on_check(id, now, &mut sched, metrics);
+                }
+            }
+        }
+        if let Some(c) = client.as_deref_mut() {
+            while let Some(id) = metrics.pop_client_reject() {
+                c.on_reject(id, now, &mut sched);
             }
         }
     }
@@ -826,6 +983,156 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Single-server FIFO queue with a bounded waiting room: requests
+    /// queue for service, overflow is rejected at admission. Under
+    /// sustained overload TTFT grows without bound, so client timers and
+    /// rejection feedback both fire — the test rig for the client path.
+    struct QueueServer {
+        service: f64,
+        cap: usize,
+        queue: std::collections::VecDeque<u64>,
+        busy: bool,
+    }
+
+    impl QueueServer {
+        fn new(service: f64, cap: usize) -> Self {
+            QueueServer { service, cap, queue: Default::default(), busy: false }
+        }
+    }
+
+    impl System for QueueServer {
+        fn on_arrival(
+            &mut self,
+            req: Request,
+            now: f64,
+            sched: &mut EventScheduler,
+            metrics: &mut Collector,
+        ) {
+            if self.queue.len() >= self.cap {
+                metrics.on_reject(req.id);
+                return;
+            }
+            self.queue.push_back(req.id);
+            if !self.busy {
+                self.busy = true;
+                sched.at(now + self.service, Event::InstanceWake { instance: 0 });
+            }
+        }
+
+        fn on_instance_wake(
+            &mut self,
+            _i: usize,
+            now: f64,
+            sched: &mut EventScheduler,
+            metrics: &mut Collector,
+        ) {
+            if let Some(id) = self.queue.pop_front() {
+                metrics.on_first_token(id, now);
+                metrics.on_complete(id, now);
+            }
+            if self.queue.is_empty() {
+                self.busy = false;
+            } else {
+                sched.at(now + self.service, Event::InstanceWake { instance: 0 });
+            }
+        }
+    }
+
+    /// The client-in-the-loop cursor engine must reproduce the preload
+    /// oracle bit for bit — timers, retries, and rejection feedback all
+    /// ride the same (time, seq) order in both engines.
+    #[test]
+    fn client_engines_match_bit_for_bit_under_overload() {
+        use crate::workload::client::{ClientLoop, ClientPolicy};
+        // 2x overload: service 0.2s, arrivals every 0.1s, room for 8.
+        let trace: Vec<Request> = (0..150).map(|i| req(i, i as f64 * 0.1)).collect();
+        let policy = ClientPolicy {
+            timeout_s: 1.0,
+            max_retries: 2,
+            backoff_base_s: 0.3,
+            backoff_cap_s: 1.2,
+            jitter_frac: 0.25,
+            seed: 11,
+        };
+        let mut ca = ClientLoop::new(policy);
+        let mut cb = ClientLoop::new(policy);
+        let mut sys_a = QueueServer::new(0.2, 8);
+        let mut sys_b = QueueServer::new(0.2, 8);
+        let mut m_a = Collector::new();
+        let mut m_b = Collector::new();
+        let a = run_faulted_client(
+            &mut sys_a, trace.clone(), &[], Some(&mut ca), 1_000.0, &mut m_a, false,
+        );
+        let b = reference_run_faulted_client(
+            &mut sys_b, trace, &[], Some(&mut cb), 1_000.0, &mut m_b,
+        );
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.sim_time.to_bits(), b.sim_time.to_bits());
+        assert_eq!(ca.telemetry(), cb.telemetry());
+        let t = ca.telemetry();
+        assert!(t.timeouts > 0, "overloaded queue must time clients out: {t:?}");
+        assert!(t.rejected > 0, "bounded waiting room must reject: {t:?}");
+        assert!(t.retries > 0, "{t:?}");
+        assert_eq!(m_a.completed().len(), m_b.completed().len());
+        for (ra, rb) in m_a.completed().iter().zip(m_b.completed()) {
+            assert_eq!(ra, rb, "records diverged");
+            assert_eq!(ra.first_token.to_bits(), rb.first_token.to_bits());
+            assert_eq!(ra.completion.to_bits(), rb.completion.to_bits());
+        }
+        assert_eq!(m_a.rejected, m_b.rejected);
+    }
+
+    /// `client = None` through the client entry point must be the
+    /// clientless engine, bit for bit — the defenses-off invariant at
+    /// the engine layer.
+    #[test]
+    fn disabled_client_is_bit_identical_to_clientless_engine() {
+        let trace: Vec<Request> = (0..150).map(|i| req(i, i as f64 * 0.1)).collect();
+        let mut sys_a = QueueServer::new(0.2, 8);
+        let mut sys_b = QueueServer::new(0.2, 8);
+        let mut m_a = Collector::new();
+        let mut m_b = Collector::new();
+        let a = run_faulted_client(&mut sys_a, trace.clone(), &[], None, 1_000.0, &mut m_a, false);
+        let b = run(&mut sys_b, trace, 1_000.0, &mut m_b);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.sim_time.to_bits(), b.sim_time.to_bits());
+        assert_eq!(m_a.completed().len(), m_b.completed().len());
+        for (ra, rb) in m_a.completed().iter().zip(m_b.completed()) {
+            assert_eq!(ra, rb);
+            assert_eq!(ra.first_token.to_bits(), rb.first_token.to_bits());
+        }
+        assert_eq!(m_a.rejected, m_b.rejected);
+    }
+
+    /// Retries amplify load: the same overloaded trace dispatches
+    /// strictly more arrivals with a client loop than without, and the
+    /// extra arrivals all carry retry-range ids.
+    #[test]
+    fn retry_storm_amplifies_offered_load() {
+        use crate::workload::client::{ClientLoop, ClientPolicy, RETRY_ID_BASE};
+        let trace: Vec<Request> = (0..150).map(|i| req(i, i as f64 * 0.1)).collect();
+        let mut client = ClientLoop::new(ClientPolicy {
+            timeout_s: 0.8,
+            max_retries: 3,
+            backoff_base_s: 0.2,
+            backoff_cap_s: 1.0,
+            jitter_frac: 0.2,
+            seed: 5,
+        });
+        let mut sys = QueueServer::new(0.2, 8);
+        let mut m = Collector::new();
+        run_faulted_client(&mut sys, trace.clone(), &[], Some(&mut client), 1_000.0, &mut m, false);
+        let retry_completions =
+            m.completed().iter().filter(|r| r.id >= RETRY_ID_BASE).count();
+        assert!(client.telemetry().retries > 0);
+        assert!(
+            retry_completions > 0,
+            "some retries must make it through the queue"
+        );
+        // First-attempt records stay identifiable for scoring.
+        assert!(m.completed().iter().any(|r| r.id < RETRY_ID_BASE));
     }
 
     /// The tentpole contract: after a warmup run has grown the pooled

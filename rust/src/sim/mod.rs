@@ -19,9 +19,10 @@ pub mod instance;
 pub mod network;
 
 pub use engine::{
-    reference_run, reference_run_faulted, run, run_abandonable, run_faulted,
-    run_source_faulted, run_source_until_faulted, run_until, run_until_faulted, Event,
-    EventScheduler, RunStats, StopReason, System,
+    reference_run, reference_run_faulted, reference_run_faulted_client, run,
+    run_abandonable, run_faulted, run_faulted_client, run_source_faulted,
+    run_source_faulted_client, run_source_until_faulted, run_until, run_until_faulted,
+    ClassRanker, DefenseTelemetry, Event, EventScheduler, RunStats, StopReason, System,
 };
 pub use faults::{ChurnProfile, ChurnTelemetry, Fault, FaultEvent, FaultKind, FaultSchedule};
 pub use instance::{BatchKind, Health, SimInstance, SimReq};

@@ -15,6 +15,11 @@ pub struct Args {
     pub positional: Vec<String>,
     pub options: BTreeMap<String, String>,
     pub flags: Vec<String>,
+    /// Single-value flags supplied more than once, with both values —
+    /// `(--key, first, second)`. The map keeps the last value, but
+    /// [`Args::check`] turns any entry here into an up-front error
+    /// instead of letting the earlier value vanish silently.
+    pub duplicates: Vec<(String, String, String)>,
 }
 
 impl Args {
@@ -25,14 +30,14 @@ impl Args {
         while let Some(arg) = iter.next() {
             if let Some(stripped) = arg.strip_prefix("--") {
                 if let Some((k, v)) = stripped.split_once('=') {
-                    out.options.insert(k.to_string(), v.to_string());
+                    out.note_option(k.to_string(), v.to_string());
                 } else if iter
                     .peek()
                     .map(|n| !n.starts_with("--"))
                     .unwrap_or(false)
                 {
                     let v = iter.next().unwrap();
-                    out.options.insert(stripped.to_string(), v);
+                    out.note_option(stripped.to_string(), v);
                 } else {
                     out.flags.push(stripped.to_string());
                 }
@@ -41,6 +46,14 @@ impl Args {
             }
         }
         out
+    }
+
+    /// Record a `--key value` occurrence (either `=` or space form),
+    /// remembering repeats so [`Args::check`] can reject them.
+    fn note_option(&mut self, key: String, value: String) {
+        if let Some(prev) = self.options.insert(key.clone(), value.clone()) {
+            self.duplicates.push((key, prev, value));
+        }
     }
 
     /// Parse from the process environment (skips argv[0]).
@@ -155,8 +168,18 @@ impl Args {
     /// defaults), and a value-taking flag supplied bare (`--rate` followed
     /// by another `--flag` or the end of the line) errors too —
     /// generalizing the `--loop`/`--budget-s` fix to every flag in the
-    /// table. `--help` is always accepted.
+    /// table. A single-value flag supplied more than once (any mix of
+    /// `--k v` and `--k=v` forms) errors naming the flag and both values
+    /// — the earlier one must not lose silently. `--help` is always
+    /// accepted.
     pub fn check(&self, spec: &CommandSpec) -> Result<(), String> {
+        if let Some((key, first, second)) = self.duplicates.first() {
+            return Err(format!(
+                "--{key} given more than once ('{first}', then '{second}') \
+                 for '{}'; supply it exactly once",
+                spec.name
+            ));
+        }
         for key in self.options.keys() {
             if key == "help" {
                 continue;
@@ -276,7 +299,7 @@ const LOOP: FlagSpec =
 const IMPORT: FlagSpec = FlagSpec::opt(
     "import",
     "FILE",
-    "stream-replay an external trace (CSV; see --format)",
+    "stream-replay an external trace (CSV, gzip ok; see --format)",
 );
 const FORMAT: FlagSpec =
     FlagSpec::opt("format", "NAME", "external trace format for --import (burstgpt|azure)");
@@ -370,6 +393,11 @@ pub static COMMANDS: &[CommandSpec] = &[
                 "churn-out",
                 "PATH",
                 "write BENCH_churn.json (clean-vs-faulted pairs) here",
+            ),
+            FlagSpec::opt(
+                "overload-out",
+                "PATH",
+                "write BENCH_overload.json (undefended-vs-defended load sweep) here",
             ),
         ],
     },
@@ -574,6 +602,31 @@ mod tests {
     }
 
     #[test]
+    fn check_rejects_duplicate_value_flags() {
+        let spec = command_spec("scenarios").unwrap();
+        // Space form twice, = form twice, and a mix: all error, naming
+        // the flag, both values, and the command.
+        for line in [
+            "scenarios --rate 3 --rate 4",
+            "scenarios --rate=3 --rate=4",
+            "scenarios --rate 3 --rate=4",
+        ] {
+            let err = parse(line).check(spec).unwrap_err();
+            assert!(err.contains("--rate"), "{line}: {err}");
+            assert!(err.contains("'3'") && err.contains("'4'"), "{line}: {err}");
+            assert!(err.contains("scenarios"), "{line}: {err}");
+        }
+        // Repeating the same value is still a duplicate (the intent is
+        // ambiguous), and unrelated singles stay fine.
+        assert!(parse("scenarios --seed 7 --seed 7").check(spec).is_err());
+        assert!(parse("scenarios --rate 3 --seed 7").check(spec).is_ok());
+        // Parse itself stays infallible: the map keeps the last value.
+        let a = parse("scenarios --rate 3 --rate 4");
+        assert_eq!(a.get("rate"), Some("4"));
+        assert_eq!(a.duplicates.len(), 1);
+    }
+
+    #[test]
     fn every_subcommand_has_a_spec_with_unique_flags() {
         for cmd in ["serve", "simulate", "goodput", "scenarios", "frontier",
                     "plan", "record", "table2", "table3"] {
@@ -599,7 +652,7 @@ flags:
   --scenario <NAME>      one named scenario
   --replay <LOG>         replay a recorded arrival log (JSONL)
   --loop <SECS>          tile the --replay log to at least this horizon
-  --import <FILE>        stream-replay an external trace (CSV; see --format)
+  --import <FILE>        stream-replay an external trace (CSV, gzip ok; see --format)
   --format <NAME>        external trace format for --import (burstgpt|azure)
   --window <SECS>        reorder tolerance for --import timestamps (default 5)
   --duration <SECS>      trace duration override

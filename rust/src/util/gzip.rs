@@ -1,0 +1,487 @@
+//! Minimal pure-Rust gzip decoder (RFC 1952 framing over RFC 1951
+//! DEFLATE) — substrate for the `flate2` crate, unavailable in the
+//! offline image. Whole-buffer decompression only: the import paths
+//! that consume it materialize the decompressed text before scanning,
+//! so a `.csv.gz` trace costs one decompressed copy in memory (gunzip
+//! first if a log's *text* is too large to hold — the compressed file
+//! itself never is the constraint).
+//!
+//! Supported: stored, fixed-Huffman, and dynamic-Huffman blocks; all
+//! optional header fields (FEXTRA/FNAME/FCOMMENT/FHCRC); concatenated
+//! multi-member files (valid gzip — members decode back to back). The
+//! CRC32 and ISIZE trailer of every member are verified, so silent
+//! corruption fails loudly instead of replaying a mangled trace.
+//!
+//! The decoder is the canonical bit-at-a-time scheme (the same shape as
+//! zlib's reference `puff.c`): slow next to a table-driven inflate, but
+//! small enough to audit line by line, and import parsing dominates the
+//! wall clock anyway.
+
+/// Decompress a complete gzip file: every member, concatenated.
+pub fn gunzip(data: &[u8]) -> Result<Vec<u8>, String> {
+    if data.is_empty() {
+        return Err("empty gzip input".to_string());
+    }
+    let mut out = Vec::new();
+    let mut pos = 0;
+    while pos < data.len() {
+        pos = member(data, pos, &mut out)?;
+    }
+    Ok(out)
+}
+
+/// CRC-32 (reflected, polynomial 0xEDB88320) — the gzip trailer checksum.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut crc = !0u32;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+/// Decode one gzip member starting at `pos`; append its payload to
+/// `out` and return the offset just past its trailer.
+fn member(data: &[u8], mut pos: usize, out: &mut Vec<u8>) -> Result<usize, String> {
+    let need = |p: usize, n: usize| -> Result<(), String> {
+        if p + n > data.len() {
+            Err(format!("truncated gzip stream at byte {p}"))
+        } else {
+            Ok(())
+        }
+    };
+    need(pos, 10)?;
+    if data[pos] != 0x1f || data[pos + 1] != 0x8b {
+        return Err("not a gzip stream (bad magic bytes)".to_string());
+    }
+    if data[pos + 2] != 8 {
+        return Err(format!("unsupported gzip compression method {}", data[pos + 2]));
+    }
+    let flg = data[pos + 3];
+    if flg & 0xe0 != 0 {
+        return Err("reserved gzip FLG bits set".to_string());
+    }
+    pos += 10; // MTIME(4), XFL, OS: informational, skipped
+    if flg & 0x04 != 0 {
+        // FEXTRA: little-endian length prefix.
+        need(pos, 2)?;
+        let xlen = u16::from_le_bytes([data[pos], data[pos + 1]]) as usize;
+        pos += 2;
+        need(pos, xlen)?;
+        pos += xlen;
+    }
+    for name_or_comment in [0x08u8, 0x10] {
+        // FNAME / FCOMMENT: NUL-terminated strings.
+        if flg & name_or_comment != 0 {
+            loop {
+                need(pos, 1)?;
+                pos += 1;
+                if data[pos - 1] == 0 {
+                    break;
+                }
+            }
+        }
+    }
+    if flg & 0x02 != 0 {
+        // FHCRC: header checksum, not verified (the payload CRC is).
+        need(pos, 2)?;
+        pos += 2;
+    }
+
+    let start = out.len();
+    let mut br = BitReader { data, byte: pos, bit: 0 };
+    inflate(&mut br, out)?;
+    br.align();
+    pos = br.byte;
+
+    need(pos, 8)?;
+    let crc = u32::from_le_bytes([data[pos], data[pos + 1], data[pos + 2], data[pos + 3]]);
+    let isize_mod = u32::from_le_bytes([
+        data[pos + 4],
+        data[pos + 5],
+        data[pos + 6],
+        data[pos + 7],
+    ]);
+    let payload = &out[start..];
+    if payload.len() as u32 != isize_mod {
+        return Err(format!(
+            "gzip length mismatch: trailer says {isize_mod} bytes (mod 2^32), got {}",
+            payload.len()
+        ));
+    }
+    if crc32(payload) != crc {
+        return Err("gzip CRC mismatch — corrupt stream".to_string());
+    }
+    Ok(pos + 8)
+}
+
+/// LSB-first bit cursor over the deflate byte stream.
+struct BitReader<'a> {
+    data: &'a [u8],
+    byte: usize,
+    bit: u32,
+}
+
+impl BitReader<'_> {
+    fn bit(&mut self) -> Result<u32, String> {
+        if self.byte >= self.data.len() {
+            return Err("truncated deflate stream".to_string());
+        }
+        let b = (self.data[self.byte] >> self.bit) & 1;
+        self.bit += 1;
+        if self.bit == 8 {
+            self.bit = 0;
+            self.byte += 1;
+        }
+        Ok(b as u32)
+    }
+
+    fn bits(&mut self, n: u32) -> Result<u32, String> {
+        let mut v = 0u32;
+        for i in 0..n {
+            v |= self.bit()? << i;
+        }
+        Ok(v)
+    }
+
+    /// Discard any partial byte (stored-block alignment, trailer seek).
+    fn align(&mut self) {
+        if self.bit != 0 {
+            self.bit = 0;
+            self.byte += 1;
+        }
+    }
+}
+
+/// A canonical Huffman decoder: `count[n]` codes of length n, symbols
+/// in canonical order. Decoding walks one bit at a time through the
+/// code-length bands — the reference algorithm from RFC 1951 §3.2.2.
+struct Huffman {
+    count: [u16; 16],
+    symbol: Vec<u16>,
+}
+
+impl Huffman {
+    fn build(lengths: &[u16]) -> Result<Huffman, String> {
+        let mut count = [0u16; 16];
+        for &l in lengths {
+            if l > 15 {
+                return Err(format!("huffman code length {l} out of range"));
+            }
+            count[l as usize] += 1;
+        }
+        if count[0] as usize == lengths.len() {
+            // No codes at all — legal for a distance table in an
+            // all-literal block; decoding against it errors if used.
+            return Ok(Huffman { count, symbol: Vec::new() });
+        }
+        // Reject over-subscribed length sets (incomplete ones are
+        // allowed: the fixed distance table is incomplete by spec).
+        let mut left: i32 = 1;
+        for len in 1..=15 {
+            left <<= 1;
+            left -= count[len] as i32;
+            if left < 0 {
+                return Err("over-subscribed huffman code".to_string());
+            }
+        }
+        let mut offs = [0u16; 16];
+        for len in 1..15 {
+            offs[len + 1] = offs[len] + count[len];
+        }
+        let mut symbol = vec![0u16; lengths.iter().filter(|&&l| l != 0).count()];
+        for (sym, &l) in lengths.iter().enumerate() {
+            if l != 0 {
+                symbol[offs[l as usize] as usize] = sym as u16;
+                offs[l as usize] += 1;
+            }
+        }
+        Ok(Huffman { count, symbol })
+    }
+
+    fn decode(&self, br: &mut BitReader) -> Result<u16, String> {
+        let mut code: i32 = 0;
+        let mut first: i32 = 0;
+        let mut index: i32 = 0;
+        for len in 1..=15 {
+            code |= br.bit()? as i32;
+            let count = self.count[len] as i32;
+            if code - count < first {
+                return Ok(self.symbol[(index + (code - first)) as usize]);
+            }
+            index += count;
+            first = (first + count) << 1;
+            code <<= 1;
+        }
+        Err("invalid huffman code".to_string())
+    }
+}
+
+fn inflate(br: &mut BitReader, out: &mut Vec<u8>) -> Result<(), String> {
+    loop {
+        let bfinal = br.bits(1)?;
+        match br.bits(2)? {
+            0 => stored(br, out)?,
+            1 => {
+                let (lit, dist) = fixed_tables()?;
+                block(br, out, &lit, &dist)?;
+            }
+            2 => {
+                let (lit, dist) = dynamic_tables(br)?;
+                block(br, out, &lit, &dist)?;
+            }
+            _ => return Err("reserved deflate block type 3".to_string()),
+        }
+        if bfinal == 1 {
+            return Ok(());
+        }
+    }
+}
+
+fn stored(br: &mut BitReader, out: &mut Vec<u8>) -> Result<(), String> {
+    br.align();
+    if br.byte + 4 > br.data.len() {
+        return Err("truncated stored-block header".to_string());
+    }
+    let len = u16::from_le_bytes([br.data[br.byte], br.data[br.byte + 1]]) as usize;
+    let nlen = u16::from_le_bytes([br.data[br.byte + 2], br.data[br.byte + 3]]);
+    if nlen != !(len as u16) {
+        return Err("stored block length complement check failed".to_string());
+    }
+    br.byte += 4;
+    if br.byte + len > br.data.len() {
+        return Err("truncated stored block".to_string());
+    }
+    out.extend_from_slice(&br.data[br.byte..br.byte + len]);
+    br.byte += len;
+    Ok(())
+}
+
+// RFC 1951 §3.2.5: length/distance symbol expansion tables.
+const LEN_BASE: [u16; 29] = [
+    3, 4, 5, 6, 7, 8, 9, 10, 11, 13, 15, 17, 19, 23, 27, 31, 35, 43, 51, 59, 67, 83, 99, 115,
+    131, 163, 195, 227, 258,
+];
+const LEN_EXTRA: [u32; 29] = [
+    0, 0, 0, 0, 0, 0, 0, 0, 1, 1, 1, 1, 2, 2, 2, 2, 3, 3, 3, 3, 4, 4, 4, 4, 5, 5, 5, 5, 0,
+];
+const DIST_BASE: [u16; 30] = [
+    1, 2, 3, 4, 5, 7, 9, 13, 17, 25, 33, 49, 65, 97, 129, 193, 257, 385, 513, 769, 1025, 1537,
+    2049, 3073, 4097, 6145, 8193, 12289, 16385, 24577,
+];
+const DIST_EXTRA: [u32; 30] = [
+    0, 0, 0, 0, 1, 1, 2, 2, 3, 3, 4, 4, 5, 5, 6, 6, 7, 7, 8, 8, 9, 9, 10, 10, 11, 11, 12, 12,
+    13, 13,
+];
+
+fn block(
+    br: &mut BitReader,
+    out: &mut Vec<u8>,
+    lit: &Huffman,
+    dist: &Huffman,
+) -> Result<(), String> {
+    loop {
+        let sym = lit.decode(br)?;
+        if sym < 256 {
+            out.push(sym as u8);
+        } else if sym == 256 {
+            return Ok(());
+        } else {
+            let i = (sym - 257) as usize;
+            if i >= LEN_BASE.len() {
+                return Err(format!("invalid length symbol {sym}"));
+            }
+            let len = LEN_BASE[i] as usize + br.bits(LEN_EXTRA[i])? as usize;
+            let d = dist.decode(br)? as usize;
+            if d >= DIST_BASE.len() {
+                return Err(format!("invalid distance symbol {d}"));
+            }
+            let distance = DIST_BASE[d] as usize + br.bits(DIST_EXTRA[d])? as usize;
+            if distance > out.len() {
+                return Err("back-reference before output start".to_string());
+            }
+            // Byte-by-byte on purpose: distance < len means the copy
+            // overlaps itself (run-length encoding), which a slice copy
+            // would get wrong.
+            let from = out.len() - distance;
+            for k in 0..len {
+                let b = out[from + k];
+                out.push(b);
+            }
+        }
+    }
+}
+
+/// The fixed (btype=1) code tables from RFC 1951 §3.2.6.
+fn fixed_tables() -> Result<(Huffman, Huffman), String> {
+    let mut lens = [0u16; 288];
+    for (i, l) in lens.iter_mut().enumerate() {
+        *l = match i {
+            0..=143 => 8,
+            144..=255 => 9,
+            256..=279 => 7,
+            _ => 8,
+        };
+    }
+    Ok((Huffman::build(&lens)?, Huffman::build(&[5u16; 30])?))
+}
+
+// The permuted order code-length-code lengths arrive in (RFC 1951 §3.2.7).
+const CLC_ORDER: [usize; 19] = [16, 17, 18, 0, 8, 7, 9, 6, 10, 5, 11, 4, 12, 3, 13, 2, 14, 1, 15];
+
+/// Read a dynamic (btype=2) block header: the code-length code, then the
+/// run-length-encoded literal/length and distance code lengths.
+fn dynamic_tables(br: &mut BitReader) -> Result<(Huffman, Huffman), String> {
+    let hlit = br.bits(5)? as usize + 257;
+    let hdist = br.bits(5)? as usize + 1;
+    let hclen = br.bits(4)? as usize + 4;
+    if hlit > 286 || hdist > 30 {
+        return Err("dynamic block header counts out of range".to_string());
+    }
+    let mut clc = [0u16; 19];
+    for &slot in CLC_ORDER.iter().take(hclen) {
+        clc[slot] = br.bits(3)? as u16;
+    }
+    let cl = Huffman::build(&clc)?;
+    let mut lens = vec![0u16; hlit + hdist];
+    let mut i = 0;
+    while i < lens.len() {
+        let sym = cl.decode(br)?;
+        match sym {
+            0..=15 => {
+                lens[i] = sym;
+                i += 1;
+            }
+            16 => {
+                if i == 0 {
+                    return Err("length repeat with no previous length".to_string());
+                }
+                let prev = lens[i - 1];
+                let n = 3 + br.bits(2)? as usize;
+                if i + n > lens.len() {
+                    return Err("code-length repeat overruns the table".to_string());
+                }
+                for _ in 0..n {
+                    lens[i] = prev;
+                    i += 1;
+                }
+            }
+            17 | 18 => {
+                let n = if sym == 17 {
+                    3 + br.bits(3)? as usize
+                } else {
+                    11 + br.bits(7)? as usize
+                };
+                if i + n > lens.len() {
+                    return Err("code-length zero run overruns the table".to_string());
+                }
+                i += n; // already zero-initialized
+            }
+            _ => return Err(format!("invalid code-length symbol {sym}")),
+        }
+    }
+    if lens[256] == 0 {
+        return Err("dynamic block defines no end-of-block code".to_string());
+    }
+    Ok((Huffman::build(&lens[..hlit])?, Huffman::build(&lens[hlit..])?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Fixtures produced by CPython's gzip module (mtime pinned to 0).
+    const HELLO_GZ: &[u8] = &[
+        31, 139, 8, 0, 0, 0, 0, 0, 2, 255, 203, 72, 205, 201, 201, 215, 81, 72, 73, 77, 203, 73,
+        44, 73, 85, 40, 207, 47, 202, 73, 225, 2, 0, 144, 67, 179, 77, 21, 0, 0, 0,
+    ];
+    const STORED_GZ: &[u8] = &[
+        31, 139, 8, 0, 0, 0, 0, 0, 0, 255, 1, 32, 0, 223, 255, 115, 116, 111, 114, 101, 100, 45,
+        98, 108, 111, 99, 107, 32, 112, 97, 121, 108, 111, 97, 100, 32, 49, 50, 51, 52, 53, 54,
+        55, 56, 57, 48, 10, 60, 109, 13, 153, 32, 0, 0, 0,
+    ];
+    const DYN_GZ: &[u8] = &[
+        31, 139, 8, 0, 0, 0, 0, 0, 2, 255, 237, 203, 199, 17, 128, 48, 12, 68, 209, 86, 182, 15,
+        170, 33, 8, 91, 4, 11, 28, 177, 171, 71, 67, 13, 220, 224, 184, 243, 223, 70, 75, 56, 19,
+        143, 43, 6, 47, 197, 97, 150, 11, 75, 218, 143, 0, 201, 228, 17, 53, 111, 125, 171, 152,
+        196, 116, 207, 250, 241, 103, 240, 209, 171, 219, 43, 6, 69, 133, 163, 197, 204, 153, 52,
+        53, 114, 216, 248, 76, 226, 245, 107, 194, 15, 223, 130, 55, 147, 189, 124, 99, 141, 3,
+        0, 0,
+    ];
+    const MULTI_GZ: &[u8] = &[
+        31, 139, 8, 0, 0, 0, 0, 0, 2, 255, 75, 203, 44, 42, 46, 81, 200, 77, 205, 77, 74, 45,
+        226, 2, 0, 167, 244, 133, 10, 13, 0, 0, 0, 31, 139, 8, 0, 0, 0, 0, 0, 2, 255, 43, 78, 77,
+        206, 207, 75, 81, 200, 77, 205, 77, 74, 45, 226, 2, 0, 54, 24, 75, 14, 14, 0, 0, 0,
+    ];
+    const NAMED_GZ: &[u8] = &[
+        31, 139, 8, 8, 0, 0, 0, 0, 2, 255, 110, 97, 109, 101, 100, 46, 116, 120, 116, 0, 203, 75,
+        204, 77, 77, 81, 40, 72, 172, 204, 201, 79, 76, 225, 2, 0, 251, 192, 113, 178, 14, 0, 0,
+        0,
+    ];
+
+    #[test]
+    fn fixed_huffman_member_roundtrips() {
+        assert_eq!(gunzip(HELLO_GZ).unwrap(), b"hello, deflate world\n");
+    }
+
+    #[test]
+    fn stored_block_member_roundtrips() {
+        assert_eq!(gunzip(STORED_GZ).unwrap(), b"stored-block payload 1234567890\n");
+    }
+
+    #[test]
+    fn dynamic_huffman_member_roundtrips() {
+        let mut want = Vec::new();
+        for _ in 0..12 {
+            want.extend_from_slice(b"the quick brown fox jumps over the lazy dog; ");
+        }
+        for _ in 0..9 {
+            want.extend_from_slice(b"pack my box with five dozen liquor jugs; ");
+        }
+        assert_eq!(gunzip(DYN_GZ).unwrap(), want);
+    }
+
+    #[test]
+    fn concatenated_members_decode_back_to_back() {
+        assert_eq!(gunzip(MULTI_GZ).unwrap(), b"first member\nsecond member\n");
+    }
+
+    #[test]
+    fn optional_fname_header_is_skipped() {
+        assert_eq!(gunzip(NAMED_GZ).unwrap(), b"named payload\n");
+    }
+
+    #[test]
+    fn corruption_fails_loudly() {
+        // Bad magic.
+        let e = gunzip(b"not gzip at all").unwrap_err();
+        assert!(e.contains("magic"), "{e}");
+        // Empty input.
+        assert!(gunzip(&[]).unwrap_err().contains("empty"));
+        // Truncated mid-stream.
+        let e = gunzip(&HELLO_GZ[..HELLO_GZ.len() - 12]).unwrap_err();
+        assert!(e.contains("truncated"), "{e}");
+        // Flipped payload bit: the CRC catches it. (Flip inside the
+        // stored block's literal bytes so the deflate layer still parses.)
+        let mut bad = STORED_GZ.to_vec();
+        bad[20] ^= 0x01;
+        let e = gunzip(&bad).unwrap_err();
+        assert!(e.contains("CRC"), "{e}");
+        // Mangled trailer length.
+        let mut bad = HELLO_GZ.to_vec();
+        let n = bad.len();
+        bad[n - 1] ^= 0x7f; // ISIZE high byte
+        let e = gunzip(&bad).unwrap_err();
+        assert!(e.contains("length mismatch"), "{e}");
+    }
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // The canonical check value from the CRC catalogue.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+}

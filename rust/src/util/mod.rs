@@ -1,10 +1,13 @@
 //! In-tree substrates replacing crates unavailable in the offline image
-//! (`rand`, `serde`/`serde_json`, `clap`, `tokio`): a counter-based PRNG
-//! with the distribution samplers the workload generator needs, a JSON
-//! parser/serializer, a CLI flag parser, and small thread/channel helpers.
+//! (`rand`, `serde`/`serde_json`, `clap`, `tokio`, `flate2`): a
+//! counter-based PRNG with the distribution samplers the workload
+//! generator needs, a JSON parser/serializer, a CLI flag parser, a gzip
+//! decoder for compressed trace imports, and small thread/channel
+//! helpers.
 
 pub mod alloc;
 pub mod cli;
+pub mod gzip;
 pub mod json;
 pub mod rng;
 pub mod threads;

@@ -1,0 +1,340 @@
+//! Closed-loop client model: per-request TTFT timeouts, a bounded retry
+//! budget, and exponential backoff with seeded deterministic jitter.
+//!
+//! The open-loop engine assumes demand is infinitely patient; real
+//! clients are not. Each logical request gets a timer armed at arrival:
+//! if the first token hasn't been served when it fires, the client gives
+//! up on that attempt and — budget permitting — re-submits the request
+//! after a jittered exponential backoff. Coordinator rejections produce
+//! the same retry path immediately (fast error feedback), which is
+//! exactly the retry-storm amplification loop that turns saturation into
+//! congestion collapse on undefended systems.
+//!
+//! Determinism: the jitter RNG is a dedicated [`Pcg64`] stream keyed by
+//! the policy seed, retry ids are allocated from a private counter above
+//! [`RETRY_ID_BASE`], and every client action rides the engine's
+//! (time, seq)-ordered heap — so client-in-the-loop runs are reproducible
+//! bit-for-bit, and runs without a client are untouched (the engine only
+//! consults the client when one is supplied).
+
+use std::collections::HashMap;
+
+use crate::metrics::Collector;
+use crate::sim::{Event, EventScheduler};
+use crate::util::rng::Pcg64;
+use crate::workload::Request;
+
+/// Retry attempts get fresh ids at or above this base so scoring can
+/// separate logical (trace) requests from client re-submissions: goodput
+/// and attainment stay anchored on first-attempt outcomes, retries act
+/// purely as load amplification.
+pub const RETRY_ID_BASE: u64 = 1 << 62;
+
+/// Dedicated PCG stream for client backoff jitter (the fault scheduler
+/// uses 0xFA17; disjoint streams keep the two schedules independent).
+const CLIENT_JITTER_STREAM: u64 = 0xC11E47;
+
+/// The closed-loop client behavior attached to a run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClientPolicy {
+    /// Seconds the client waits for the first token before abandoning an
+    /// attempt. The scenario driver clamps this to at least the loosest
+    /// per-class TTFT SLO, so a timed-out attempt is always an SLO
+    /// violation — timeouts can never erase a would-have-met request.
+    pub timeout_s: f64,
+    /// Re-submissions allowed after the initial attempt.
+    pub max_retries: u32,
+    /// First backoff delay; doubles per retry up to [`Self::backoff_cap_s`].
+    pub backoff_base_s: f64,
+    pub backoff_cap_s: f64,
+    /// Uniform jitter applied to each delay: `delay * U(1-j, 1+j)`.
+    pub jitter_frac: f64,
+    /// Seed for the jitter stream (independent of the trace seed).
+    pub seed: u64,
+}
+
+impl ClientPolicy {
+    /// A patient production client: generous timeout, three retries.
+    pub fn standard() -> Self {
+        ClientPolicy {
+            timeout_s: 30.0,
+            max_retries: 3,
+            backoff_base_s: 1.0,
+            backoff_cap_s: 8.0,
+            jitter_frac: 0.2,
+            seed: 0xC11E,
+        }
+    }
+
+    /// An impatient flash-crowd client: tight timeout, eager retries with
+    /// short backoff — the retry-storm ingredient.
+    pub fn aggressive() -> Self {
+        ClientPolicy {
+            timeout_s: 12.0,
+            max_retries: 4,
+            backoff_base_s: 0.25,
+            backoff_cap_s: 2.0,
+            jitter_frac: 0.3,
+            seed: 0xC11E,
+        }
+    }
+}
+
+/// What the client loop observed over a run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ClientTelemetry {
+    /// Attempts abandoned because the first token missed the timeout.
+    pub timeouts: u64,
+    /// Attempts that got fast rejection feedback from the coordinator.
+    pub rejected: u64,
+    /// Re-submissions scheduled (timeouts + rejections that had budget).
+    pub retries: u64,
+    /// Logical requests whose retry budget ran out.
+    pub gave_up: u64,
+    /// Attempts resolved in time (first token before the timer fired).
+    pub succeeded: u64,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Attempt {
+    /// Retries consumed so far for this logical request (0 = original).
+    tries: u32,
+    input_len: usize,
+    output_len: usize,
+}
+
+/// Per-run client state: attempt table, jitter RNG, telemetry. Owned by
+/// the caller and handed to the engine's `_client` entry points by
+/// mutable reference; read the telemetry back after the run.
+#[derive(Debug)]
+pub struct ClientLoop {
+    policy: ClientPolicy,
+    rng: Pcg64,
+    attempts: HashMap<u64, Attempt>,
+    next_retry_id: u64,
+    telemetry: ClientTelemetry,
+}
+
+impl ClientLoop {
+    pub fn new(policy: ClientPolicy) -> Self {
+        ClientLoop {
+            rng: Pcg64::new(policy.seed, CLIENT_JITTER_STREAM),
+            policy,
+            attempts: HashMap::new(),
+            next_retry_id: RETRY_ID_BASE,
+            telemetry: ClientTelemetry::default(),
+        }
+    }
+
+    pub fn telemetry(&self) -> ClientTelemetry {
+        self.telemetry
+    }
+
+    /// An arrival was dispatched (trace request or one of our retries):
+    /// arm its TTFT timer.
+    pub fn on_arrival(&mut self, req: &Request, sched: &mut EventScheduler) {
+        self.attempts.entry(req.id).or_insert(Attempt {
+            tries: 0,
+            input_len: req.input_len,
+            output_len: req.output_len,
+        });
+        sched.at(req.arrival + self.policy.timeout_s, Event::ClientCheck { id: req.id });
+    }
+
+    /// The TTFT timer for `id` fired: success if the first token was
+    /// served (or the request already completed), timeout otherwise.
+    pub fn on_check(
+        &mut self,
+        id: u64,
+        now: f64,
+        sched: &mut EventScheduler,
+        metrics: &Collector,
+    ) {
+        let Some(&attempt) = self.attempts.get(&id) else {
+            return; // already resolved (e.g. rejected and re-submitted)
+        };
+        match metrics.first_token_pending(id) {
+            Some(true) => {
+                // Still queued past the deadline: the client walks away.
+                // The abandoned attempt keeps occupying the server — that
+                // wasted work is the congestion-collapse mechanism.
+                self.attempts.remove(&id);
+                self.telemetry.timeouts += 1;
+                self.schedule_retry(attempt, now, sched);
+            }
+            Some(false) | None => {
+                self.attempts.remove(&id);
+                self.telemetry.succeeded += 1;
+            }
+        }
+    }
+
+    /// Fast feedback: the coordinator rejected `id` at admission.
+    pub fn on_reject(&mut self, id: u64, now: f64, sched: &mut EventScheduler) {
+        let Some(attempt) = self.attempts.remove(&id) else {
+            return;
+        };
+        self.telemetry.rejected += 1;
+        self.schedule_retry(attempt, now, sched);
+    }
+
+    fn schedule_retry(&mut self, attempt: Attempt, now: f64, sched: &mut EventScheduler) {
+        if attempt.tries >= self.policy.max_retries {
+            self.telemetry.gave_up += 1;
+            return;
+        }
+        let tries = attempt.tries + 1;
+        let backoff = (self.policy.backoff_base_s * 2f64.powi(tries as i32 - 1))
+            .min(self.policy.backoff_cap_s);
+        let j = self.policy.jitter_frac;
+        let delay = backoff * self.rng.uniform(1.0 - j, 1.0 + j);
+        let at = now + delay;
+        let rid = self.next_retry_id;
+        self.next_retry_id += 1;
+        self.attempts.insert(
+            rid,
+            Attempt { tries, input_len: attempt.input_len, output_len: attempt.output_len },
+        );
+        self.telemetry.retries += 1;
+        sched.at(
+            at,
+            Event::Arrival(Request {
+                id: rid,
+                arrival: at,
+                input_len: attempt.input_len,
+                output_len: attempt.output_len,
+            }),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, arrival: f64) -> Request {
+        Request { id, arrival, input_len: 64, output_len: 16 }
+    }
+
+    #[test]
+    fn timer_is_armed_per_arrival() {
+        let mut c = ClientLoop::new(ClientPolicy::standard());
+        let mut sched = EventScheduler::new();
+        c.on_arrival(&req(1, 0.0), &mut sched);
+        c.on_arrival(&req(2, 5.0), &mut sched);
+        assert_eq!(sched.len(), 2);
+        // Re-dispatching the same arrival arms a second timer but must
+        // not reset the attempt's retry count (entry or_insert).
+        c.on_arrival(&req(1, 0.0), &mut sched);
+        assert_eq!(sched.len(), 3);
+    }
+
+    #[test]
+    fn timeout_schedules_a_retry_with_a_fresh_high_id() {
+        let mut c = ClientLoop::new(ClientPolicy::standard());
+        let mut sched = EventScheduler::new();
+        let mut metrics = Collector::new();
+        let r = req(1, 0.0);
+        metrics.on_arrival(&r);
+        c.on_arrival(&r, &mut sched);
+        // Timer fires with the first token still pending: one retry
+        // arrival joins the heap (plus the original timer already there).
+        c.on_check(1, 30.0, &mut sched, &metrics);
+        let t = c.telemetry();
+        assert_eq!(t.timeouts, 1);
+        assert_eq!(t.retries, 1);
+        assert_eq!(t.succeeded, 0);
+        assert_eq!(sched.len(), 2);
+    }
+
+    #[test]
+    fn served_first_token_resolves_without_retry() {
+        let mut c = ClientLoop::new(ClientPolicy::standard());
+        let mut sched = EventScheduler::new();
+        let mut metrics = Collector::new();
+        let r = req(1, 0.0);
+        metrics.on_arrival(&r);
+        metrics.on_first_token(1, 0.5);
+        c.on_arrival(&r, &mut sched);
+        c.on_check(1, 30.0, &mut sched, &metrics);
+        let t = c.telemetry();
+        assert_eq!(t.succeeded, 1);
+        assert_eq!(t.retries, 0);
+        // Completion before the timer is success too.
+        let r2 = req(2, 1.0);
+        metrics.on_arrival(&r2);
+        metrics.on_first_token(2, 1.2);
+        metrics.on_complete(2, 2.0);
+        c.on_arrival(&r2, &mut sched);
+        c.on_check(2, 31.0, &mut sched, &metrics);
+        assert_eq!(c.telemetry().succeeded, 2);
+    }
+
+    #[test]
+    fn retry_budget_is_bounded_and_backoff_grows() {
+        let policy = ClientPolicy {
+            timeout_s: 1.0,
+            max_retries: 2,
+            backoff_base_s: 1.0,
+            backoff_cap_s: 100.0,
+            jitter_frac: 0.0, // deterministic delays for the assertion
+            seed: 9,
+        };
+        let mut c = ClientLoop::new(policy);
+        let mut sched = EventScheduler::new();
+        let mut metrics = Collector::new();
+        let r = req(1, 0.0);
+        metrics.on_arrival(&r);
+        c.on_arrival(&r, &mut sched);
+        // First timeout: retry #1 at now + 1.0 (tries=1, backoff 2^0).
+        c.on_check(1, 1.0, &mut sched, &metrics);
+        // The retry arrival fires; arm it, then time it out as well:
+        // retry #2 at now + 2.0 (tries=2, backoff 2^1).
+        let rid1 = RETRY_ID_BASE;
+        let retry1 = req(rid1, 2.0);
+        metrics.on_arrival(&retry1);
+        c.on_arrival(&retry1, &mut sched);
+        c.on_check(rid1, 3.0, &mut sched, &metrics);
+        // Budget exhausted: the third timeout gives up instead.
+        let rid2 = RETRY_ID_BASE + 1;
+        let retry2 = req(rid2, 5.0);
+        metrics.on_arrival(&retry2);
+        c.on_arrival(&retry2, &mut sched);
+        c.on_check(rid2, 6.0, &mut sched, &metrics);
+        let t = c.telemetry();
+        assert_eq!(t.timeouts, 3);
+        assert_eq!(t.retries, 2);
+        assert_eq!(t.gave_up, 1);
+    }
+
+    #[test]
+    fn rejection_feedback_retries_immediately_with_backoff() {
+        let mut c = ClientLoop::new(ClientPolicy::standard());
+        let mut sched = EventScheduler::new();
+        let r = req(1, 0.0);
+        c.on_arrival(&r, &mut sched);
+        c.on_reject(1, 0.0, &mut sched);
+        let t = c.telemetry();
+        assert_eq!(t.rejected, 1);
+        assert_eq!(t.retries, 1);
+        // Rejecting an id the client never saw (or already resolved) is
+        // a no-op — systems may reject requests with no client attached.
+        c.on_reject(999, 1.0, &mut sched);
+        assert_eq!(c.telemetry().rejected, 1);
+    }
+
+    #[test]
+    fn retry_ids_are_disjoint_from_trace_ids() {
+        let mut c = ClientLoop::new(ClientPolicy::standard());
+        let mut sched = EventScheduler::new();
+        for id in 0..4 {
+            c.on_arrival(&req(id, 0.0), &mut sched);
+            c.on_reject(id, 0.0, &mut sched);
+        }
+        let t = c.telemetry();
+        assert_eq!(t.retries, 4);
+        // Four retries allocated RETRY_ID_BASE..RETRY_ID_BASE+4; a fifth
+        // logical request can never collide with them.
+        assert!(RETRY_ID_BASE > u32::MAX as u64);
+    }
+}

@@ -23,6 +23,10 @@
 //! Both paths share one line scanner, so they accept and reject exactly
 //! the same inputs and emit records in exactly the same order — the
 //! streaming replay is locked bit-identical to the materialized one.
+//! Files named `*.gz` are gzip-decompressed transparently on both paths
+//! (public traces ship compressed; see [`crate::util::gzip`]) —
+//! decompression materializes the text, so for logs whose *decompressed*
+//! form exceeds memory, gunzip to disk first and stream the plain file.
 //!
 //! ## Formats and class/SLO mapping
 //!
@@ -236,10 +240,22 @@ pub fn import_named(
 /// Import an external trace file into a fully-materialized
 /// [`ReplayTrace`]. For logs too large to materialize, use
 /// [`StreamedTrace::open`] instead — the two paths are bit-identical on
-/// any input both can hold.
+/// any input both can hold. `.gz` files are decompressed transparently
+/// (same as the streaming path — one shared scanner, one shared
+/// transport).
 pub fn import_trace(path: &Path, format: TraceFormat, window: f64) -> Result<ReplayTrace> {
-    let text = std::fs::read_to_string(path)
-        .with_context(|| format!("read trace {}", path.display()))?;
+    let text = if stream::is_gz(path) {
+        let raw =
+            std::fs::read(path).with_context(|| format!("read trace {}", path.display()))?;
+        let bytes = crate::util::gzip::gunzip(&raw)
+            .map_err(|e| anyhow::anyhow!("decompress {}: {e}", path.display()))?;
+        String::from_utf8(bytes).map_err(|_| {
+            anyhow::anyhow!("{}: decompressed trace is not valid UTF-8", path.display())
+        })?
+    } else {
+        std::fs::read_to_string(path)
+            .with_context(|| format!("read trace {}", path.display()))?
+    };
     let label = path
         .file_name()
         .map(|n| n.to_string_lossy().into_owned())

@@ -25,7 +25,7 @@ use std::cmp::{Ordering, Reverse};
 use std::collections::BinaryHeap;
 use std::fmt;
 use std::fs::File;
-use std::io::{BufRead, BufReader};
+use std::io::{BufRead, BufReader, Cursor, Read};
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
@@ -154,10 +154,30 @@ impl<R: BufRead> Scanner<R> {
     }
 }
 
-fn open_reader(path: &Path) -> Result<BufReader<File>> {
-    Ok(BufReader::new(
-        File::open(path).with_context(|| format!("open trace {}", path.display()))?,
-    ))
+/// Whether `path` names a gzip-compressed trace (`.gz`, any case).
+pub(crate) fn is_gz(path: &Path) -> bool {
+    path.extension().map(|e| e.eq_ignore_ascii_case("gz")).unwrap_or(false)
+}
+
+/// Open a trace for line scanning, transparently decompressing `.gz`
+/// files. Both import paths read through here, so a `.csv.gz` accepts
+/// and rejects exactly what its plain `.csv` twin does. Decompression
+/// materializes the text (see [`crate::util::gzip`]) — the streaming
+/// path's bounded-memory guarantee then bounds everything *beyond* that
+/// one decompressed copy.
+fn open_reader(path: &Path) -> Result<Box<dyn BufRead + Send>> {
+    let file = File::open(path).with_context(|| format!("open trace {}", path.display()))?;
+    if is_gz(path) {
+        let mut raw = Vec::new();
+        BufReader::new(file)
+            .read_to_end(&mut raw)
+            .with_context(|| format!("read trace {}", path.display()))?;
+        let text = crate::util::gzip::gunzip(&raw)
+            .map_err(|e| anyhow::anyhow!("decompress {}: {e}", path.display()))?;
+        Ok(Box::new(Cursor::new(text)))
+    } else {
+        Ok(Box::new(BufReader::new(file)))
+    }
 }
 
 fn file_label(path: &Path) -> String {
@@ -346,7 +366,7 @@ impl StreamedTrace {
 /// mean it changed (or vanished) between open and replay, and silently
 /// truncating the workload would corrupt the measurement.
 pub struct StreamedArrivals {
-    scan: Scanner<BufReader<File>>,
+    scan: Scanner<Box<dyn BufRead + Send>>,
     t0: f64,
     warp: f64,
     horizon: f64,

@@ -5,11 +5,13 @@
 //! length); Table 4's per-dataset moments pin the length distributions, so
 //! a fitted generator preserves scheduling behaviour (DESIGN.md §2).
 
+pub mod client;
 pub mod datasets;
 pub mod import;
 pub mod replay;
 pub mod trace;
 
+pub use client::{ClientLoop, ClientPolicy, ClientTelemetry, RETRY_ID_BASE};
 pub use datasets::{Dataset, LengthModel};
 pub use import::{StreamedArrivals, StreamedTrace, TraceFormat};
 pub use replay::{render_log, ReplayClass, ReplayRecord, ReplayTrace};

@@ -57,6 +57,7 @@ fn bench_doc_covers_every_artifact_and_the_schema_version() {
         "ecoserve-simperf",
         "ecoserve-plan",
         "ecoserve-churn",
+        "ecoserve-overload",
     ] {
         assert!(md.contains(bench), "docs/BENCH.md lost artifact {bench}");
     }

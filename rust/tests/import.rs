@@ -130,6 +130,68 @@ fn rerecording_an_imported_stream_preserves_its_lineage() {
 }
 
 #[test]
+fn gzipped_fixture_imports_bit_identical_to_the_plain_file() {
+    // burstgpt_small.csv.gz is the committed gzip of burstgpt_small.csv:
+    // the transport must be invisible — records, classes, and span all
+    // match the plain import bit for bit (only the source label keeps
+    // the .gz name).
+    let plain = import_trace(&fixture("burstgpt_small.csv"), TraceFormat::BurstGpt, 5.0).unwrap();
+    let gz = import_trace(&fixture("burstgpt_small.csv.gz"), TraceFormat::BurstGpt, 5.0).unwrap();
+    assert_eq!(gz.len(), plain.len());
+    assert_eq!(gz.duration().to_bits(), plain.duration().to_bits());
+    assert_eq!(gz.warmup().to_bits(), plain.warmup().to_bits());
+    assert_eq!(gz.class_counts(), plain.class_counts());
+    for (g, p) in gz.records().iter().zip(plain.records()) {
+        assert_eq!(g.arrival.to_bits(), p.arrival.to_bits());
+        assert_eq!((g.input_len, g.output_len, g.class), (p.input_len, p.output_len, p.class));
+    }
+    assert_eq!(gz.source(), "burstgpt_small.csv.gz");
+    assert_eq!(
+        gz.lineage(),
+        Some("burstgpt import of 'burstgpt_small.csv.gz' (24 requests)")
+    );
+}
+
+#[test]
+fn gzipped_fixture_streams_bit_identical_to_its_materialized_import() {
+    let st =
+        StreamedTrace::open(&fixture("burstgpt_small.csv.gz"), TraceFormat::BurstGpt, 5.0)
+            .unwrap();
+    let mat = st.materialize().unwrap();
+    assert_eq!(st.len(), mat.len());
+    assert_eq!(st.duration().to_bits(), mat.duration().to_bits());
+    assert_eq!(st.class_counts(), mat.class_counts());
+    let rate = st.native_rate();
+    let want = mat.requests_at(rate, f64::INFINITY);
+    let mut arr = st.arrivals_at(rate, f64::INFINITY).unwrap();
+    let got: Vec<_> = (&mut arr).collect();
+    assert_eq!(got.len(), want.len());
+    for (g, w) in got.iter().zip(&want) {
+        assert_eq!(g.id, w.id);
+        assert_eq!(g.arrival.to_bits(), w.arrival.to_bits());
+        assert_eq!((g.input_len, g.output_len), (w.input_len, w.output_len));
+    }
+}
+
+#[test]
+fn corrupt_gzip_fails_loudly_on_both_paths() {
+    let dir = std::env::temp_dir().join("ecoserve-import-integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("mangled.csv.gz");
+    let mut bytes = std::fs::read(fixture("burstgpt_small.csv.gz")).unwrap();
+    let n = bytes.len();
+    bytes[n / 2] ^= 0xff; // flip a payload byte mid-stream
+    std::fs::write(&path, &bytes).unwrap();
+    let e = format!("{:#}", import_trace(&path, TraceFormat::BurstGpt, 5.0).unwrap_err());
+    assert!(e.contains("mangled.csv.gz"), "{e}");
+    let e = format!(
+        "{:#}",
+        StreamedTrace::open(&path, TraceFormat::BurstGpt, 5.0).unwrap_err()
+    );
+    assert!(e.contains("mangled.csv.gz"), "{e}");
+}
+
+#[test]
 fn corrupt_files_fail_with_file_and_line() {
     let dir = std::env::temp_dir().join("ecoserve-import-integration");
     std::fs::create_dir_all(&dir).unwrap();

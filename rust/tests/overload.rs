@@ -1,0 +1,229 @@
+//! Overload acceptance locks: the closed loop must make undefended
+//! systems collapse, the defenses must pay for themselves, and with the
+//! client switched off the whole machinery must vanish without a trace.
+//!
+//! Three contracts are pinned here, all on fixed seeds:
+//!
+//! 1. **Undefended collapse** (`retry-storm`, 4 instances): the vLLM
+//!    baseline with a closed-loop client but no defenses delivers
+//!    strictly *less* goodput at 2× saturation than at 1× — retries
+//!    amplify the offered load and servers burn capacity on attempts
+//!    whose clients already gave up.
+//! 2. **Shedding earns its keep**: at 2× saturation the defended PaDG
+//!    coordinator delivers strictly more SLO-meeting work than its own
+//!    `ablate_no_shedding` ablation on the exact same trace and client.
+//! 3. **Defenses-off invariance**: with no client and no defenses, every
+//!    system's per-request records are bit-identical across the plain
+//!    engine, the client-capable engine, and the reference engine — and
+//!    scenario rows carry no overload telemetry block at all.
+
+use ecoserve::config::{DefenseConfig, ExperimentConfig, SystemKind};
+use ecoserve::harness::build_system;
+use ecoserve::metrics::{AbandonPolicy, Collector, RequestRecord};
+use ecoserve::scenarios::{
+    by_name, run_overload_suite, run_system, run_system_variant, RunSpec, ScenarioConfig,
+};
+use ecoserve::sim::{reference_run_faulted_client, run_abandonable, run_faulted_client};
+
+/// 4 instances (16 L20 GPUs): small enough for test wall time, with a
+/// base rate near the knee so the overload multipliers sweep past it.
+fn overload_cfg() -> ScenarioConfig {
+    let mut cfg = ScenarioConfig::default_l20();
+    cfg.deployment.gpus_used = 16;
+    cfg.duration_override = Some(60.0);
+    cfg.rate = Some(3.0);
+    cfg
+}
+
+/// ISSUE acceptance (a): undefended goodput strictly *falls* as offered
+/// load rises past saturation — the closed loop's retry amplification
+/// turns congestion into collapse when nothing sheds.
+#[test]
+fn undefended_vllm_goodput_collapses_past_saturation() {
+    let s = by_name("retry-storm").unwrap();
+    let cfg = overload_cfg();
+    let outcomes = run_overload_suite(&[s], &cfg, &[SystemKind::Vllm], 4);
+    let row = &outcomes[0].rows[0];
+    let curve = row.undefended_goodputs();
+    assert!(curve.len() >= 2, "{curve:?}");
+    for w in curve.windows(2) {
+        assert!(
+            w[1] < w[0],
+            "undefended goodput must strictly fall past saturation: {curve:?}"
+        );
+    }
+    assert!(row.undefended_retained_at_peak() < 1.0);
+
+    // The storm actually fired: timeouts and retries are nonzero at the
+    // heaviest point, and the defended half sheds rather than queueing.
+    let top = row.cells.last().unwrap();
+    let ct = top.undefended.overload.unwrap().client;
+    assert!(ct.timeouts > 0 && ct.retries > 0, "{ct:?}");
+    let dt = top.defended.overload.unwrap().defense.unwrap();
+    assert!(dt.sheds() > 0, "{dt:?}");
+    // Shedding hopeless work can only help at the peak: the defended
+    // half never does worse than the undefended one on the same cell.
+    assert!(
+        top.defended.goodput_rps >= top.undefended.goodput_rps,
+        "defended {} vs undefended {}",
+        top.defended.goodput_rps,
+        top.undefended.goodput_rps
+    );
+}
+
+/// ISSUE acceptance (b): at 2× saturation, defended PaDG strictly beats
+/// its own no-shedding ablation on SLO-met count — same trace, same
+/// client, one knob.
+#[test]
+fn defended_padg_beats_its_own_no_shedding_ablation() {
+    let s = by_name("retry-storm").unwrap();
+    let mut cfg = overload_cfg();
+    cfg.rate = Some(6.0); // 2× the saturation-knee base rate
+    let client = s.overload.unwrap().client;
+    let defended = run_system_variant(
+        &s,
+        &cfg,
+        &RunSpec::new(SystemKind::EcoServe)
+            .with_client(client)
+            .with_defense(DefenseConfig::default()),
+    );
+    let ablated = run_system_variant(
+        &s,
+        &cfg,
+        &RunSpec::new(SystemKind::EcoServe)
+            .with_client(client)
+            .with_defense(DefenseConfig::default())
+            .without_shedding(),
+    );
+    assert!(
+        defended.met > ablated.met,
+        "shedding must strictly beat the ablation on SLO-met work: {} vs {}",
+        defended.met,
+        ablated.met
+    );
+    // The defended run reports its defenses; the ablation nulls them
+    // (same code path as an undefended run, telemetry and all).
+    let dt = defended.overload.unwrap().defense.expect("defended run reports telemetry");
+    assert!(dt.sheds() > 0, "{dt:?}");
+    assert!(ablated.overload.unwrap().defense.is_none());
+}
+
+/// ISSUE acceptance (c): with the client disabled, the client-capable
+/// engine entry points are bit-identical to the plain engine — for every
+/// system, across both the heap and reference engines.
+#[test]
+fn client_disabled_runs_are_bit_identical_across_engines() {
+    let s = by_name("overload-sustained").unwrap();
+    let cfg = overload_cfg();
+    let (duration, _) = cfg.horizon(&s);
+    let trace = s.build_trace_for(cfg.seed, cfg.rate.unwrap(), duration);
+    let horizon = duration + 240.0;
+
+    let sched = s.scheduler_dataset();
+    let mut exp = ExperimentConfig::new(cfg.deployment.clone(), sched);
+    exp.seed = cfg.seed;
+    exp.duration = duration;
+
+    for kind in SystemKind::all() {
+        let run = |mode: usize| -> Vec<RequestRecord> {
+            let mut sys = build_system(kind, &exp, None);
+            let mut m = Collector::new();
+            match mode {
+                0 => {
+                    run_abandonable(sys.as_mut(), trace.clone(), horizon, &mut m, false);
+                }
+                1 => {
+                    run_faulted_client(
+                        sys.as_mut(),
+                        trace.clone(),
+                        &[],
+                        None,
+                        horizon,
+                        &mut m,
+                        false,
+                    );
+                }
+                _ => {
+                    reference_run_faulted_client(
+                        sys.as_mut(),
+                        trace.clone(),
+                        &[],
+                        None,
+                        horizon,
+                        &mut m,
+                    );
+                }
+            }
+            m.completed().to_vec()
+        };
+        let plain = run(0);
+        assert!(!plain.is_empty(), "{kind:?}");
+        for mode in [1, 2] {
+            let got = run(mode);
+            assert_eq!(plain.len(), got.len(), "{kind:?} mode {mode}");
+            for (a, b) in plain.iter().zip(&got) {
+                assert_eq!(a.id, b.id, "{kind:?} mode {mode}");
+                assert_eq!(
+                    a.first_token.to_bits(),
+                    b.first_token.to_bits(),
+                    "{kind:?} mode {mode} req {}",
+                    a.id
+                );
+                assert_eq!(
+                    a.completion.to_bits(),
+                    b.completion.to_bits(),
+                    "{kind:?} mode {mode} req {}",
+                    a.id
+                );
+                assert_eq!((a.input_len, a.output_len), (b.input_len, b.output_len));
+            }
+        }
+    }
+
+    // The scenario surface stays clean too: a default cell (no client,
+    // no defenses) carries no overload telemetry block, so existing
+    // BENCH artifacts are untouched by this machinery.
+    let row = run_system(&s, &cfg, SystemKind::Vllm);
+    assert!(row.overload.is_none());
+}
+
+/// The online SLO monitor's early-abandon verdict stays correct with
+/// timeouts and retries in play: an abandoned run really was doomed (the
+/// full run misses the target), and an undecided run scores identically
+/// to the full one.
+#[test]
+fn slo_monitor_verdicts_stay_correct_with_client_attached() {
+    let s = by_name("retry-storm").unwrap();
+    let mut cfg = overload_cfg();
+    cfg.rate = Some(6.0); // 2× saturation: the verdict should be doom
+    let client = s.overload.unwrap().client;
+    let full =
+        run_system_variant(&s, &cfg, &RunSpec::new(SystemKind::Vllm).with_client(client));
+    let armed = run_system_variant(
+        &s,
+        &cfg,
+        &RunSpec::new(SystemKind::Vllm)
+            .with_client(client)
+            .with_abandon(AbandonPolicy::stop_at(0.9)),
+    );
+    let ct = full.overload.unwrap().client;
+    assert!(ct.timeouts > 0 && ct.retries > 0, "the client must be live: {ct:?}");
+    if armed.abandoned {
+        // Retries must never fake the verdict: the full run confirms the
+        // target really was unreachable, and stopping early saved work.
+        assert!(
+            full.attainment < 0.9,
+            "monitor declared doom but the full run met the target: {}",
+            full.attainment
+        );
+        assert!(armed.events <= full.events);
+    } else {
+        assert_eq!(armed.met, full.met);
+        assert_eq!(armed.attainment.to_bits(), full.attainment.to_bits());
+    }
+    assert!(
+        armed.abandoned,
+        "a 2×-saturation cell must be decided early (attainment {})",
+        full.attainment
+    );
+}
