@@ -26,6 +26,7 @@ use crate::sim::{
     ChurnTelemetry, DefenseTelemetry, Event, EventScheduler, FaultEvent, Health, Network,
     SimInstance, SimReq, System,
 };
+use crate::trace::{RejectCause, TraceEvent, TraceKind};
 use crate::workload::Request;
 
 const EPS: f64 = 1e-9;
@@ -42,6 +43,8 @@ pub enum FudgMode {
 struct InTransit {
     req: Request,
     dest: usize,
+    /// Transfer enqueue time (the flight recorder's `Transfer` span start).
+    started: f64,
 }
 
 /// DistServe / MoonCake under simulation.
@@ -221,7 +224,7 @@ impl FudgSystem {
             }
         };
         sched.at(transfer.done, Event::TransferDone { transfer: transfer.id });
-        self.transfers.insert(transfer.id, InTransit { req, dest });
+        self.transfers.insert(transfer.id, InTransit { req, dest, started: now });
         true
     }
 
@@ -278,7 +281,7 @@ impl System for FudgSystem {
         metrics: &mut Collector,
     ) {
         if self.guard.reject(self.prefill_backlog.len()) {
-            metrics.on_reject(req.id);
+            metrics.on_reject_as(req.id, RejectCause::QueueFull);
             return;
         }
         self.prefill_backlog.push_back(req);
@@ -294,6 +297,9 @@ impl System for FudgSystem {
             if self.is_prefill_instance(idx) {
                 // Prefill-side completion is internal bookkeeping: the
                 // request's public first token happens on the decode side.
+                // The scratch collector swallows the instance's trace
+                // emissions too, so the flight-recorder spans are re-emitted
+                // into the real collector below.
                 let finished = {
                     let inst = &mut self.instances[idx];
                     inst.complete_batch(now, &mut self.scratch);
@@ -305,7 +311,16 @@ impl System for FudgSystem {
                     }
                     drained
                 };
+                let started = self.instances[idx].batch_started();
+                metrics.trace_phase(TraceKind::PhasePrefill, idx as u32, started, now);
                 for r in finished {
+                    metrics.trace(TraceEvent::span(
+                        TraceKind::ReqPrefill,
+                        r.req.id,
+                        idx as u32,
+                        started,
+                        now,
+                    ));
                     self.start_transfer(r.req, idx, now, sched);
                 }
             } else {
@@ -382,11 +397,18 @@ impl System for FudgSystem {
     fn on_transfer_done(&mut self, transfer: u64, now: f64, sched: &mut EventScheduler,
                         metrics: &mut Collector) {
         self.network.complete(transfer);
-        let Some(InTransit { req, dest }) = self.transfers.remove(&transfer) else {
+        let Some(InTransit { req, dest, started }) = self.transfers.remove(&transfer) else {
             return;
         };
         // Decode-side admission: §3.3 first token (includes the transfer
         // wait). KV for the prompt was reserved at transfer start.
+        metrics.trace(TraceEvent::span(
+            TraceKind::Transfer,
+            req.id,
+            dest as u32,
+            started,
+            now,
+        ));
         let inst = &mut self.instances[dest];
         let id = req.id;
         let done_already = req.output_len <= 1;

@@ -16,6 +16,7 @@ use crate::sim::{
     ChurnTelemetry, DefenseTelemetry, Event, EventScheduler, FaultEvent, Health, SimInstance,
     System,
 };
+use crate::trace::RejectCause;
 use crate::workload::Request;
 
 const EPS: f64 = 1e-9;
@@ -90,7 +91,7 @@ impl System for SarathiSystem {
         metrics: &mut Collector,
     ) {
         if self.guard.reject(self.backlog.len()) {
-            metrics.on_reject(req.id);
+            metrics.on_reject_as(req.id, RejectCause::QueueFull);
             return;
         }
         if !self.backlog.is_empty() || !self.try_admit(&req, now, sched) {

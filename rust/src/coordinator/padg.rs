@@ -26,6 +26,7 @@ use crate::sim::{
     ChurnTelemetry, ClassRanker, DefenseTelemetry, Event, EventScheduler, FaultEvent, Health,
     SimInstance, SimReq, System,
 };
+use crate::trace::{RejectCause, TraceEvent, TraceKind, NO_INSTANCE, NO_REQ};
 use crate::workload::Request;
 
 const EPS: f64 = 1e-9;
@@ -318,12 +319,17 @@ impl EcoServeSystem {
     }
 
     /// Arrival-time triage (defenses on): deadline-aware admission
-    /// control plus per-class priority shedding. Returns true when the
-    /// request should be rejected instead of queued — the caller records
-    /// the rejection, which both counts as a guaranteed SLO violation
-    /// (sheds can't fake attainment) and gives closed-loop clients fast
-    /// feedback to back off on.
-    fn shed_at_arrival(&mut self, req: &Request, now: f64, d: &DefenseConfig) -> bool {
+    /// control plus per-class priority shedding. Returns the shed cause
+    /// when the request should be rejected instead of queued — the caller
+    /// records the cause-tagged rejection, which both counts as a
+    /// guaranteed SLO violation (sheds can't fake attainment) and gives
+    /// closed-loop clients fast feedback to back off on.
+    fn shed_at_arrival(
+        &mut self,
+        req: &Request,
+        now: f64,
+        d: &DefenseConfig,
+    ) -> Option<RejectCause> {
         // Deadline-aware admission: the backlog is FIFO, so a newcomer
         // waits at least as long as the head already has. Head wait past
         // `admission_slack x TTFT` means the queue-implied TTFT for this
@@ -331,7 +337,7 @@ impl EcoServeSystem {
         if let Some(head) = self.backlog.front() {
             if now - head.arrival > d.admission_slack * self.slo.ttft {
                 self.defense_stats.deadline_rejects += 1;
-                return true;
+                return Some(RejectCause::Deadline);
             }
         }
         // Priority triage under backlog pressure: low-priority classes
@@ -342,9 +348,9 @@ impl EcoServeSystem {
         let len = self.backlog.len();
         if (len > d.backlog_cap && rank > 0) || len > 2 * d.backlog_cap {
             self.defense_stats.priority_sheds += 1;
-            return true;
+            return Some(RejectCause::Priority);
         }
-        false
+        None
     }
 
     /// Track decode-occupancy brownout (defenses on): engage when mean
@@ -386,7 +392,7 @@ impl EcoServeSystem {
                     // capacity serves requests that can still meet SLO.
                     self.backlog.pop_front();
                     self.defense_stats.hopeless_sheds += 1;
-                    metrics.on_reject(req.id);
+                    metrics.on_reject_as(req.id, RejectCause::Hopeless);
                     continue;
                 }
                 // Already doomed: serve late rather than shed.
@@ -422,10 +428,16 @@ impl EcoServeSystem {
     /// mid-decode requests died with the KV cache and are lost. The backlog
     /// is re-sorted by (arrival, id) so displaced requests keep FIFO order
     /// relative to already-backlogged ones. Returns the re-routed count.
-    fn requeue(&mut self, evacuated: Vec<SimReq>) -> u64 {
+    fn requeue(&mut self, evacuated: Vec<SimReq>, now: f64, metrics: &mut Collector) -> u64 {
         let mut rerouted = 0u64;
         for r in evacuated {
             if r.first_token_at.is_none() {
+                metrics.trace(TraceEvent::instant(
+                    TraceKind::Reroute,
+                    r.req.id,
+                    NO_INSTANCE,
+                    now,
+                ));
                 self.backlog.push_back(r.req);
                 rerouted += 1;
             } else {
@@ -448,7 +460,13 @@ impl EcoServeSystem {
     /// One prompt per prefill batch — prefill saturates the GPU at batch 1
     /// (paper §2.2) and per-prompt completion gives each request its true
     /// TTFT.
-    fn dispatch(&mut self, idx: usize, now: f64, sched: &mut EventScheduler) {
+    fn dispatch(
+        &mut self,
+        idx: usize,
+        now: f64,
+        sched: &mut EventScheduler,
+        metrics: &mut Collector,
+    ) {
         let slo_tpot = self.slo.tpot;
         let slo_ttft = self.slo.ttft;
         // Window hysteresis ("each phase lasting longer to reduce switching
@@ -527,12 +545,18 @@ impl EcoServeSystem {
                     // Drained: release the instance.
                     self.active[idx] = false;
                     self.draining[idx] = false;
+                    metrics.trace(TraceEvent::instant(
+                        TraceKind::Drained,
+                        NO_REQ,
+                        idx as u32,
+                        now,
+                    ));
                 }
             }
         }
     }
 
-    fn scale_up(&mut self, now: f64) -> bool {
+    fn scale_up(&mut self, now: f64, metrics: &mut Collector) -> bool {
         // First free provisioned-but-inactive instance that is healthy.
         let Some(idx) = (0..self.instances.len())
             .find(|&i| {
@@ -546,6 +570,7 @@ impl EcoServeSystem {
         let ops = self.mitosis.add_instance(idx);
         debug_assert!(self.mitosis.check_invariants().is_ok(), "{ops:?}");
         self.sync_routing();
+        metrics.trace(TraceEvent::instant(TraceKind::ScaleUp, NO_REQ, idx as u32, now));
         self.scale_log.push(ScaleEvent {
             time: now,
             active_instances: self.active_count(),
@@ -554,7 +579,7 @@ impl EcoServeSystem {
         true
     }
 
-    fn scale_down(&mut self, now: f64) -> bool {
+    fn scale_down(&mut self, now: f64, metrics: &mut Collector) -> bool {
         if self.mitosis.total_instances() <= self.params.n_lower {
             return false;
         }
@@ -565,6 +590,7 @@ impl EcoServeSystem {
         self.sync_routing();
         // Instance drains: finishes admitted work, admits nothing new.
         self.draining[idx] = true;
+        metrics.trace(TraceEvent::instant(TraceKind::ScaleDown, NO_REQ, idx as u32, now));
         self.scale_log.push(ScaleEvent {
             time: now,
             active_instances: self.active_count().saturating_sub(1),
@@ -589,8 +615,8 @@ impl System for EcoServeSystem {
             sched.at(now + interval, Event::ControlTick);
         }
         if let Some(d) = self.defense {
-            if self.shed_at_arrival(&req, now, &d) {
-                metrics.on_reject(req.id);
+            if let Some(cause) = self.shed_at_arrival(&req, now, &d) {
+                metrics.on_reject_as(req.id, cause);
                 return;
             }
             // Brownout: when decode occupancy saturates, cap this
@@ -600,6 +626,12 @@ impl System for EcoServeSystem {
             if self.brownout_since.is_some() && req.output_len > d.brownout_decode_cap {
                 req.output_len = d.brownout_decode_cap;
                 self.defense_stats.brownout_truncations += 1;
+                metrics.trace(TraceEvent::instant(
+                    TraceKind::Brownout,
+                    req.id,
+                    NO_INSTANCE,
+                    now,
+                ));
             }
         }
         if !self.backlog.is_empty() || !self.try_route(&req, now, sched) {
@@ -624,7 +656,7 @@ impl System for EcoServeSystem {
             self.update_brownout(now, &d);
         }
         self.drain_backlog(now, sched, metrics);
-        self.dispatch(idx, now, sched);
+        self.dispatch(idx, now, sched, metrics);
         // Backlog drain may have fed other idle instances; their kick wakes
         // were scheduled by try_route/force_admit.
     }
@@ -658,7 +690,7 @@ impl System for EcoServeSystem {
                 }
                 let evacuated = self.instances[instance].crash();
                 if recover {
-                    let n = self.requeue(evacuated);
+                    let n = self.requeue(evacuated, now, metrics);
                     self.churn.rerouted += n;
                     self.active[instance] = false;
                     self.draining[instance] = false;
@@ -666,7 +698,7 @@ impl System for EcoServeSystem {
                         debug_assert!(self.mitosis.check_invariants().is_ok());
                         self.sync_routing();
                     }
-                    if self.scale_up(now) {
+                    if self.scale_up(now, metrics) {
                         self.churn.backfills += 1; // spare capacity steps in
                     }
                     self.pending_recovery.push(now);
@@ -705,7 +737,7 @@ impl System for EcoServeSystem {
                     // the reclaim lands.
                     self.instances[instance].health = Health::Degraded;
                     let evacuated = self.instances[instance].evacuate_queue();
-                    let n = self.requeue(evacuated);
+                    let n = self.requeue(evacuated, now, metrics);
                     self.churn.rerouted += n;
                     self.drain_backlog(now, sched, metrics);
                 }
@@ -738,7 +770,7 @@ impl System for EcoServeSystem {
         let attainment = attainment_fraction(&recs, &self.slo);
         let can_scale = now - self.last_scale_at >= policy.cooldown;
         if can_scale && !recs.is_empty() && attainment < policy.target_attainment {
-            if self.scale_up(now) {
+            if self.scale_up(now, metrics) {
                 self.last_scale_at = now;
             }
         } else if can_scale && !recs.is_empty() {
@@ -753,7 +785,7 @@ impl System for EcoServeSystem {
             }
             if n > 0.0 && busy / n < policy.idle_threshold
                 && attainment >= policy.target_attainment
-                && self.scale_down(now)
+                && self.scale_down(now, metrics)
             {
                 self.last_scale_at = now;
             }

@@ -55,5 +55,6 @@ pub mod scenarios;
 pub mod server;
 pub mod sim;
 pub mod testing;
+pub mod trace;
 pub mod util;
 pub mod workload;

@@ -310,6 +310,7 @@ fn cmd_scenarios(args: &Args) -> Result<()> {
 
     let selected = select_scenarios(args)?;
     let systems = select_systems(args)?;
+    let trace_out = args.get_path("trace-out").map_err(Error::msg)?;
 
     let cfg = scenarios::ScenarioConfig {
         deployment: deployment_from_args(args)?,
@@ -317,6 +318,7 @@ fn cmd_scenarios(args: &Args) -> Result<()> {
         rate: args.f64_flag("rate").map_err(Error::msg)?,
         duration_override: args.f64_flag("duration").map_err(Error::msg)?,
         fault_seed: args.u64_flag("fault-seed").map_err(Error::msg)?,
+        trace: trace_out.is_some(),
     };
 
     let d = &cfg.deployment;
@@ -330,6 +332,15 @@ fn cmd_scenarios(args: &Args) -> Result<()> {
         d.cluster.name,
     );
     let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(8);
+
+    // The flight recorder rides the plain suite: the paired churn and
+    // overload sweeps run each cell several times, so "the" event log of
+    // a cell would be ambiguous there.
+    if trace_out.is_some()
+        && (args.get("churn-out").is_some() || args.get("overload-out").is_some())
+    {
+        bail!("--trace-out records the plain suite; drop --churn-out/--overload-out");
+    }
 
     // --churn-out runs the clean-vs-faulted pairing instead of the plain
     // suite: each system runs twice per churn scenario, and the report
@@ -396,7 +407,52 @@ fn cmd_scenarios(args: &Args) -> Result<()> {
             .map_err(|e| anyhow::anyhow!("write {path}: {e}"))?;
         println!("\nwrote JSON report to {path}");
     }
+    if let Some(path) = &trace_out {
+        write_trace_artifacts(&outcomes, &cfg, path)?;
+    }
     Ok(())
+}
+
+/// Write the flight-recorder artifacts for `--trace-out`: the derived
+/// diagnostics (`BENCH_trace.json` schema) at `path`, plus the raw event
+/// logs as a Perfetto/Chrome `trace_event` document at the sibling
+/// `<stem>.perfetto.json` (open it in https://ui.perfetto.dev).
+fn write_trace_artifacts(
+    outcomes: &[scenarios::ScenarioOutcome],
+    cfg: &scenarios::ScenarioConfig,
+    path: &std::path::Path,
+) -> Result<()> {
+    let json = scenarios::trace_suite_to_json(outcomes, cfg).to_string();
+    std::fs::write(path, &json)
+        .map_err(|e| anyhow::anyhow!("write {}: {e}", path.display()))?;
+    println!("wrote BENCH trace report to {}", path.display());
+
+    let tracks: Vec<(String, &[ecoserve::trace::TraceEvent])> = outcomes
+        .iter()
+        .flat_map(|o| {
+            o.rows.iter().filter_map(move |r| {
+                r.trace.as_ref().map(|cap| {
+                    let label = format!("{} / {}", o.scenario.name, r.system.label());
+                    (label, cap.events.as_slice())
+                })
+            })
+        })
+        .collect();
+    let sibling = perfetto_sibling(path);
+    let json = ecoserve::trace::to_perfetto(&tracks).to_string();
+    std::fs::write(&sibling, &json)
+        .map_err(|e| anyhow::anyhow!("write {}: {e}", sibling.display()))?;
+    println!("wrote Perfetto trace to {}", sibling.display());
+    Ok(())
+}
+
+/// `BENCH_trace.json` -> `BENCH_trace.perfetto.json`; extension-less
+/// paths just gain `.perfetto.json`.
+fn perfetto_sibling(path: &std::path::Path) -> std::path::PathBuf {
+    match path.extension().and_then(|e| e.to_str()) {
+        Some(ext) => path.with_extension(format!("perfetto.{ext}")),
+        None => path.with_extension("perfetto.json"),
+    }
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
@@ -488,6 +544,7 @@ fn cmd_frontier(args: &Args) -> Result<()> {
         rate: None, // the search owns the rate
         duration_override: args.f64_flag("duration").map_err(Error::msg)?,
         fault_seed: args.u64_flag("fault-seed").map_err(Error::msg)?,
+        trace: false, // probes never trace; --trace-out reruns the frontier point
     };
     let mut cfg = frontier::FrontierConfig::new(base, level);
     cfg.autoscale = args.has("autoscale");
@@ -562,6 +619,25 @@ fn cmd_frontier(args: &Args) -> Result<()> {
         std::fs::write(path, &json)
             .map_err(|e| anyhow::anyhow!("write {path}: {e}"))?;
         println!("wrote simperf report to {path}");
+    }
+    if let Some(path) = args.get_path("trace-out").map_err(Error::msg)? {
+        // Search probes run recorder-off (cheap, bit-identical); the
+        // flight recorder rides one confirmation run per scenario at the
+        // frontier's own operating point — the best cell's confirmed max
+        // rate (scenario default when nothing was sustained).
+        let mut traced = cfg.base.clone();
+        traced.trace = true;
+        let outcomes: Vec<scenarios::ScenarioOutcome> = fronts
+            .iter()
+            .map(|f| {
+                traced.rate = Some(match f.best() {
+                    Some(best) if best.max_rate > 0.0 => best.max_rate,
+                    _ => f.scenario.default_rate,
+                });
+                scenarios::run_scenario(&f.scenario, &traced, &systems)
+            })
+            .collect();
+        write_trace_artifacts(&outcomes, &traced, &path)?;
     }
     Ok(())
 }

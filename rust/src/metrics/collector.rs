@@ -13,7 +13,9 @@ use std::collections::HashMap;
 
 use super::monitor::SloMonitor;
 use super::{RequestRecord, SloSpec};
-use crate::workload::Request;
+use crate::sim::faults::FaultEvent;
+use crate::trace::{RejectCause, TraceEvent, TraceKind, TraceSink, NO_INSTANCE, NO_REQ};
+use crate::workload::{Request, RETRY_ID_BASE};
 
 /// In-flight bookkeeping, struct-of-arrays: one *slot* per open request,
 /// its fields split across parallel columns, with freed slots recycled
@@ -134,6 +136,11 @@ pub struct Collector {
     /// runs stay bit-identical.
     track_rejects: bool,
     pending_rejects: Vec<u64>,
+    /// Flight-recorder sink ([`crate::trace`]). `None` (the default)
+    /// keeps every trace hook an inlined no-op: recorder-off runs are
+    /// bit-identical to pre-recorder builds and stay allocation-free on
+    /// the warm path.
+    sink: Option<TraceSink>,
 }
 
 impl Collector {
@@ -162,6 +169,62 @@ impl Collector {
         self.clock = 0.0;
         self.track_rejects = false;
         self.pending_rejects.clear();
+        self.sink = None;
+    }
+
+    /// Attach a flight-recorder sink: lifecycle hooks start appending
+    /// typed [`TraceEvent`]s. Attaching changes no simulation decision.
+    pub fn attach_sink(&mut self, sink: TraceSink) {
+        self.sink = Some(sink);
+    }
+
+    /// Detach and return the sink (the harvest point after a run).
+    pub fn take_sink(&mut self) -> Option<TraceSink> {
+        self.sink.take()
+    }
+
+    /// Append one event when a sink is attached; no-op otherwise.
+    #[inline]
+    pub fn trace(&mut self, ev: TraceEvent) {
+        if let Some(s) = self.sink.as_mut() {
+            s.push(ev);
+        }
+    }
+
+    /// Record an instance phase window `[t0, t1]`, coalescing with the
+    /// instance's previous same-kind window; no-op without a sink.
+    #[inline]
+    pub fn trace_phase(&mut self, kind: TraceKind, instance: u32, t0: f64, t1: f64) {
+        if let Some(s) = self.sink.as_mut() {
+            s.push_phase(kind, instance, t0, t1);
+        }
+    }
+
+    /// Record an injected fault as lifecycle instants; no-op without a
+    /// sink. Both engine variants call this just before delivering the
+    /// fault to the system.
+    pub fn trace_fault(&mut self, fault: &FaultEvent, now: f64) {
+        if self.sink.is_none() {
+            return;
+        }
+        let ev = match *fault {
+            FaultEvent::InstanceDown { instance } => {
+                TraceEvent::instant(TraceKind::Down, NO_REQ, instance as u32, now)
+            }
+            FaultEvent::InstanceUp { instance } => {
+                TraceEvent::instant(TraceKind::Up, NO_REQ, instance as u32, now)
+            }
+            FaultEvent::PreemptNotice { instance } => {
+                TraceEvent::instant(TraceKind::PreemptNotice, NO_REQ, instance as u32, now)
+            }
+            FaultEvent::LinkDegrade { .. } => {
+                TraceEvent::instant(TraceKind::LinkDegrade, NO_REQ, NO_INSTANCE, now)
+            }
+            FaultEvent::LinkRestore => {
+                TraceEvent::instant(TraceKind::LinkRestore, NO_REQ, NO_INSTANCE, now)
+            }
+        };
+        self.trace(ev);
     }
 
     /// A recycled collector from this thread's spare slot (fresh if the
@@ -210,6 +273,11 @@ impl Collector {
     /// Register arrival (idempotent per id).
     pub fn on_arrival(&mut self, req: &Request) {
         self.open.insert(req.id, req.arrival, req.input_len);
+        if self.sink.is_some() {
+            let kind =
+                if req.id >= RETRY_ID_BASE { TraceKind::Retry } else { TraceKind::Arrive };
+            self.trace(TraceEvent::instant(kind, req.id, NO_INSTANCE, req.arrival));
+        }
     }
 
     /// Record the first output token (end of prefill).
@@ -220,6 +288,7 @@ impl Collector {
             self.open.has_first[i] = true;
             self.open.last_token[i] = now;
             self.open.tokens[i] = 1;
+            self.trace(TraceEvent::instant(TraceKind::FirstToken, id, NO_INSTANCE, now));
         }
         if let Some(m) = self.monitor.as_mut() {
             m.on_first_token(id, now);
@@ -254,12 +323,20 @@ impl Collector {
             }
             self.done.push(rec);
             self.latch_decision();
+            self.trace(TraceEvent::instant(TraceKind::Complete, id, NO_INSTANCE, now));
         }
     }
 
     /// Request rejected at admission — tracked separately so overloaded
     /// systems can't improve their attainment by shedding load invisibly.
     pub fn on_reject(&mut self, id: u64) {
+        self.on_reject_as(id, RejectCause::Other);
+    }
+
+    /// [`Collector::on_reject`] with a tagged cause: shed sites name the
+    /// *reason* (queue full, deadline, priority, hopeless) so the trace
+    /// miss-attribution histogram is causal. Identical bookkeeping.
+    pub fn on_reject_as(&mut self, id: u64, cause: RejectCause) {
         if let Some(i) = self.open.remove(id) {
             // Rejections happen while dispatching an event, so the engine
             // clock (never behind the arrival) is the rejection time.
@@ -271,6 +348,7 @@ impl Collector {
             if self.track_rejects {
                 self.pending_rejects.push(id);
             }
+            self.trace(TraceEvent::instant(TraceKind::Reject(cause), id, NO_INSTANCE, now));
         }
         self.rejected += 1;
     }
@@ -351,6 +429,11 @@ impl Collector {
     /// `window` seconds (Figure 10's y-axis).
     pub fn attainment_series(&self, slo: &SloSpec, window: f64, horizon: f64) -> Vec<(f64, f64)> {
         let mut out = Vec::new();
+        // A non-positive (or NaN) window can never advance `t`: empty
+        // series instead of an infinite loop.
+        if !(window > 0.0) {
+            return out;
+        }
         let mut t = 0.0;
         while t < horizon {
             let recs = self.records_in_window(t, t + window);
@@ -534,6 +617,116 @@ mod tests {
         c3.on_arrival(&req(1, 0.0));
         c3.observe_time(5.0); // TTFT deadline blown → verdict decided
         assert!(c3.decided());
+    }
+
+    #[test]
+    fn window_records_edges_are_half_open() {
+        // Arrivals exactly on window edges: [t0, t1) — t0 in, t1 out.
+        let mut c = Collector::new();
+        for (id, t) in [(1u64, 30.0), (2, 59.999999), (3, 60.0)] {
+            c.on_arrival(&req(id, t));
+            c.on_first_token(id, t + 0.1);
+            c.on_complete(id, t + 0.5);
+        }
+        let in_window: Vec<u64> =
+            c.window_records(30.0, 60.0).map(|r| r.id).collect();
+        assert_eq!(in_window, vec![1, 2], "t0 inclusive, t1 exclusive");
+        assert_eq!(c.window_records(60.0, 90.0).count(), 1);
+        // Empty window (t0 == t1) selects nothing, even with an arrival
+        // exactly at the boundary.
+        assert_eq!(c.window_records(30.0, 30.0).count(), 0);
+        assert_eq!(c.records_in_window(30.0, 30.0).len(), 0);
+        // Inverted window selects nothing rather than panicking.
+        assert_eq!(c.window_records(60.0, 30.0).count(), 0);
+    }
+
+    #[test]
+    fn window_straddling_the_warmup_boundary_splits_cleanly() {
+        // Warmup trim at t=30: a record at 29.9 scores in [0,30) only, a
+        // record at 30.0 in [30,60) only — no double counting, no loss.
+        let mut c = Collector::new();
+        for (id, t) in [(1u64, 29.9), (2, 30.0)] {
+            c.on_arrival(&req(id, t));
+            c.on_first_token(id, t + 0.1);
+            c.on_complete(id, t + 0.5);
+        }
+        let warm = c.window_records(0.0, 30.0).count();
+        let scored = c.window_records(30.0, 60.0).count();
+        assert_eq!((warm, scored), (1, 1));
+        assert_eq!(warm + scored, c.completed().len());
+    }
+
+    #[test]
+    fn attainment_series_degenerate_inputs_terminate() {
+        let mut c = Collector::new();
+        c.on_arrival(&req(1, 1.0));
+        c.on_first_token(1, 1.1);
+        c.on_complete(1, 1.5);
+        let slo = SloSpec::new(1.0, 1.0);
+        // Zero / negative / NaN windows: empty series, not a hang.
+        assert!(c.attainment_series(&slo, 0.0, 90.0).is_empty());
+        assert!(c.attainment_series(&slo, -5.0, 90.0).is_empty());
+        assert!(c.attainment_series(&slo, f64::NAN, 90.0).is_empty());
+        // Zero horizon: no window ever starts.
+        assert!(c.attainment_series(&slo, 30.0, 0.0).is_empty());
+        // A horizon shorter than one window still yields that window.
+        let series = c.attainment_series(&slo, 30.0, 10.0);
+        assert_eq!(series.len(), 1);
+        assert_eq!(series[0].0, 30.0);
+    }
+
+    #[test]
+    fn sink_records_lifecycle_and_detaches() {
+        use crate::trace::{RejectCause, TraceKind};
+        let mut c = Collector::new();
+        c.attach_sink(TraceSink::new());
+        c.on_arrival(&req(1, 0.0));
+        c.on_first_token(1, 0.4);
+        c.on_token(1, 0.45);
+        c.on_complete(1, 0.6);
+        c.on_arrival(&req(2, 0.1));
+        c.on_reject_as(2, RejectCause::QueueFull);
+        c.on_arrival(&Request {
+            id: RETRY_ID_BASE + 2,
+            arrival: 0.2,
+            input_len: 10,
+            output_len: 5,
+        });
+        let sink = c.take_sink().expect("sink attached");
+        let kinds: Vec<TraceKind> = sink.events().iter().map(|e| e.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                TraceKind::Arrive,
+                TraceKind::FirstToken,
+                TraceKind::Complete,
+                TraceKind::Arrive,
+                TraceKind::Reject(RejectCause::QueueFull),
+                TraceKind::Retry,
+            ]
+        );
+        assert!(c.take_sink().is_none(), "take_sink detaches");
+    }
+
+    #[test]
+    fn sink_does_not_change_records_and_recycle_drops_it() {
+        let run = |c: &mut Collector| {
+            c.on_arrival(&req(1, 0.0));
+            c.on_first_token(1, 0.4);
+            c.on_complete(1, 0.6);
+            c.on_arrival(&req(2, 0.1));
+            c.on_reject(2);
+            c.completed().to_vec()
+        };
+        let mut plain = Collector::new();
+        let without = run(&mut plain);
+        let mut traced = Collector::new();
+        traced.attach_sink(TraceSink::new());
+        let with = run(&mut traced);
+        assert_eq!(without, with, "recording must not change the records");
+        assert_eq!(traced.rejected, plain.rejected);
+        traced.recycle(None);
+        assert!(traced.take_sink().is_none(), "recycle drops the sink");
     }
 
     #[test]

@@ -258,6 +258,7 @@ fn measure(cfg: &PlanConfig, cand: &Candidate) -> PlanCell {
         rate: None, // the search owns the rate
         duration_override: cfg.duration_override,
         fault_seed,
+        trace: false,
     };
     let mut fc = FrontierConfig::new(base, cfg.level);
     fc.quick = cfg.quick;

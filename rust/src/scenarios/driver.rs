@@ -17,6 +17,7 @@ use crate::sim::{
     run_abandonable, run_faulted_client, run_source_faulted_client, ChurnTelemetry,
     ClassRanker, DefenseTelemetry, StopReason, System,
 };
+use crate::trace::{summarize, TraceCapture, TraceSink};
 use crate::util::threads::parallel_map;
 use crate::workload::{ClientLoop, ClientTelemetry, RETRY_ID_BASE};
 
@@ -39,6 +40,9 @@ pub struct ScenarioConfig {
     /// into a concrete fault timeline (`--fault-seed`). `None` runs even
     /// churn scenarios fault-free.
     pub fault_seed: Option<u64>,
+    /// Attach the flight recorder to every cell (`--trace-out`); `false`
+    /// keeps every run on the recorder-off warm path.
+    pub trace: bool,
 }
 
 impl ScenarioConfig {
@@ -54,6 +58,7 @@ impl ScenarioConfig {
             rate: None,
             duration_override: None,
             fault_seed: None,
+            trace: false,
         }
     }
 
@@ -172,6 +177,9 @@ pub struct SystemRow {
     /// Present when the spec attached a closed-loop client or armed the
     /// coordinator defenses: what the loop and the defenses did.
     pub overload: Option<OverloadTelemetry>,
+    /// Present when the spec attached the flight recorder: the raw event
+    /// log plus the derived diagnostics ([`crate::trace::TraceSummary`]).
+    pub trace: Option<TraceCapture>,
 }
 
 impl SystemRow {
@@ -337,6 +345,9 @@ pub fn run_system_variant(
     // Pooled: suite runs execute many cells per worker thread, and the
     // collector's maps/vecs are the largest per-run allocations.
     let mut metrics = Collector::pooled(monitor);
+    if spec.trace {
+        metrics.attach_sink(TraceSink::new());
+    }
     let stop_early = spec.abandon.is_some_and(|p| p.stop_early);
     // Expanding the schedule against the deployment happens once per run;
     // `None` keeps the run on the exact fault-free code path (the engine's
@@ -502,6 +513,30 @@ pub fn run_system_variant(
         })
         .collect();
 
+    // Harvest the flight recorder (if attached) before the collector goes
+    // back to the pool. The derived diagnostics use the same scoring
+    // window as the strict scorer above.
+    let trace_cap = metrics.take_sink().map(|sink| {
+        let class_slos: Vec<(String, SloSpec)> = scenario
+            .classes
+            .iter()
+            .map(|c| {
+                let d = &c.dataset;
+                (c.name.to_string(), SloSpec::new(d.slo_ttft, d.slo_tpot))
+            })
+            .collect();
+        let summary = summarize(
+            sink.events(),
+            &metrics,
+            warmup,
+            duration,
+            horizon,
+            &class_slos,
+            &|id| scenario.class_of(id),
+        );
+        TraceCapture { events: sink.events().to_vec(), summary }
+    });
+
     let row = SystemRow {
         system: kind,
         arrived,
@@ -528,6 +563,7 @@ pub fn run_system_variant(
             client: client.as_ref().map(|c| c.telemetry()).unwrap_or_default(),
             defense: defense_t,
         }),
+        trace: trace_cap,
     };
     metrics.release();
     row

@@ -60,6 +60,7 @@ pub use registry::{
 };
 pub use report::{
     churn_telemetry_to_json, class_to_json, deployment_to_json, overload_telemetry_to_json,
-    render_table, replay_to_json, row_to_json, suite_to_json, SCHEMA_VERSION,
+    render_table, replay_to_json, row_to_json, suite_to_json, trace_suite_to_json,
+    SCHEMA_VERSION,
 };
 pub use spec::RunSpec;

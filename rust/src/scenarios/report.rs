@@ -201,6 +201,64 @@ pub fn suite_to_json(outcomes: &[ScenarioOutcome], cfg: &ScenarioConfig) -> Json
     ])
 }
 
+/// One system's block in `BENCH_trace.json`: the derived diagnostics
+/// from its flight-recorder capture. `None` when the row ran with the
+/// recorder off (the caller skips such rows).
+fn trace_row_to_json(row: &SystemRow) -> Option<Json> {
+    let cap = row.trace.as_ref()?;
+    let s = &cap.summary;
+    Some(Json::obj(vec![
+        ("system", Json::str(row.system.label())),
+        ("events", Json::num(s.events as f64)),
+        ("requests", Json::num(s.requests as f64)),
+        ("max_prefill_gap_s", Json::num(s.max_prefill_gap_s)),
+        ("p99_prefill_gap_s", Json::num(s.p99_prefill_gap_s)),
+        ("unprefilled", Json::num(s.unprefilled as f64)),
+        ("phase_overlap_frac", Json::num(s.phase_overlap_frac)),
+        ("phase_windows", Json::num(s.phase_windows as f64)),
+        (
+            "miss_attribution",
+            Json::arr(s.classes.iter().map(|c| {
+                Json::obj(vec![
+                    ("class", Json::str(c.class.as_str())),
+                    ("arrived", Json::num(c.arrived as f64)),
+                    ("misses", Json::num(c.misses as f64)),
+                    ("shed", Json::num(c.shed as f64)),
+                    ("fault_rerouted", Json::num(c.fault_rerouted as f64)),
+                    ("brownout_truncated", Json::num(c.brownout_truncated as f64)),
+                    ("queued_behind_prefill", Json::num(c.queued_behind_prefill as f64)),
+                    ("slow_decode", Json::num(c.slow_decode as f64)),
+                ])
+            })),
+        ),
+    ]))
+}
+
+/// The flight-recorder report (`BENCH_trace.json`): derived diagnostics
+/// per traced (scenario × system) cell. Rows that ran with the recorder
+/// off are omitted, so the file only ever describes what was actually
+/// recorded. Shares [`SCHEMA_VERSION`] with the other two artifacts.
+pub fn trace_suite_to_json(outcomes: &[ScenarioOutcome], cfg: &ScenarioConfig) -> Json {
+    Json::obj(vec![
+        ("bench", Json::str("ecoserve-trace")),
+        ("schema_version", Json::num(SCHEMA_VERSION)),
+        ("seed", Json::num(cfg.seed as f64)),
+        ("deployment", deployment_to_json(&cfg.deployment)),
+        (
+            "scenarios",
+            Json::arr(outcomes.iter().map(|o| {
+                Json::obj(vec![
+                    ("scenario", Json::str(o.scenario.name)),
+                    ("offered_rate_rps", Json::num(o.rate)),
+                    ("duration_s", Json::num(o.duration)),
+                    ("warmup_s", Json::num(o.warmup)),
+                    ("systems", Json::arr(o.rows.iter().filter_map(trace_row_to_json))),
+                ])
+            })),
+        ),
+    ])
+}
+
 /// Human-readable table for one scenario outcome.
 pub fn render_table(outcome: &ScenarioOutcome) -> String {
     let mut out = String::new();
@@ -355,6 +413,7 @@ mod tests {
             autoscale: None,
             churn: None,
             overload: None,
+            trace: None,
         };
         let outcome = ScenarioOutcome {
             scenario,
@@ -384,5 +443,40 @@ mod tests {
         assert_eq!(text, golden);
         // And it round-trips through the parser.
         assert!(Json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn trace_report_carries_diagnostics_and_skips_untraced_rows() {
+        let mut cfg = ScenarioConfig::default_l20();
+        cfg.deployment.gpus_used = 16;
+        cfg.duration_override = Some(45.0);
+        cfg.rate = Some(2.0);
+        cfg.trace = true;
+        let s = by_name("steady").unwrap();
+        let mut o = run_scenario(&s, &cfg, &[SystemKind::EcoServe, SystemKind::Vllm]);
+        // Simulate a recorder-off row mixed into the same outcome.
+        o.rows[1].trace = None;
+        let j = trace_suite_to_json(&[o], &cfg);
+        let back = Json::parse(&j.to_string()).expect("trace report must be valid JSON");
+        assert_eq!(back.get("bench").unwrap().as_str(), Some("ecoserve-trace"));
+        assert_eq!(back.get("schema_version").unwrap().as_f64(), Some(SCHEMA_VERSION));
+        let sc = &back.get("scenarios").unwrap().as_arr().unwrap()[0];
+        assert_eq!(sc.get("scenario").unwrap().as_str(), Some("steady"));
+        let systems = sc.get("systems").unwrap().as_arr().unwrap();
+        assert_eq!(systems.len(), 1, "untraced rows are omitted");
+        let sys = &systems[0];
+        assert_eq!(sys.get("system").unwrap().as_str(), Some("EcoServe"));
+        assert!(sys.get("events").unwrap().as_i64().unwrap() > 0);
+        assert!(sys.get("requests").unwrap().as_i64().unwrap() > 0);
+        assert!(sys.get("max_prefill_gap_s").unwrap().as_f64().unwrap() >= 0.0);
+        assert_eq!(sys.get("phase_overlap_frac").unwrap().as_f64(), Some(0.0));
+        let miss = sys.get("miss_attribution").unwrap().as_arr().unwrap();
+        assert_eq!(miss.len(), 1);
+        for key in [
+            "class", "arrived", "misses", "shed", "fault_rerouted",
+            "brownout_truncated", "queued_behind_prefill", "slow_decode",
+        ] {
+            assert!(miss[0].get(key).is_some(), "missing {key}");
+        }
     }
 }

@@ -45,6 +45,11 @@ pub struct RunSpec {
     /// configured but null the shedding machinery, so defended PaDG can
     /// be scored against its own defenseless twin on the same trace.
     pub ablate_no_shedding: bool,
+    /// Attach the flight recorder ([`crate::trace::TraceSink`]) to this
+    /// cell and harvest a [`crate::trace::TraceCapture`] into the row.
+    /// `false` keeps the recorder-off warm path: bit-identical results,
+    /// zero extra allocations (the PR 8/9 locks).
+    pub trace: bool,
 }
 
 impl RunSpec {
@@ -58,6 +63,7 @@ impl RunSpec {
             client: None,
             defense: None,
             ablate_no_shedding: false,
+            trace: false,
         }
     }
 
@@ -102,6 +108,12 @@ impl RunSpec {
         self
     }
 
+    /// Builder: attach the flight recorder to this cell.
+    pub fn with_trace(mut self) -> Self {
+        self.trace = true;
+        self
+    }
+
     /// The spec [`super::driver::run_system`] uses for one cell: plain
     /// run, plus the scenario's churn profile expanded into a concrete
     /// schedule when the config carries a fault seed. Deterministic — the
@@ -109,7 +121,8 @@ impl RunSpec {
     /// instances)`, and the horizon already reflects the config's rate
     /// and duration override.
     pub fn for_cell(scenario: &Scenario, cfg: &ScenarioConfig, system: SystemKind) -> Self {
-        let spec = RunSpec::new(system);
+        let mut spec = RunSpec::new(system);
+        spec.trace = cfg.trace;
         match (&scenario.churn, cfg.fault_seed) {
             (Some(profile), Some(fault_seed)) => {
                 let (duration, warmup) = cfg.horizon(scenario);
@@ -167,7 +180,8 @@ mod tests {
             .with_faults(FaultSchedule::none())
             .with_client(ClientPolicy::standard())
             .with_defense(DefenseConfig::default())
-            .without_shedding();
+            .without_shedding()
+            .with_trace();
         assert_eq!(spec.system, SystemKind::EcoServe);
         assert!(spec.variant.autoscale.is_some());
         assert!(spec.abandon.is_some_and(|p| p.stop_early));
@@ -175,10 +189,12 @@ mod tests {
         assert!(spec.client.is_some());
         assert!(spec.defense.is_some());
         assert!(spec.ablate_no_shedding);
+        assert!(spec.trace);
         let plain = RunSpec::new(SystemKind::Vllm);
         assert!(plain.variant.autoscale.is_none());
         assert!(plain.abandon.is_none() && plain.faults.is_none());
         assert!(plain.client.is_none() && plain.defense.is_none());
         assert!(!plain.ablate_no_shedding);
+        assert!(!plain.trace);
     }
 }

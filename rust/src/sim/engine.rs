@@ -426,6 +426,7 @@ fn run_core(
                 system.on_control_tick(now, &mut sched, metrics);
             }
             Event::Fault(fault) => {
+                metrics.trace_fault(&fault, now);
                 system.on_fault(fault, now, &mut sched, metrics);
             }
             Event::ClientCheck { id } => {
@@ -636,6 +637,7 @@ pub fn reference_run_faulted_client(
                 system.on_control_tick(now, &mut sched, metrics);
             }
             Event::Fault(fault) => {
+                metrics.trace_fault(&fault, now);
                 system.on_fault(fault, now, &mut sched, metrics);
             }
             Event::ClientCheck { id } => {
@@ -1153,9 +1155,36 @@ mod tests {
         // system capacity — the loop itself must allocate nothing.
         metrics.recycle(None);
         sys.pending.clear();
-        let stats = run(&mut sys, trace, 1_000.0, &mut metrics);
+        let stats = run(&mut sys, trace.clone(), 1_000.0, &mut metrics);
         assert_eq!(metrics.completed().len(), 2_000);
         assert_eq!(stats.events, warm.events);
         assert_eq!(stats.allocs, 0, "hot loop allocated after warmup: {stats:?}");
+        // Recorder attached: the first traced run may allocate (the sink's
+        // event vec grows to steady state), but a *warmed* sink cleared
+        // and re-attached appends the same events with zero allocations —
+        // the recorder adds no per-event heap traffic.
+        metrics.recycle(None);
+        metrics.attach_sink(crate::trace::TraceSink::new());
+        sys.pending.clear();
+        run(&mut sys, trace.clone(), 1_000.0, &mut metrics);
+        let mut sink = metrics.take_sink().expect("sink survives the run");
+        let traced_events = sink.len();
+        assert!(traced_events >= 2_000, "lifecycle events recorded");
+        sink.clear();
+        metrics.recycle(None);
+        metrics.attach_sink(sink);
+        sys.pending.clear();
+        let traced = run(&mut sys, trace.clone(), 1_000.0, &mut metrics);
+        assert_eq!(metrics.completed().len(), 2_000);
+        assert_eq!(traced.events, warm.events);
+        let sink = metrics.take_sink().expect("sink still attached");
+        assert_eq!(sink.len(), traced_events, "traced rerun records identically");
+        assert_eq!(traced.allocs, 0, "warmed recorder allocated: {traced:?}");
+        // Recorder detached again: back to the strict zero-alloc contract.
+        metrics.recycle(None);
+        sys.pending.clear();
+        let off = run(&mut sys, trace, 1_000.0, &mut metrics);
+        assert_eq!(metrics.completed().len(), 2_000);
+        assert_eq!(off.allocs, 0, "recorder-off run allocated: {off:?}");
     }
 }

@@ -11,6 +11,7 @@ use std::collections::VecDeque;
 
 use crate::metrics::Collector;
 use crate::perfmodel::{BatchTimer, Phase};
+use crate::trace::{TraceEvent, TraceKind};
 use crate::workload::Request;
 
 /// Scheduler-visible per-request state.
@@ -353,6 +354,12 @@ impl SimInstance {
     pub fn complete_batch(&mut self, now: f64, metrics: &mut Collector) -> Vec<SimReq> {
         let (kind, done_at) = self.in_flight.take().expect("no batch in flight");
         debug_assert!((done_at - now).abs() < 1e-6, "wake at wrong time");
+        let phase = match kind {
+            BatchKind::Prefill { .. } => TraceKind::PhasePrefill,
+            BatchKind::Decode => TraceKind::PhaseDecode,
+            BatchKind::Hybrid { .. } => TraceKind::PhaseHybrid,
+        };
+        metrics.trace_phase(phase, self.id as u32, self.batch_started, now);
         let mut finished = Vec::new();
         match kind {
             BatchKind::Prefill { count } => {
@@ -394,6 +401,13 @@ impl SimInstance {
         metrics: &mut Collector,
         finished: &mut Vec<SimReq>,
     ) {
+        metrics.trace(TraceEvent::span(
+            TraceKind::ReqPrefill,
+            r.req.id,
+            self.id as u32,
+            self.batch_started,
+            now,
+        ));
         r.prefilled = r.req.input_len;
         r.generated = 1; // the prefill's token; rendered at decode start
         self.kv_used += 1;
@@ -486,6 +500,13 @@ impl SimInstance {
             None => Some(a),
             Some(b) => Some(b.min(a)),
         })
+    }
+
+    /// Start time of the in-flight (or most recent) batch — FuDG-style
+    /// coordinators that drive prefill against a scratch collector use it
+    /// to re-emit phase spans into the real one.
+    pub fn batch_started(&self) -> f64 {
+        self.batch_started
     }
 
     /// Predicted duration of the next decode iteration if `extra` requests

@@ -1,0 +1,325 @@
+//! Flight recorder: typed spans and instants for per-request causal
+//! tracing and per-instance phase timelines.
+//!
+//! The recorder is *zero-cost when off*: the [`crate::metrics::Collector`]
+//! hosts an `Option<TraceSink>` (default `None`), every hook is an
+//! inlined no-op without a sink, and attaching one changes no simulation
+//! decision — recorder-off runs stay bit-identical and allocation-free on
+//! the warm path (the PR 8/9 locks). With a sink attached, the engine,
+//! the coordinator, all four baselines, the client loop, and the fault
+//! layer append fixed-size [`TraceEvent`]s into one grow-only `Vec`
+//! that retains capacity across runs, so a warmed sink re-attached to an
+//! identical run allocates nothing.
+//!
+//! Two derived surfaces consume the event log:
+//! * [`perfetto`] renders it as Chrome/Perfetto `trace_event` JSON for
+//!   visual inspection (one track per instance, one per lifecycle);
+//! * [`report`] computes the diagnostics behind `BENCH_trace.json` —
+//!   per-class SLO-miss attribution, the prefill-availability gap
+//!   (rolling activation's invariant, measured rather than assumed), and
+//!   the per-instance phase-overlap fraction (temporal-disaggregation
+//!   purity).
+
+pub mod perfetto;
+pub mod report;
+
+pub use perfetto::to_perfetto;
+pub use report::{summarize, ClassMisses, TraceCapture, TraceSummary};
+
+/// `TraceEvent::id` for events not tied to a request (phase windows,
+/// instance health transitions, link faults).
+pub const NO_REQ: u64 = u64::MAX;
+
+/// `TraceEvent::instance` for events not tied to an instance (request
+/// lifecycle instants, link-wide faults).
+pub const NO_INSTANCE: u32 = u32::MAX;
+
+/// Why a request was shed or rejected. Tagging the cause at the shed
+/// site is what makes the miss-attribution histogram causal instead of
+/// inferred.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectCause {
+    /// A baseline's bounded admission queue was full.
+    QueueFull,
+    /// PaDG deadline-aware admission: the head of the backlog had
+    /// already outlived its TTFT budget.
+    Deadline,
+    /// PaDG priority shedding: a retry (or anything ranked below first
+    /// attempts) was dropped to protect fresh work.
+    Priority,
+    /// PaDG backlog drain found the request hopeless (its TTFT budget
+    /// had expired while queued).
+    Hopeless,
+    /// Untagged call sites (kept for API compatibility).
+    Other,
+}
+
+impl RejectCause {
+    pub fn label(&self) -> &'static str {
+        match self {
+            RejectCause::QueueFull => "queue_full",
+            RejectCause::Deadline => "deadline",
+            RejectCause::Priority => "priority",
+            RejectCause::Hopeless => "hopeless",
+            RejectCause::Other => "other",
+        }
+    }
+}
+
+/// What a [`TraceEvent`] records. Instants carry `t0 == t1`; spans carry
+/// a closed window `[t0, t1]`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TraceKind {
+    // -- per-request lifecycle instants --
+    /// First attempt arrived at the coordinator.
+    Arrive,
+    /// A client retry (id >= RETRY_ID_BASE) arrived.
+    Retry,
+    /// First output token (end of the request's TTFT clock, §3.3).
+    FirstToken,
+    /// Final output token.
+    Complete,
+    /// Shed/rejected at admission or drain, with the tagged cause.
+    Reject(RejectCause),
+    /// Brownout defense truncated the request's decode budget.
+    Brownout,
+    /// Evacuated off a dying instance and re-queued (fault re-route).
+    Reroute,
+    // -- per-request execution spans --
+    /// The request's prompt ran in a prefill batch on `instance`.
+    ReqPrefill,
+    /// KV transfer between instances (FuDG prefill → decode handoff).
+    Transfer,
+    // -- per-instance phase windows (spans, coalesced) --
+    /// The instance executed prefill batches over `[t0, t1]`.
+    PhasePrefill,
+    /// The instance executed decode iterations over `[t0, t1]`.
+    PhaseDecode,
+    /// Sarathi hybrid iterations (mixed prefill+decode) over `[t0, t1]`.
+    PhaseHybrid,
+    // -- per-instance state instants --
+    /// A draining instance emptied and deactivated (mitosis scale-down
+    /// completion or rolling-activation handoff).
+    Drained,
+    /// Fault layer: the instance died.
+    Down,
+    /// Fault layer: the instance came back (weights reloaded, KV cold).
+    Up,
+    /// Fault layer: spot preemption notice (still running, draining).
+    PreemptNotice,
+    /// Fault layer: interconnect degraded (cluster-wide).
+    LinkDegrade,
+    /// Fault layer: interconnect restored.
+    LinkRestore,
+    /// Mitosis: the coordinator activated this instance (scale-up).
+    ScaleUp,
+    /// Mitosis: the coordinator began draining this instance.
+    ScaleDown,
+}
+
+impl TraceKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            TraceKind::Arrive => "arrive",
+            TraceKind::Retry => "retry",
+            TraceKind::FirstToken => "first_token",
+            TraceKind::Complete => "complete",
+            TraceKind::Reject(_) => "reject",
+            TraceKind::Brownout => "brownout",
+            TraceKind::Reroute => "reroute",
+            TraceKind::ReqPrefill => "req_prefill",
+            TraceKind::Transfer => "transfer",
+            TraceKind::PhasePrefill => "prefill",
+            TraceKind::PhaseDecode => "decode",
+            TraceKind::PhaseHybrid => "hybrid",
+            TraceKind::Drained => "drained",
+            TraceKind::Down => "down",
+            TraceKind::Up => "up",
+            TraceKind::PreemptNotice => "preempt_notice",
+            TraceKind::LinkDegrade => "link_degrade",
+            TraceKind::LinkRestore => "link_restore",
+            TraceKind::ScaleUp => "scale_up",
+            TraceKind::ScaleDown => "scale_down",
+        }
+    }
+
+    /// Is this an instance phase window (eligible for coalescing)?
+    pub fn is_phase(&self) -> bool {
+        matches!(
+            self,
+            TraceKind::PhasePrefill | TraceKind::PhaseDecode | TraceKind::PhaseHybrid
+        )
+    }
+}
+
+/// One recorded event: fixed-size, `Copy`, no heap — the sink is a flat
+/// `Vec<TraceEvent>` whose capacity survives [`TraceSink::clear`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceEvent {
+    pub kind: TraceKind,
+    /// Request id, or [`NO_REQ`].
+    pub id: u64,
+    /// Instance id, or [`NO_INSTANCE`].
+    pub instance: u32,
+    /// Start time (== `t1` for instants).
+    pub t0: f64,
+    /// End time.
+    pub t1: f64,
+}
+
+impl TraceEvent {
+    pub fn instant(kind: TraceKind, id: u64, instance: u32, t: f64) -> Self {
+        TraceEvent { kind, id, instance, t0: t, t1: t }
+    }
+
+    pub fn span(kind: TraceKind, id: u64, instance: u32, t0: f64, t1: f64) -> Self {
+        TraceEvent { kind, id, instance, t0, t1 }
+    }
+
+    pub fn is_instant(&self) -> bool {
+        self.t0 == self.t1
+    }
+}
+
+/// Back-to-back phase windows on one instance coalesce when the gap is
+/// below this slack (floating-point wake jitter, not real idleness).
+const COALESCE_SLACK_S: f64 = 1e-9;
+
+/// The flight-recorder sink: an append-only event log plus per-instance
+/// coalescing state so consecutive same-phase batch windows merge into
+/// one span (a PaDG prefill window is one `PhasePrefill` event, not one
+/// per batch). All buffers retain capacity across [`TraceSink::clear`].
+#[derive(Debug, Default)]
+pub struct TraceSink {
+    events: Vec<TraceEvent>,
+    /// Per-instance index+1 into `events` of the instance's most recent
+    /// phase window (0 = none). Invalidated by `clear`.
+    last_phase: Vec<usize>,
+}
+
+impl TraceSink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Drop all events, keeping every buffer's capacity (the warm-path
+    /// contract: a cleared sink re-attached to an identical run appends
+    /// without allocating).
+    pub fn clear(&mut self) {
+        self.events.clear();
+        self.last_phase.clear();
+    }
+
+    /// Append one event.
+    #[inline]
+    pub fn push(&mut self, ev: TraceEvent) {
+        self.events.push(ev);
+    }
+
+    /// Record an instance phase window `[t0, t1]`, merging with the
+    /// instance's previous window when the kind matches and the windows
+    /// abut (within [`COALESCE_SLACK_S`]).
+    pub fn push_phase(&mut self, kind: TraceKind, instance: u32, t0: f64, t1: f64) {
+        debug_assert!(kind.is_phase());
+        let i = instance as usize;
+        if i >= self.last_phase.len() {
+            self.last_phase.resize(i + 1, 0);
+        }
+        if let Some(idx) = self.last_phase[i].checked_sub(1) {
+            let prev = &mut self.events[idx];
+            if prev.kind == kind && t0 <= prev.t1 + COALESCE_SLACK_S {
+                prev.t1 = prev.t1.max(t1);
+                return;
+            }
+        }
+        self.events.push(TraceEvent::span(kind, NO_REQ, instance, t0, t1));
+        self.last_phase[i] = self.events.len();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn instants_and_spans_record_their_shape() {
+        let mut s = TraceSink::new();
+        s.push(TraceEvent::instant(TraceKind::Arrive, 7, NO_INSTANCE, 1.5));
+        s.push(TraceEvent::span(TraceKind::ReqPrefill, 7, 2, 1.5, 1.9));
+        assert_eq!(s.len(), 2);
+        assert!(s.events()[0].is_instant());
+        assert!(!s.events()[1].is_instant());
+        assert_eq!(s.events()[1].instance, 2);
+    }
+
+    #[test]
+    fn abutting_same_phase_windows_coalesce() {
+        let mut s = TraceSink::new();
+        s.push_phase(TraceKind::PhasePrefill, 0, 0.0, 1.0);
+        s.push_phase(TraceKind::PhasePrefill, 0, 1.0, 2.0);
+        s.push_phase(TraceKind::PhasePrefill, 0, 2.0 + 1e-12, 3.0);
+        assert_eq!(s.len(), 1, "abutting windows must merge");
+        assert_eq!(s.events()[0].t0, 0.0);
+        assert_eq!(s.events()[0].t1, 3.0);
+    }
+
+    #[test]
+    fn gaps_and_phase_changes_break_coalescing() {
+        let mut s = TraceSink::new();
+        s.push_phase(TraceKind::PhasePrefill, 0, 0.0, 1.0);
+        s.push_phase(TraceKind::PhaseDecode, 0, 1.0, 2.0); // kind change
+        s.push_phase(TraceKind::PhaseDecode, 0, 5.0, 6.0); // real gap
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.events()[1].kind, TraceKind::PhaseDecode);
+        assert_eq!(s.events()[2].t0, 5.0);
+    }
+
+    #[test]
+    fn instances_coalesce_independently() {
+        let mut s = TraceSink::new();
+        s.push_phase(TraceKind::PhaseDecode, 0, 0.0, 1.0);
+        s.push_phase(TraceKind::PhaseDecode, 3, 0.5, 1.5);
+        s.push_phase(TraceKind::PhaseDecode, 0, 1.0, 2.0);
+        s.push_phase(TraceKind::PhaseDecode, 3, 1.5, 2.5);
+        assert_eq!(s.len(), 2, "one merged window per instance");
+        assert_eq!(s.events()[0].t1, 2.0);
+        assert_eq!(s.events()[1].t1, 2.5);
+    }
+
+    #[test]
+    fn interleaved_non_phase_events_do_not_break_coalescing() {
+        let mut s = TraceSink::new();
+        s.push_phase(TraceKind::PhaseDecode, 1, 0.0, 1.0);
+        s.push(TraceEvent::instant(TraceKind::FirstToken, 42, NO_INSTANCE, 0.5));
+        s.push_phase(TraceKind::PhaseDecode, 1, 1.0, 2.0);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.events()[0].t1, 2.0);
+    }
+
+    #[test]
+    fn clear_retains_capacity_and_resets_coalescing() {
+        let mut s = TraceSink::new();
+        for i in 0..64 {
+            s.push_phase(TraceKind::PhaseDecode, 0, i as f64 * 2.0, i as f64 * 2.0 + 1.0);
+        }
+        let cap = s.events.capacity();
+        s.clear();
+        assert!(s.is_empty());
+        assert_eq!(s.events.capacity(), cap);
+        // After clear, the stale last_phase index must not resurrect.
+        s.push_phase(TraceKind::PhaseDecode, 0, 0.0, 1.0);
+        assert_eq!(s.len(), 1);
+    }
+}

@@ -1,0 +1,151 @@
+//! Chrome/Perfetto `trace_event` export of a flight-recorder log.
+//!
+//! The JSON object format (`{"traceEvents": [...]}`) is understood by
+//! both `chrome://tracing` and https://ui.perfetto.dev — drag the file
+//! in. Mapping:
+//! * each named track (one per scenario × system) becomes a *process*,
+//!   labeled via `"M"` (metadata) events;
+//! * thread 0 carries request-lifecycle and cluster-wide instants
+//!   (`"i"` events, thread-scoped);
+//! * thread `1 + i` carries instance `i`'s phase windows, per-request
+//!   prefill spans, KV-transfer spans (`"X"` complete events) and its
+//!   health instants;
+//! * timestamps are microseconds (`ts`/`dur`), per the spec.
+//!
+//! Everything is built through [`crate::util::json::Json`] (objects are
+//! `BTreeMap`s), so serialization is deterministic — the CI determinism
+//! lock diffs two same-seed exports byte-for-byte.
+
+use super::{TraceEvent, TraceKind, NO_INSTANCE, NO_REQ};
+use crate::util::json::Json;
+
+/// Lifecycle + cluster-wide events render on this thread id.
+const LIFECYCLE_TID: u32 = 0;
+
+fn tid_for(ev: &TraceEvent) -> u32 {
+    if ev.instance == NO_INSTANCE {
+        LIFECYCLE_TID
+    } else {
+        1 + ev.instance
+    }
+}
+
+fn event_name(ev: &TraceEvent) -> String {
+    match ev.kind {
+        TraceKind::Reject(cause) => format!("reject:{}", cause.label()),
+        kind => kind.label().to_string(),
+    }
+}
+
+fn push_event(out: &mut Vec<Json>, pid: u32, ev: &TraceEvent) {
+    let mut fields = vec![
+        ("name", Json::str(event_name(ev))),
+        ("pid", Json::num(pid as f64)),
+        ("tid", Json::num(tid_for(ev) as f64)),
+        ("ts", Json::num(ev.t0 * 1e6)),
+    ];
+    if ev.is_instant() {
+        fields.push(("ph", Json::str("i")));
+        fields.push(("s", Json::str("t")));
+    } else {
+        fields.push(("ph", Json::str("X")));
+        fields.push(("dur", Json::num((ev.t1 - ev.t0) * 1e6)));
+    }
+    if ev.id != NO_REQ {
+        fields.push(("args", Json::obj(vec![("id", Json::num(ev.id as f64))])));
+    }
+    out.push(Json::obj(fields));
+}
+
+fn push_meta(out: &mut Vec<Json>, pid: u32, tid: Option<u32>, key: &str, name: &str) {
+    let mut fields = vec![
+        ("name", Json::str(key)),
+        ("ph", Json::str("M")),
+        ("pid", Json::num(pid as f64)),
+        ("args", Json::obj(vec![("name", Json::str(name))])),
+    ];
+    if let Some(tid) = tid {
+        fields.push(("tid", Json::num(tid as f64)));
+    }
+    out.push(Json::obj(fields));
+}
+
+/// Render named tracks (label, event log) as one Perfetto JSON document.
+pub fn to_perfetto(tracks: &[(String, &[TraceEvent])]) -> Json {
+    let mut out: Vec<Json> = Vec::new();
+    for (i, (label, events)) in tracks.iter().enumerate() {
+        let pid = 1 + i as u32;
+        push_meta(&mut out, pid, None, "process_name", label);
+        push_meta(&mut out, pid, Some(LIFECYCLE_TID), "thread_name", "lifecycle");
+        // Name each instance thread that actually appears.
+        let mut seen: Vec<u32> = events
+            .iter()
+            .filter(|e| e.instance != NO_INSTANCE)
+            .map(|e| e.instance)
+            .collect();
+        seen.sort_unstable();
+        seen.dedup();
+        for inst in seen {
+            push_meta(
+                &mut out,
+                pid,
+                Some(1 + inst),
+                "thread_name",
+                &format!("instance {inst}"),
+            );
+        }
+        for ev in *events {
+            push_event(&mut out, pid, ev);
+        }
+    }
+    Json::obj(vec![
+        ("displayTimeUnit", Json::str("ms")),
+        ("traceEvents", Json::Arr(out)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::RejectCause;
+
+    fn sample() -> Vec<TraceEvent> {
+        vec![
+            TraceEvent::instant(TraceKind::Arrive, 7, NO_INSTANCE, 1.0),
+            TraceEvent::span(TraceKind::ReqPrefill, 7, 2, 1.0, 1.5),
+            TraceEvent::span(TraceKind::PhasePrefill, NO_REQ, 2, 1.0, 1.5),
+            TraceEvent::instant(TraceKind::Reject(RejectCause::QueueFull), 9, NO_INSTANCE, 2.0),
+        ]
+    }
+
+    #[test]
+    fn export_parses_and_maps_tracks() {
+        let evs = sample();
+        let doc = to_perfetto(&[("steady/ecoserve".to_string(), evs.as_slice())]);
+        let text = doc.to_string();
+        let parsed = Json::parse(&text).expect("valid JSON");
+        let tes = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        // 3 metadata (process + lifecycle thread + instance 2 thread) + 4.
+        assert_eq!(tes.len(), 7);
+        let arrive = tes.iter().find(|e| e.get("name").unwrap().as_str() == Some("arrive"));
+        let a = arrive.expect("arrive instant present");
+        assert_eq!(a.get("ph").unwrap().as_str(), Some("i"));
+        assert_eq!(a.get("tid").unwrap().as_i64(), Some(0));
+        assert_eq!(a.get("ts").unwrap().as_f64(), Some(1e6));
+        let span = tes.iter().find(|e| e.get("name").unwrap().as_str() == Some("req_prefill"));
+        let s = span.expect("prefill span present");
+        assert_eq!(s.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(s.get("tid").unwrap().as_i64(), Some(3));
+        assert_eq!(s.get("dur").unwrap().as_f64(), Some(0.5e6));
+        assert!(tes.iter().any(|e| e.get("name").unwrap().as_str() == Some("reject:queue_full")));
+    }
+
+    #[test]
+    fn export_is_deterministic() {
+        let evs = sample();
+        let tracks = vec![("a".to_string(), evs.as_slice()), ("b".to_string(), evs.as_slice())];
+        let one = to_perfetto(&tracks).to_string();
+        let two = to_perfetto(&tracks).to_string();
+        assert_eq!(one, two);
+    }
+}

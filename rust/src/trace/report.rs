@@ -1,0 +1,339 @@
+//! Derived diagnostics over a flight-recorder event log: the numbers
+//! behind `BENCH_trace.json`.
+//!
+//! Three families, each tied to a paper claim:
+//! * **Prefill-availability gap** — rolling activation's invariant
+//!   (§2.3: some instance is always prefill-available) made measurable.
+//!   Per first-attempt request arriving in the scoring window, the gap
+//!   is `first_token − arrival` (the §3.3 strict reference point: it
+//!   folds in admission queueing for NoDG systems and KV-transfer
+//!   staging for FuDG ones — everything between "the request exists"
+//!   and "prefill service actually completed"). Requests shed before
+//!   serving are censored at the shed instant; requests never served
+//!   are censored at the run horizon and counted in `unprefilled`.
+//! * **Per-class SLO-miss attribution** — every missed request in the
+//!   window is assigned one causal bucket, in priority order: `shed`
+//!   (a tagged Reject event), `fault_rerouted` (evacuated off a dying
+//!   instance), `brownout_truncated` (decode budget cut by the overload
+//!   defense), `queued_behind_prefill` (TTFT blown, or never reached
+//!   its first token), else `slow_decode` (TPOT blown).
+//! * **Phase-overlap fraction** — temporal-disaggregation purity: the
+//!   share of instance busy-time spent in hybrid (mixed-phase) batches.
+//!   Exactly 0.0 for PaDG and the separate-batching baselines; > 0 for
+//!   Sarathi-style chunked prefill.
+
+use std::collections::{HashMap, HashSet};
+
+use super::{TraceEvent, TraceKind};
+use crate::metrics::{Collector, SloSpec};
+use crate::util::percentile_sorted;
+use crate::workload::RETRY_ID_BASE;
+
+/// Per-class SLO-miss attribution histogram. Buckets partition `misses`
+/// (each missed request lands in exactly one).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ClassMisses {
+    pub class: String,
+    /// First-attempt arrivals in the scoring window.
+    pub arrived: usize,
+    /// Requests that missed their SLO pair (or never completed).
+    pub misses: usize,
+    /// Shed at admission or backlog drain (tagged Reject event).
+    pub shed: usize,
+    /// Evacuated off a faulted instance and re-queued.
+    pub fault_rerouted: usize,
+    /// Decode budget truncated by the brownout defense.
+    pub brownout_truncated: usize,
+    /// TTFT blown (or first token never produced): the request waited
+    /// behind prefill-unavailable instances.
+    pub queued_behind_prefill: usize,
+    /// Served promptly but decoded too slowly (TPOT blown).
+    pub slow_decode: usize,
+}
+
+/// Derived diagnostics over one system's event log.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceSummary {
+    /// Total recorded events.
+    pub events: usize,
+    /// First-attempt arrivals in the scoring window.
+    pub requests: usize,
+    /// Max prefill-availability gap (seconds) over window arrivals.
+    pub max_prefill_gap_s: f64,
+    /// P99 of the same distribution.
+    pub p99_prefill_gap_s: f64,
+    /// Window arrivals never served and never shed (gap censored at the
+    /// run horizon — the "unbounded under burst" signature).
+    pub unprefilled: usize,
+    /// Hybrid-batch busy-time / total phase busy-time.
+    pub phase_overlap_frac: f64,
+    /// Coalesced instance phase windows in the log.
+    pub phase_windows: usize,
+    pub classes: Vec<ClassMisses>,
+}
+
+/// A harvested recorder: the raw event log plus its derived summary,
+/// carried on `SystemRow` when tracing is on.
+#[derive(Debug, Clone)]
+pub struct TraceCapture {
+    pub events: Vec<TraceEvent>,
+    pub summary: TraceSummary,
+}
+
+/// Compute the derived diagnostics for one run. `warmup..t_end` is the
+/// scoring window (same bounds the scenario scorer uses), `horizon` the
+/// run end (censoring point for never-served requests), `classes` the
+/// per-class SLO table, and `class_of` the workload's id → class map.
+pub fn summarize(
+    events: &[TraceEvent],
+    metrics: &Collector,
+    warmup: f64,
+    t_end: f64,
+    horizon: f64,
+    classes: &[(String, SloSpec)],
+    class_of: &dyn Fn(u64) -> usize,
+) -> TraceSummary {
+    // Pass 1: per-request lifecycle maps + phase-time totals.
+    let mut arrive: HashMap<u64, f64> = HashMap::new();
+    let mut first: HashMap<u64, f64> = HashMap::new();
+    let mut reject: HashMap<u64, f64> = HashMap::new();
+    let mut brownout: HashSet<u64> = HashSet::new();
+    let mut reroute: HashSet<u64> = HashSet::new();
+    let (mut prefill_s, mut decode_s, mut hybrid_s) = (0.0f64, 0.0f64, 0.0f64);
+    let mut phase_windows = 0usize;
+    for ev in events {
+        match ev.kind {
+            TraceKind::Arrive => {
+                if ev.t0 >= warmup && ev.t0 < t_end && ev.id < RETRY_ID_BASE {
+                    arrive.entry(ev.id).or_insert(ev.t0);
+                }
+            }
+            TraceKind::FirstToken => {
+                first.entry(ev.id).or_insert(ev.t0);
+            }
+            TraceKind::Reject(_) => {
+                reject.entry(ev.id).or_insert(ev.t0);
+            }
+            TraceKind::Brownout => {
+                brownout.insert(ev.id);
+            }
+            TraceKind::Reroute => {
+                reroute.insert(ev.id);
+            }
+            TraceKind::PhasePrefill => {
+                prefill_s += ev.t1 - ev.t0;
+                phase_windows += 1;
+            }
+            TraceKind::PhaseDecode => {
+                decode_s += ev.t1 - ev.t0;
+                phase_windows += 1;
+            }
+            TraceKind::PhaseHybrid => {
+                hybrid_s += ev.t1 - ev.t0;
+                phase_windows += 1;
+            }
+            _ => {}
+        }
+    }
+
+    // Prefill-availability gaps, censored for shed / never-served.
+    let mut gaps: Vec<f64> = Vec::with_capacity(arrive.len());
+    let mut unprefilled = 0usize;
+    for (&id, &t) in &arrive {
+        let gap = match first.get(&id) {
+            Some(&ft) => ft - t,
+            None => match reject.get(&id) {
+                Some(&rt) => rt - t,
+                None => {
+                    unprefilled += 1;
+                    horizon - t
+                }
+            },
+        };
+        gaps.push(gap.max(0.0));
+    }
+    gaps.sort_by(f64::total_cmp);
+    let max_gap = gaps.last().copied().unwrap_or(0.0);
+    let p99_gap = percentile_sorted(&gaps, 99.0);
+
+    // Per-class miss attribution over the scoring window.
+    let mut rows: Vec<ClassMisses> = classes
+        .iter()
+        .map(|(name, _)| ClassMisses { class: name.clone(), ..Default::default() })
+        .collect();
+    if !rows.is_empty() {
+        let by_id: HashMap<u64, &crate::metrics::RequestRecord> =
+            metrics.window_records(warmup, t_end).map(|r| (r.id, r)).collect();
+        for &id in arrive.keys() {
+            let c = class_of(id).min(rows.len() - 1);
+            let slo = classes[c].1;
+            let row = &mut rows[c];
+            row.arrived += 1;
+            if let Some(rec) = by_id.get(&id) {
+                if rec.meets(&slo) {
+                    continue;
+                }
+                row.misses += 1;
+                if reroute.contains(&id) {
+                    row.fault_rerouted += 1;
+                } else if brownout.contains(&id) {
+                    row.brownout_truncated += 1;
+                } else if rec.ttft() > slo.ttft {
+                    row.queued_behind_prefill += 1;
+                } else {
+                    row.slow_decode += 1;
+                }
+            } else if reject.contains_key(&id) {
+                row.misses += 1;
+                row.shed += 1;
+            } else {
+                // Neither completed nor shed inside the horizon.
+                row.misses += 1;
+                if reroute.contains(&id) {
+                    row.fault_rerouted += 1;
+                } else if first.contains_key(&id) {
+                    row.slow_decode += 1;
+                } else {
+                    row.queued_behind_prefill += 1;
+                }
+            }
+        }
+    }
+
+    let phase_total = prefill_s + decode_s + hybrid_s;
+    TraceSummary {
+        events: events.len(),
+        requests: arrive.len(),
+        max_prefill_gap_s: max_gap,
+        p99_prefill_gap_s: p99_gap,
+        unprefilled,
+        phase_overlap_frac: if phase_total > 0.0 { hybrid_s / phase_total } else { 0.0 },
+        phase_windows,
+        classes: rows,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{RejectCause, NO_INSTANCE, NO_REQ};
+    use crate::workload::Request;
+
+    fn arrive(id: u64, t: f64) -> TraceEvent {
+        TraceEvent::instant(TraceKind::Arrive, id, NO_INSTANCE, t)
+    }
+
+    fn ft(id: u64, t: f64) -> TraceEvent {
+        TraceEvent::instant(TraceKind::FirstToken, id, NO_INSTANCE, t)
+    }
+
+    fn classes() -> Vec<(String, SloSpec)> {
+        vec![("chat".to_string(), SloSpec::new(1.0, 0.1))]
+    }
+
+    /// Drive a collector through arrivals/completions so the attribution
+    /// pass sees real records.
+    fn collect(recs: &[(u64, f64, f64, f64)]) -> Collector {
+        let mut c = Collector::new();
+        for &(id, arrival, first, done) in recs {
+            c.on_arrival(&Request { id, arrival, input_len: 10, output_len: 5 });
+            c.on_first_token(id, first);
+            c.on_token(id, (first + done) / 2.0);
+            c.on_complete(id, done);
+        }
+        c
+    }
+
+    #[test]
+    fn gap_is_arrival_to_first_token() {
+        let m = collect(&[(1, 10.0, 10.4, 11.0), (2, 12.0, 14.0, 15.0)]);
+        let evs =
+            vec![arrive(1, 10.0), ft(1, 10.4), arrive(2, 12.0), ft(2, 14.0)];
+        let s = summarize(&evs, &m, 0.0, 100.0, 200.0, &classes(), &|_| 0);
+        assert_eq!(s.requests, 2);
+        assert!((s.max_prefill_gap_s - 2.0).abs() < 1e-12);
+        assert_eq!(s.unprefilled, 0);
+    }
+
+    #[test]
+    fn shed_requests_censor_the_gap_at_the_shed_instant() {
+        let m = collect(&[]);
+        let evs = vec![
+            arrive(1, 10.0),
+            TraceEvent::instant(TraceKind::Reject(RejectCause::QueueFull), 1, NO_INSTANCE, 10.5),
+        ];
+        let s = summarize(&evs, &m, 0.0, 100.0, 200.0, &classes(), &|_| 0);
+        assert!((s.max_prefill_gap_s - 0.5).abs() < 1e-12);
+        assert_eq!(s.unprefilled, 0);
+        assert_eq!(s.classes[0].shed, 1);
+        assert_eq!(s.classes[0].misses, 1);
+    }
+
+    #[test]
+    fn never_served_requests_censor_at_the_horizon() {
+        let m = collect(&[]);
+        let evs = vec![arrive(1, 50.0)];
+        let s = summarize(&evs, &m, 0.0, 100.0, 200.0, &classes(), &|_| 0);
+        assert_eq!(s.unprefilled, 1);
+        assert!((s.max_prefill_gap_s - 150.0).abs() < 1e-12);
+        assert_eq!(s.classes[0].queued_behind_prefill, 1);
+    }
+
+    #[test]
+    fn retries_and_out_of_window_arrivals_are_excluded() {
+        let m = collect(&[]);
+        let evs = vec![
+            arrive(RETRY_ID_BASE + 1, 10.0), // retry: excluded
+            arrive(1, 5.0),                  // before warmup: excluded
+            arrive(2, 100.0),                // after window end: excluded
+        ];
+        let s = summarize(&evs, &m, 8.0, 100.0, 200.0, &classes(), &|_| 0);
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.max_prefill_gap_s, 0.0);
+    }
+
+    #[test]
+    fn miss_attribution_buckets_partition_misses() {
+        // id 1 meets; id 2 blows TTFT; id 3 blows TPOT only; id 4 was
+        // rerouted and misses; id 5 brownout-truncated and misses TPOT.
+        let m = collect(&[
+            (1, 10.0, 10.4, 11.0),
+            (2, 11.0, 13.0, 14.0),
+            (3, 12.0, 12.3, 20.0),
+            (4, 13.0, 16.0, 17.0),
+            (5, 14.0, 14.2, 22.0),
+        ]);
+        let mut evs: Vec<TraceEvent> = (1..=5).map(|i| arrive(i, 9.0 + i as f64)).collect();
+        evs.push(TraceEvent::instant(TraceKind::Reroute, 4, NO_INSTANCE, 15.0));
+        evs.push(TraceEvent::instant(TraceKind::Brownout, 5, NO_INSTANCE, 14.1));
+        let s = summarize(&evs, &m, 0.0, 100.0, 200.0, &classes(), &|_| 0);
+        let c = &s.classes[0];
+        assert_eq!(c.arrived, 5);
+        assert_eq!(c.misses, 4);
+        assert_eq!(c.queued_behind_prefill, 1);
+        assert_eq!(c.slow_decode, 1);
+        assert_eq!(c.fault_rerouted, 1);
+        assert_eq!(c.brownout_truncated, 1);
+        assert_eq!(
+            c.misses,
+            c.shed + c.fault_rerouted + c.brownout_truncated + c.queued_behind_prefill
+                + c.slow_decode
+        );
+    }
+
+    #[test]
+    fn phase_overlap_fraction_counts_hybrid_share() {
+        let m = collect(&[]);
+        let evs = vec![
+            TraceEvent::span(TraceKind::PhasePrefill, NO_REQ, 0, 0.0, 1.0),
+            TraceEvent::span(TraceKind::PhaseDecode, NO_REQ, 0, 1.0, 3.0),
+            TraceEvent::span(TraceKind::PhaseHybrid, NO_REQ, 1, 0.0, 1.0),
+        ];
+        let s = summarize(&evs, &m, 0.0, 100.0, 200.0, &[], &|_| 0);
+        assert!((s.phase_overlap_frac - 0.25).abs() < 1e-12);
+        assert_eq!(s.phase_windows, 3);
+        // No phase events at all → 0, not NaN.
+        let s2 = summarize(&[], &m, 0.0, 100.0, 200.0, &[], &|_| 0);
+        assert_eq!(s2.phase_overlap_frac, 0.0);
+    }
+}

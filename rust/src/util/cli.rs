@@ -317,6 +317,11 @@ const FAULT_SEED: FlagSpec = FlagSpec::opt(
     "N",
     "fault-schedule RNG seed for churn scenarios (default: --seed)",
 );
+const TRACE_OUT: FlagSpec = FlagSpec::opt(
+    "trace-out",
+    "PATH",
+    "write BENCH_trace.json here (+ Perfetto sibling *.perfetto.json)",
+);
 
 /// Every launcher subcommand, declared once: the dispatch table,
 /// [`Args::check`], and the generated `--help` all read from here.
@@ -399,6 +404,7 @@ pub static COMMANDS: &[CommandSpec] = &[
                 "PATH",
                 "write BENCH_overload.json (undefended-vs-defended load sweep) here",
             ),
+            TRACE_OUT,
         ],
     },
     CommandSpec {
@@ -428,6 +434,7 @@ pub static COMMANDS: &[CommandSpec] = &[
             BUDGET_S,
             OUT,
             FlagSpec::opt("perf-out", "PATH", "write BENCH_simperf.json here"),
+            TRACE_OUT,
         ],
     },
     CommandSpec {

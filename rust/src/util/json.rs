@@ -138,7 +138,12 @@ impl Json {
             Json::Bool(true) => out.push_str("true"),
             Json::Bool(false) => out.push_str("false"),
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 1e15 {
+                if !x.is_finite() {
+                    // NaN/±Inf have no JSON spelling; `null` keeps the
+                    // artifact parseable (the round-trip loses only the
+                    // distinction between the three non-finite values).
+                    out.push_str("null");
+                } else if x.fract() == 0.0 && x.abs() < 1e15 {
                     out.push_str(&format!("{}", *x as i64));
                 } else {
                     out.push_str(&format!("{x}"));
@@ -420,6 +425,22 @@ mod tests {
         ]);
         let s = j.to_string();
         assert_eq!(Json::parse(&s).unwrap(), j);
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        // NaN/Inf would otherwise print as bare `NaN`/`inf` — invalid
+        // JSON that breaks every downstream parser of a BENCH artifact.
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            assert_eq!(Json::Num(bad).to_string(), "null");
+        }
+        let j = Json::obj(vec![
+            ("mean_recovery_s", Json::num(f64::NAN)),
+            ("ok", Json::num(1.5)),
+        ]);
+        let s = j.to_string();
+        assert_eq!(s, r#"{"mean_recovery_s":null,"ok":1.5}"#);
+        assert!(Json::parse(&s).is_ok());
     }
 
     #[test]

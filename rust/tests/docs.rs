@@ -58,6 +58,7 @@ fn bench_doc_covers_every_artifact_and_the_schema_version() {
         "ecoserve-plan",
         "ecoserve-churn",
         "ecoserve-overload",
+        "ecoserve-trace",
     ] {
         assert!(md.contains(bench), "docs/BENCH.md lost artifact {bench}");
     }
@@ -78,7 +79,48 @@ fn bench_doc_covers_every_artifact_and_the_schema_version() {
 #[test]
 fn readme_points_at_the_docs() {
     let md = read_doc("README.md");
-    for doc in ["docs/ARCHITECTURE.md", "docs/CLI.md", "docs/BENCH.md"] {
+    for doc in [
+        "docs/ARCHITECTURE.md",
+        "docs/CLI.md",
+        "docs/BENCH.md",
+        "docs/OBSERVABILITY.md",
+    ] {
         assert!(md.contains(doc), "README.md does not link {doc}");
     }
+}
+
+#[test]
+fn observability_doc_covers_the_recorder_surface() {
+    let md = read_doc("docs/OBSERVABILITY.md");
+    // The artifact name, the flag that produces it, and each derived
+    // diagnostic family must be documented by name.
+    for needle in [
+        "ecoserve-trace",
+        "--trace-out",
+        "max_prefill_gap_s",
+        "phase_overlap_frac",
+        "miss_attribution",
+        "perfetto",
+    ] {
+        assert!(md.contains(needle), "docs/OBSERVABILITY.md lost '{needle}'");
+    }
+    assert!(
+        md.contains("schema_version"),
+        "docs/OBSERVABILITY.md must tie the artifact to the shared schema version"
+    );
+}
+
+#[test]
+fn architecture_doc_pins_the_recorder_invariants() {
+    let md = read_doc("docs/ARCHITECTURE.md");
+    // The two new rows of the bit-identity invariant table.
+    assert!(
+        md.contains("Recorder off"),
+        "docs/ARCHITECTURE.md lost the recorder-off invariant row"
+    );
+    assert!(
+        md.contains("Trace determinism"),
+        "docs/ARCHITECTURE.md lost the trace-determinism invariant row"
+    );
+    assert!(md.contains("rust/tests/trace.rs"));
 }

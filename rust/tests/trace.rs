@@ -1,0 +1,233 @@
+//! Flight-recorder acceptance locks.
+//!
+//! Four contracts are pinned here, all on fixed seeds:
+//!
+//! 1. **Recorder-off is free**: attaching the recorder never changes
+//!    what the simulator computes — every scoring field of every system's
+//!    row is bit-identical between a traced and an untraced run, and at
+//!    the engine level the per-request records match bitwise with the
+//!    sink attached or detached, under faults, on both engine variants.
+//! 2. **PaDG bounds the prefill-availability gap** (the paper's rolling
+//!    activation invariant, §2.3): on bursty load at the Llama-30B /
+//!    32-GPU operating point, EcoServe's max arrival→first-token gap is
+//!    strictly below vLLM's (NoDG: prefill queues behind decode under
+//!    burst) and both FuDG systems' (MHA KV transfer congests commodity
+//!    Ethernet, staging every first token).
+//! 3. **Temporal disaggregation is pure**: EcoServe's phase-overlap
+//!    fraction is exactly 0.0 — it never runs a mixed prefill/decode
+//!    batch — while Sarathi's chunked-prefill hybrid batches put it
+//!    strictly above zero.
+//! 4. **Trace artifacts are deterministic**: same seed, same bytes, for
+//!    both `BENCH_trace.json` and the Perfetto export — and the Perfetto
+//!    document round-trips through the JSON parser.
+
+use ecoserve::config::{SystemKind, SystemParams};
+use ecoserve::coordinator::EcoServeSystem;
+use ecoserve::metrics::{Collector, SloSpec};
+use ecoserve::scenarios::{by_name, run_scenario, trace_suite_to_json, ScenarioConfig};
+use ecoserve::sim::{reference_run_faulted, run_faulted, FaultEvent, FaultSchedule};
+use ecoserve::trace::{to_perfetto, TraceEvent, TraceSink};
+use ecoserve::util::json::Json;
+
+/// 4 instances (16 L20 GPUs): small enough for test wall time.
+fn quick_cfg(trace: bool) -> ScenarioConfig {
+    let mut cfg = ScenarioConfig::default_l20();
+    cfg.deployment.gpus_used = 16;
+    cfg.duration_override = Some(60.0);
+    cfg.rate = Some(2.0);
+    cfg.trace = trace;
+    cfg
+}
+
+/// The Llama-30B / 32-GPU / 5 req/s bursty operating point the suite's
+/// headline test (`padg_beats_a_baseline_on_bursty_load`) already pins.
+fn bursty_cfg() -> ScenarioConfig {
+    use ecoserve::config::{ClusterSpec, Deployment};
+    use ecoserve::perfmodel::ModelSpec;
+    let mut cfg = ScenarioConfig::default_l20();
+    cfg.deployment =
+        Deployment::paper_default(ModelSpec::llama_30b(), ClusterSpec::l20_cluster());
+    cfg.deployment.gpus_used = 32; // 8 instances at TP=4
+    cfg.rate = Some(5.0);
+    cfg.duration_override = Some(180.0);
+    cfg.trace = true;
+    cfg
+}
+
+/// Contract 1, suite level: for all five systems, a traced run and an
+/// untraced run of the same cell agree bit-for-bit on every scoring
+/// field, and only the traced run carries a capture.
+#[test]
+fn recorder_off_rows_are_bit_identical_to_traced_rows() {
+    let scenario = by_name("bursty").unwrap();
+    let off = run_scenario(&scenario, &quick_cfg(false), &SystemKind::all());
+    let on = run_scenario(&scenario, &quick_cfg(true), &SystemKind::all());
+    assert_eq!(off.rows.len(), 5);
+    for (a, b) in off.rows.iter().zip(&on.rows) {
+        assert_eq!(a.system, b.system);
+        assert_eq!(a.arrived, b.arrived, "{}", a.system.label());
+        assert_eq!(a.completed, b.completed, "{}", a.system.label());
+        assert_eq!(a.met, b.met, "{}", a.system.label());
+        assert_eq!(a.attainment.to_bits(), b.attainment.to_bits(), "{}", a.system.label());
+        assert_eq!(a.goodput_rps.to_bits(), b.goodput_rps.to_bits(), "{}", a.system.label());
+        assert_eq!(a.events, b.events, "{}", a.system.label());
+        let (sa, sb) = (&a.summary, &b.summary);
+        for (x, y) in [
+            (sa.ttft_p50, sb.ttft_p50),
+            (sa.ttft_p99, sb.ttft_p99),
+            (sa.tpot_p50, sb.tpot_p50),
+            (sa.tpot_p99, sb.tpot_p99),
+            (sa.token_throughput, sb.token_throughput),
+        ] {
+            assert_eq!(x.to_bits(), y.to_bits(), "{}", a.system.label());
+        }
+        assert!(a.trace.is_none(), "{}: untraced run grew a capture", a.system.label());
+        let cap = b.trace.as_ref().expect("traced run must carry a capture");
+        assert!(cap.summary.events > 0, "{}: empty event log", b.system.label());
+        assert!(cap.summary.requests > 0, "{}", b.system.label());
+    }
+}
+
+/// Contract 1, engine level: with a fault timeline live, the recorder
+/// changes nothing — records are bitwise identical with the sink
+/// attached or detached, on both the production heap engine and the
+/// reference engine, and the two same-engine event logs are identical.
+#[test]
+fn recorder_is_inert_under_faults_on_both_engines() {
+    let scenario = by_name("steady+churn").unwrap();
+    let mut cfg = quick_cfg(false);
+    cfg.fault_seed = Some(7);
+    let (duration, warmup) = cfg.horizon(&scenario);
+    let schedule = FaultSchedule::generate(
+        scenario.churn.as_ref().unwrap(),
+        7,
+        duration,
+        warmup,
+        cfg.deployment.num_instances(),
+    );
+    let events = schedule.events(&cfg.deployment);
+    assert!(events.iter().any(|(_, e)| matches!(e, FaultEvent::InstanceDown { .. })));
+
+    let sched = scenario.scheduler_dataset();
+    let slo = SloSpec::new(sched.slo_ttft, sched.slo_tpot);
+    let trace = scenario.build_trace_for(cfg.seed, cfg.rate.unwrap(), duration);
+    let horizon = duration + 240.0;
+
+    // (engine, sink?) → (window records, harvested event log).
+    let mut run = |reference: bool, sink: bool| {
+        let mut sys = EcoServeSystem::new(&cfg.deployment, slo, SystemParams::default());
+        let mut metrics = Collector::new();
+        if sink {
+            metrics.attach_sink(TraceSink::new());
+        }
+        if reference {
+            reference_run_faulted(&mut sys, trace.clone(), &events, horizon, &mut metrics);
+        } else {
+            run_faulted(&mut sys, trace.clone(), &events, horizon, &mut metrics, false);
+        }
+        let log: Vec<TraceEvent> =
+            metrics.take_sink().map(|s| s.events().to_vec()).unwrap_or_default();
+        (metrics.records_in_window(warmup, duration), log)
+    };
+    let (heap_off, none) = run(false, false);
+    let (heap_on, heap_log) = run(false, true);
+    let (ref_off, _) = run(true, false);
+    let (ref_on, ref_log) = run(true, true);
+    assert!(none.is_empty());
+    assert!(!heap_off.is_empty());
+    assert!(!heap_log.is_empty() && !ref_log.is_empty());
+
+    for (label, a, b) in [
+        ("heap on-vs-off", &heap_off, &heap_on),
+        ("reference on-vs-off", &ref_off, &ref_on),
+        ("heap-vs-reference traced", &heap_on, &ref_on),
+    ] {
+        assert_eq!(a.len(), b.len(), "{label}");
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.id, y.id, "{label}");
+            assert_eq!(x.first_token.to_bits(), y.first_token.to_bits(), "{label} req {}", x.id);
+            assert_eq!(x.completion.to_bits(), y.completion.to_bits(), "{label} req {}", x.id);
+        }
+    }
+    // Same engine, same seed: the event log itself is reproducible.
+    let (_, heap_log2) = run(false, true);
+    assert_eq!(heap_log, heap_log2);
+}
+
+/// Contract 2: the rolling-activation gap bound, measured. EcoServe's
+/// worst arrival→first-token gap stays strictly below vLLM's and both
+/// FuDG systems' on bursty load at the fixed operating point.
+#[test]
+fn padg_bounds_the_prefill_gap_on_bursty_load() {
+    let cfg = bursty_cfg();
+    let scenario = by_name("bursty").unwrap();
+    let outcome = run_scenario(&scenario, &cfg, &SystemKind::all());
+    let gap = |kind: SystemKind| {
+        let row = outcome.row(kind).expect("row");
+        let s = &row.trace.as_ref().expect("traced row").summary;
+        assert!(s.requests > 200, "{}: too few requests ({})", kind.label(), s.requests);
+        s.max_prefill_gap_s
+    };
+    let eco = gap(SystemKind::EcoServe);
+    for other in [SystemKind::Vllm, SystemKind::DistServe, SystemKind::MoonCake] {
+        let theirs = gap(other);
+        assert!(
+            eco < theirs,
+            "PaDG's max prefill gap ({eco:.3}s) must be strictly below {}'s ({theirs:.3}s)",
+            other.label()
+        );
+    }
+}
+
+/// Contract 3: phase purity. PaDG never mixes phases in one batch;
+/// Sarathi's chunked prefill exists to mix them.
+#[test]
+fn phase_overlap_is_zero_for_padg_and_positive_for_sarathi() {
+    let scenario = by_name("steady").unwrap();
+    let outcome = run_scenario(
+        &scenario,
+        &quick_cfg(true),
+        &[SystemKind::EcoServe, SystemKind::Sarathi],
+    );
+    let frac = |kind: SystemKind| {
+        let s = &outcome.row(kind).unwrap().trace.as_ref().unwrap().summary;
+        assert!(s.phase_windows > 0, "{}: no phase windows", kind.label());
+        s.phase_overlap_frac
+    };
+    assert_eq!(frac(SystemKind::EcoServe), 0.0, "PaDG ran a hybrid batch");
+    assert!(frac(SystemKind::Sarathi) > 0.0, "Sarathi recorded no hybrid time");
+}
+
+/// Contract 4: same seed, same bytes — for the derived report and the
+/// Perfetto export — and the Perfetto document parses.
+#[test]
+fn trace_artifacts_are_byte_identical_at_fixed_seed() {
+    let cfg = quick_cfg(true);
+    let scenario = by_name("bursty").unwrap();
+    let systems = [SystemKind::EcoServe, SystemKind::Vllm];
+    let render = || {
+        let outcome = run_scenario(&scenario, &cfg, &systems);
+        let report = trace_suite_to_json(std::slice::from_ref(&outcome), &cfg).to_string();
+        let tracks: Vec<(String, Vec<TraceEvent>)> = outcome
+            .rows
+            .iter()
+            .map(|r| {
+                let label = format!("{} / {}", outcome.scenario.name, r.system.label());
+                (label, r.trace.as_ref().unwrap().events.clone())
+            })
+            .collect();
+        let borrowed: Vec<(String, &[TraceEvent])> =
+            tracks.iter().map(|(l, e)| (l.clone(), e.as_slice())).collect();
+        (report, to_perfetto(&borrowed).to_string())
+    };
+    let (report_a, perfetto_a) = render();
+    let (report_b, perfetto_b) = render();
+    assert_eq!(report_a, report_b, "BENCH_trace.json must be seed-deterministic");
+    assert_eq!(perfetto_a, perfetto_b, "Perfetto export must be seed-deterministic");
+
+    let doc = Json::parse(&perfetto_a).expect("Perfetto export must be valid JSON");
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(events.len() > 100, "suspiciously sparse export: {}", events.len());
+    let report = Json::parse(&report_a).expect("trace report must be valid JSON");
+    assert_eq!(report.get("bench").unwrap().as_str(), Some("ecoserve-trace"));
+}
